@@ -1,0 +1,119 @@
+//! Privacy-preserving multi-tenancy (paper section 3.8, Fig. 21).
+//!
+//! A tenant whose adapter was trained on confidential data uses a
+//! third-party base-model service over the network.  The client adds
+//! pre-registered noise to every activation it ships; the executor only
+//! ever sees `x + n`, and the tenant subtracts the pre-computed noise
+//! effect from the result.  This example verifies the protocol is
+//! *exact* (same generated tokens with and without privacy) and measures
+//! its overhead on a TCP-class link vs plain local serving.
+//!
+//! Run:  cargo run --release --example private_tenant
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use symbiosis::config::SYM_TINY;
+use symbiosis::coordinator::adapter::LoraTargets;
+use symbiosis::coordinator::privacy::{NoiseGen, PrivacyCtx};
+use symbiosis::coordinator::proto::LayerId;
+use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
+                             InferenceSession, KvPlacement, Placement};
+use symbiosis::transport::LinkKind;
+
+fn main() -> anyhow::Result<()> {
+    let artifact_dir =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifact_dir.join("manifest.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    println!("== Symbiosis private tenant over an untrusted base \
+              service ==");
+    let dep = Deployment::start(&SYM_TINY, &artifact_dir,
+                                BatchPolicy::NoLockstep,
+                                Placement::Local)?;
+    let adapter = Adapter::lora_from_artifacts(&SYM_TINY, &artifact_dir,
+                                               8, LoraTargets::QKVO,
+                                               2.0)?;
+    let prompt: Vec<i32> =
+        (0..16).map(|i| (i * 11 % 256) as i32).collect();
+    let gen_len = 16;
+
+    // -- plain tenant (no privacy), local link --
+    let core = dep.client_core(Some(adapter.clone()));
+    let mut plain = InferenceSession::new(core, 1, KvPlacement::Device)?;
+    let t0 = Instant::now();
+    plain.prefill(&prompt)?;
+    for _ in 1..gen_len {
+        plain.decode_step()?;
+    }
+    let plain_time = t0.elapsed().as_secs_f64();
+    let want = plain.generated[0].clone();
+    let plain_link = plain.core.virt.link_time();
+    drop(plain);
+
+    // -- private tenant: noise on every linear layer, TCP-class link --
+    let mut core =
+        dep.client_core_with_link(Some(adapter), LinkKind::Tcp);
+    let privacy = PrivacyCtx::new();
+    let mut gen = NoiseGen::new(0xDEADBEEF, 0.1);
+    let tx = dep.executor.sender();
+    let (d, f) = (SYM_TINY.d_model, SYM_TINY.d_ff);
+    let setup0 = Instant::now();
+    for l in 0..SYM_TINY.n_layers {
+        for (layer, din) in [
+            (LayerId::Qkv(l), d),
+            (LayerId::AttnOut(l), d),
+            (LayerId::MlpUp(l), d),
+            (LayerId::MlpDown(l), f),
+        ] {
+            // pool of 4 rotating noise values per layer (section 3.8:
+            // "prepare several noise values in advance")
+            privacy.register_layer(&tx, layer, prompt.len(), din,
+                                   &mut gen, 4)?;
+        }
+    }
+    privacy.register_layer(&tx, LayerId::LmHead, prompt.len(), d,
+                           &mut gen, 4)?;
+    let setup_time = setup0.elapsed().as_secs_f64();
+    {
+        let virt = std::sync::Arc::get_mut(&mut core.virt).unwrap();
+        virt.privacy = Some(privacy);
+    }
+    let mut private =
+        InferenceSession::new(core, 1, KvPlacement::Device)?;
+    let t1 = Instant::now();
+    private.prefill(&prompt)?;
+    for _ in 1..gen_len {
+        private.decode_step()?;
+    }
+    let private_time = t1.elapsed().as_secs_f64();
+
+    assert_eq!(private.generated[0], want,
+               "privacy protocol must not change outputs");
+    println!("outputs identical with and without privacy ✓ \
+              (noise added, n_eff subtracted — exact by linearity)");
+    println!("\n{:<28} {:>12} {:>16}", "tenant", "wall (ms)",
+             "sim link time");
+    println!("{:<28} {:>12.1} {:>13.2} ms", "plain / local",
+             plain_time * 1e3, plain_link * 1e3);
+    println!("{:<28} {:>12.1} {:>13.2} ms", "private / tcp",
+             private_time * 1e3,
+             private.core.virt.link_time() * 1e3);
+    println!("noise setup (once per tenant): {:.1} ms for {} layers x 4 \
+              noise values", setup_time * 1e3,
+             SYM_TINY.n_layers * 4 + 1);
+    println!("\nper-iteration privacy arithmetic = one add + one \
+              subtract per layer; the network, not the noise, dominates \
+              (paper Fig. 21).");
+    let n_private = {
+        let p = private.core.virt.privacy.as_ref().unwrap();
+        let log = p.sent_log.lock().unwrap();
+        log.len()
+    };
+    println!("executor observed {n_private} noised activations, 0 raw");
+    drop(private);
+    dep.shutdown();
+    Ok(())
+}

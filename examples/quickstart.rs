@@ -1,0 +1,133 @@
+//! Quickstart: serve a small real model to multiple adapter clients.
+//!
+//! The end-to-end serving driver: loads the AOT-compiled `sym-tiny`
+//! model, starts one shared base executor, attaches four inference
+//! clients with *different* adapters (LoRA r=8, LoRA r=64, IA3, and the
+//! plain base model), serves batched requests concurrently, and reports
+//! per-client latency plus aggregate throughput and executor batching
+//! statistics.  Results are recorded in EXPERIMENTS.md.
+//!
+//! Run:  cargo run --release --example quickstart
+//! (requires `make artifacts` first)
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use symbiosis::config::SYM_TINY;
+use symbiosis::coordinator::adapter::LoraTargets;
+use symbiosis::coordinator::{Adapter, BatchPolicy, ClientCore,
+                             Deployment, InferenceSession, KvPlacement,
+                             Placement};
+use symbiosis::metrics::LatencyStats;
+
+fn main() -> anyhow::Result<()> {
+    let artifact_dir =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifact_dir.join("manifest.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize = arg(&args, "--requests", 8);
+    let prompt_len: usize = arg(&args, "--prompt-len", 16);
+    let gen_len: usize = arg(&args, "--gen-len", 24);
+
+    println!("== Symbiosis quickstart: base model as-a-service ==");
+    println!("model={} layers={} d_model={}", SYM_TINY.name,
+             SYM_TINY.n_layers, SYM_TINY.d_model);
+
+    let dep = Deployment::start(&SYM_TINY, &artifact_dir,
+                                BatchPolicy::opportunistic_default(),
+                                Placement::Local)?;
+
+    // four tenants with different PEFT configurations share the base
+    let tenants: Vec<(&str, Option<Adapter>)> = vec![
+        ("base (no adapter)", None),
+        ("lora-r8-qkvo",
+         Some(Adapter::lora_from_artifacts(&SYM_TINY, &artifact_dir, 8,
+                                           LoraTargets::QKVO, 2.0)?)),
+        ("lora-r64-qkvo",
+         Some(Adapter::lora_from_artifacts(&SYM_TINY, &artifact_dir, 64,
+                                           LoraTargets::QKVO, 0.25)?)),
+        ("ia3", Some(Adapter::ia3(&SYM_TINY))),
+    ];
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (i, (name, adapter)) in tenants.into_iter().enumerate() {
+        let core = dep.client_core(adapter);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<_> {
+            let mut lat = LatencyStats::new();
+            let mut sess =
+                InferenceSession::new(core, 1, KvPlacement::Device)?;
+            let mut tokens_out = 0u64;
+            for r in 0..n_requests {
+                let prompt: Vec<i32> = (0..prompt_len)
+                    .map(|k| ((i * 131 + r * 17 + k * 3) % 256) as i32)
+                    .collect();
+                sess.prefill(&prompt)?;
+                for _ in 1..gen_len {
+                    let step = Instant::now();
+                    sess.decode_step()?;
+                    lat.record(step.elapsed());
+                }
+                tokens_out += gen_len as u64;
+                // fresh session per request (cache reset)
+                let core2 = rebuild(&sess);
+                sess = InferenceSession::new(core2, 1,
+                                             KvPlacement::Device)?;
+            }
+            Ok((name, lat, tokens_out))
+        }));
+    }
+
+    let mut total_tokens = 0u64;
+    println!("\n{:<20} {:>10} {:>10} {:>10} {:>8}", "tenant",
+             "p50 (ms)", "p99 (ms)", "mean (ms)", "tokens");
+    for h in handles {
+        let (name, lat, tokens) = h.join().unwrap()?;
+        total_tokens += tokens;
+        println!("{:<20} {:>10.2} {:>10.2} {:>10.2} {:>8}", name,
+                 lat.p50() * 1e3, lat.p99() * 1e3, lat.mean() * 1e3,
+                 tokens);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\naggregate: {} tokens in {:.2}s = {:.1} tok/s",
+             total_tokens, wall, total_tokens as f64 / wall);
+
+    let estats = dep.engine.stats();
+    let stats = dep.shutdown();
+    println!("executor: {} requests, {} flushes, avg batch {:.2} \
+              clients, mean queue wait {:.2}ms, padding overhead {:.1}%",
+             stats.requests_served, stats.flushes.len(),
+             stats.mean_batch_clients(), stats.mean_wait_secs() * 1e3,
+             stats.padding_overhead() * 100.0);
+    println!("engine: {} executes ({:.0}us avg), {} compiles \
+              ({:.2}s total)",
+             estats.executes,
+             estats.execute_secs / estats.executes.max(1) as f64 * 1e6,
+             estats.compiles, estats.compile_secs);
+    Ok(())
+}
+
+/// Rebuild a fresh ClientCore from a finished session (keeps adapter +
+/// executor wiring, drops the KV cache).
+fn rebuild(sess: &InferenceSession) -> ClientCore {
+    ClientCore {
+        cfg: sess.core.cfg.clone(),
+        engine: sess.core.engine.clone(),
+        virt: sess.core.virt.clone(),
+        weights: sess.core.weights.clone(),
+        adapter: sess.core.adapter.clone(),
+        lora_scale: sess.core.lora_scale,
+    }
+}
+
+fn arg<T: std::str::FromStr>(args: &[String], name: &str, default: T)
+                             -> T {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}

@@ -1,0 +1,265 @@
+"""AOT compile path: lower every artifact to HLO text + export weights.
+
+Run once via ``make artifacts``.  Produces, under ``artifacts/``:
+
+* ``<name>.hlo.txt``      — one HLO-text module per (op, shape-bucket).
+  HLO *text* is the interchange format — jax >= 0.5 emits HloModuleProto
+  with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+  rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+* ``manifest.txt``        — model dims, bucket tables, and per-artifact
+  input/output specs, parsed by ``rust/src/runtime/manifest.rs``.
+* ``weights_<model>.bin`` — deterministic base-model weights (SYMT).
+* ``adapters_<model>.bin``— deterministic LoRA adapter inits per rank.
+* ``golden_<model>.bin``  — reference vectors (forward logits, training
+  loss/grads/updated-adapter, greedy generation) that the Rust
+  split-execution integration tests must reproduce.
+
+Python never runs on the request path: after this script, the Rust binary
+is self-contained.
+"""
+
+import argparse
+import functools
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, container, model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(*dims, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(dims, dtype)
+
+
+def _fmt_spec(name, s):
+    dims = "x".join(str(d) for d in s.shape) or "1"
+    dt = {jnp.float32: "f32", jnp.int32: "i32"}[s.dtype.type]
+    return f"{name}:{dt}:{dims}"
+
+
+class ArtifactSet:
+    """Collects (name, fn, arg-specs, out-names) and lowers them all."""
+
+    def __init__(self):
+        self.items = {}
+
+    def add(self, name, fn, arg_specs, in_names, out_names):
+        if name not in self.items:
+            self.items[name] = (fn, arg_specs, in_names, out_names)
+
+    def lower_all(self, out_dir, skip_existing=True):
+        lines = []
+        t0 = time.time()
+        for i, (name, (fn, specs, in_names, out_names)) in enumerate(
+                sorted(self.items.items())):
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            lowered = jax.jit(fn).lower(*specs)
+            out_specs = [
+                jax.ShapeDtypeStruct(a.shape, a.dtype)
+                for a in lowered.out_info
+            ]
+            if not (skip_existing and os.path.exists(path)):
+                with open(path, "w") as f:
+                    f.write(to_hlo_text(lowered))
+            ins = ";".join(_fmt_spec(n, s) for n, s in zip(in_names, specs))
+            outs = ";".join(
+                _fmt_spec(n, s) for n, s in zip(out_names, out_specs))
+            lines.append(f"artifact {name} {name}.hlo.txt in={ins} out={outs}")
+            if (i + 1) % 25 == 0:
+                print(f"  [{i+1}/{len(self.items)}] "
+                      f"{time.time()-t0:.1f}s", file=sys.stderr)
+        return lines
+
+
+def build_artifacts(cfg: configs.ModelConfig) -> ArtifactSet:
+    """Enumerate the full artifact inventory for one executable config."""
+    arts = ArtifactSet()
+    d, f, v, nh, hd = (cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_heads,
+                       cfg.d_head)
+    scale = 1.0 / np.sqrt(hd)
+
+    # Base-executor linears over flattened tokens.  Dims deduped: for
+    # sym-tiny, (d, f) == (d, v), so one artifact serves both layers.
+    linear_dims = {(d, 3 * d), (d, d), (d, f), (f, d), (d, v)}
+    for t in configs.TOKEN_BUCKETS:
+        for (din, dout) in sorted(linear_dims):
+            arts.add(
+                f"linear_fwd_t{t}_{din}x{dout}", model.art_linear_fwd,
+                (_spec(t, din), _spec(din, dout), _spec(dout)),
+                ("x", "w", "b"), ("y",))
+            arts.add(
+                f"linear_bwd_t{t}_{din}x{dout}", model.art_linear_bwd,
+                (_spec(t, dout), _spec(din, dout)),
+                ("dy", "w"), ("dx",))
+
+    # Client attention.  BH = request_batch * n_heads.
+    for b in configs.ATTN_BATCHES:
+        bh = b * nh
+        for s in configs.SEQ_BUCKETS:
+            if s > cfg.max_seq:
+                continue
+            qkv = (_spec(bh, s, hd),) * 3
+            arts.add(
+                f"attn_prefill_bh{bh}_s{s}_h{hd}",
+                functools.partial(model.art_attn_prefill, scale=scale),
+                qkv, ("q", "k", "v"), ("o",))
+            arts.add(
+                f"attn_decode_bh{bh}_s{s}_h{hd}",
+                functools.partial(model.art_attn_decode, scale=scale),
+                (_spec(bh, 1, hd), _spec(bh, s, hd), _spec(bh, s, hd),
+                 _spec(1, dtype=jnp.int32)),
+                ("q", "k", "v", "kv_len"), ("o",))
+            arts.add(
+                f"attn_bwd_bh{bh}_s{s}_h{hd}",
+                functools.partial(model.art_attn_bwd, scale=scale),
+                qkv + (_spec(bh, s, hd),),
+                ("q", "k", "v", "do"), ("dq", "dk", "dv"))
+
+    # Client LoRA (targets q/k/v/o are all d->d in this model family).
+    for t in configs.TOKEN_BUCKETS:
+        for r in configs.LORA_RANKS:
+            arts.add(
+                f"lora_fwd_t{t}_{d}x{r}x{d}", model.art_lora_fwd,
+                (_spec(t, d), _spec(d, r), _spec(r, d)),
+                ("x", "a", "b"), ("y",))
+            arts.add(
+                f"lora_bwd_t{t}_{d}x{r}x{d}", model.art_lora_bwd,
+                (_spec(t, d), _spec(t, d), _spec(d, r), _spec(r, d)),
+                ("x", "dy", "a", "b"), ("da", "db", "dx"))
+
+    # Client embedding + loss.
+    for t in configs.TOKEN_BUCKETS:
+        arts.add(
+            f"embed_t{t}_v{v}_d{d}", model.art_embed,
+            (_spec(t, dtype=jnp.int32), _spec(t, dtype=jnp.int32),
+             _spec(v, d), _spec(cfg.max_seq, d)),
+            ("tokens", "positions", "emb", "pos"), ("h",))
+        arts.add(
+            f"xent_t{t}_v{v}", model.art_xent,
+            (_spec(t, v), _spec(t, dtype=jnp.int32), _spec(t)),
+            ("logits", "labels", "weights"), ("loss", "dlogits"))
+
+    # Optimizer step over flat adapter parameter vectors (padded to the
+    # nearest bucket; zero-padded grads leave padded params untouched).
+    for n in (1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072,
+              262144, 524288):
+        arts.add(
+            f"adam_n{n}",
+            lambda p, g, m, vv, t: model.art_adam(p, g, m, vv, t[0]),
+            (_spec(n), _spec(n), _spec(n), _spec(n), _spec(1)),
+            ("p", "g", "m", "v", "t"), ("p2", "m2", "v2"))
+    return arts
+
+
+def export_weights(cfg, out_dir):
+    params = model.init_params(cfg)
+    container.write_tensors(
+        os.path.join(out_dir, f"weights_{cfg.name}.bin"),
+        {k: np.asarray(x) for k, x in params.items()})
+    adapters = {}
+    for r in configs.LORA_RANKS:
+        for k, x in model.init_lora(cfg, r).items():
+            adapters[f"r{r}.{k}"] = np.asarray(x)
+    container.write_tensors(
+        os.path.join(out_dir, f"adapters_{cfg.name}.bin"), adapters)
+    return params
+
+
+def export_golden(cfg, params, out_dir):
+    """Golden vectors the Rust integration tests must reproduce."""
+    rng = np.random.default_rng(7)
+    golden = {}
+
+    tokens16 = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    labels16 = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    golden["tokens16"] = tokens16
+    golden["labels16"] = labels16
+    golden["base_logits16"] = np.asarray(
+        model.forward(cfg, params, jnp.asarray(tokens16)))
+
+    adapter = model.init_lora(cfg, 8)
+    golden["lora8_logits16"] = np.asarray(
+        model.forward(cfg, params, jnp.asarray(tokens16), adapter))
+
+    # Bucket-padding exercise: 24 real tokens pad to the 32 bucket.
+    tokens24 = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+    golden["tokens24"] = tokens24
+    golden["base_logits24"] = np.asarray(
+        model.forward(cfg, params, jnp.asarray(tokens24)))
+
+    # One training iteration (loss + LoRA grads + Adam-updated adapter).
+    loss, grads = model.train_step(cfg, params, adapter,
+                                   jnp.asarray(tokens16),
+                                   jnp.asarray(labels16))
+    golden["train_loss"] = np.asarray(loss).reshape(1)
+    for k, g in grads.items():
+        golden[f"grad.{k}"] = np.asarray(g)
+    for k in adapter:
+        p = np.asarray(adapter[k]).ravel()
+        g = np.asarray(grads[k]).ravel()
+        p2, _, _ = ref.adam_step(jnp.asarray(p), jnp.asarray(g),
+                                 jnp.zeros_like(jnp.asarray(p)),
+                                 jnp.zeros_like(jnp.asarray(p)), 1.0)
+        golden[f"step1.{k}"] = np.asarray(p2).reshape(adapter[k].shape)
+
+    # Greedy generation.
+    prompt = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    golden["gen_prompt"] = prompt
+    golden["gen_tokens"] = model.generate(cfg, params, prompt, 8, adapter)
+    container.write_tensors(
+        os.path.join(out_dir, f"golden_{cfg.name}.bin"), golden)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="sym-tiny,sym-small",
+                    help="comma-separated executable model names")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the .hlo.txt already exists")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = ["symbiosis-manifest v1"]
+    for name in args.models.split(","):
+        cfg = configs.EXECUTABLE_MODELS[name]
+        print(f"== {name}: lowering artifacts", file=sys.stderr)
+        arts = build_artifacts(cfg)
+        manifest.append(
+            f"model name={cfg.name} d_model={cfg.d_model} "
+            f"n_heads={cfg.n_heads} n_layers={cfg.n_layers} "
+            f"d_ff={cfg.d_ff} vocab={cfg.vocab} max_seq={cfg.max_seq}")
+        manifest.append(
+            "buckets tokens=%s seq=%s batches=%s ranks=%s" % (
+                ",".join(map(str, configs.TOKEN_BUCKETS)),
+                ",".join(map(str, configs.SEQ_BUCKETS)),
+                ",".join(map(str, configs.ATTN_BATCHES)),
+                ",".join(map(str, configs.LORA_RANKS))))
+        manifest += arts.lower_all(args.out_dir,
+                                   skip_existing=not args.force)
+        print(f"== {name}: weights + golden", file=sys.stderr)
+        params = export_weights(cfg, args.out_dir)
+        export_golden(cfg, params, args.out_dir)
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} manifest lines to "
+          f"{args.out_dir}/manifest.txt", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Model configuration registry shared between the compile path and Rust.
+
+Two families live here:
+
+* ``sym-tiny`` / ``sym-small`` — real, executable transformer configs whose
+  weights are generated deterministically at artifact-build time.  These are
+  what the Rust coordinator actually runs end-to-end through PJRT.
+* The paper's evaluation models (Llama2-7B/13B, GPT2-XL, Granite-20B,
+  Starcoder-15B, Gemma2-27B, Llama3-1B) — *analytic* configs: published
+  dimensions used by the Rust device simulator for memory/compute accounting
+  in the figure reproductions.  They are never lowered to HLO.
+
+The Rust side re-declares the same registry in ``rust/src/config``; the
+``aot`` manifest carries the executable config so the two cannot drift.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of a decoder-only transformer (GPT2-style absolute
+    position embeddings, pre-RMSNorm, GELU MLP)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    max_seq: int
+    dtype: str = "f32"  # executable family is f32 (CPU PJRT)
+    executable: bool = True
+    # Analytic-only metadata (bytes per parameter on the paper's testbed).
+    param_bytes: int = 2
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Total base-model parameter count (ties lm_head to embedding: no)."""
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        per_layer = (
+            d * 3 * d + 3 * d      # fused qkv (+bias)
+            + d * d + d            # attn out
+            + d * f + f            # mlp up
+            + f * d + d            # mlp down
+            + 2 * d                # two rmsnorm gains
+        )
+        return v * d + self.max_seq * d + l * per_layer + d + d * v + v
+
+
+# ---------------------------------------------------------------------------
+# Executable family (lowered to HLO, run by the Rust coordinator).
+# ---------------------------------------------------------------------------
+
+SYM_TINY = ModelConfig(
+    name="sym-tiny", vocab=256, d_model=64, n_heads=4, n_layers=4,
+    d_ff=256, max_seq=512,
+)
+
+SYM_SMALL = ModelConfig(
+    name="sym-small", vocab=512, d_model=128, n_heads=8, n_layers=8,
+    d_ff=512, max_seq=512,
+)
+
+# ---------------------------------------------------------------------------
+# Paper models (analytic; dims from the respective model cards).
+# ---------------------------------------------------------------------------
+
+PAPER_MODELS = {
+    "gpt2-xl": ModelConfig("gpt2-xl", 50257, 1600, 25, 48, 6400, 1024,
+                           dtype="f16", executable=False),
+    "llama3-1b": ModelConfig("llama3-1b", 128256, 2048, 32, 16, 8192, 8192,
+                             dtype="bf16", executable=False),
+    "llama2-7b": ModelConfig("llama2-7b", 32000, 4096, 32, 32, 11008, 4096,
+                             dtype="f16", executable=False),
+    "llama2-13b": ModelConfig("llama2-13b", 32000, 5120, 40, 40, 13824, 4096,
+                              dtype="f16", executable=False),
+    "granite-20b": ModelConfig("granite-20b", 49152, 6144, 48, 52, 24576, 8192,
+                               dtype="f16", executable=False),
+    "starcoder-15b": ModelConfig("starcoder-15b", 49152, 6144, 48, 40, 24576,
+                                 8192, dtype="f32", executable=False,
+                                 param_bytes=4),
+    "gemma2-27b": ModelConfig("gemma2-27b", 256128, 4608, 32, 46, 36864, 8192,
+                              dtype="bf16", executable=False),
+}
+
+EXECUTABLE_MODELS = {m.name: m for m in (SYM_TINY, SYM_SMALL)}
+ALL_MODELS = {**EXECUTABLE_MODELS, **PAPER_MODELS}
+
+
+# Token-count buckets for the flattened-linear executor artifacts.  HLO is
+# shape-specialized, so the executor pads a cross-client flattened batch to
+# the next bucket (<=2x, amortized ~1.15x) instead of per-request
+# max-seq-len padding (see DESIGN.md section 4).
+TOKEN_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
+
+# Sequence-length buckets for client-side attention artifacts.
+SEQ_BUCKETS = (16, 32, 64, 128, 256, 512)
+
+# Per-request batch sizes for attention artifacts.
+ATTN_BATCHES = (1, 2, 4)
+
+# LoRA ranks exported (paper evaluates r=8 and r=64: LoRA1..4 in Table 2).
+LORA_RANKS = (8, 64)
+
+
+def bucket_for(n: int, buckets=TOKEN_BUCKETS) -> int:
+    """Smallest bucket >= n; raises if n exceeds the largest bucket."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"{n} exceeds largest bucket {buckets[-1]}")

@@ -1,0 +1,64 @@
+"""SYMT — the little-endian named-tensor container shared with Rust.
+
+Layout:
+    magic   b"SYMT"
+    version u32 = 1
+    count   u32
+    per tensor:
+        name_len u32, name utf-8 bytes
+        dtype    u8   (0 = f32, 1 = i32)
+        ndim     u8
+        dims     u32 * ndim
+        data     raw little-endian bytes (row-major)
+
+The Rust reader lives in ``rust/src/tensor/container.rs``; keep the two in
+lockstep (there is a round-trip test on each side).
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"SYMT"
+VERSION = 1
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+_DTYPES_INV = {0: np.float32, 1: np.int32}
+
+
+def write_tensors(path, tensors: dict):
+    """Write {name: np.ndarray} to the SYMT container at ``path``."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.float64:
+                arr = arr.astype(np.float32)
+            if arr.dtype == np.int64:
+                arr = arr.astype(np.int32)
+            code = _DTYPES[arr.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path) -> dict:
+    """Read a SYMT container back into {name: np.ndarray}."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path}: bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = np.dtype(_DTYPES_INV[code])
+            n = int(np.prod(dims)) if ndim else 1
+            out[name] = np.frombuffer(
+                f.read(n * dt.itemsize), dtype=dt).reshape(dims)
+    return out

@@ -1,0 +1,136 @@
+"""L1 Pallas kernels: client-side attention (prefill + decode).
+
+Attention is the client-side hot spot in Symbiosis — it stays with the
+client together with the KV cache (paper section 3.2), so these kernels are
+lowered into the *client* artifacts, not the base-executor ones.
+
+Prefill is a FlashAttention-style tiled kernel: the grid walks
+(batch*heads, q-blocks); inside the kernel a fori_loop streams KV blocks
+through VMEM keeping a running max / normalizer, so the S x S score matrix
+is never materialized in HBM.  Decode is a single-query row against the
+streamed KV cache — exactly the access pattern the CPU-offloaded cache path
+uses (paper section 3.4: "the executing layer's KV cache is fetched right
+before their execution").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, scale, seq):
+    """One q-block of causal flash attention for one (batch, head)."""
+    qi = pl.program_id(1)
+    q = q_ref[0]  # (bq, H)
+    q_base = qi * bq
+
+    n_kv = seq // bk
+
+    def body(j, carry):
+        acc, m, l = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None)))
+        v_blk = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None)))
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32) * scale
+        # causal mask: query position q_base+i attends kv position <= it
+        qpos = q_base + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    h = q.shape[-1]
+    acc0 = jnp.zeros((bq, h), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    o_ref[0] = acc / l[:, None]
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bq", "bk"))
+def attention_prefill(q, k, v, scale, bq=128, bk=128):
+    """Causal self-attention. q, k, v: (BH, S, H) -> (BH, S, H)."""
+    bh, s, h = q.shape
+    bq = _pick_block(s, bq)
+    bk = _pick_block(s, bk)
+    grid = (bh, s // bq)
+    return pl.pallas_call(
+        functools.partial(_prefill_kernel, bq=bq, bk=bk, scale=scale, seq=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, h), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, h), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, h), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, h), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, h), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, bk, scale, seq):
+    """Single query row vs the full KV cache for one (batch, head).
+
+    ``len_ref`` holds the true cache length; positions >= it are bucket
+    padding and are masked out (the cache is padded up to the artifact's
+    shape bucket by the client).
+    """
+    q = q_ref[0, 0]  # (H,)
+    kv_len = len_ref[0]
+
+    def body(j, carry):
+        acc, m, l = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None)))
+        v_blk = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None)))
+        s = (k_blk @ q) * scale  # (bk,)
+        pos = j * bk + jax.lax.iota(jnp.int32, bk)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum()
+        acc = acc * alpha + p @ v_blk
+        return acc, m_new, l_new
+
+    h = q.shape[-1]
+    acc, _, l = jax.lax.fori_loop(
+        0, seq // bk, body,
+        (jnp.zeros((h,), jnp.float32), jnp.float32(NEG_INF),
+         jnp.float32(0.0)))
+    o_ref[0, 0] = acc / l
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bk"))
+def attention_decode(q, k, v, kv_len, scale, bk=128):
+    """One-token decode. q: (BH, 1, H), k, v: (BH, S, H), kv_len: (1,) i32
+    true cache length -> (BH, 1, H)."""
+    bh, s, h = k.shape
+    bk = _pick_block(s, bk)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bk=bk, scale=scale, seq=s),
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, 1, h), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, s, h), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, s, h), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, h), jnp.float32),
+        interpret=True,
+    )(q, k, v, kv_len)

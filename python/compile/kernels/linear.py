@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: flattened token-batched linear layer.
+
+This is the base executor's hot spot. Symbiosis flattens the
+``batch x seq_len`` inputs of *all* clients batched at a layer into a single
+token axis (valid because nn.Linear / Conv1D are position-independent,
+paper section 3.7), so the kernel is a single ``(T, Din) @ (Din, Dout) + b``
+with no padding between requests.
+
+TPU mapping (DESIGN.md section 4): the grid tiles tokens x dout into
+MXU-shaped blocks; each grid step loads an x-block and a w-block into VMEM
+(Pallas pipelines the HBM->VMEM copies across grid steps, giving the
+double-buffering the paper got from CUDA threadblocks). ``interpret=True``
+everywhere — the CPU PJRT plugin cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k_blocks):
+    """One (bt x bd) output tile; loops over the Din dimension in blocks.
+
+    The k-loop accumulates into the output tile, which stays resident in
+    VMEM across the k grid dimension (output revisiting).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k_blocks - 1)
+    def _bias():
+        o_ref[...] += b_ref[...][None, :]
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (block shapes must tile)."""
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bd", "bk"))
+def linear_flat(x, w, b, bt=128, bd=128, bk=512):
+    """y = x @ w + b with x: (T, Din), w: (Din, Dout), b: (Dout,).
+
+    Block sizes default to MXU-friendly tiles; for the tiny executable
+    configs they clamp to divisors of the actual dims.
+    """
+    t, din = x.shape
+    dout = w.shape[1]
+    bt = _pick_block(t, bt)
+    bd = _pick_block(dout, bd)
+    bk = _pick_block(din, bk)
+    n_k = din // bk
+    grid = (t // bt, dout // bd, n_k)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, n_k_blocks=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bd), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bd,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bt, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, dout), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _bwd_data_kernel(dy_ref, w_ref, o_ref, *, n_k_blocks):
+    """dX tile = sum_k dY[:, k-block] @ W[:, k-block]^T."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(dy_ref[...], w_ref[...].T,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bd", "bk"))
+def linear_bwd_data(dy, w, bt=128, bd=128, bk=512):
+    """dX = dY @ W^T — the memory-optimized backward of a frozen linear
+    layer (paper section 3.6): recomputed from parameters, nothing saved.
+
+    dy: (T, Dout), w: (Din, Dout) -> (T, Din)
+    """
+    t, dout = dy.shape
+    din = w.shape[0]
+    bt = _pick_block(t, bt)
+    bd = _pick_block(din, bd)
+    bk = _pick_block(dout, bk)
+    grid = (t // bt, din // bd, dout // bk)
+    return pl.pallas_call(
+        functools.partial(_bwd_data_kernel, n_k_blocks=dout // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bd, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bt, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, din), jnp.float32),
+        interpret=True,
+    )(dy, w)

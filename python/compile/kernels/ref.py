@@ -1,0 +1,142 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has an entry here with the identical
+signature; pytest (and hypothesis sweeps) assert allclose between the two.
+These are also the bodies used by ``model.py`` for the monolithic reference
+model the Rust integration tests compare against.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_flat(x, w, b):
+    """y = x @ w + b over a flattened token axis.
+
+    x: (T, Din), w: (Din, Dout), b: (Dout,) -> (T, Dout)
+    """
+    return x @ w + b
+
+
+def linear_bwd_data(dy, w):
+    """Memory-optimized backward of a frozen linear layer: dX = dY . W^T.
+
+    The paper's section 3.6 insight — no saved forward activations needed.
+    dy: (T, Dout), w: (Din, Dout) -> (T, Din)
+    """
+    return dy @ w.T
+
+
+def attention_prefill(q, k, v, scale):
+    """Causal self-attention over full sequences.
+
+    q, k, v: (BH, S, H) with BH = batch * n_heads. Returns (BH, S, H).
+    """
+    s = q.shape[1]
+    scores = jnp.einsum("bqh,bkh->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v)
+
+
+def attention_decode(q, k, v, kv_len, scale):
+    """Single-query attention against a KV cache.
+
+    q: (BH, 1, H), k, v: (BH, S, H) -> (BH, 1, H).  ``kv_len`` (i32 scalar,
+    shape (1,)) masks cache positions >= kv_len: the HLO artifact is
+    shape-specialized to a bucket S, so the client pads the cache to S and
+    passes the true length.
+    """
+    s = k.shape[1]
+    scores = jnp.einsum("bqh,bkh->bqk", q, k) * scale
+    valid = jnp.arange(s)[None, None, :] < kv_len[0]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v)
+
+
+def attention_bwd(q, k, v, dout, scale):
+    """Gradients of causal prefill attention w.r.t. q, k, v.
+
+    Recomputes the probabilities from (q, k) — the client keeps q/k/v in its
+    runtime state, so nothing extra is stored (paper section 3.6 applied to
+    the client side).
+    """
+    _, vjp = jax.vjp(lambda q_, k_, v_: attention_prefill(q_, k_, v_, scale),
+                     q, k, v)
+    return vjp(dout)
+
+
+def lora_apply(x, a, b, scale):
+    """LoRA adapter path: y = scale * (x @ A) @ B.
+
+    x: (T, Din), a: (Din, r), b: (r, Dout) -> (T, Dout)
+    """
+    return scale * ((x @ a) @ b)
+
+
+def lora_bwd(x, dy, a, b, scale):
+    """Gradients of the LoRA path: (dA, dB, dx).
+
+    dA = scale * x^T (dy B^T);  dB = scale * (xA)^T dy;  dx = scale * dy B^T A^T
+    """
+    xa = x @ a
+    dyb = dy @ b.T
+    da = scale * (x.T @ dyb)
+    db = scale * (xa.T @ dy)
+    dx = scale * (dyb @ a.T)
+    return da, db, dx
+
+
+def ia3_apply(x, scale_vec):
+    """IA3: elementwise rescale of activations. x: (T, D), scale_vec: (D,)."""
+    return x * scale_vec[None, :]
+
+
+def softmax_xent(logits, labels, weights=None):
+    """Weighted-mean cross-entropy and its gradient w.r.t. logits.
+
+    logits: (T, V) f32, labels: (T,) int32, weights: (T,) f32 (1 for real
+    tokens, 0 for bucket padding) -> (loss (), dlogits (T, V)).
+    """
+    if weights is None:
+        weights = jnp.ones(logits.shape[0], jnp.float32)
+    denom = weights.sum()
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = (nll * weights).sum() / denom
+    dlogits = (jax.nn.softmax(logits, axis=-1)
+               - jax.nn.one_hot(labels, logits.shape[-1]))
+    dlogits = dlogits * (weights / denom)[:, None]
+    return loss, dlogits
+
+
+def adam_step(p, g, m, v, t, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam update over a flat parameter vector. t is the 1-based step."""
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1 ** t)
+    vhat = v / (1 - b2 ** t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def rmsnorm(x, gain, eps=1e-6):
+    """RMSNorm: x * gain / rms(x). x: (T, D), gain: (D,)."""
+    rms = jnp.sqrt((x * x).mean(axis=-1, keepdims=True) + eps)
+    return x / rms * gain[None, :]
+
+
+def rmsnorm_bwd(x, gain, dy, eps=1e-6):
+    """dx of RMSNorm (gain is frozen base-model state in Symbiosis)."""
+    _, vjp = jax.vjp(lambda x_: rmsnorm(x_, gain, eps), x)
+    return vjp(dy)[0]
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def gelu_bwd(x, dy):
+    _, vjp = jax.vjp(gelu, x)
+    return vjp(dy)[0]

@@ -1,0 +1,220 @@
+"""L2: the transformer decomposed along Symbiosis's split-execution line.
+
+Two things live here:
+
+1. **Artifact functions** — the individual jax functions (calling the L1
+   Pallas kernels) that ``aot.py`` lowers to HLO text, one per
+   (operation, shape-bucket).  These are exactly the units the Rust
+   coordinator composes at run time: *base* artifacts execute in the base
+   executor, *client* artifacts in each client.
+
+2. **Monolithic reference** — the same model as one pure-jnp function
+   (``forward`` / ``train_step``), used to produce golden vectors that the
+   Rust split-execution integration tests must match (within fp32
+   tolerance).  This encodes the paper's core correctness claim: "the
+   output with Symbiosis is exactly identical to that of the baseline".
+
+Model shape (executable family): decoder-only, learned absolute position
+embeddings (GPT2-style; RoPE is avoided so the decode path stays
+position-explicit), pre-RMSNorm, fused-QKV projections, GELU MLP.
+Client-side cheap elementwise ops (rmsnorm, gelu, residual) are implemented
+natively in Rust; their formulas here are the normative reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs
+from .kernels import attention as katt
+from .kernels import linear as klin
+from .kernels import lora as klora
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Deterministic parameter generation (shared with weights.bin)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: configs.ModelConfig, seed: int = 0):
+    """Deterministic base-model weights, scaled for stable forward passes."""
+    rng = np.random.default_rng(seed)
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq
+
+    def w(*shape, scale=None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+        return jnp.asarray(
+            rng.standard_normal(shape, dtype=np.float32) * scale)
+
+    params = {
+        "embed": w(v, d, scale=0.02),
+        "pos": w(s, d, scale=0.02),
+        "norm_f": jnp.ones((d,), jnp.float32),
+        "lm_head_w": w(d, v),
+        "lm_head_b": jnp.zeros((v,), jnp.float32),
+    }
+    for l in range(cfg.n_layers):
+        params.update({
+            f"l{l}.norm1": jnp.ones((d,), jnp.float32),
+            f"l{l}.wqkv": w(d, 3 * d),
+            f"l{l}.bqkv": jnp.zeros((3 * d,), jnp.float32),
+            f"l{l}.wo": w(d, d),
+            f"l{l}.bo": jnp.zeros((d,), jnp.float32),
+            f"l{l}.norm2": jnp.ones((d,), jnp.float32),
+            f"l{l}.wup": w(d, f),
+            f"l{l}.bup": jnp.zeros((f,), jnp.float32),
+            f"l{l}.wdown": w(f, d),
+            f"l{l}.bdown": jnp.zeros((d,), jnp.float32),
+        })
+    return params
+
+
+def init_lora(cfg: configs.ModelConfig, rank: int,
+              targets=("q", "k", "v", "o"), seed: int = 1):
+    """Deterministic LoRA adapter init.  B is standardly zero-initialized,
+    but that makes first-iteration dA vanish — for meaningful golden
+    gradients we use a small nonzero B."""
+    rng = np.random.default_rng(seed)
+    d = cfg.d_model
+    adapter = {}
+    for l in range(cfg.n_layers):
+        for t in targets:
+            adapter[f"l{l}.{t}.a"] = jnp.asarray(
+                rng.standard_normal((d, rank), dtype=np.float32) / d)
+            adapter[f"l{l}.{t}.b"] = jnp.asarray(
+                rng.standard_normal((rank, d), dtype=np.float32) * 0.01)
+    return adapter
+
+
+# ---------------------------------------------------------------------------
+# Artifact functions (lowered one-by-one by aot.py)
+# ---------------------------------------------------------------------------
+# Base-executor artifacts — Pallas linear kernels over flattened tokens.
+
+def art_linear_fwd(x, w, b):
+    return (klin.linear_flat(x, w, b),)
+
+
+def art_linear_bwd(dy, w):
+    return (klin.linear_bwd_data(dy, w),)
+
+
+# Client artifacts — attention (Pallas) and LoRA (Pallas).
+
+def art_attn_prefill(q, k, v, *, scale):
+    return (katt.attention_prefill(q, k, v, scale),)
+
+
+def art_attn_decode(q, k, v, kv_len, *, scale):
+    return (katt.attention_decode(q, k, v, kv_len, scale),)
+
+
+def art_attn_bwd(q, k, v, dout, *, scale):
+    return tuple(ref.attention_bwd(q, k, v, dout, scale))
+
+
+def art_lora_fwd(x, a, b):
+    # LoRA scale (alpha/r) is applied natively in Rust — cheap elementwise.
+    return (klora.lora_apply(x, a, b, 1.0),)
+
+
+def art_lora_bwd(x, dy, a, b):
+    return tuple(klora.lora_bwd(x, dy, a, b, 1.0))
+
+
+def art_embed(tokens, positions, emb, pos):
+    return (emb[tokens] + pos[positions],)
+
+
+def art_xent(logits, labels, weights):
+    return tuple(ref.softmax_xent(logits, labels, weights))
+
+
+def art_adam(p, g, m, v, t):
+    return tuple(ref.adam_step(p, g, m, v, t))
+
+
+# ---------------------------------------------------------------------------
+# Monolithic reference model (pure jnp, differentiable)
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n_heads):
+    t, d = x.shape
+    h = d // n_heads
+    # (T, D) -> (NH, T, H); the request batch is folded in the caller's loop
+    return x.reshape(t, n_heads, h).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    nh, t, h = x.shape
+    return x.transpose(1, 0, 2).reshape(t, nh * h)
+
+
+def forward(cfg: configs.ModelConfig, params, tokens, adapter=None,
+            lora_scale: float = 2.0, targets=("q", "k", "v", "o")):
+    """Reference forward for ONE sequence. tokens: (S,) int32 -> (S, V).
+
+    ``adapter`` is a LoRA dict from init_lora (or None for the plain base
+    model). The math mirrors what Rust composes from artifacts exactly.
+    """
+    nh = cfg.n_heads
+    scale = 1.0 / np.sqrt(cfg.d_head)
+    s = tokens.shape[0]
+    h = params["embed"][tokens] + params["pos"][jnp.arange(s)]
+    for l in range(cfg.n_layers):
+        a_in = ref.rmsnorm(h, params[f"l{l}.norm1"])
+        qkv = ref.linear_flat(a_in, params[f"l{l}.wqkv"],
+                              params[f"l{l}.bqkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        if adapter is not None:
+            if "q" in targets:
+                q = q + ref.lora_apply(a_in, adapter[f"l{l}.q.a"],
+                                       adapter[f"l{l}.q.b"], lora_scale)
+            if "k" in targets:
+                k = k + ref.lora_apply(a_in, adapter[f"l{l}.k.a"],
+                                       adapter[f"l{l}.k.b"], lora_scale)
+            if "v" in targets:
+                v = v + ref.lora_apply(a_in, adapter[f"l{l}.v.a"],
+                                       adapter[f"l{l}.v.b"], lora_scale)
+        qh, kh, vh = (_split_heads(x, nh) for x in (q, k, v))
+        attn = _merge_heads(ref.attention_prefill(qh, kh, vh, scale))
+        o = ref.linear_flat(attn, params[f"l{l}.wo"], params[f"l{l}.bo"])
+        if adapter is not None and "o" in targets:
+            o = o + ref.lora_apply(attn, adapter[f"l{l}.o.a"],
+                                   adapter[f"l{l}.o.b"], lora_scale)
+        h = h + o
+        m_in = ref.rmsnorm(h, params[f"l{l}.norm2"])
+        u = ref.gelu(ref.linear_flat(m_in, params[f"l{l}.wup"],
+                                     params[f"l{l}.bup"]))
+        h = h + ref.linear_flat(u, params[f"l{l}.wdown"],
+                                params[f"l{l}.bdown"])
+    hf = ref.rmsnorm(h, params["norm_f"])
+    return ref.linear_flat(hf, params["lm_head_w"], params["lm_head_b"])
+
+
+def loss_fn(cfg, params, adapter, tokens, labels, lora_scale=2.0,
+            targets=("q", "k", "v", "o")):
+    logits = forward(cfg, params, tokens, adapter, lora_scale, targets)
+    loss, _ = ref.softmax_xent(logits, labels)
+    return loss
+
+
+def train_step(cfg, params, adapter, tokens, labels, lora_scale=2.0,
+               targets=("q", "k", "v", "o")):
+    """Reference loss + LoRA grads for one sequence — golden for the Rust
+    hand-rolled split-execution backward."""
+    loss, grads = jax.value_and_grad(
+        lambda ad: loss_fn(cfg, params, ad, tokens, labels, lora_scale,
+                           targets))(adapter)
+    return loss, grads
+
+
+def generate(cfg, params, prompt, n_new, adapter=None, lora_scale=2.0):
+    """Greedy decoding reference (recomputes the full prefix each step —
+    a correctness oracle only, not a performance path)."""
+    toks = list(np.asarray(prompt))
+    for _ in range(n_new):
+        logits = forward(cfg, params, jnp.asarray(toks, jnp.int32), adapter,
+                         lora_scale)
+        toks.append(int(jnp.argmax(logits[-1])))
+    return np.asarray(toks[len(prompt):], dtype=np.int32)

@@ -1,0 +1,229 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Hypothesis sweeps shapes/dtypes per the repro plan; each Pallas kernel must
+match its pure-jnp oracle in ``kernels.ref`` to fp32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, linear, lora, ref
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def arr(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# linear_flat / linear_bwd_data
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([1, 3, 8, 32, 128]),
+    din=st.sampled_from([16, 64, 256]),
+    dout=st.sampled_from([16, 64, 192, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_fwd_matches_ref(t, din, dout, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = arr(rng, t, din), arr(rng, din, dout), arr(rng, dout)
+    np.testing.assert_allclose(
+        linear.linear_flat(x, w, b), ref.linear_flat(x, w, b),
+        rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([1, 5, 64, 128]),
+    din=st.sampled_from([16, 64, 256]),
+    dout=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_bwd_matches_ref(t, din, dout, seed):
+    rng = np.random.default_rng(seed)
+    dy, w = arr(rng, t, dout), arr(rng, din, dout)
+    np.testing.assert_allclose(
+        linear.linear_bwd_data(dy, w), ref.linear_bwd_data(dy, w),
+        rtol=RTOL, atol=ATOL)
+
+
+def test_linear_odd_shapes_fall_back_to_divisor_blocks():
+    # T=7 is prime: the block picker must clamp to 7 (or 1) and still tile.
+    rng = np.random.default_rng(0)
+    x, w, b = arr(rng, 7, 48), arr(rng, 48, 80), arr(rng, 80)
+    np.testing.assert_allclose(
+        linear.linear_flat(x, w, b), ref.linear_flat(x, w, b),
+        rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.sampled_from([1, 4, 8]),
+    s=st.sampled_from([16, 32, 64, 128]),
+    h=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attn_prefill_matches_ref(bh, s, h, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (arr(rng, bh, s, h) for _ in range(3))
+    scale = 1.0 / np.sqrt(h)
+    np.testing.assert_allclose(
+        attention.attention_prefill(q, k, v, scale, bq=16, bk=16),
+        ref.attention_prefill(q, k, v, scale), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.sampled_from([1, 4, 8]),
+    s=st.sampled_from([16, 64, 128]),
+    kv_len_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attn_decode_masks_bucket_padding(bh, s, kv_len_frac, seed):
+    rng = np.random.default_rng(seed)
+    h = 16
+    q = arr(rng, bh, 1, h)
+    k, v = arr(rng, bh, s, h), arr(rng, bh, s, h)
+    kv_len = max(1, int(s * kv_len_frac))
+    scale = 1.0 / np.sqrt(h)
+    got = attention.attention_decode(
+        q, k, v, jnp.asarray([kv_len], jnp.int32), scale, bk=16)
+    # oracle: slice off the padding entirely
+    want = ref.attention_decode(q, k[:, :kv_len], v[:, :kv_len],
+                                jnp.asarray([kv_len], jnp.int32), scale)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_attn_decode_padding_values_are_ignored():
+    # Poison the padded region with huge values; output must not change.
+    rng = np.random.default_rng(3)
+    q, k, v = arr(rng, 4, 1, 16), arr(rng, 4, 64, 16), arr(rng, 4, 64, 16)
+    kv_len = jnp.asarray([40], jnp.int32)
+    base = attention.attention_decode(q, k, v, kv_len, 0.25, bk=16)
+    k2 = k.at[:, 40:].set(1e6)
+    v2 = v.at[:, 40:].set(-1e6)
+    poisoned = attention.attention_decode(q, k2, v2, kv_len, 0.25, bk=16)
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+
+
+def test_attn_prefill_causality():
+    # Changing k/v at position j must not affect outputs at positions < j.
+    rng = np.random.default_rng(4)
+    q, k, v = (arr(rng, 4, 32, 16) for _ in range(3))
+    base = np.asarray(attention.attention_prefill(q, k, v, 0.25, bq=16,
+                                                  bk=16))
+    k2 = k.at[:, 20:].add(5.0)
+    v2 = v.at[:, 20:].add(-3.0)
+    mod = np.asarray(attention.attention_prefill(q, k2, v2, 0.25, bq=16,
+                                                 bk=16))
+    np.testing.assert_allclose(base[:, :20], mod[:, :20], rtol=1e-5,
+                               atol=1e-5)
+    assert not np.allclose(base[:, 20:], mod[:, 20:])
+
+
+def test_attn_bwd_matches_autodiff():
+    rng = np.random.default_rng(5)
+    q, k, v, do = (arr(rng, 4, 32, 16) for _ in range(4))
+    got = ref.attention_bwd(q, k, v, do, 0.25)
+    import jax
+    _, vjp = jax.vjp(
+        lambda a, b, c: ref.attention_prefill(a, b, c, 0.25), q, k, v)
+    want = vjp(do)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# LoRA
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([1, 8, 64, 128]),
+    d=st.sampled_from([16, 64]),
+    r=st.sampled_from([4, 8, 64]),
+    scale=st.floats(0.25, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lora_fwd_matches_ref(t, d, r, scale, seed):
+    rng = np.random.default_rng(seed)
+    x, a, b = arr(rng, t, d), arr(rng, d, r), arr(rng, r, d)
+    np.testing.assert_allclose(
+        lora.lora_apply(x, a, b, scale), ref.lora_apply(x, a, b, scale),
+        rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([1, 8, 64]),
+    r=st.sampled_from([4, 8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lora_bwd_matches_ref(t, r, seed):
+    rng = np.random.default_rng(seed)
+    d = 64
+    x, dy = arr(rng, t, d), arr(rng, t, d)
+    a, b = arr(rng, d, r), arr(rng, r, d)
+    got = lora.lora_bwd(x, dy, a, b, 2.0)
+    want = ref.lora_bwd(x, dy, a, b, 2.0)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+
+def test_lora_bwd_matches_autodiff():
+    import jax
+    rng = np.random.default_rng(6)
+    x, a, b = arr(rng, 16, 64), arr(rng, 64, 8), arr(rng, 8, 64)
+    dy = arr(rng, 16, 64)
+    _, vjp = jax.vjp(lambda x_, a_, b_: ref.lora_apply(x_, a_, b_, 2.0),
+                     x, a, b)
+    dx_w, da_w, db_w = vjp(dy)
+    da, db, dx = ref.lora_bwd(x, dy, a, b, 2.0)
+    np.testing.assert_allclose(da, da_w, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(db, db_w, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(dx, dx_w, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# loss / adam oracles self-check vs autodiff
+# ---------------------------------------------------------------------------
+
+def test_xent_grad_matches_autodiff():
+    import jax
+    rng = np.random.default_rng(8)
+    logits = arr(rng, 12, 32)
+    labels = jnp.asarray(rng.integers(0, 32, 12), jnp.int32)
+    w = jnp.ones(12, jnp.float32)
+    loss, dlogits = ref.softmax_xent(logits, labels, w)
+    want = jax.grad(
+        lambda lg: ref.softmax_xent(lg, labels, w)[0])(logits)
+    np.testing.assert_allclose(dlogits, want, rtol=RTOL, atol=ATOL)
+
+
+def test_xent_padding_weights_are_exact():
+    rng = np.random.default_rng(9)
+    logits = arr(rng, 16, 32)
+    labels = jnp.asarray(rng.integers(0, 32, 16), jnp.int32)
+    w = jnp.asarray([1.0] * 10 + [0.0] * 6, jnp.float32)
+    loss_p, dl_p = ref.softmax_xent(logits, labels, w)
+    loss_s, dl_s = ref.softmax_xent(logits[:10], labels[:10])
+    np.testing.assert_allclose(loss_p, loss_s, rtol=1e-6)
+    np.testing.assert_allclose(dl_p[:10], dl_s, rtol=1e-5, atol=1e-6)
+    assert np.all(np.asarray(dl_p[10:]) == 0.0)
+
+
+def test_adam_reduces_loss_direction():
+    p = jnp.asarray([1.0, -2.0, 3.0])
+    g = jnp.asarray([0.5, -0.5, 0.1])
+    p2, m, v = ref.adam_step(p, g, jnp.zeros(3), jnp.zeros(3), 1.0)
+    # step direction opposes gradient sign
+    assert np.all(np.sign(np.asarray(p - p2)) == np.sign(np.asarray(g)))

@@ -1,0 +1,152 @@
+"""L2 model-level tests: split-composition == monolith, shapes, golden."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, container, model
+from compile.kernels import ref
+
+CFG = configs.SYM_TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG)
+
+
+def test_forward_shapes(params):
+    tokens = jnp.asarray(np.arange(16) % CFG.vocab, jnp.int32)
+    logits = model.forward(CFG, params, tokens)
+    assert logits.shape == (16, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_deterministic(params):
+    tokens = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    a = model.forward(CFG, params, tokens)
+    b = model.forward(CFG, params, tokens)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adapter_changes_output(params):
+    tokens = jnp.asarray([5, 6, 7, 8], jnp.int32)
+    base = model.forward(CFG, params, tokens)
+    adapted = model.forward(CFG, params, tokens, model.init_lora(CFG, 8))
+    assert not np.allclose(np.asarray(base), np.asarray(adapted))
+
+
+def test_split_composition_equals_monolith(params):
+    """Re-compose the model from the *artifact functions* (what Rust does)
+    and check it matches the monolithic reference exactly."""
+    tokens = np.asarray([3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8, 9, 7, 9, 3],
+                        np.int32)
+    s = len(tokens)
+    nh, hd = CFG.n_heads, CFG.d_head
+    scale_unused = 1.0 / np.sqrt(hd)  # baked into the attention artifact
+
+    h = model.art_embed(jnp.asarray(tokens), jnp.arange(s, dtype=jnp.int32),
+                        params["embed"], params["pos"])[0]
+    for l in range(CFG.n_layers):
+        a_in = ref.rmsnorm(h, params[f"l{l}.norm1"])
+        qkv = model.art_linear_fwd(a_in, params[f"l{l}.wqkv"],
+                                   params[f"l{l}.bqkv"])[0]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        qh = q.reshape(s, nh, hd).transpose(1, 0, 2)
+        kh = k.reshape(s, nh, hd).transpose(1, 0, 2)
+        vh = v.reshape(s, nh, hd).transpose(1, 0, 2)
+        from functools import partial
+        attn = model.art_attn_prefill(qh, kh, vh, scale=scale_unused)[0]
+        attn = attn.transpose(1, 0, 2).reshape(s, nh * hd)
+        o = model.art_linear_fwd(attn, params[f"l{l}.wo"],
+                                 params[f"l{l}.bo"])[0]
+        h = h + o
+        m_in = ref.rmsnorm(h, params[f"l{l}.norm2"])
+        u = ref.gelu(model.art_linear_fwd(m_in, params[f"l{l}.wup"],
+                                          params[f"l{l}.bup"])[0])
+        h = h + model.art_linear_fwd(u, params[f"l{l}.wdown"],
+                                     params[f"l{l}.bdown"])[0]
+    hf = ref.rmsnorm(h, params["norm_f"])
+    logits = model.art_linear_fwd(hf, params["lm_head_w"],
+                                  params["lm_head_b"])[0]
+    want = model.forward(CFG, params, jnp.asarray(tokens))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_grads_nonzero(params):
+    adapter = model.init_lora(CFG, 8)
+    tokens = jnp.asarray(np.arange(16) % CFG.vocab, jnp.int32)
+    labels = jnp.asarray((np.arange(16) + 1) % CFG.vocab, jnp.int32)
+    loss, grads = model.train_step(CFG, params, adapter, tokens, labels)
+    assert np.isfinite(float(loss))
+    total = sum(float(jnp.abs(g).sum()) for g in grads.values())
+    assert total > 0.0
+
+
+def test_training_reduces_loss(params):
+    """A few Adam steps on one batch must reduce the loss — the loss-curve
+    sanity behind the fine-tuning experiments."""
+    adapter = model.init_lora(CFG, 8)
+    tokens = jnp.asarray(np.arange(16) % CFG.vocab, jnp.int32)
+    labels = jnp.asarray((np.arange(16) + 1) % CFG.vocab, jnp.int32)
+    m = {k: jnp.zeros_like(v) for k, v in adapter.items()}
+    v = {k: jnp.zeros_like(x) for k, x in adapter.items()}
+    losses = []
+    for t in range(1, 6):
+        loss, grads = model.train_step(CFG, params, adapter, tokens, labels)
+        losses.append(float(loss))
+        for k in adapter:
+            p2, m2, v2 = ref.adam_step(adapter[k].ravel(), grads[k].ravel(),
+                                       m[k].ravel(), v[k].ravel(), float(t),
+                                       lr=1e-2)
+            adapter[k] = p2.reshape(adapter[k].shape)
+            m[k] = m2.reshape(m[k].shape)
+            v[k] = v2.reshape(v[k].shape)
+    assert losses[-1] < losses[0]
+
+
+def test_container_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.standard_normal((3, 4)).astype(np.float32),
+        "b": rng.integers(0, 100, (7,)).astype(np.int32),
+        "scalar": np.asarray([1.5], np.float32),
+    }
+    p = tmp_path / "t.bin"
+    container.write_tensors(p, tensors)
+    back = container.read_tensors(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.txt")),
+                    reason="artifacts not built")
+def test_manifest_artifacts_exist():
+    with open(os.path.join(ART_DIR, "manifest.txt")) as f:
+        lines = f.read().splitlines()
+    assert lines[0].startswith("symbiosis-manifest")
+    arts = [l.split() for l in lines if l.startswith("artifact ")]
+    assert len(arts) > 150
+    for parts in arts:
+        assert os.path.exists(os.path.join(ART_DIR, parts[2])), parts[1]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR,
+                                                    "golden_sym-tiny.bin")),
+                    reason="artifacts not built")
+def test_golden_matches_reference(params):
+    g = container.read_tensors(os.path.join(ART_DIR, "golden_sym-tiny.bin"))
+    logits = model.forward(CFG, params, jnp.asarray(g["tokens16"]))
+    np.testing.assert_allclose(np.asarray(logits), g["base_logits16"],
+                               rtol=1e-5, atol=1e-5)
+    gen = model.generate(CFG, params, g["gen_prompt"], 8,
+                         model.init_lora(CFG, 8))
+    np.testing.assert_array_equal(gen, g["gen_tokens"])

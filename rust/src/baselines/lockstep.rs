@@ -1,0 +1,120 @@
+//! Lockstep shared-base comparators: how vLLM (inference) and mLoRA
+//! (fine-tuning) batch multiple adapters against one base model.
+//!
+//! Both share the base instance (so their *memory* story matches
+//! Symbiosis's sharing) but execute all co-batched requests **in
+//! lockstep**: every layer waits for every client, so small requests
+//! inherit the iteration time of the largest co-batched one (paper
+//! Table 4) and clients cannot progress at independent rates.
+//!
+//! Functionally this is `BatchPolicy::Lockstep` on the real executor;
+//! this module adds the analytic models the paper-scale figures need.
+
+use crate::config::ModelConfig;
+
+/// vLLM-style lockstep prefill: co-batched requests all take the time of
+/// the longest request (padding to max sequence length).
+/// Returns per-request latency estimates for a batch of sequence
+/// lengths. `per_token_secs` is the calibrated prefill cost per token.
+pub fn vllm_lockstep_latency(seq_lens: &[usize], per_token_secs: f64)
+                             -> Vec<f64> {
+    let max = seq_lens.iter().copied().max().unwrap_or(0);
+    // every request pays the max-length execution (plus its own tiny
+    // share of batching overhead)
+    seq_lens.iter().map(|_| max as f64 * per_token_secs).collect()
+}
+
+/// Independent (no-batching) prefill latency for the same requests.
+pub fn independent_latency(seq_lens: &[usize], per_token_secs: f64)
+                           -> Vec<f64> {
+    seq_lens.iter().map(|&s| s as f64 * per_token_secs).collect()
+}
+
+/// mLoRA's memory/performance trade-off (paper section 4.2.2):
+/// `recompute = true` drops stored activations and recomputes them in
+/// backward (slower, less memory); `recompute = false` stores them
+/// (faster, more memory, fewer adapters fit).
+#[derive(Debug, Clone, Copy)]
+pub struct MloraMode {
+    pub recompute: bool,
+}
+
+impl MloraMode {
+    /// Per-GPU memory for `n` co-trained adapters on a shared base.
+    pub fn memory_bytes(&self, cfg: &ModelConfig, n: usize, batch: usize,
+                        seq: usize, rank: usize, n_targets: usize) -> u64 {
+        let acts = if self.recompute {
+            // only per-layer boundary activations retained
+            (batch * seq) as u64
+                * cfg.d_model as u64
+                * cfg.n_layers as u64
+                * cfg.precision.bytes() as u64
+        } else {
+            super::dedicated::activation_bytes(cfg, batch, seq)
+        };
+        cfg.param_bytes()
+            + n as u64
+                * (acts
+                    + cfg.kv_cache_bytes(batch, seq)
+                    + cfg.lora_params(rank, n_targets) * 4
+                    + cfg.optimizer_bytes(rank, n_targets))
+    }
+
+    /// Iteration-time multiplier vs the stored-activation path:
+    /// recompute re-runs the forward during backward (~1.33x of fwd+bwd).
+    pub fn time_multiplier(&self) -> f64 {
+        if self.recompute {
+            4.0 / 3.0
+        } else {
+            1.0
+        }
+    }
+
+    /// Adapters that fit one GPU.
+    pub fn max_adapters(&self, cfg: &ModelConfig, capacity: u64,
+                        batch: usize, seq: usize, rank: usize,
+                        n_targets: usize) -> usize {
+        let mut n = 0;
+        while self.memory_bytes(cfg, n + 1, batch, seq, rank, n_targets)
+            <= capacity
+        {
+            n += 1;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LLAMA2_13B;
+    use crate::device::GIB;
+
+    #[test]
+    fn lockstep_penalizes_small_requests() {
+        // paper Table 4: small+large batched -> small pays large's time
+        let lat = vllm_lockstep_latency(&[1, 512], 0.007);
+        assert!((lat[0] - lat[1]).abs() < 1e-9);
+        let ind = independent_latency(&[1, 512], 0.007);
+        assert!(ind[0] < lat[0] / 100.0);
+    }
+
+    #[test]
+    fn recompute_saves_memory_but_costs_time() {
+        let fast = MloraMode { recompute: false };
+        let lean = MloraMode { recompute: true };
+        let mf = fast.memory_bytes(&LLAMA2_13B, 4, 2, 512, 8, 4);
+        let ml = lean.memory_bytes(&LLAMA2_13B, 4, 2, 512, 8, 4);
+        assert!(ml < mf);
+        assert!(lean.time_multiplier() > fast.time_multiplier());
+    }
+
+    #[test]
+    fn recompute_fits_more_adapters() {
+        let fast = MloraMode { recompute: false };
+        let lean = MloraMode { recompute: true };
+        let nf = fast.max_adapters(&LLAMA2_13B, 80 * GIB, 2, 512, 8, 4);
+        let nl = lean.max_adapters(&LLAMA2_13B, 80 * GIB, 2, 512, 8, 4);
+        assert!(nl >= nf);
+    }
+}

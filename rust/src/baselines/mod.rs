@@ -1,0 +1,12 @@
+//! Comparator systems for the paper's evaluation:
+//! * [`dedicated`] — per-job model instance (HF-Transformers baseline).
+//! * [`lockstep`] — shared base, lockstep batching (vLLM / mLoRA).
+//! * [`fsdp`] — FSDP data-parallel single-adapter trainer.
+//!
+//! The policies are reimplemented on the same substrate as Symbiosis so
+//! the benches compare batching/placement policy, not implementation
+//! accidents.
+
+pub mod dedicated;
+pub mod fsdp;
+pub mod lockstep;

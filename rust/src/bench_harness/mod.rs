@@ -1,0 +1,120 @@
+//! Minimal criterion-like measurement harness (criterion is not in the
+//! vendored registry — DESIGN.md section 8).
+//!
+//! Usage from a `harness = false` bench binary:
+//! ```ignore
+//! let mut b = Bench::new("fig11_single_gpu");
+//! b.row("clients=2", || iteration());
+//! b.report();
+//! ```
+
+use std::time::Instant;
+
+/// One measured row of a bench table.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub iters: u32,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+/// A named bench that measures closures and prints a fixed-width table.
+pub struct Bench {
+    pub name: String,
+    pub rows: Vec<Row>,
+    warmup: u32,
+    iters: u32,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench { name: name.to_string(), rows: Vec::new(), warmup: 1, iters: 5 }
+    }
+
+    pub fn with_iters(mut self, warmup: u32, iters: u32) -> Self {
+        self.warmup = warmup;
+        self.iters = iters;
+        self
+    }
+
+    /// Measure `f` (called `iters` times after warmup) under `label`.
+    pub fn row<F: FnMut()>(&mut self, label: &str, mut f: F) -> &Row {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = times.iter().copied().fold(0.0, f64::max);
+        self.rows.push(Row {
+            label: label.to_string(),
+            iters: self.iters,
+            mean_secs: mean,
+            min_secs: min,
+            max_secs: max,
+        });
+        self.rows.last().unwrap()
+    }
+
+    /// Record an externally measured value (e.g. simulated seconds).
+    pub fn record(&mut self, label: &str, secs: f64) {
+        self.rows.push(Row {
+            label: label.to_string(),
+            iters: 1,
+            mean_secs: secs,
+            min_secs: secs,
+            max_secs: secs,
+        });
+    }
+
+    pub fn report(&self) {
+        println!("\n== bench: {} ==", self.name);
+        println!("{:<44} {:>12} {:>12} {:>12}", "case", "mean", "min", "max");
+        for r in &self.rows {
+            println!("{:<44} {:>12} {:>12} {:>12}",
+                     r.label, fmt_secs(r.mean_secs), fmt_secs(r.min_secs),
+                     fmt_secs(r.max_secs));
+        }
+    }
+}
+
+/// Human duration formatting: ns/us/ms/s.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_rows() {
+        let mut b = Bench::new("t").with_iters(0, 3);
+        b.row("noop", || {});
+        assert_eq!(b.rows.len(), 1);
+        assert!(b.rows[0].mean_secs < 0.01);
+    }
+
+    #[test]
+    fn formats_durations() {
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+        assert!(fmt_secs(2.5e-5).ends_with("us"));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+}

@@ -1,0 +1,277 @@
+//! Model configuration registry — the Rust mirror of
+//! `python/compile/configs.py`.
+//!
+//! Two families:
+//! * **Executable** (`sym-tiny`, `sym-small`): actually run end-to-end
+//!   through PJRT; dims are re-checked against the AOT manifest at load.
+//! * **Paper models** (Llama2-7B/13B, GPT2-XL, …): analytic configs with
+//!   published dims, used by the device simulator to reproduce the paper's
+//!   memory/placement figures.
+
+/// Parameter/activation precision on the (simulated) paper testbed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F16,
+    BF16,
+    F32,
+}
+
+impl Precision {
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F16 | Precision::BF16 => 2,
+            Precision::F32 => 4,
+        }
+    }
+}
+
+/// Dimensions of a decoder-only transformer.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub precision: Precision,
+    /// Whether HLO artifacts exist for this config.
+    pub executable: bool,
+    /// KV heads (< n_heads for MQA/GQA models: Starcoder, Granite,
+    /// Llama3).  Affects qkv parameter count and KV-cache size.
+    pub kv_heads: usize,
+    /// MLP matrices per block: 2 (GPT GELU) or 3 (Llama/Gemma SwiGLU).
+    pub mlp_mats: usize,
+    /// Whether the HF implementation materializes (B, H, S, S) attention
+    /// scores for backward (eager attention: GPT2, GPTBigCode) or uses
+    /// SDPA/flash (Llama, Gemma).  Drives the activation-memory model.
+    pub eager_attn: bool,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total base-model parameter count (embed + pos + blocks + head).
+    /// Accounts for MQA/GQA (`kv_heads`) and gated MLPs (`mlp_mats`).
+    pub fn n_params(&self) -> u64 {
+        let (d, f, v) = (self.d_model as u64, self.d_ff as u64,
+                         self.vocab as u64);
+        let kv_dim = (self.kv_heads * self.d_head()) as u64;
+        let per_layer = d * d + 2 * d * kv_dim + 3 * d // q + kv proj
+            + d * d + d                                 // attn out
+            + self.mlp_mats as u64 * d * f + f + d      // mlp
+            + 2 * d;                                    // norms
+        v * d + self.max_seq as u64 * d + self.n_layers as u64 * per_layer
+            + d + d * v + v
+    }
+
+    /// Base-model weight bytes at this config's precision.
+    pub fn param_bytes(&self) -> u64 {
+        self.n_params() * self.precision.bytes() as u64
+    }
+
+    /// KV-cache bytes for one request:
+    /// 2 (K and V) * layers * seq * kv_heads * d_head.
+    pub fn kv_cache_bytes(&self, batch: usize, seq_len: usize) -> u64 {
+        2 * self.n_layers as u64
+            * batch as u64
+            * seq_len as u64
+            * (self.kv_heads * self.d_head()) as u64
+            * self.precision.bytes() as u64
+    }
+
+    /// Approximate FLOPs of one forward pass over `t` tokens
+    /// (2*params*tokens for the linears + attention quadratic term).
+    pub fn forward_flops(&self, t: u64, kv_len: u64) -> u64 {
+        let d = self.d_model as u64;
+        let kv_dim = (self.kv_heads * self.d_head()) as u64;
+        let linear = 2 * t
+            * (self.n_layers as u64
+                * (d * d + 2 * d * kv_dim + d * d
+                    + self.mlp_mats as u64 * d * self.d_ff as u64)
+                + d * self.vocab as u64);
+        let attn = 4 * self.n_layers as u64 * t * kv_len * d;
+        linear + attn
+    }
+
+    /// Backward is ~2x forward for the linears (dX and the adapter path).
+    pub fn backward_flops(&self, t: u64, kv_len: u64) -> u64 {
+        2 * self.forward_flops(t, kv_len)
+    }
+
+    /// LoRA adapter parameter count for rank `r` over `n_targets`
+    /// projection matrices per layer.
+    pub fn lora_params(&self, rank: usize, n_targets: usize) -> u64 {
+        (self.n_layers * n_targets * 2 * self.d_model * rank) as u64
+    }
+
+    /// Adam optimizer state bytes for an adapter (2 moments, f32).
+    pub fn optimizer_bytes(&self, rank: usize, n_targets: usize) -> u64 {
+        self.lora_params(rank, n_targets) * 2 * 4
+    }
+
+    /// Activation bytes crossing the client->executor boundary per layer
+    /// invocation (one (T, d_model) f-precision tensor).
+    pub fn activation_bytes(&self, t: u64) -> u64 {
+        t * self.d_model as u64 * self.precision.bytes() as u64
+    }
+}
+
+/// Executable family — must match `python/compile/configs.py`.
+pub const SYM_TINY: ModelConfig = ModelConfig {
+    name: "sym-tiny",
+    vocab: 256,
+    d_model: 64,
+    n_heads: 4,
+    n_layers: 4,
+    d_ff: 256,
+    max_seq: 512,
+    precision: Precision::F32,
+    executable: true,
+    kv_heads: 4, mlp_mats: 2,
+ eager_attn: false,
+};
+
+pub const SYM_SMALL: ModelConfig = ModelConfig {
+    name: "sym-small",
+    vocab: 512,
+    d_model: 128,
+    n_heads: 8,
+    n_layers: 8,
+    d_ff: 512,
+    max_seq: 512,
+    precision: Precision::F32,
+    executable: true,
+    kv_heads: 8, mlp_mats: 2,
+ eager_attn: false,
+};
+
+/// Paper evaluation models (analytic only).
+pub const GPT2_XL: ModelConfig = ModelConfig {
+    name: "gpt2-xl", vocab: 50257, d_model: 1600, n_heads: 25, n_layers: 48,
+    d_ff: 6400, max_seq: 1024, precision: Precision::F16, executable: false,
+    kv_heads: 25, mlp_mats: 2,
+ eager_attn: true,
+};
+pub const LLAMA3_1B: ModelConfig = ModelConfig {
+    name: "llama3-1b", vocab: 128256, d_model: 2048, n_heads: 32,
+    n_layers: 16, d_ff: 8192, max_seq: 8192, precision: Precision::BF16,
+    executable: false,
+    kv_heads: 8, mlp_mats: 3,
+ eager_attn: false,
+};
+pub const LLAMA2_7B: ModelConfig = ModelConfig {
+    name: "llama2-7b", vocab: 32000, d_model: 4096, n_heads: 32,
+    n_layers: 32, d_ff: 11008, max_seq: 4096, precision: Precision::F16,
+    executable: false,
+    kv_heads: 32, mlp_mats: 3,
+ eager_attn: false,
+};
+pub const LLAMA2_13B: ModelConfig = ModelConfig {
+    name: "llama2-13b", vocab: 32000, d_model: 5120, n_heads: 40,
+    n_layers: 40, d_ff: 13824, max_seq: 4096, precision: Precision::F16,
+    executable: false,
+    kv_heads: 40, mlp_mats: 3,
+ eager_attn: false,
+};
+pub const GRANITE_20B: ModelConfig = ModelConfig {
+    name: "granite-20b", vocab: 49152, d_model: 6144, n_heads: 48,
+    n_layers: 52, d_ff: 24576, max_seq: 8192, precision: Precision::F16,
+    executable: false,
+    kv_heads: 1, mlp_mats: 2,
+ eager_attn: true,
+};
+pub const STARCODER_15B: ModelConfig = ModelConfig {
+    name: "starcoder-15b", vocab: 49152, d_model: 6144, n_heads: 48,
+    n_layers: 40, d_ff: 24576, max_seq: 8192, precision: Precision::F32,
+    executable: false,
+    kv_heads: 1, mlp_mats: 2,
+ eager_attn: true,
+};
+pub const GEMMA2_27B: ModelConfig = ModelConfig {
+    name: "gemma2-27b", vocab: 256128, d_model: 4608, n_heads: 32,
+    n_layers: 46, d_ff: 36864, max_seq: 8192, precision: Precision::BF16,
+    executable: false,
+    kv_heads: 16, mlp_mats: 3,
+ eager_attn: false,
+};
+
+/// Look up any model (executable or analytic) by name.
+pub fn model_by_name(name: &str) -> Option<ModelConfig> {
+    Some(match name {
+        "sym-tiny" => SYM_TINY,
+        "sym-small" => SYM_SMALL,
+        "gpt2-xl" => GPT2_XL,
+        "llama3-1b" => LLAMA3_1B,
+        "llama2-7b" => LLAMA2_7B,
+        "llama2-13b" => LLAMA2_13B,
+        "granite-20b" => GRANITE_20B,
+        "starcoder-15b" => STARCODER_15B,
+        "gemma2-27b" => GEMMA2_27B,
+        _ => return None,
+    })
+}
+
+/// Token-count buckets for the flattened-linear executor artifacts
+/// (mirrors `configs.TOKEN_BUCKETS`).
+pub const TOKEN_BUCKETS: &[usize] = &[8, 16, 32, 64, 128, 256, 512, 1024,
+                                      2048];
+/// Sequence buckets for attention artifacts.
+pub const SEQ_BUCKETS: &[usize] = &[16, 32, 64, 128, 256, 512];
+/// Request batch sizes with attention artifacts.
+pub const ATTN_BATCHES: &[usize] = &[1, 2, 4];
+/// Exported LoRA ranks.
+pub const LORA_RANKS: &[usize] = &[8, 64];
+/// Adam artifact parameter-count buckets.
+pub const ADAM_BUCKETS: &[usize] = &[1024, 2048, 4096, 8192, 16384, 32768,
+                                     65536, 131072, 262144, 524288];
+
+/// Smallest bucket >= n.
+pub fn bucket_for(n: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_for(1, TOKEN_BUCKETS), Some(8));
+        assert_eq!(bucket_for(8, TOKEN_BUCKETS), Some(8));
+        assert_eq!(bucket_for(9, TOKEN_BUCKETS), Some(16));
+        assert_eq!(bucket_for(2048, TOKEN_BUCKETS), Some(2048));
+        assert_eq!(bucket_for(2049, TOKEN_BUCKETS), None);
+    }
+
+    #[test]
+    fn paper_model_sizes_are_plausible() {
+        // Published sizes: 7B ~= 13GB f16, 13B ~= 26GB f16 (paper Table 3).
+        let gb = |b: u64| b as f64 / (1 << 30) as f64;
+        assert!((gb(LLAMA2_7B.param_bytes()) - 13.0).abs() < 2.0);
+        assert!((gb(LLAMA2_13B.param_bytes()) - 26.0).abs() < 3.0);
+        assert!((gb(GPT2_XL.param_bytes()) - 3.2).abs() < 1.5);
+    }
+
+    #[test]
+    fn kv_cache_matches_paper_examples() {
+        // Paper section 3.4: Llama2-7B, 16K tokens, batch 1 => ~8 GB.
+        let bytes = LLAMA2_7B.kv_cache_bytes(1, 16 * 1024);
+        let gb = bytes as f64 / (1 << 30) as f64;
+        assert!((gb - 8.0).abs() < 0.5, "got {gb} GB");
+        // Fig 19: 128K context = 64GB KV cache.
+        let gb128 = LLAMA2_7B.kv_cache_bytes(1, 128 * 1024) as f64
+            / (1 << 30) as f64;
+        assert!((gb128 - 64.0).abs() < 2.0, "got {gb128} GB");
+    }
+
+    #[test]
+    fn tiny_config_matches_python() {
+        assert_eq!(SYM_TINY.d_head(), 16);
+        assert_eq!(SYM_TINY.n_layers, 4);
+        assert_eq!(SYM_TINY.lora_params(8, 4), 4 * 4 * 2 * 64 * 8);
+    }
+}

@@ -1,0 +1,403 @@
+//! PEFT adapters — client-owned trainable state.
+//!
+//! Symbiosis supports *different* PEFT methods per client against the
+//! same shared base (design goal 6).  Implemented: **LoRA** (the paper's
+//! evaluation workhorse, Table 2 configs), **IA3** (elementwise
+//! rescaling), and **Prefix** tuning (learned KV prefix per layer).
+//! Adapter math runs client-side: LoRA through the fused Pallas artifact
+//! when available, IA3/Prefix natively (they are elementwise/concat
+//! work, not matmuls).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::{container, ops, Tensor};
+
+/// Which projections a LoRA adapter applies to (paper Table 2: LoRA1 =
+/// (8,[q]) … LoRA4 = (64,[q,k,v,o])).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoraTargets {
+    pub q: bool,
+    pub k: bool,
+    pub v: bool,
+    pub o: bool,
+}
+
+impl LoraTargets {
+    pub const Q_ONLY: LoraTargets =
+        LoraTargets { q: true, k: false, v: false, o: false };
+    pub const QKVO: LoraTargets =
+        LoraTargets { q: true, k: true, v: true, o: true };
+
+    pub fn count(&self) -> usize {
+        [self.q, self.k, self.v, self.o].iter().filter(|&&b| b).count()
+    }
+
+    pub fn list(&self) -> Vec<&'static str> {
+        let mut v = Vec::new();
+        if self.q { v.push("q"); }
+        if self.k { v.push("k"); }
+        if self.v { v.push("v"); }
+        if self.o { v.push("o"); }
+        v
+    }
+}
+
+/// The paper's Table 2 adapter configurations.
+pub fn lora_table2(which: usize) -> (usize, LoraTargets) {
+    match which {
+        1 => (8, LoraTargets::Q_ONLY),
+        2 => (64, LoraTargets::Q_ONLY),
+        3 => (8, LoraTargets::QKVO),
+        4 => (64, LoraTargets::QKVO),
+        _ => panic!("Table 2 defines LoRA 1..4"),
+    }
+}
+
+/// One LoRA pair for one target projection of one block.
+#[derive(Debug, Clone)]
+pub struct LoraPair {
+    pub a: Tensor, // (D, r)
+    pub b: Tensor, // (r, D)
+}
+
+/// A client's adapter state.
+#[derive(Debug, Clone)]
+pub enum Adapter {
+    Lora {
+        rank: usize,
+        targets: LoraTargets,
+        /// alpha / rank.
+        scale: f32,
+        /// `pairs[layer]["q"|"k"|"v"|"o"]`.
+        pairs: Vec<HashMap<&'static str, LoraPair>>,
+    },
+    Ia3 {
+        /// Per layer: elementwise scales for k, v (each (D,)) and mlp
+        /// intermediate (D_ff,).
+        k_scale: Vec<Tensor>,
+        v_scale: Vec<Tensor>,
+        ff_scale: Vec<Tensor>,
+    },
+    Prefix {
+        /// Learned per-layer KV prefix, each (BH, P, H).
+        prefix_len: usize,
+        k_prefix: Vec<Tensor>,
+        v_prefix: Vec<Tensor>,
+    },
+}
+
+impl Adapter {
+    /// Load the deterministic LoRA init exported by aot.py
+    /// (`adapters_<model>.bin`, keys `r{rank}.l{l}.{t}.{a|b}`).
+    pub fn lora_from_artifacts(cfg: &ModelConfig, dir: &std::path::Path,
+                               rank: usize, targets: LoraTargets,
+                               scale: f32) -> Result<Adapter> {
+        let all = container::read_tensors(
+            &dir.join(format!("adapters_{}.bin", cfg.name)))?;
+        let mut pairs = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let mut m = HashMap::new();
+            for t in targets.list() {
+                let a = all
+                    .get(&format!("r{rank}.l{l}.{t}.a"))
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "adapter init missing r{rank}.l{l}.{t}.a"))?;
+                let b = all
+                    .get(&format!("r{rank}.l{l}.{t}.b"))
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "adapter init missing r{rank}.l{l}.{t}.b"))?;
+                m.insert(t, LoraPair { a, b });
+            }
+            pairs.push(m);
+        }
+        Ok(Adapter::Lora { rank, targets, scale, pairs })
+    }
+
+    /// Fresh IA3 adapter (scales initialized to 1 = identity).
+    pub fn ia3(cfg: &ModelConfig) -> Adapter {
+        let ones = |n: usize| Tensor::from_f32(vec![1.0; n], &[n]);
+        Adapter::Ia3 {
+            k_scale: (0..cfg.n_layers).map(|_| ones(cfg.d_model)).collect(),
+            v_scale: (0..cfg.n_layers).map(|_| ones(cfg.d_model)).collect(),
+            ff_scale: (0..cfg.n_layers).map(|_| ones(cfg.d_ff)).collect(),
+        }
+    }
+
+    /// Fresh prefix adapter with a small deterministic init.
+    pub fn prefix(cfg: &ModelConfig, batch: usize, prefix_len: usize,
+                  seed: u64) -> Adapter {
+        let bh = batch * cfg.n_heads;
+        let h = cfg.d_head();
+        let mut gen = crate::coordinator::privacy::NoiseGen::new(seed, 0.1);
+        let mk = |g: &mut crate::coordinator::privacy::NoiseGen| {
+            g.tensor(&[bh, prefix_len, h])
+        };
+        Adapter::Prefix {
+            prefix_len,
+            k_prefix: (0..cfg.n_layers).map(|_| mk(&mut gen)).collect(),
+            v_prefix: (0..cfg.n_layers).map(|_| mk(&mut gen)).collect(),
+        }
+    }
+
+    /// Trainable parameter count.
+    pub fn n_params(&self) -> usize {
+        match self {
+            Adapter::Lora { pairs, .. } => pairs
+                .iter()
+                .flat_map(|m| m.values())
+                .map(|p| p.a.len() + p.b.len())
+                .sum(),
+            Adapter::Ia3 { k_scale, v_scale, ff_scale } => {
+                k_scale.iter().map(|t| t.len()).sum::<usize>()
+                    + v_scale.iter().map(|t| t.len()).sum::<usize>()
+                    + ff_scale.iter().map(|t| t.len()).sum::<usize>()
+            }
+            Adapter::Prefix { k_prefix, v_prefix, .. } => {
+                k_prefix.iter().map(|t| t.len()).sum::<usize>()
+                    + v_prefix.iter().map(|t| t.len()).sum::<usize>()
+            }
+        }
+    }
+
+    /// Flatten all trainable parameters into one vector (optimizer order
+    /// is deterministic: layer-major, target order q,k,v,o then a,b).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_params());
+        match self {
+            Adapter::Lora { pairs, targets, .. } => {
+                for m in pairs {
+                    for t in targets.list() {
+                        let p = &m[t];
+                        out.extend_from_slice(p.a.as_f32());
+                        out.extend_from_slice(p.b.as_f32());
+                    }
+                }
+            }
+            Adapter::Ia3 { k_scale, v_scale, ff_scale } => {
+                for t in k_scale.iter().chain(v_scale).chain(ff_scale) {
+                    out.extend_from_slice(t.as_f32());
+                }
+            }
+            Adapter::Prefix { k_prefix, v_prefix, .. } => {
+                for t in k_prefix.iter().chain(v_prefix) {
+                    out.extend_from_slice(t.as_f32());
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`Adapter::flatten`].
+    pub fn unflatten(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.n_params() {
+            bail!("unflatten: {} vs {}", flat.len(), self.n_params());
+        }
+        let mut off = 0;
+        let mut take = |t: &mut Tensor| {
+            let n = t.len();
+            t.as_f32_mut().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        };
+        match self {
+            Adapter::Lora { pairs, targets, .. } => {
+                let list = targets.list();
+                for m in pairs {
+                    for t in &list {
+                        let p = m.get_mut(t).unwrap();
+                        take(&mut p.a);
+                        take(&mut p.b);
+                    }
+                }
+            }
+            Adapter::Ia3 { k_scale, v_scale, ff_scale } => {
+                for t in k_scale.iter_mut().chain(v_scale).chain(ff_scale) {
+                    take(t);
+                }
+            }
+            Adapter::Prefix { k_prefix, v_prefix, .. } => {
+                for t in k_prefix.iter_mut().chain(v_prefix) {
+                    take(t);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// IA3 application: y = x * scale (broadcast last dim).
+    pub fn ia3_apply(x: &Tensor, scale: &Tensor) -> Tensor {
+        let (t, d) = (x.shape[0], x.shape[1]);
+        assert_eq!(scale.len(), d);
+        let (xs, ss) = (x.as_f32(), scale.as_f32());
+        let mut out = vec![0.0f32; t * d];
+        for r in 0..t {
+            for c in 0..d {
+                out[r * d + c] = xs[r * d + c] * ss[c];
+            }
+        }
+        Tensor::from_f32(out, &[t, d])
+    }
+
+    /// IA3 gradients: (d_scale = sum_t x*dy, dx = dy*scale).
+    pub fn ia3_bwd(x: &Tensor, scale: &Tensor, dy: &Tensor)
+                   -> (Tensor, Tensor) {
+        let (t, d) = (x.shape[0], x.shape[1]);
+        let (xs, ss, dys) = (x.as_f32(), scale.as_f32(), dy.as_f32());
+        let mut dscale = vec![0.0f32; d];
+        let mut dx = vec![0.0f32; t * d];
+        for r in 0..t {
+            for c in 0..d {
+                dscale[c] += xs[r * d + c] * dys[r * d + c];
+                dx[r * d + c] = dys[r * d + c] * ss[c];
+            }
+        }
+        (Tensor::from_f32(dscale, &[d]), Tensor::from_f32(dx, &[t, d]))
+    }
+}
+
+/// Gradient accumulator with the same flattened layout as the adapter.
+#[derive(Debug, Clone)]
+pub struct AdapterGrads {
+    pub flat: Vec<f32>,
+}
+
+impl AdapterGrads {
+    pub fn zeros_like(a: &Adapter) -> Self {
+        AdapterGrads { flat: vec![0.0; a.n_params()] }
+    }
+
+    /// Accumulate a LoRA (dA, dB) pair at its flattened offset.
+    pub fn add_lora(&mut self, adapter: &Adapter, layer: usize,
+                    target: &str, da: &Tensor, db: &Tensor) {
+        let Adapter::Lora { pairs, targets, .. } = adapter else {
+            panic!("add_lora on non-LoRA adapter");
+        };
+        let list = targets.list();
+        let mut off = 0;
+        for (l, m) in pairs.iter().enumerate() {
+            for t in &list {
+                let p = &m[t];
+                if l == layer && *t == target {
+                    for (i, g) in da.as_f32().iter().enumerate() {
+                        self.flat[off + i] += g;
+                    }
+                    let boff = off + p.a.len();
+                    for (i, g) in db.as_f32().iter().enumerate() {
+                        self.flat[boff + i] += g;
+                    }
+                    return;
+                }
+                off += p.a.len() + p.b.len();
+            }
+        }
+        panic!("lora target l{layer}.{target} not found");
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for g in &mut self.flat {
+            *g *= s;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.flat.iter().map(|g| g * g).sum::<f32>().sqrt()
+    }
+}
+
+/// Convenience: LoRA delta application used by the clients' forward —
+/// y += scale * (x A) B via the provided apply function (PJRT artifact or
+/// native fallback).
+pub fn apply_lora_native(x: &Tensor, pair: &LoraPair, scale: f32)
+                         -> Tensor {
+    let xa = ops::matmul(x, &pair.a);
+    let xab = ops::matmul(&xa, &pair.b);
+    ops::scale(&xab, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SYM_TINY;
+
+    fn tiny_lora() -> Adapter {
+        let d = 64;
+        let r = 8;
+        let mut pairs = Vec::new();
+        for l in 0..4 {
+            let mut m = HashMap::new();
+            for t in ["q", "k", "v", "o"] {
+                let a = Tensor::from_f32(
+                    (0..d * r).map(|i| (i + l) as f32 * 1e-3).collect(),
+                    &[d, r]);
+                let b = Tensor::from_f32(
+                    (0..r * d).map(|i| (i * 2 + l) as f32 * 1e-3).collect(),
+                    &[r, d]);
+                m.insert(t, LoraPair { a, b });
+            }
+            pairs.push(m);
+        }
+        Adapter::Lora { rank: r, targets: LoraTargets::QKVO, scale: 2.0,
+                        pairs }
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut a = tiny_lora();
+        let flat = a.flatten();
+        assert_eq!(flat.len(), a.n_params());
+        let mut mutated = flat.clone();
+        mutated[0] += 1.0;
+        mutated[flat.len() - 1] -= 2.0;
+        a.unflatten(&mutated).unwrap();
+        assert_eq!(a.flatten(), mutated);
+    }
+
+    #[test]
+    fn param_counts_match_config_formula() {
+        let a = tiny_lora();
+        assert_eq!(a.n_params() as u64, SYM_TINY.lora_params(8, 4));
+    }
+
+    #[test]
+    fn grads_accumulate_at_right_offset() {
+        let a = tiny_lora();
+        let mut g = AdapterGrads::zeros_like(&a);
+        let da = Tensor::from_f32(vec![1.0; 64 * 8], &[64, 8]);
+        let db = Tensor::from_f32(vec![2.0; 8 * 64], &[8, 64]);
+        g.add_lora(&a, 1, "k", &da, &db);
+        // layer 1, target k: offset = (4 pairs of layer0 + q of layer1)
+        let pair = 64 * 8 + 8 * 64;
+        let off = 4 * pair + pair;
+        assert_eq!(g.flat[off - 1], 0.0);
+        assert_eq!(g.flat[off], 1.0);
+        assert_eq!(g.flat[off + 64 * 8], 2.0);
+    }
+
+    #[test]
+    fn ia3_identity_at_ones() {
+        let x = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let s = Tensor::from_f32(vec![1.0, 1.0], &[2]);
+        assert_eq!(Adapter::ia3_apply(&x, &s), x);
+    }
+
+    #[test]
+    fn ia3_bwd_shapes_and_values() {
+        let x = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let s = Tensor::from_f32(vec![0.5, 2.0], &[2]);
+        let dy = Tensor::from_f32(vec![1.0, 1.0, 1.0, 1.0], &[2, 2]);
+        let (ds, dx) = Adapter::ia3_bwd(&x, &s, &dy);
+        assert_eq!(ds.as_f32(), &[4.0, 6.0]); // sum of x per column
+        assert_eq!(dx.as_f32(), &[0.5, 2.0, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn table2_configs() {
+        assert_eq!(lora_table2(1), (8, LoraTargets::Q_ONLY));
+        assert_eq!(lora_table2(4).0, 64);
+        assert_eq!(lora_table2(3).1.count(), 4);
+    }
+}

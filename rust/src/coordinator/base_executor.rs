@@ -1,0 +1,435 @@
+//! The base executor: serves frozen base-model layers to many clients.
+//!
+//! One thread owns the base weights and a PJRT engine.  Incoming
+//! [`LayerRequest`]s are queued per (layer, direction); a
+//! [`BatchPolicy`] decides how long to wait for co-batchable requests.
+//! At flush time the queued activations are **token-flattened** into a
+//! single `(sum T_i, Din)` batch (no per-request padding — only the tail
+//! pad up to the artifact's token bucket), executed once, and scattered
+//! back to the per-request response channels (paper sections 3.2, 3.7).
+//!
+//! The executor is stateless across iterations: the memory-optimized
+//! backward (`dX = dY . W^T`, section 3.6) means no forward activation is
+//! ever stored here, which is what keeps its memory footprint flat in
+//! Figs. 9/10.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::{bucket_for, TOKEN_BUCKETS};
+use crate::coordinator::batching::BatchPolicy;
+use crate::coordinator::model_state::BaseWeights;
+use crate::coordinator::proto::{ExecMsg, LayerId, LayerRequest,
+                                LayerResponse, OpKind};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// One executed flush (for Table 5 / Fig 7 reproduction).
+#[derive(Debug, Clone)]
+pub struct FlushRecord {
+    pub layer: LayerId,
+    pub op: OpKind,
+    pub n_requests: usize,
+    pub n_clients: usize,
+    pub real_tokens: usize,
+    pub bucket_tokens: usize,
+    pub mean_wait_secs: f64,
+}
+
+/// Aggregated executor statistics.
+#[derive(Debug, Default)]
+pub struct ExecutorStats {
+    pub flushes: Vec<FlushRecord>,
+    pub requests_served: u64,
+    pub noise_registrations: u64,
+}
+
+impl ExecutorStats {
+    /// Mean co-batched clients per flush (Table 5 "Average Batch Size").
+    pub fn mean_batch_clients(&self) -> f64 {
+        if self.flushes.is_empty() {
+            return 0.0;
+        }
+        self.flushes.iter().map(|f| f.n_clients as f64).sum::<f64>()
+            / self.flushes.len() as f64
+    }
+
+    /// Mean queue wait across flushes (Fig 7).
+    pub fn mean_wait_secs(&self) -> f64 {
+        if self.flushes.is_empty() {
+            return 0.0;
+        }
+        self.flushes.iter().map(|f| f.mean_wait_secs).sum::<f64>()
+            / self.flushes.len() as f64
+    }
+
+    /// Fraction of executed token rows that were bucket padding.
+    pub fn padding_overhead(&self) -> f64 {
+        let real: usize = self.flushes.iter().map(|f| f.real_tokens).sum();
+        let bucket: usize =
+            self.flushes.iter().map(|f| f.bucket_tokens).sum();
+        if bucket == 0 {
+            0.0
+        } else {
+            1.0 - real as f64 / bucket as f64
+        }
+    }
+}
+
+struct Pending {
+    reqs: Vec<(LayerRequest, Instant)>,
+    deadline: Instant,
+    /// Whether any queued request is latency-sensitive (decode): such
+    /// batches flush as soon as the executor would otherwise idle.
+    has_interactive: bool,
+}
+
+impl Pending {
+    fn distinct_clients(&self) -> usize {
+        let mut ids: Vec<usize> =
+            self.reqs.iter().map(|(r, _)| r.client_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    fn total_tokens(&self) -> usize {
+        self.reqs.iter().map(|(r, _)| r.x.shape[0]).sum()
+    }
+}
+
+/// Handle to a running base-executor thread.
+pub struct BaseExecutor {
+    tx: Sender<ExecMsg>,
+    handle: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<ExecutorStats>>,
+}
+
+impl BaseExecutor {
+    /// Spawn the executor thread.
+    pub fn spawn(engine: Arc<Engine>, base: BaseWeights,
+                 policy: BatchPolicy) -> BaseExecutor {
+        let (tx, rx) = channel();
+        let stats = Arc::new(Mutex::new(ExecutorStats::default()));
+        let stats2 = stats.clone();
+        let handle = std::thread::Builder::new()
+            .name("base-executor".into())
+            .spawn(move || run_loop(engine, base, policy, rx, stats2))
+            .expect("spawn base executor");
+        BaseExecutor { tx, handle: Some(handle), stats }
+    }
+
+    /// Channel used by clients' `VirtLayer` proxies.
+    pub fn sender(&self) -> Sender<ExecMsg> {
+        self.tx.clone()
+    }
+
+    /// Snapshot of accumulated statistics.
+    pub fn stats(&self) -> ExecutorStats {
+        let s = self.stats.lock().unwrap();
+        ExecutorStats {
+            flushes: s.flushes.clone(),
+            requests_served: s.requests_served,
+            noise_registrations: s.noise_registrations,
+        }
+    }
+
+    /// Stop the executor and join its thread.
+    pub fn shutdown(mut self) -> ExecutorStats {
+        let _ = self.tx.send(ExecMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        let s = self.stats.lock().unwrap();
+        ExecutorStats {
+            flushes: s.flushes.clone(),
+            requests_served: s.requests_served,
+            noise_registrations: s.noise_registrations,
+        }
+    }
+}
+
+impl Drop for BaseExecutor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ExecMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_loop(engine: Arc<Engine>, base: BaseWeights, policy: BatchPolicy,
+            rx: Receiver<ExecMsg>, stats: Arc<Mutex<ExecutorStats>>) {
+    let mut pending: HashMap<(LayerId, OpKind), Pending> = HashMap::new();
+    let mut registered: usize = 0;
+    loop {
+        // Earliest deadline among pending batches bounds the wait.
+        let now = Instant::now();
+        let next_deadline = pending.values().map(|p| p.deadline).min();
+        let timeout = match next_deadline {
+            Some(d) if d <= now => Duration::ZERO,
+            Some(d) => d - now,
+            None => Duration::from_millis(20),
+        };
+        let first = match rx.recv_timeout(timeout) {
+            Ok(m) => Some(m),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                for (key, p) in pending.drain() {
+                    flush(&engine, &base, p, key, &stats);
+                }
+                return;
+            }
+        };
+        // Greedy drain: while the executor was busy (or sleeping),
+        // more requests may have queued — fold them all in before
+        // deciding what to flush.  This is what makes batching happen
+        // "naturally" under load without per-request waits.
+        let mut shutdown = false;
+        let mut msgs: Vec<ExecMsg> = first.into_iter().collect();
+        while let Ok(m) = rx.try_recv() {
+            msgs.push(m);
+        }
+        for msg in msgs {
+            match msg {
+                ExecMsg::Register { .. } => registered += 1,
+                ExecMsg::Deregister { .. } => {
+                    registered = registered.saturating_sub(1);
+                }
+                ExecMsg::RegisterNoise { layer, noise, resp } => {
+                    // Bias-free linear flow: n_eff = W . n (section 3.8).
+                    let out = noise_effect(&engine, &base, layer, &noise);
+                    stats.lock().unwrap().noise_registrations += 1;
+                    let _ = resp.send(LayerResponse {
+                        y: out.unwrap_or_else(|_| Tensor::zeros(&[0])),
+                        queue_wait_secs: 0.0,
+                        batch_clients: 1,
+                    });
+                }
+                ExecMsg::Request(req) => {
+                    enqueue(&engine, &base, &policy, &stats, &mut pending,
+                            req);
+                }
+                ExecMsg::Shutdown => shutdown = true,
+            }
+        }
+        // Flush pass: barrier-ready or expired batches always go; once
+        // the channel is drained dry the device would idle, so under
+        // non-lockstep policies every pending batch goes — batching
+        // happens "naturally" from requests that arrived while the
+        // device was busy, never from waiting on an idle device
+        // (EXPERIMENTS.md §Perf iterations 1 and 4).
+        let idle = true; // channel fully drained above
+        let now = Instant::now();
+        let due: Vec<(LayerId, OpKind)> = pending
+            .iter()
+            .filter(|(_, p)| {
+                policy.ready(p.distinct_clients(), registered)
+                    || p.deadline <= now
+                    || (idle && !matches!(policy, BatchPolicy::Lockstep))
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        for key in due {
+            let p = pending.remove(&key).unwrap();
+            flush(&engine, &base, p, key, &stats);
+        }
+        if shutdown {
+            for (key, p) in pending.drain() {
+                flush(&engine, &base, p, key, &stats);
+            }
+            return;
+        }
+    }
+}
+
+/// Queue one request, flushing early if the batch would overflow the
+/// largest token bucket.
+fn enqueue(engine: &Engine, base: &BaseWeights, policy: &BatchPolicy,
+           stats: &Arc<Mutex<ExecutorStats>>,
+           pending: &mut HashMap<(LayerId, OpKind), Pending>,
+           req: LayerRequest) {
+    let key = (req.layer, req.op);
+    let budget = policy.wait_budget(req.urgency);
+    let now = Instant::now();
+    let interactive = req.urgency == crate::coordinator::proto::Urgency::Interactive;
+    let p = pending.entry(key).or_insert_with(|| Pending {
+        reqs: Vec::new(),
+        deadline: now + budget,
+        has_interactive: false,
+    });
+    // A latency-sensitive request tightens the deadline of the batch
+    // it joins.
+    p.deadline = p.deadline.min(now + budget);
+    p.has_interactive |= interactive;
+    let max_bucket = *TOKEN_BUCKETS.last().unwrap();
+    if p.total_tokens() + req.x.shape[0] > max_bucket {
+        let full = pending.remove(&key).unwrap();
+        flush(engine, base, full, key, stats);
+        pending.insert(key, Pending {
+            reqs: vec![(req, now)],
+            deadline: now + budget,
+            has_interactive: interactive,
+        });
+    } else {
+        pending.get_mut(&key).unwrap().reqs.push((req, now));
+    }
+}
+
+/// Execute one batched flush and scatter the outputs.
+fn flush(engine: &Engine, base: &BaseWeights, p: Pending,
+         key: (LayerId, OpKind), stats: &Arc<Mutex<ExecutorStats>>) {
+    if p.reqs.is_empty() {
+        return;
+    }
+    let flush_start = Instant::now();
+    let waits: Vec<f64> = p
+        .reqs
+        .iter()
+        .map(|(_, t)| flush_start.duration_since(*t).as_secs_f64())
+        .collect();
+    let n_clients = p.distinct_clients();
+    let n_requests = p.reqs.len();
+    let high = p.has_interactive; // decode batches jump the device queue
+    let (layer, op) = key;
+    let result = execute_batch(engine, base, layer, op, &p.reqs, high);
+    let (real_tokens, bucket_tokens) = match &result {
+        Ok((_, real, bucket)) => (*real, *bucket),
+        Err(_) => (0, 0),
+    };
+    match result {
+        Ok((outputs, _, _)) => {
+            let mean_wait =
+                waits.iter().sum::<f64>() / waits.len() as f64;
+            for (((req, _), out), wait) in
+                p.reqs.into_iter().zip(outputs).zip(waits)
+            {
+                let _ = req.resp.send(LayerResponse {
+                    y: out,
+                    queue_wait_secs: wait,
+                    batch_clients: n_clients,
+                });
+            }
+            let mut s = stats.lock().unwrap();
+            s.requests_served += n_requests as u64;
+            s.flushes.push(FlushRecord {
+                layer,
+                op,
+                n_requests,
+                n_clients,
+                real_tokens,
+                bucket_tokens,
+                mean_wait_secs: mean_wait,
+            });
+        }
+        Err(e) => {
+            eprintln!("base-executor: flush {layer:?}/{op:?} failed: {e:#}");
+            // drop response senders: clients observe a disconnect error
+        }
+    }
+}
+
+/// Token-flatten, pad to bucket, execute the right artifact, split.
+fn execute_batch(engine: &Engine, base: &BaseWeights, layer: LayerId,
+                 op: OpKind, reqs: &[(LayerRequest, Instant)],
+                 high: bool) -> Result<(Vec<Tensor>, usize, usize)> {
+    let real_tokens: usize =
+        reqs.iter().map(|(r, _)| r.x.shape[0]).sum();
+    let bucket = bucket_for(real_tokens, TOKEN_BUCKETS)
+        .ok_or_else(|| anyhow::anyhow!(
+            "{real_tokens} tokens exceed the largest bucket"))?;
+
+    let outputs = match layer {
+        LayerId::Embed => {
+            if op == OpKind::Backward {
+                bail!("embedding has no backward (frozen, below adapters)");
+            }
+            // 1-D i32 concat of token ids and positions.
+            let mut toks = Vec::with_capacity(bucket);
+            let mut poss = Vec::with_capacity(bucket);
+            for (r, _) in reqs {
+                toks.extend_from_slice(r.x.as_i32());
+                let pos = r
+                    .positions
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("embed w/o positions"))?;
+                poss.extend_from_slice(pos.as_i32());
+            }
+            toks.resize(bucket, 0);
+            poss.resize(bucket, 0);
+            let name = format!("embed_t{bucket}_v{}_d{}",
+                               base.cfg.vocab, base.cfg.d_model);
+            let toks = Tensor::from_i32(toks, &[bucket]);
+            let poss = Tensor::from_i32(poss, &[bucket]);
+            let out = engine.execute_prio(
+                &name, &[&toks, &poss, &base.embed, &base.pos], high)?;
+            split_rows(&out[0], reqs)
+        }
+        _ => {
+            let (w, b) = base.linear(layer);
+            let (din, dout) = base.linear_dims(layer);
+            // Token-flattened concat — the paper's no-padding batching:
+            // requests of different lengths stack directly.
+            let parts: Vec<&Tensor> =
+                reqs.iter().map(|(r, _)| &r.x).collect();
+            let flat = Tensor::concat_rows(&parts);
+            match op {
+                OpKind::Forward => {
+                    let x = flat.pad_rows(bucket);
+                    let name =
+                        format!("linear_fwd_t{bucket}_{din}x{dout}");
+                    let out =
+                        engine.execute_prio(&name, &[&x, w, b], high)?;
+                    split_rows(&out[0], reqs)
+                }
+                OpKind::Backward => {
+                    // dX = dY . W^T from parameters only (section 3.6).
+                    let dy = flat.pad_rows(bucket);
+                    let name =
+                        format!("linear_bwd_t{bucket}_{din}x{dout}");
+                    let out =
+                        engine.execute_prio(&name, &[&dy, w], high)?;
+                    split_rows(&out[0], reqs)
+                }
+            }
+        }
+    };
+    Ok((outputs, real_tokens, bucket))
+}
+
+/// Slice the batched output back into per-request tensors (dropping the
+/// bucket padding tail).
+fn split_rows(batched: &Tensor, reqs: &[(LayerRequest, Instant)])
+              -> Vec<Tensor> {
+    let mut outs = Vec::with_capacity(reqs.len());
+    let mut row = 0;
+    for (r, _) in reqs {
+        let t = r.x.shape[0];
+        outs.push(batched.slice_rows(row, row + t));
+        row += t;
+    }
+    outs
+}
+
+/// Privacy support: `n_eff = W . n` via the bias-free execution flow.
+fn noise_effect(engine: &Engine, base: &BaseWeights, layer: LayerId,
+                noise: &Tensor) -> Result<Tensor> {
+    if layer == LayerId::Embed {
+        bail!("noise protocol applies to linear layers only");
+    }
+    let (w, _) = base.linear(layer);
+    let (din, dout) = base.linear_dims(layer);
+    let t = noise.shape[0];
+    let bucket = bucket_for(t, TOKEN_BUCKETS)
+        .ok_or_else(|| anyhow::anyhow!("noise too large"))?;
+    let x = noise.pad_rows(bucket);
+    let zero_bias = Tensor::zeros(&[dout]);
+    let name = format!("linear_fwd_t{bucket}_{din}x{dout}");
+    let out = engine.execute(&name, &[&x, w, &zero_bias])?;
+    Ok(out[0].slice_rows(0, t))
+}

@@ -1,0 +1,96 @@
+//! Per-layer batching policies at the base executor.
+//!
+//! The paper compares three (Table 5):
+//! * **NoLockstep** — every request executes immediately, batch of 1.
+//!   Maximal independence, minimal batching efficiency.
+//! * **Lockstep** — the executor waits for *all* registered clients at
+//!   every layer (how vLLM/mLoRA-style shared-base systems behave). Small
+//!   requests inherit the latency of the slowest client (Table 4).
+//! * **Opportunistic** — wait a bounded, urgency-scaled time to
+//!   accumulate a batch; requests batched at layer *i* are NOT required
+//!   to batch again at layer *i+1* (section 3.7).
+
+use std::time::Duration;
+
+use crate::coordinator::proto::Urgency;
+
+/// Executor batching policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchPolicy {
+    NoLockstep,
+    Lockstep,
+    /// `base_wait` is the budget for `Urgency::Training`; other classes
+    /// scale down from it.
+    Opportunistic { base_wait: Duration },
+}
+
+impl BatchPolicy {
+    /// Default opportunistic policy: 50 ms worst-case wait for training /
+    /// big-batch requests — the paper's "256-batch waits at most 50ms".
+    pub fn opportunistic_default() -> Self {
+        BatchPolicy::Opportunistic { base_wait: Duration::from_millis(50) }
+    }
+
+    /// Wait budget for a request of a given urgency: interactive decode
+    /// requests wait a small fraction of the training budget, bulk
+    /// requests half of it (the wait is "a smaller fraction of their
+    /// naturally longer iteration latency").
+    pub fn wait_budget(&self, urgency: Urgency) -> Duration {
+        match self {
+            BatchPolicy::NoLockstep => Duration::ZERO,
+            // lockstep has no deadline: it waits for the client barrier;
+            // the cap bounds the damage when a client leaves mid-layer.
+            BatchPolicy::Lockstep => Duration::from_millis(50),
+            BatchPolicy::Opportunistic { base_wait } => match urgency {
+                Urgency::Interactive => *base_wait / 50,
+                Urgency::Bulk => *base_wait / 4,
+                Urgency::Training => *base_wait,
+            },
+        }
+    }
+
+    /// Whether a pending batch should flush given the number of distinct
+    /// clients queued and the number registered.
+    pub fn ready(&self, queued_clients: usize, registered: usize) -> bool {
+        match self {
+            BatchPolicy::NoLockstep => true,
+            BatchPolicy::Lockstep => {
+                registered > 0 && queued_clients >= registered
+            }
+            // Opportunistic flushes on deadline (handled by the executor
+            // loop), or early when everyone is already here.
+            BatchPolicy::Opportunistic { .. } => {
+                registered > 0 && queued_clients >= registered
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nolockstep_always_ready_with_zero_wait() {
+        let p = BatchPolicy::NoLockstep;
+        assert!(p.ready(1, 8));
+        assert_eq!(p.wait_budget(Urgency::Training), Duration::ZERO);
+    }
+
+    #[test]
+    fn lockstep_waits_for_everyone() {
+        let p = BatchPolicy::Lockstep;
+        assert!(!p.ready(3, 4));
+        assert!(p.ready(4, 4));
+    }
+
+    #[test]
+    fn opportunistic_scales_wait_with_urgency() {
+        let p = BatchPolicy::opportunistic_default();
+        let t = p.wait_budget(Urgency::Training);
+        let b = p.wait_budget(Urgency::Bulk);
+        let i = p.wait_budget(Urgency::Interactive);
+        assert!(i < b && b < t);
+        assert_eq!(t, Duration::from_millis(50));
+    }
+}

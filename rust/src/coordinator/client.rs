@@ -1,0 +1,823 @@
+//! Clients: the drivers of inference and fine-tuning.
+//!
+//! Each client owns everything request-specific — adapter parameters,
+//! attention + KV cache, optimizer state, saved activations for its own
+//! backward — and invokes the shared base executor layer-by-layer through
+//! its [`VirtLayerCtx`].  Clients never synchronize with each other; they
+//! only opportunistically share executor batches (paper section 3.2,
+//! design goal 5).
+//!
+//! * [`InferenceSession`] — prefill + token-by-token decode with a
+//!   bucketed KV cache (optionally host-offloaded).
+//! * [`Trainer`] — full forward/backward/Adam iteration.  The backward
+//!   composes the executor's memory-optimized `dX = dY . W^T` with
+//!   client-side attention/LoRA/norm gradients, reproducing jax autodiff
+//!   (pinned by the golden integration tests).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{bucket_for, ModelConfig, ATTN_BATCHES, SEQ_BUCKETS,
+                    TOKEN_BUCKETS};
+use crate::coordinator::adapter::{Adapter, AdapterGrads};
+use crate::coordinator::kv_cache::{KvCache, KvPlacement};
+use crate::coordinator::model_state::ClientWeights;
+use crate::coordinator::optimizer::Adam;
+use crate::coordinator::proto::{LayerId, Urgency};
+use crate::coordinator::virt_layer::VirtLayerCtx;
+use crate::runtime::Engine;
+use crate::tensor::{ops, Tensor};
+
+/// Shared per-client context: model dims, client-side weights, executor
+/// proxy, and the engine used for client-side artifacts (attention, LoRA,
+/// loss) — in a local placement this is the same engine as the
+/// executor's.
+pub struct ClientCore {
+    pub cfg: ModelConfig,
+    pub engine: Arc<Engine>,
+    pub virt: Arc<VirtLayerCtx>,
+    pub weights: ClientWeights,
+    pub adapter: Option<Adapter>,
+    /// LoRA alpha/rank scale (ignored for other adapters).
+    pub lora_scale: f32,
+}
+
+/// Per-layer activations saved *by the client* for its backward pass.
+/// The executor saves nothing (paper section 3.6).
+struct SavedLayer {
+    h_in: Tensor,        // (T, D) input to the block
+    a_in: Tensor,        // (T, D) rmsnorm1 output (LoRA bwd input)
+    qh: Tensor,          // (BH, S, H)
+    kh: Tensor,
+    vh: Tensor,
+    attn_merged: Tensor, // (T, D)
+    h_mid: Tensor,       // (T, D) after attention residual
+    u_pre: Tensor,       // (T, F) gelu input
+}
+
+struct SavedActs {
+    layers: Vec<SavedLayer>,
+    h_last: Tensor,
+}
+
+impl ClientCore {
+    fn check_batch(&self, batch: usize) -> Result<()> {
+        if !ATTN_BATCHES.contains(&batch) {
+            bail!("batch {batch} has no attention artifact \
+                   (exported: {ATTN_BATCHES:?})");
+        }
+        Ok(())
+    }
+
+    /// `(T = B*S, D) -> (B*NH, S, H)`: per-sequence head split for the
+    /// attention artifacts (sequences are concatenated token-major).
+    fn to_heads(&self, x: &Tensor, batch: usize) -> Tensor {
+        to_heads_batched(x, batch, self.cfg.n_heads)
+    }
+
+    /// Inverse of [`Self::to_heads`].
+    fn from_heads(&self, x: &Tensor, batch: usize) -> Tensor {
+        from_heads_batched(x, batch)
+    }
+
+    /// Zero-pad `(BH, S, H)` to `(BH, Sb, H)` along the sequence axis.
+    fn pad_seq(x: &Tensor, sb: usize) -> Tensor {
+        let (bh, s, h) = (x.shape[0], x.shape[1], x.shape[2]);
+        if s == sb {
+            return x.clone();
+        }
+        let src = x.as_f32();
+        let mut out = vec![0.0f32; bh * sb * h];
+        for b in 0..bh {
+            let srow = b * s * h;
+            let drow = b * sb * h;
+            out[drow..drow + s * h]
+                .copy_from_slice(&src[srow..srow + s * h]);
+        }
+        Tensor::from_f32(out, &[bh, sb, h])
+    }
+
+    /// Drop sequence padding: `(BH, Sb, H) -> (BH, S, H)`.
+    fn unpad_seq(x: &Tensor, s: usize) -> Tensor {
+        let (bh, sb, h) = (x.shape[0], x.shape[1], x.shape[2]);
+        if sb == s {
+            return x.clone();
+        }
+        let src = x.as_f32();
+        let mut out = vec![0.0f32; bh * s * h];
+        for b in 0..bh {
+            out[b * s * h..(b + 1) * s * h]
+                .copy_from_slice(&src[b * sb * h..b * sb * h + s * h]);
+        }
+        Tensor::from_f32(out, &[bh, s, h])
+    }
+
+    /// `(T, D) x3 -> (T, 3D)` — reassemble the fused-QKV gradient.
+    fn concat_cols3(a: &Tensor, b: &Tensor, c: &Tensor) -> Tensor {
+        let (t, d) = (a.shape[0], a.shape[1]);
+        let mut out = vec![0.0f32; t * 3 * d];
+        for r in 0..t {
+            out[r * 3 * d..r * 3 * d + d]
+                .copy_from_slice(&a.as_f32()[r * d..(r + 1) * d]);
+            out[r * 3 * d + d..r * 3 * d + 2 * d]
+                .copy_from_slice(&b.as_f32()[r * d..(r + 1) * d]);
+            out[r * 3 * d + 2 * d..r * 3 * d + 3 * d]
+                .copy_from_slice(&c.as_f32()[r * d..(r + 1) * d]);
+        }
+        Tensor::from_f32(out, &[t, 3 * d])
+    }
+
+    /// LoRA delta via the fused Pallas artifact (bucketed tokens), with a
+    /// native fallback when no bucket fits.
+    fn lora_delta(&self, x: &Tensor, layer: usize, target: &str)
+                  -> Result<Option<Tensor>> {
+        let Some(Adapter::Lora { rank, targets, scale, pairs }) =
+            self.adapter.as_ref()
+        else {
+            return Ok(None);
+        };
+        let on = match target {
+            "q" => targets.q,
+            "k" => targets.k,
+            "v" => targets.v,
+            "o" => targets.o,
+            _ => false,
+        };
+        if !on {
+            return Ok(None);
+        }
+        let pair = &pairs[layer][target];
+        let t = x.shape[0];
+        let d = self.cfg.d_model;
+        // For tiny activations (decode steps) the PJRT dispatch costs
+        // ~100x the math: run the adapter natively on the client — the
+        // paper's observation that client-side compute is light enough
+        // for weak devices applies to the host CPU here (perf log in
+        // EXPERIMENTS.md §Perf).
+        if t < 8 {
+            return Ok(Some(crate::coordinator::adapter::apply_lora_native(
+                x, pair, *scale)));
+        }
+        let name = match bucket_for(t, TOKEN_BUCKETS) {
+            Some(tb) => format!("lora_fwd_t{tb}_{d}x{rank}x{d}"),
+            None => {
+                return Ok(Some(
+                    crate::coordinator::adapter::apply_lora_native(
+                        x, pair, *scale)));
+            }
+        };
+        if !self.engine.has_artifact(&name) {
+            return Ok(Some(crate::coordinator::adapter::apply_lora_native(
+                x, pair, *scale)));
+        }
+        let tb = bucket_for(t, TOKEN_BUCKETS).unwrap();
+        let xp = x.pad_rows(tb);
+        let out = self.engine.execute(&name, &[&xp, &pair.a, &pair.b])?;
+        Ok(Some(ops::scale(&out[0].slice_rows(0, t), *scale)))
+    }
+
+    /// LoRA backward through the fused artifact: (dA, dB, dX), all
+    /// already multiplied by the adapter scale.
+    fn lora_bwd(&self, x: &Tensor, dy: &Tensor, layer: usize, target: &str)
+                -> Result<Option<(Tensor, Tensor, Tensor)>> {
+        let Some(Adapter::Lora { rank, targets, scale, pairs }) =
+            self.adapter.as_ref()
+        else {
+            return Ok(None);
+        };
+        let on = match target {
+            "q" => targets.q,
+            "k" => targets.k,
+            "v" => targets.v,
+            "o" => targets.o,
+            _ => false,
+        };
+        if !on {
+            return Ok(None);
+        }
+        let pair = &pairs[layer][target];
+        let t = x.shape[0];
+        let d = self.cfg.d_model;
+        let tb = bucket_for(t, TOKEN_BUCKETS)
+            .context("token count exceeds lora bwd buckets")?;
+        let name = format!("lora_bwd_t{tb}_{d}x{rank}x{d}");
+        let xp = x.pad_rows(tb);
+        let dyp = dy.pad_rows(tb);
+        let out =
+            self.engine.execute(&name, &[&xp, &dyp, &pair.a, &pair.b])?;
+        Ok(Some((
+            ops::scale(&out[0], *scale),
+            ops::scale(&out[1], *scale),
+            ops::scale(&out[2].slice_rows(0, t), *scale),
+        )))
+    }
+
+    /// Full forward over `batch` sequences of length `s` (token-major
+    /// concat).  Saves activations when `save` is set (training) and
+    /// appends K/V when `kv` is set (inference prefill).
+    fn forward_full(&self, tokens: &[i32], batch: usize, urgency: Urgency,
+                    mut save: Option<&mut SavedActs>,
+                    mut kv: Option<&mut KvCache>) -> Result<Tensor> {
+        self.check_batch(batch)?;
+        let t = tokens.len();
+        let s = t / batch;
+        let nh = self.cfg.n_heads;
+        let sb = bucket_for(s, SEQ_BUCKETS)
+            .with_context(|| format!("seq len {s} exceeds buckets"))?;
+        let d = self.cfg.d_model;
+
+        // positions restart per sequence
+        let positions: Vec<i32> =
+            (0..t).map(|i| (i % s) as i32).collect();
+        let mut h = self.virt.embed(
+            Tensor::from_i32(tokens.to_vec(), &[t]),
+            Tensor::from_i32(positions, &[t]),
+            urgency,
+        )?;
+
+        for l in 0..self.cfg.n_layers {
+            let h_in = h.clone();
+            let a_in = ops::rmsnorm(&h, &self.weights.norm1[l]);
+            let qkv = self.virt.forward(LayerId::Qkv(l), a_in.clone(),
+                                        urgency)?;
+            let mut q = qkv.slice_cols(0, d);
+            let mut k = qkv.slice_cols(d, 2 * d);
+            let mut v = qkv.slice_cols(2 * d, 3 * d);
+            if let Some(dq) = self.lora_delta(&a_in, l, "q")? {
+                ops::add_assign(&mut q, &dq);
+            }
+            if let Some(dk) = self.lora_delta(&a_in, l, "k")? {
+                ops::add_assign(&mut k, &dk);
+            }
+            if let Some(dv) = self.lora_delta(&a_in, l, "v")? {
+                ops::add_assign(&mut v, &dv);
+            }
+            if let Some(Adapter::Ia3 { k_scale, v_scale, .. }) =
+                self.adapter.as_ref()
+            {
+                k = Adapter::ia3_apply(&k, &k_scale[l]);
+                v = Adapter::ia3_apply(&v, &v_scale[l]);
+            }
+            let qh = self.to_heads(&q, batch);
+            let kh = self.to_heads(&k, batch);
+            let vh = self.to_heads(&v, batch);
+            if let Some(cache) = kv.as_deref_mut() {
+                cache.append(l, &kh, &vh);
+            }
+            // Client-side attention through the Pallas prefill artifact.
+            let name = format!("attn_prefill_bh{}_s{sb}_h{}", batch * nh,
+                               self.cfg.d_head());
+            let qp = Self::pad_seq(&qh, sb);
+            let kp = Self::pad_seq(&kh, sb);
+            let vp = Self::pad_seq(&vh, sb);
+            let attn_p = self.engine.execute(&name, &[&qp, &kp, &vp])?;
+            let attn = Self::unpad_seq(&attn_p[0], s);
+            let attn_merged = self.from_heads(&attn, batch);
+            let mut o = self.virt.forward(LayerId::AttnOut(l),
+                                          attn_merged.clone(), urgency)?;
+            if let Some(do_) = self.lora_delta(&attn_merged, l, "o")? {
+                ops::add_assign(&mut o, &do_);
+            }
+            let h_mid = ops::add(&h, &o);
+            let m_in = ops::rmsnorm(&h_mid, &self.weights.norm2[l]);
+            let mut u_pre = self.virt.forward(LayerId::MlpUp(l), m_in,
+                                              urgency)?;
+            if let Some(Adapter::Ia3 { ff_scale, .. }) =
+                self.adapter.as_ref()
+            {
+                u_pre = Adapter::ia3_apply(&u_pre, &ff_scale[l]);
+            }
+            let u = ops::gelu(&u_pre);
+            let down =
+                self.virt.forward(LayerId::MlpDown(l), u, urgency)?;
+            let h_out = ops::add(&h_mid, &down);
+            if let Some(sv) = save.as_deref_mut() {
+                sv.layers.push(SavedLayer {
+                    h_in,
+                    a_in,
+                    qh,
+                    kh,
+                    vh,
+                    attn_merged,
+                    h_mid,
+                    u_pre,
+                });
+            }
+            h = h_out;
+        }
+        if let Some(sv) = save.as_deref_mut() {
+            sv.h_last = h.clone();
+        }
+        let hf = ops::rmsnorm(&h, &self.weights.norm_f);
+        self.virt.forward(LayerId::LmHead, hf, urgency)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Inference
+// ---------------------------------------------------------------------------
+
+/// An inference job: prefill once, then decode token-by-token against the
+/// client-owned KV cache.
+pub struct InferenceSession {
+    pub core: ClientCore,
+    pub batch: usize,
+    kv: KvCache,
+    /// Last emitted token per sequence.
+    last: Vec<i32>,
+    /// Tokens generated so far (per sequence, column-major appended).
+    pub generated: Vec<Vec<i32>>,
+    pos: usize,
+}
+
+impl InferenceSession {
+    pub fn new(core: ClientCore, batch: usize,
+               kv_placement: KvPlacement) -> Result<Self> {
+        core.check_batch(batch)?;
+        let kv = KvCache::new(core.cfg.n_layers, batch * core.cfg.n_heads,
+                              core.cfg.d_head(), kv_placement);
+        Ok(InferenceSession {
+            core,
+            batch,
+            kv,
+            last: Vec::new(),
+            generated: vec![Vec::new(); batch],
+            pos: 0,
+        })
+    }
+
+    /// If the adapter is Prefix, seed the cache with the learned prefix.
+    pub fn seed_prefix(&mut self) {
+        if let Some(Adapter::Prefix { k_prefix, v_prefix, .. }) =
+            self.core.adapter.clone()
+        {
+            for l in 0..self.core.cfg.n_layers {
+                self.kv.append(l, &k_prefix[l], &v_prefix[l]);
+            }
+            // prefix occupies cache but not token positions
+        }
+    }
+
+    /// Process the prompt (`batch` sequences x `s` tokens, token-major).
+    /// Returns the first generated token per sequence.
+    pub fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<i32>> {
+        let s = tokens.len() / self.batch;
+        let logits = self.core.forward_full(tokens, self.batch,
+                                            Urgency::Bulk, None,
+                                            Some(&mut self.kv))?;
+        self.pos = s;
+        let v = self.core.cfg.vocab;
+        let mut first = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            let row = (b + 1) * s - 1; // last token of sequence b
+            let _ = v;
+            first.push(ops::argmax_row(&logits, row));
+        }
+        self.last = first.clone();
+        for (b, t) in first.iter().enumerate() {
+            self.generated[b].push(*t);
+        }
+        Ok(first)
+    }
+
+    /// Incremental prefill: push the prompt through the *decode* path
+    /// one token column at a time.  Slower than [`Self::prefill`] but
+    /// required when the KV cache holds a learned prefix (the bucketed
+    /// prefill artifact has no notion of pre-existing cache rows) — and
+    /// numerically identical to batch prefill otherwise (covered by an
+    /// integration test).  Returns the first generated token per
+    /// sequence.
+    pub fn prefill_incremental(&mut self, tokens: &[i32])
+                               -> Result<Vec<i32>> {
+        let s = tokens.len() / self.batch;
+        let mut next = Vec::new();
+        for col in 0..s {
+            let column: Vec<i32> = (0..self.batch)
+                .map(|b| tokens[b * s + col])
+                .collect();
+            next = self.step_with_tokens(&column)?;
+        }
+        self.last = next.clone();
+        for (b, t) in next.iter().enumerate() {
+            self.generated[b].push(*t);
+        }
+        Ok(next)
+    }
+
+    /// One decode step: feed the last tokens, emit the next per sequence.
+    pub fn decode_step(&mut self) -> Result<Vec<i32>> {
+        if self.last.is_empty() {
+            bail!("decode before prefill");
+        }
+        let last = self.last.clone();
+        let next = self.step_with_tokens(&last)?;
+        self.last = next.clone();
+        for (i, t) in next.iter().enumerate() {
+            self.generated[i].push(*t);
+        }
+        Ok(next)
+    }
+
+    /// Core single-column step: embed `tokens` at the current position,
+    /// run all layers against the cache, return per-sequence argmax.
+    fn step_with_tokens(&mut self, step_tokens: &[i32])
+                        -> Result<Vec<i32>> {
+        let b = self.batch;
+        let nh = self.core.cfg.n_heads;
+        let d = self.core.cfg.d_model;
+        let urgency = Urgency::Interactive;
+        let tokens = Tensor::from_i32(step_tokens.to_vec(), &[b]);
+        let positions =
+            Tensor::from_i32(vec![self.pos as i32; b], &[b]);
+        let mut h = self.core.virt.embed(tokens, positions, urgency)?;
+        for l in 0..self.core.cfg.n_layers {
+            let a_in = ops::rmsnorm(&h, &self.core.weights.norm1[l]);
+            let qkv = self.core.virt.forward(LayerId::Qkv(l),
+                                             a_in.clone(), urgency)?;
+            let mut q = qkv.slice_cols(0, d);
+            let mut k = qkv.slice_cols(d, 2 * d);
+            let mut v = qkv.slice_cols(2 * d, 3 * d);
+            if let Some(dq) = self.core.lora_delta(&a_in, l, "q")? {
+                ops::add_assign(&mut q, &dq);
+            }
+            if let Some(dk) = self.core.lora_delta(&a_in, l, "k")? {
+                ops::add_assign(&mut k, &dk);
+            }
+            if let Some(dv) = self.core.lora_delta(&a_in, l, "v")? {
+                ops::add_assign(&mut v, &dv);
+            }
+            if let Some(Adapter::Ia3 { k_scale, v_scale, .. }) =
+                self.core.adapter.as_ref()
+            {
+                k = Adapter::ia3_apply(&k, &k_scale[l]);
+                v = Adapter::ia3_apply(&v, &v_scale[l]);
+            }
+            // single-token head split: (B, D) -> (B*NH, 1, H)
+            let qh = q.split_heads_rows(b, nh);
+            let kh = k.split_heads_rows(b, nh);
+            let vh = v.split_heads_rows(b, nh);
+            // Per-layer length: during this step, earlier layers already
+            // hold the new token while later ones don't yet.
+            let len = self.kv.append(l, &kh, &vh);
+            let sb = bucket_for(len, SEQ_BUCKETS)
+                .context("KV cache exceeds seq buckets")?;
+            let (kc, vc) = self.kv.padded(l, sb);
+            let name = format!("attn_decode_bh{}_s{sb}_h{}", b * nh,
+                               self.core.cfg.d_head());
+            let kv_len = Tensor::scalar_i32(len as i32);
+            // decode attention rides the high-priority device lane
+            let out = self.core.engine.execute_prio(
+                &name, &[&qh, &kc, &vc, &kv_len], true)?;
+            let attn = out[0].clone(); // (BH, 1, H)
+            let attn_merged = attn.merge_heads_rows(b);
+            let mut o = self.core.virt.forward(
+                LayerId::AttnOut(l), attn_merged.clone(), urgency)?;
+            if let Some(dl) = self.core.lora_delta(&attn_merged, l, "o")? {
+                ops::add_assign(&mut o, &dl);
+            }
+            let h_mid = ops::add(&h, &o);
+            let m_in = ops::rmsnorm(&h_mid, &self.core.weights.norm2[l]);
+            let mut u_pre = self.core.virt.forward(
+                LayerId::MlpUp(l), m_in, urgency)?;
+            if let Some(Adapter::Ia3 { ff_scale, .. }) =
+                self.core.adapter.as_ref()
+            {
+                u_pre = Adapter::ia3_apply(&u_pre, &ff_scale[l]);
+            }
+            let u = ops::gelu(&u_pre);
+            let down = self.core.virt.forward(
+                LayerId::MlpDown(l), u, urgency)?;
+            h = ops::add(&h_mid, &down);
+        }
+        let hf = ops::rmsnorm(&h, &self.core.weights.norm_f);
+        let logits =
+            self.core.virt.forward(LayerId::LmHead, hf, urgency)?;
+        let mut next = Vec::with_capacity(b);
+        for row in 0..b {
+            next.push(ops::argmax_row(&logits, row));
+        }
+        self.pos += 1;
+        Ok(next)
+    }
+
+    pub fn kv_bytes(&self) -> u64 {
+        self.kv.bytes()
+    }
+
+    pub fn kv_len(&self) -> usize {
+        self.kv.len()
+    }
+
+    pub fn kv_transfer_bytes_per_step(&self) -> u64 {
+        self.kv.transfer_bytes_per_step()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fine-tuning
+// ---------------------------------------------------------------------------
+
+/// Result of one training iteration.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub tokens: usize,
+}
+
+/// A fine-tuning job: forward, hand-rolled backward, Adam on the adapter.
+pub struct Trainer {
+    pub core: ClientCore,
+    pub batch: usize,
+    pub optimizer: Adam,
+}
+
+impl Trainer {
+    pub fn new(core: ClientCore, batch: usize) -> Result<Self> {
+        core.check_batch(batch)?;
+        // The hand-rolled backward accumulates LoRA gradients; IA3 and
+        // Prefix adapters are inference-only in this implementation
+        // (their gradient plumbing exists in `adapter::ia3_bwd` but is
+        // not wired into the flattened optimizer layout).
+        let n = match core.adapter.as_ref() {
+            Some(a @ Adapter::Lora { .. }) => a.n_params(),
+            Some(_) => bail!(
+                "trainer currently supports LoRA adapters only \
+                 (IA3/Prefix are inference-only)"),
+            None => bail!("trainer requires a trainable adapter"),
+        };
+        Ok(Trainer { core, batch, optimizer: Adam::new(n) })
+    }
+
+    /// One full iteration: forward, loss, backward, optimizer step.
+    pub fn train_step(&mut self, tokens: &[i32], labels: &[i32])
+                      -> Result<TrainOutcome> {
+        let (loss, grads) = self.loss_and_grads(tokens, labels)?;
+        let grad_norm = grads.l2_norm();
+        let adapter = self.core.adapter.as_mut().unwrap();
+        let mut flat = adapter.flatten();
+        self.optimizer
+            .step_artifact(&self.core.engine, &mut flat, &grads.flat)?;
+        adapter.unflatten(&flat)?;
+        Ok(TrainOutcome { loss, grad_norm, tokens: tokens.len() })
+    }
+
+    /// Forward + backward only (used by the golden gradient tests).
+    pub fn loss_and_grads(&mut self, tokens: &[i32], labels: &[i32])
+                          -> Result<(f32, AdapterGrads)> {
+        let t = tokens.len();
+        let urgency = Urgency::Training;
+        let mut saved = SavedActs {
+            layers: Vec::with_capacity(self.core.cfg.n_layers),
+            h_last: Tensor::zeros(&[1]),
+        };
+        let logits = self.core.forward_full(tokens, self.batch, urgency,
+                                            Some(&mut saved), None)?;
+        // loss + dlogits through the bucketed xent artifact
+        let v = self.core.cfg.vocab;
+        let tb = bucket_for(t, TOKEN_BUCKETS).context("xent bucket")?;
+        let mut lab = labels.to_vec();
+        lab.resize(tb, 0);
+        let mut w = vec![1.0f32; t];
+        w.resize(tb, 0.0);
+        let name = format!("xent_t{tb}_v{v}");
+        let lp = logits.pad_rows(tb);
+        let out = self.core.engine.execute(&name, &[
+            &lp,
+            &Tensor::from_i32(lab, &[tb]),
+            &Tensor::from_f32(w, &[tb]),
+        ])?;
+        let loss = out[0].as_f32()[0];
+        let dlogits = out[1].slice_rows(0, t);
+
+        let adapter_ref = self.core.adapter.as_ref().unwrap().clone();
+        let mut grads = AdapterGrads::zeros_like(&adapter_ref);
+
+        // ---- backward ----
+        let dhf = self.core.virt.backward(LayerId::LmHead, dlogits,
+                                          urgency)?;
+        let mut dh = ops::rmsnorm_bwd(&saved.h_last,
+                                      &self.core.weights.norm_f, &dhf);
+        let s = t / self.batch;
+        let sb = bucket_for(s, SEQ_BUCKETS).unwrap();
+        let nh = self.core.cfg.n_heads;
+        for l in (0..self.core.cfg.n_layers).rev() {
+            let sv = &saved.layers[l];
+            // MLP path
+            let dd = self.core.virt.backward(LayerId::MlpDown(l),
+                                             dh.clone(), urgency)?;
+            let mut dg = dd;
+            if let Some(Adapter::Ia3 { ff_scale, .. }) =
+                self.core.adapter.as_ref()
+            {
+                // u_pre was scaled: d(scale)/d and dx through the scale
+                let (_ds, dx) =
+                    Adapter::ia3_bwd(&sv.u_pre, &ff_scale[l], &dg);
+                dg = dx; // IA3 grads for ff handled via dscale (omitted
+                          // from flat layout for LoRA-focused trainer)
+            }
+            let dgelu = ops::gelu_bwd(&sv.u_pre, &dg);
+            let dm = self.core.virt.backward(LayerId::MlpUp(l), dgelu,
+                                             urgency)?;
+            let dnorm2 = ops::rmsnorm_bwd(&sv.h_mid,
+                                          &self.core.weights.norm2[l],
+                                          &dm);
+            let dh_mid = ops::add(&dh, &dnorm2);
+
+            // attention output path
+            let do_ = dh_mid.clone();
+            let mut dattn = self.core.virt.backward(LayerId::AttnOut(l),
+                                                    do_.clone(),
+                                                    urgency)?;
+            if let Some((da, db, dx)) =
+                self.core.lora_bwd(&sv.attn_merged, &do_, l, "o")?
+            {
+                grads.add_lora(&adapter_ref, l, "o", &da, &db);
+                ops::add_assign(&mut dattn, &dx);
+            }
+            // attention backward (client-side artifact)
+            let dattn_h = self.core.to_heads(&dattn, self.batch);
+            let name = format!("attn_bwd_bh{}_s{sb}_h{}",
+                               self.batch * nh, self.core.cfg.d_head());
+            let qp = ClientCore::pad_seq(&sv.qh, sb);
+            let kp = ClientCore::pad_seq(&sv.kh, sb);
+            let vp = ClientCore::pad_seq(&sv.vh, sb);
+            let dop = ClientCore::pad_seq(&dattn_h, sb);
+            let out = self.core.engine.execute(
+                &name, &[&qp, &kp, &vp, &dop])?;
+            let dq = self.core.from_heads(
+                &ClientCore::unpad_seq(&out[0], s), self.batch);
+            let dk = self.core.from_heads(
+                &ClientCore::unpad_seq(&out[1], s), self.batch);
+            let dv = self.core.from_heads(
+                &ClientCore::unpad_seq(&out[2], s), self.batch);
+
+            // LoRA backward on q/k/v + assemble fused-QKV gradient
+            let mut da_in_extra = Tensor::zeros(&[t, self.core.cfg.d_model]);
+            for (target, dt) in [("q", &dq), ("k", &dk), ("v", &dv)] {
+                if let Some((da, db, dx)) =
+                    self.core.lora_bwd(&sv.a_in, dt, l, target)?
+                {
+                    grads.add_lora(&adapter_ref, l, target, &da, &db);
+                    ops::add_assign(&mut da_in_extra, &dx);
+                }
+            }
+            let dqkv = ClientCore::concat_cols3(&dq, &dk, &dv);
+            let mut da_in = self.core.virt.backward(LayerId::Qkv(l), dqkv,
+                                                    urgency)?;
+            ops::add_assign(&mut da_in, &da_in_extra);
+            let dnorm1 = ops::rmsnorm_bwd(&sv.h_in,
+                                          &self.core.weights.norm1[l],
+                                          &da_in);
+            dh = ops::add(&dh_mid, &dnorm1);
+        }
+        Ok((loss, grads))
+    }
+
+    /// Client-side memory (adapter + optimizer + saved activations
+    /// estimate) for the memory figures.
+    pub fn client_state_bytes(&self, seq_len: usize) -> u64 {
+        let adapter = self
+            .core
+            .adapter
+            .as_ref()
+            .map(|a| (a.n_params() * 4) as u64)
+            .unwrap_or(0);
+        let opt = self.optimizer.state_bytes();
+        let t = (self.batch * seq_len) as u64;
+        let d = self.core.cfg.d_model as u64;
+        let f = self.core.cfg.d_ff as u64;
+        // per layer saved: 5 (T,D) + qkv heads (3 T D) + (T,F)
+        let saved =
+            self.core.cfg.n_layers as u64 * t * (8 * d + f) * 4;
+        adapter + opt + saved
+    }
+}
+
+/// `(T = B*S, D) -> (B*NH, S, H)` head split (free function so it is
+/// unit-testable without a deployment).
+fn to_heads_batched(x: &Tensor, batch: usize, nh: usize) -> Tensor {
+    let (t, d) = (x.shape[0], x.shape[1]);
+    let s = t / batch;
+    let h = d / nh;
+    let src = x.as_f32();
+    let mut out = vec![0.0f32; t * d];
+    for b in 0..batch {
+        for n in 0..nh {
+            for ti in 0..s {
+                let dst = ((b * nh + n) * s + ti) * h;
+                let sidx = (b * s + ti) * d + n * h;
+                out[dst..dst + h].copy_from_slice(&src[sidx..sidx + h]);
+            }
+        }
+    }
+    Tensor::from_f32(out, &[batch * nh, s, h])
+}
+
+/// Inverse of [`to_heads_batched`].
+fn from_heads_batched(x: &Tensor, batch: usize) -> Tensor {
+    let (bh, s, h) = (x.shape[0], x.shape[1], x.shape[2]);
+    let nh = bh / batch;
+    let d = nh * h;
+    let src = x.as_f32();
+    let mut out = vec![0.0f32; batch * s * d];
+    for b in 0..batch {
+        for n in 0..nh {
+            for ti in 0..s {
+                let sidx = ((b * nh + n) * s + ti) * h;
+                let dst = (b * s + ti) * d + n * h;
+                out[dst..dst + h].copy_from_slice(&src[sidx..sidx + h]);
+            }
+        }
+    }
+    Tensor::from_f32(out, &[batch * s, d])
+}
+
+// small helpers on Tensor used only here
+trait DecodeReshape {
+    fn split_heads_rows(&self, b: usize, nh: usize) -> Tensor;
+    fn merge_heads_rows(&self, b: usize) -> Tensor;
+}
+
+impl DecodeReshape for Tensor {
+    /// `(B, D) -> (B*NH, 1, H)` for single-token decode.
+    fn split_heads_rows(&self, b: usize, nh: usize) -> Tensor {
+        let d = self.shape[1];
+        let h = d / nh;
+        let src = self.as_f32();
+        let mut out = vec![0.0f32; b * d];
+        for bi in 0..b {
+            for n in 0..nh {
+                let dst = (bi * nh + n) * h;
+                let s = bi * d + n * h;
+                out[dst..dst + h].copy_from_slice(&src[s..s + h]);
+            }
+        }
+        Tensor::from_f32(out, &[b * nh, 1, h])
+    }
+
+    /// `(B*NH, 1, H) -> (B, D)`.
+    fn merge_heads_rows(&self, b: usize) -> Tensor {
+        let (bh, _, h) = (self.shape[0], self.shape[1], self.shape[2]);
+        let nh = bh / b;
+        let d = nh * h;
+        let src = self.as_f32();
+        let mut out = vec![0.0f32; b * d];
+        for bi in 0..b {
+            for n in 0..nh {
+                let s = (bi * nh + n) * h;
+                let dst = bi * d + n * h;
+                out[dst..dst + h].copy_from_slice(&src[s..s + h]);
+            }
+        }
+        Tensor::from_f32(out, &[b, d])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heads_roundtrip_batched() {
+        let (b, s, nh, h) = (2usize, 3usize, 4usize, 16usize);
+        let d = nh * h;
+        let x = Tensor::from_f32(
+            (0..b * s * d).map(|i| i as f32).collect(), &[b * s, d]);
+        let heads = to_heads_batched(&x, b, nh);
+        assert_eq!(heads.shape, vec![b * nh, s, h]);
+        assert_eq!(from_heads_batched(&heads, b), x);
+    }
+
+    #[test]
+    fn decode_reshape_roundtrip() {
+        let (b, nh, h) = (2usize, 4usize, 8usize);
+        let x = Tensor::from_f32(
+            (0..b * nh * h).map(|i| i as f32).collect(), &[b, nh * h]);
+        let split = x.split_heads_rows(b, nh);
+        assert_eq!(split.shape, vec![b * nh, 1, h]);
+        assert_eq!(split.merge_heads_rows(b), x);
+    }
+
+    #[test]
+    fn pad_unpad_seq_roundtrip() {
+        let x = Tensor::from_f32(
+            (0..4 * 3 * 2).map(|i| i as f32).collect(), &[4, 3, 2]);
+        let p = ClientCore::pad_seq(&x, 8);
+        assert_eq!(p.shape, vec![4, 8, 2]);
+        assert_eq!(ClientCore::unpad_seq(&p, 3), x);
+        // padding region is zero
+        assert_eq!(p.as_f32()[(0 * 8 + 3) * 2], 0.0);
+    }
+
+    #[test]
+    fn concat_cols3_interleaves_rows() {
+        let a = Tensor::from_f32(vec![1.0, 2.0], &[1, 2]);
+        let b = Tensor::from_f32(vec![3.0, 4.0], &[1, 2]);
+        let c = Tensor::from_f32(vec![5.0, 6.0], &[1, 2]);
+        let out = ClientCore::concat_cols3(&a, &b, &c);
+        assert_eq!(out.shape, vec![1, 6]);
+        assert_eq!(out.as_f32(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+}

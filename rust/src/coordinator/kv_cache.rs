@@ -1,0 +1,214 @@
+//! Per-client KV cache with host-offload accounting.
+//!
+//! The client owns its KV cache (it is request runtime state — the whole
+//! point of the split is that it never burdens the executor).  Layout per
+//! layer: K and V as `(BH, cap, H)` with `cap` grown by doubling along
+//! the sequence axis.  `KvPlacement` models the paper's OffloadedCache
+//! path (section 3.4): with `Host`, the cache bytes are charged to the
+//! host ledger and each decode step charges a PCIe transfer for the
+//! layer's K/V working set — unless the client itself runs on the CPU,
+//! in which case the transfer is free (that asymmetry is Fig. 19).
+
+use crate::tensor::Tensor;
+
+/// Where the cache bytes live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvPlacement {
+    /// On the client's device.
+    Device,
+    /// Offloaded to host DRAM (OffloadedCache).
+    Host,
+}
+
+/// KV cache for one client: per layer, K and V `(BH, cap, H)`.
+#[derive(Debug)]
+pub struct KvCache {
+    pub bh: usize,
+    pub head_dim: usize,
+    pub placement: KvPlacement,
+    /// Per-layer token lengths (layers fill front-to-back within a step,
+    /// so lengths may transiently differ by one during a decode step).
+    lens: Vec<usize>,
+    cap: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, bh: usize, head_dim: usize,
+               placement: KvPlacement) -> Self {
+        KvCache {
+            bh,
+            head_dim,
+            placement,
+            lens: vec![0; n_layers],
+            cap: 0,
+            k: vec![Vec::new(); n_layers],
+            v: vec![Vec::new(); n_layers],
+        }
+    }
+
+    /// Completed token length (the minimum across layers).
+    pub fn len(&self) -> usize {
+        self.lens.iter().copied().min().unwrap_or(0)
+    }
+
+    /// Token length of one layer (may lead `len()` mid-step).
+    pub fn layer_len(&self, layer: usize) -> usize {
+        self.lens[layer]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Bytes currently held (all layers, K+V).
+    pub fn bytes(&self) -> u64 {
+        (2 * self.k.len() * self.bh * self.cap * self.head_dim * 4) as u64
+    }
+
+    fn ensure_cap(&mut self, want: usize) {
+        if want <= self.cap {
+            return;
+        }
+        let new_cap = want.next_power_of_two().max(16);
+        for layer in 0..self.k.len() {
+            let mut nk = vec![0.0f32; self.bh * new_cap * self.head_dim];
+            let mut nv = vec![0.0f32; self.bh * new_cap * self.head_dim];
+            let h = self.head_dim;
+            for b in 0..self.bh {
+                for t in 0..self.lens[layer] {
+                    let src = (b * self.cap + t) * h;
+                    let dst = (b * new_cap + t) * h;
+                    if !self.k[layer].is_empty() {
+                        nk[dst..dst + h]
+                            .copy_from_slice(&self.k[layer][src..src + h]);
+                        nv[dst..dst + h]
+                            .copy_from_slice(&self.v[layer][src..src + h]);
+                    }
+                }
+            }
+            self.k[layer] = nk;
+            self.v[layer] = nv;
+        }
+        self.cap = new_cap;
+    }
+
+    /// Append `t_new` tokens of K/V for `layer` (`k`/`v` are
+    /// `(BH, t_new, H)`); returns the layer's new token length.  During a
+    /// decode step earlier layers lead later ones by one token — the
+    /// caller must use the returned per-layer length for attention, not
+    /// the global `len()`.
+    pub fn append(&mut self, layer: usize, k: &Tensor, v: &Tensor)
+                  -> usize {
+        let t_new = k.shape[1];
+        let h = self.head_dim;
+        let old = self.lens[layer];
+        self.ensure_cap(old + t_new);
+        let (ks, vs) = (k.as_f32(), v.as_f32());
+        for b in 0..self.bh {
+            for t in 0..t_new {
+                let src = (b * t_new + t) * h;
+                let dst = (b * self.cap + old + t) * h;
+                self.k[layer][dst..dst + h]
+                    .copy_from_slice(&ks[src..src + h]);
+                self.v[layer][dst..dst + h]
+                    .copy_from_slice(&vs[src..src + h]);
+            }
+        }
+        self.lens[layer] = old + t_new;
+        self.lens[layer]
+    }
+
+    /// K and V for `layer`, padded to `bucket` along the sequence axis:
+    /// `(BH, bucket, H)` — ready for the bucketed decode artifact.
+    pub fn padded(&self, layer: usize, bucket: usize) -> (Tensor, Tensor) {
+        let len = self.lens[layer];
+        assert!(bucket >= len, "bucket {bucket} < len {len}");
+        let h = self.head_dim;
+        let mut k = vec![0.0f32; self.bh * bucket * h];
+        let mut v = vec![0.0f32; self.bh * bucket * h];
+        for b in 0..self.bh {
+            for t in 0..len {
+                let src = (b * self.cap + t) * h;
+                let dst = (b * bucket + t) * h;
+                k[dst..dst + h].copy_from_slice(&self.k[layer][src..src + h]);
+                v[dst..dst + h].copy_from_slice(&self.v[layer][src..src + h]);
+            }
+        }
+        (
+            Tensor::from_f32(k, &[self.bh, bucket, h]),
+            Tensor::from_f32(v, &[self.bh, bucket, h]),
+        )
+    }
+
+    /// Bytes that must cross PCIe per decode step if the cache is
+    /// host-offloaded but attention runs on a GPU: the full K/V of every
+    /// layer (fetched "right before their execution", section 3.4).
+    pub fn transfer_bytes_per_step(&self) -> u64 {
+        match self.placement {
+            KvPlacement::Device => 0,
+            KvPlacement::Host => {
+                (2 * self.k.len() * self.bh * self.len() * self.head_dim
+                    * 4) as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(t: usize, bh: usize, h: usize, base: f32) -> Tensor {
+        Tensor::from_f32(
+            (0..bh * t * h).map(|i| base + i as f32).collect(),
+            &[bh, t, h],
+        )
+    }
+
+    #[test]
+    fn append_and_read_back() {
+        let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
+        for layer in 0..2 {
+            c.append(layer, &kv(3, 2, 4, 100.0), &kv(3, 2, 4, 200.0));
+        }
+        assert_eq!(c.len(), 3);
+        let (k, _v) = c.padded(0, 16);
+        assert_eq!(k.shape, vec![2, 16, 4]);
+        // first row of first batch-head must be the first appended row
+        assert_eq!(&k.as_f32()[0..4], &[100.0, 101.0, 102.0, 103.0]);
+        // padding is zero
+        assert_eq!(k.as_f32()[(0 * 16 + 3) * 4], 0.0);
+    }
+
+    #[test]
+    fn growth_preserves_contents() {
+        let mut c = KvCache::new(1, 1, 2, KvPlacement::Device);
+        for step in 0..20 {
+            let t = kv(1, 1, 2, step as f32 * 10.0);
+            c.append(0, &t, &t);
+        }
+        assert_eq!(c.len(), 20);
+        let (k, _) = c.padded(0, 32);
+        assert_eq!(k.as_f32()[0], 0.0);
+        assert_eq!(k.as_f32()[19 * 2], 190.0);
+    }
+
+    #[test]
+    fn host_offload_charges_transfers() {
+        let mut dev = KvCache::new(4, 4, 16, KvPlacement::Device);
+        let mut host = KvCache::new(4, 4, 16, KvPlacement::Host);
+        for layer in 0..4 {
+            dev.append(layer, &kv(8, 4, 16, 0.0), &kv(8, 4, 16, 0.0));
+            host.append(layer, &kv(8, 4, 16, 0.0), &kv(8, 4, 16, 0.0));
+        }
+        assert_eq!(dev.transfer_bytes_per_step(), 0);
+        assert_eq!(host.transfer_bytes_per_step(),
+                   (2 * 4 * 4 * 8 * 16 * 4) as u64);
+    }
+}

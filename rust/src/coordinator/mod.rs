@@ -1,0 +1,131 @@
+//! The Symbiosis coordinator — the paper's system contribution.
+//!
+//! * [`base_executor`] — shared frozen-layer service with per-layer
+//!   opportunistic batching (sections 3.2, 3.6, 3.7).
+//! * [`virt_layer`] — the client-side proxy replacing frozen layers
+//!   (Fig. 4).
+//! * [`client`] — inference sessions and trainers; each client drives its
+//!   own execution (design goal 5).
+//! * [`adapter`] / [`optimizer`] / [`kv_cache`] — client-owned state.
+//! * [`privacy`] — the additive-noise activation protocol (section 3.8).
+//! * [`placement`] / [`sharding`] — Fig. 5 topologies + analytic models.
+
+pub mod adapter;
+pub mod base_executor;
+pub mod batching;
+pub mod client;
+pub mod kv_cache;
+pub mod model_state;
+pub mod optimizer;
+pub mod placement;
+pub mod privacy;
+pub mod proto;
+pub mod sharding;
+pub mod virt_layer;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::runtime::Engine;
+use crate::transport::{Link, LinkKind};
+
+pub use adapter::{Adapter, LoraTargets};
+pub use base_executor::{BaseExecutor, ExecutorStats};
+pub use batching::BatchPolicy;
+pub use client::{ClientCore, InferenceSession, Trainer};
+pub use kv_cache::KvPlacement;
+pub use placement::Placement;
+pub use proto::{LayerId, OpKind, Urgency};
+pub use virt_layer::VirtLayerCtx;
+
+/// A running deployment: one base executor + the pieces needed to attach
+/// clients. This is the top-level public API the examples and benches
+/// use.
+pub struct Deployment {
+    pub cfg: ModelConfig,
+    pub engine: Arc<Engine>,
+    pub executor: BaseExecutor,
+    pub client_weights: model_state::ClientWeights,
+    pub placement: Placement,
+    next_client_id: std::sync::atomic::AtomicUsize,
+}
+
+impl Deployment {
+    /// Load artifacts + weights and spawn the base executor.
+    pub fn start(cfg: &ModelConfig, artifact_dir: &Path,
+                 policy: BatchPolicy, placement: Placement)
+                 -> Result<Deployment> {
+        let engine = Arc::new(Engine::new(artifact_dir)?);
+        Self::start_with_engine(engine, cfg, artifact_dir, policy,
+                                placement)
+    }
+
+    /// Start a deployment over an existing engine — lets benches reuse
+    /// one compile cache across executor restarts (a real cluster would
+    /// likewise keep compiled executables across coordinator restarts).
+    pub fn start_with_engine(engine: Arc<Engine>, cfg: &ModelConfig,
+                             artifact_dir: &Path, policy: BatchPolicy,
+                             placement: Placement) -> Result<Deployment> {
+        // Drift check: manifest dims must match the compiled-in config.
+        let mm = engine.manifest().model(cfg.name)?;
+        anyhow::ensure!(
+            mm.d_model == cfg.d_model && mm.n_layers == cfg.n_layers
+                && mm.vocab == cfg.vocab && mm.n_heads == cfg.n_heads,
+            "manifest/model drift for {}", cfg.name
+        );
+        let (base, client_weights) =
+            model_state::load_split(cfg, artifact_dir)?;
+        let executor = BaseExecutor::spawn(engine.clone(), base, policy);
+        Ok(Deployment {
+            cfg: cfg.clone(),
+            engine,
+            executor,
+            client_weights,
+            placement,
+            next_client_id: std::sync::atomic::AtomicUsize::new(0),
+        })
+    }
+
+    /// Allocate a client context wired to this deployment's executor
+    /// over the placement's link.
+    pub fn client_core(&self, adapter: Option<Adapter>) -> ClientCore {
+        self.client_core_with_link(adapter, self.placement.link())
+    }
+
+    /// Same, with an explicit link kind (heterogeneous topologies).
+    pub fn client_core_with_link(&self, adapter: Option<Adapter>,
+                                 link: LinkKind) -> ClientCore {
+        self.client_core_opts(adapter, link, false)
+    }
+
+    /// Full control: link kind + whether simulated link delays are
+    /// realized as actual sleeps (placement benches).
+    pub fn client_core_opts(&self, adapter: Option<Adapter>,
+                            link: LinkKind, realize_delays: bool)
+                            -> ClientCore {
+        let id = self
+            .next_client_id
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        let mut ctx =
+            VirtLayerCtx::new(id, self.executor.sender(), Link::new(link));
+        ctx.realize_delays = realize_delays;
+        let virt = Arc::new(ctx);
+        virt.register();
+        ClientCore {
+            cfg: self.cfg.clone(),
+            engine: self.engine.clone(),
+            virt,
+            weights: self.client_weights.clone(),
+            adapter,
+            lora_scale: 2.0,
+        }
+    }
+
+    /// Stop the executor and return its statistics.
+    pub fn shutdown(self) -> ExecutorStats {
+        self.executor.shutdown()
+    }
+}

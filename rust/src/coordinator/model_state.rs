@@ -1,0 +1,186 @@
+//! Split loading of model weights along the Symbiosis line.
+//!
+//! `scan` mirrors the paper's model-structure scan (section 3.2): given
+//! the full weight container, it partitions parameters into the
+//! **base-executor share** (the big frozen linears + embeddings) and the
+//! **client share** (norm gains — the tenant loads these next to its
+//! adapters).  This is the Rust analogue of replacing frozen layers with
+//! `VirtLayer` without touching model code.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::coordinator::proto::LayerId;
+use crate::tensor::{container, Tensor};
+
+/// Frozen base-model parameters held by the base executor.
+#[derive(Debug)]
+pub struct BaseWeights {
+    pub cfg: ModelConfig,
+    pub embed: Tensor,
+    pub pos: Tensor,
+    pub lm_head_w: Tensor,
+    pub lm_head_b: Tensor,
+    /// Per block: (wqkv, bqkv, wo, bo, wup, bup, wdown, bdown).
+    pub blocks: Vec<BlockWeights>,
+}
+
+#[derive(Debug)]
+pub struct BlockWeights {
+    pub wqkv: Tensor,
+    pub bqkv: Tensor,
+    pub wo: Tensor,
+    pub bo: Tensor,
+    pub wup: Tensor,
+    pub bup: Tensor,
+    pub wdown: Tensor,
+    pub bdown: Tensor,
+}
+
+/// Client-side non-base parameters (norm gains). Adapters live in
+/// `coordinator::adapter`.
+#[derive(Debug, Clone)]
+pub struct ClientWeights {
+    pub norm1: Vec<Tensor>,
+    pub norm2: Vec<Tensor>,
+    pub norm_f: Tensor,
+}
+
+impl BaseWeights {
+    /// Weight matrix + bias for a linear base layer.
+    pub fn linear(&self, layer: LayerId) -> (&Tensor, &Tensor) {
+        match layer {
+            LayerId::Qkv(l) => (&self.blocks[l].wqkv, &self.blocks[l].bqkv),
+            LayerId::AttnOut(l) => (&self.blocks[l].wo, &self.blocks[l].bo),
+            LayerId::MlpUp(l) => (&self.blocks[l].wup, &self.blocks[l].bup),
+            LayerId::MlpDown(l) => {
+                (&self.blocks[l].wdown, &self.blocks[l].bdown)
+            }
+            LayerId::LmHead => (&self.lm_head_w, &self.lm_head_b),
+            LayerId::Embed => panic!("embed is not a linear layer"),
+        }
+    }
+
+    /// (Din, Dout) of a linear base layer.
+    pub fn linear_dims(&self, layer: LayerId) -> (usize, usize) {
+        let (w, _) = self.linear(layer);
+        (w.shape[0], w.shape[1])
+    }
+
+    /// Total parameter bytes held by the executor (memory accounting).
+    pub fn param_bytes(&self) -> u64 {
+        let mut total = self.embed.size_bytes() + self.pos.size_bytes()
+            + self.lm_head_w.size_bytes() + self.lm_head_b.size_bytes();
+        for b in &self.blocks {
+            total += b.wqkv.size_bytes() + b.bqkv.size_bytes()
+                + b.wo.size_bytes() + b.bo.size_bytes()
+                + b.wup.size_bytes() + b.bup.size_bytes()
+                + b.wdown.size_bytes() + b.bdown.size_bytes();
+        }
+        total as u64
+    }
+}
+
+/// Scan a full weight container and split it into base / client shares.
+pub fn scan(cfg: &ModelConfig, weights: &HashMap<String, Tensor>)
+            -> Result<(BaseWeights, ClientWeights)> {
+    let get = |k: &str| -> Result<Tensor> {
+        weights.get(k).cloned().with_context(|| format!("missing {k}"))
+    };
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    let mut norm1 = Vec::new();
+    let mut norm2 = Vec::new();
+    for l in 0..cfg.n_layers {
+        blocks.push(BlockWeights {
+            wqkv: get(&format!("l{l}.wqkv"))?,
+            bqkv: get(&format!("l{l}.bqkv"))?,
+            wo: get(&format!("l{l}.wo"))?,
+            bo: get(&format!("l{l}.bo"))?,
+            wup: get(&format!("l{l}.wup"))?,
+            bup: get(&format!("l{l}.bup"))?,
+            wdown: get(&format!("l{l}.wdown"))?,
+            bdown: get(&format!("l{l}.bdown"))?,
+        });
+        norm1.push(get(&format!("l{l}.norm1"))?);
+        norm2.push(get(&format!("l{l}.norm2"))?);
+    }
+    Ok((
+        BaseWeights {
+            cfg: cfg.clone(),
+            embed: get("embed")?,
+            pos: get("pos")?,
+            lm_head_w: get("lm_head_w")?,
+            lm_head_b: get("lm_head_b")?,
+            blocks,
+        },
+        ClientWeights { norm1, norm2, norm_f: get("norm_f")? },
+    ))
+}
+
+/// Load + split `artifacts/weights_<model>.bin`.
+pub fn load_split(cfg: &ModelConfig, artifact_dir: &Path)
+                  -> Result<(BaseWeights, ClientWeights)> {
+    let path = artifact_dir.join(format!("weights_{}.bin", cfg.name));
+    let weights = container::read_tensors(&path)?;
+    scan(cfg, &weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SYM_TINY;
+
+    fn fake_weights(cfg: &ModelConfig) -> HashMap<String, Tensor> {
+        let mut m = HashMap::new();
+        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        m.insert("embed".into(), Tensor::zeros(&[v, d]));
+        m.insert("pos".into(), Tensor::zeros(&[cfg.max_seq, d]));
+        m.insert("norm_f".into(), Tensor::zeros(&[d]));
+        m.insert("lm_head_w".into(), Tensor::zeros(&[d, v]));
+        m.insert("lm_head_b".into(), Tensor::zeros(&[v]));
+        for l in 0..cfg.n_layers {
+            m.insert(format!("l{l}.norm1"), Tensor::zeros(&[d]));
+            m.insert(format!("l{l}.norm2"), Tensor::zeros(&[d]));
+            m.insert(format!("l{l}.wqkv"), Tensor::zeros(&[d, 3 * d]));
+            m.insert(format!("l{l}.bqkv"), Tensor::zeros(&[3 * d]));
+            m.insert(format!("l{l}.wo"), Tensor::zeros(&[d, d]));
+            m.insert(format!("l{l}.bo"), Tensor::zeros(&[d]));
+            m.insert(format!("l{l}.wup"), Tensor::zeros(&[d, f]));
+            m.insert(format!("l{l}.bup"), Tensor::zeros(&[f]));
+            m.insert(format!("l{l}.wdown"), Tensor::zeros(&[f, d]));
+            m.insert(format!("l{l}.bdown"), Tensor::zeros(&[d]));
+        }
+        m
+    }
+
+    #[test]
+    fn scan_splits_base_and_client() {
+        let w = fake_weights(&SYM_TINY);
+        let (base, client) = scan(&SYM_TINY, &w).unwrap();
+        assert_eq!(base.blocks.len(), 4);
+        assert_eq!(client.norm1.len(), 4);
+        assert_eq!(base.linear_dims(LayerId::Qkv(0)), (64, 192));
+        assert_eq!(base.linear_dims(LayerId::MlpDown(1)), (256, 64));
+        assert_eq!(base.linear_dims(LayerId::LmHead), (64, 256));
+    }
+
+    #[test]
+    fn scan_detects_missing_keys() {
+        let mut w = fake_weights(&SYM_TINY);
+        w.remove("l2.wo");
+        assert!(scan(&SYM_TINY, &w).is_err());
+    }
+
+    #[test]
+    fn base_param_bytes_counts_everything() {
+        let w = fake_weights(&SYM_TINY);
+        let (base, _) = scan(&SYM_TINY, &w).unwrap();
+        assert!(base.param_bytes() > 0);
+        // embed + pos + head dominate the tiny config
+        let embed_bytes = (256 * 64 * 4) as u64;
+        assert!(base.param_bytes() > embed_bytes);
+    }
+}

@@ -1,0 +1,125 @@
+//! Client-side optimizer over flattened adapter parameters.
+//!
+//! Optimizer state is *client* runtime state in Symbiosis (like the KV
+//! cache) — it grows with the adapter, not the base model, and never
+//! touches the executor.  The Adam step itself runs through the bucketed
+//! `adam_n*` artifact (zero-padded tail: padded grads are 0, so padded
+//! params never move); a native fallback exists for odd sizes and tests.
+
+use anyhow::{Context, Result};
+
+use crate::config::{bucket_for, ADAM_BUCKETS};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// Adam with the same hyperparameters as `kernels/ref.py::adam_step`.
+#[derive(Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    pub step: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(n_params: usize) -> Self {
+        Adam {
+            lr: 1e-3,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-8,
+            step: 0,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+        }
+    }
+
+    pub fn with_lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    /// State bytes (2 moments, f32) — the client memory the paper plots.
+    pub fn state_bytes(&self) -> u64 {
+        (self.m.len() * 2 * 4) as u64
+    }
+
+    /// One update through the AOT `adam_n{bucket}` artifact.
+    pub fn step_artifact(&mut self, engine: &Engine, params: &mut [f32],
+                         grads: &[f32]) -> Result<()> {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.step += 1;
+        let n = params.len();
+        let bucket = bucket_for(n, ADAM_BUCKETS)
+            .context("adapter larger than biggest adam bucket")?;
+        let pad = |s: &[f32]| {
+            let mut v = s.to_vec();
+            v.resize(bucket, 0.0);
+            Tensor::from_f32(v, &[bucket])
+        };
+        let (p, g, m, v) =
+            (pad(params), pad(grads), pad(&self.m), pad(&self.v));
+        let t = Tensor::scalar_f32(self.step as f32);
+        let name = format!("adam_n{bucket}");
+        let out = engine.execute(&name, &[&p, &g, &m, &v, &t])?;
+        params.copy_from_slice(&out[0].as_f32()[..n]);
+        self.m.copy_from_slice(&out[1].as_f32()[..n]);
+        self.v.copy_from_slice(&out[2].as_f32()[..n]);
+        Ok(())
+    }
+
+    /// Native update (bit-equivalent formula; used when no engine is at
+    /// hand and in property tests).
+    pub fn step_native(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - self.b1.powf(t);
+        let bc2 = 1.0 - self.b2.powf(t);
+        for i in 0..params.len() {
+            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * grads[i];
+            self.v[i] =
+                self.b2 * self.v[i] + (1.0 - self.b2) * grads[i] * grads[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_step_descends() {
+        let mut adam = Adam::new(3).with_lr(0.1);
+        let mut p = vec![1.0f32, -1.0, 0.0];
+        let g = vec![1.0f32, -1.0, 0.0];
+        adam.step_native(&mut p, &g);
+        assert!(p[0] < 1.0);
+        assert!(p[1] > -1.0);
+        assert_eq!(p[2], 0.0);
+    }
+
+    #[test]
+    fn repeated_steps_converge_on_quadratic() {
+        // minimize f(p) = 0.5 * p^2 -> grad = p
+        let mut adam = Adam::new(1).with_lr(0.05);
+        let mut p = vec![5.0f32];
+        for _ in 0..500 {
+            let g = vec![p[0]];
+            adam.step_native(&mut p, &g);
+        }
+        assert!(p[0].abs() < 0.1, "p = {}", p[0]);
+    }
+
+    #[test]
+    fn state_bytes_scale_with_params() {
+        let a = Adam::new(1000);
+        assert_eq!(a.state_bytes(), 8000);
+    }
+}

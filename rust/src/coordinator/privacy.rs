@@ -1,0 +1,186 @@
+//! Activation privacy for multi-tenancy (paper section 3.8).
+//!
+//! Threat model: the base-executor provider observes activations and
+//! could mount a model-extraction attack to recover adapter parameters
+//! (paper Fig. 8: `(C - B) / A` reveals `Wa . Wb`).  Defense: the client
+//! adds a pre-registered noise tensor to activations before shipping;
+//! because base layers are linear, `W(x + n) + b = (Wx + b) + Wn`, so
+//! subtracting the pre-computed noise effect `n_eff = W . n` restores the
+//! *exact* output.  The executor only ever sees `x + n`.
+//!
+//! Several noise vectors are prepared per layer and rotated per
+//! invocation so the executor cannot cancel the noise by differencing
+//! consecutive iterations.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::proto::{ExecMsg, LayerId};
+use crate::tensor::{ops, Tensor};
+
+/// Deterministic noise source (no rand crate in the vendored registry):
+/// splitmix64 mapped to U(-amp, amp).
+pub struct NoiseGen {
+    state: u64,
+    amp: f32,
+}
+
+impl NoiseGen {
+    pub fn new(seed: u64, amp: f32) -> Self {
+        NoiseGen { state: seed, amp }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        let u = (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32;
+        (2.0 * u - 1.0) * self.amp
+    }
+
+    pub fn tensor(&mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_f32((0..n).map(|_| self.next_f32()).collect(), shape)
+    }
+}
+
+struct LayerNoise {
+    /// Rotating pool of (noise, noise_effect) pairs.
+    pool: Vec<(Tensor, Tensor)>,
+    next: usize,
+}
+
+/// Per-client privacy state: pre-registered noise pools per layer.
+pub struct PrivacyCtx {
+    noise: Mutex<HashMap<LayerId, LayerNoise>>,
+    /// Executor-observed activations hash log (test hook: proves the
+    /// executor never saw the raw activations).
+    pub sent_log: Mutex<Vec<(LayerId, f32)>>,
+}
+
+impl Default for PrivacyCtx {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PrivacyCtx {
+    pub fn new() -> Self {
+        PrivacyCtx {
+            noise: Mutex::new(HashMap::new()),
+            sent_log: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Prepare `pool_size` noise values for `layer` with activation shape
+    /// `(t, din)`, fetching each `n_eff` from the executor once.  This is
+    /// the setup cost; steady-state iterations add zero executor work.
+    pub fn register_layer(&self, exec_tx: &Sender<ExecMsg>, layer: LayerId,
+                          t: usize, din: usize, gen: &mut NoiseGen,
+                          pool_size: usize) -> Result<()> {
+        let mut pool = Vec::with_capacity(pool_size);
+        for _ in 0..pool_size {
+            let n = gen.tensor(&[t, din]);
+            let (tx, rx) = channel();
+            exec_tx
+                .send(ExecMsg::RegisterNoise {
+                    layer,
+                    noise: n.clone(),
+                    resp: tx,
+                })
+                .ok()
+                .context("executor gone")?;
+            let resp = rx.recv().context("noise registration dropped")?;
+            if resp.y.shape.is_empty() || resp.y.len() == 0 {
+                bail!("noise registration failed for {layer:?}");
+            }
+            pool.push((n, resp.y));
+        }
+        self.noise
+            .lock()
+            .unwrap()
+            .insert(layer, LayerNoise { pool, next: 0 });
+        Ok(())
+    }
+
+    /// Noise the activations for shipping: returns `(x + n, n_eff)` using
+    /// the next pool entry (rotating).  Fails if the layer was not
+    /// registered or the shape mismatches the registered noise.
+    pub fn apply(&self, layer: LayerId, x: &Tensor)
+                 -> Result<(Tensor, Tensor)> {
+        let mut map = self.noise.lock().unwrap();
+        let ln = map
+            .get_mut(&layer)
+            .with_context(|| format!("no noise registered for {layer:?}"))?;
+        let idx = ln.next;
+        ln.next = (ln.next + 1) % ln.pool.len();
+        let (n, n_eff) = &ln.pool[idx];
+        if n.shape != x.shape {
+            // tail iterations may have fewer tokens: slice the noise
+            if n.shape.len() == 2 && x.shape.len() == 2
+                && x.shape[0] <= n.shape[0] && x.shape[1] == n.shape[1]
+            {
+                let ns = n.slice_rows(0, x.shape[0]);
+                let es = n_eff.slice_rows(0, x.shape[0]);
+                let noised = ops::add(x, &ns);
+                self.sent_log
+                    .lock()
+                    .unwrap()
+                    .push((layer, noised.as_f32()[0]));
+                return Ok((noised, es));
+            }
+            bail!("noise shape {:?} incompatible with x {:?}", n.shape,
+                  x.shape);
+        }
+        let noised = ops::add(x, n);
+        self.sent_log
+            .lock()
+            .unwrap()
+            .push((layer, noised.as_f32()[0]));
+        Ok((noised, n_eff.clone()))
+    }
+
+    /// Number of registered layers (tests).
+    pub fn registered_layers(&self) -> usize {
+        self.noise.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_gen_is_deterministic_and_bounded() {
+        let mut a = NoiseGen::new(42, 0.5);
+        let mut b = NoiseGen::new(42, 0.5);
+        for _ in 0..1000 {
+            let (x, y) = (a.next_f32(), b.next_f32());
+            assert_eq!(x, y);
+            assert!(x.abs() <= 0.5);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = NoiseGen::new(1, 1.0);
+        let mut b = NoiseGen::new(2, 1.0);
+        let same = (0..100).filter(|_| a.next_f32() == b.next_f32()).count();
+        assert!(same < 5);
+    }
+
+    #[test]
+    fn apply_requires_registration() {
+        let p = PrivacyCtx::new();
+        let x = Tensor::zeros(&[4, 8]);
+        assert!(p.apply(LayerId::Qkv(0), &x).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Wire protocol between clients and the base executor.
+//!
+//! A client's `VirtLayer` proxy packages each base-layer invocation as an
+//! [`ExecMsg::Request`]; the executor batches compatible requests
+//! (same layer + direction), executes the AOT artifact, splits the result
+//! and answers over the per-request response channel — the paper's
+//! split-execution handshake (section 3.2).
+
+use std::sync::mpsc::Sender;
+
+use crate::tensor::Tensor;
+
+/// Identity of one base-model layer instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LayerId {
+    /// Token + position embedding lookup.
+    Embed,
+    /// Fused QKV projection of block `l`.
+    Qkv(usize),
+    /// Attention output projection of block `l`.
+    AttnOut(usize),
+    /// MLP up-projection of block `l`.
+    MlpUp(usize),
+    /// MLP down-projection of block `l`.
+    MlpDown(usize),
+    /// Final LM head.
+    LmHead,
+}
+
+impl LayerId {
+    /// Stable dense index for per-layer stats tables.
+    pub fn index(&self, n_layers: usize) -> usize {
+        match *self {
+            LayerId::Embed => 0,
+            LayerId::Qkv(l) => 1 + l * 4,
+            LayerId::AttnOut(l) => 2 + l * 4,
+            LayerId::MlpUp(l) => 3 + l * 4,
+            LayerId::MlpDown(l) => 4 + l * 4,
+            LayerId::LmHead => 1 + n_layers * 4,
+        }
+    }
+
+    /// Total number of distinct base layers for a block count.
+    pub fn count(n_layers: usize) -> usize {
+        2 + n_layers * 4
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            LayerId::Embed => "embed".into(),
+            LayerId::Qkv(l) => format!("l{l}.qkv"),
+            LayerId::AttnOut(l) => format!("l{l}.attn_out"),
+            LayerId::MlpUp(l) => format!("l{l}.mlp_up"),
+            LayerId::MlpDown(l) => format!("l{l}.mlp_down"),
+            LayerId::LmHead => "lm_head".into(),
+        }
+    }
+}
+
+/// Direction of a base-layer invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    Forward,
+    /// Memory-optimized backward: `dX = dY . W^T`, recomputed from frozen
+    /// parameters — no stored activations (paper section 3.6).
+    Backward,
+}
+
+/// Latency class of a request — drives the opportunistic-batching wait
+/// budget (paper section 3.7: "we base the wait time on the size of
+/// request").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Urgency {
+    /// Single-token decode for an interactive request: minimal wait.
+    Interactive,
+    /// Prefill or large inference batch: can afford a bounded wait.
+    Bulk,
+    /// Fine-tuning pass: longest wait budget.
+    Training,
+}
+
+/// One base-layer invocation from a client.
+#[derive(Debug)]
+pub struct LayerRequest {
+    pub client_id: usize,
+    pub layer: LayerId,
+    pub op: OpKind,
+    /// Token-flattened activation rows: (T_i, Din) f32 — or, for
+    /// `LayerId::Embed`, token ids (T_i,) i32.
+    pub x: Tensor,
+    /// Positions (T_i,) i32 — only for `Embed`.
+    pub positions: Option<Tensor>,
+    pub urgency: Urgency,
+    pub resp: Sender<LayerResponse>,
+}
+
+/// Executor's answer: the per-client slice of the batched output.
+#[derive(Debug)]
+pub struct LayerResponse {
+    pub y: Tensor,
+    /// How long the request waited in the batching queue (for Fig 7 /
+    /// Table 5 reproductions).
+    pub queue_wait_secs: f64,
+    /// Number of co-batched clients in the flush that served this
+    /// request.
+    pub batch_clients: usize,
+}
+
+/// Messages accepted by the base-executor thread.
+#[derive(Debug)]
+pub enum ExecMsg {
+    /// A client joins (lockstep policies count registered clients).
+    Register { client_id: usize },
+    /// A client leaves.
+    Deregister { client_id: usize },
+    Request(LayerRequest),
+    /// Privacy protocol (paper section 3.8): compute the noise effect
+    /// `n_eff = W . n` (bias-free flow) for a client-chosen noise tensor.
+    /// The executor sees the noise value but never the true activations.
+    RegisterNoise {
+        layer: LayerId,
+        noise: Tensor,
+        resp: Sender<LayerResponse>,
+    },
+    /// Drain and stop.
+    Shutdown,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_indices_are_dense_and_unique() {
+        let n = 4;
+        let mut seen = vec![false; LayerId::count(n)];
+        let mut ids = vec![LayerId::Embed, LayerId::LmHead];
+        for l in 0..n {
+            ids.extend([LayerId::Qkv(l), LayerId::AttnOut(l),
+                        LayerId::MlpUp(l), LayerId::MlpDown(l)]);
+        }
+        for id in ids {
+            let i = id.index(n);
+            assert!(!seen[i], "collision at {i} for {id:?}");
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

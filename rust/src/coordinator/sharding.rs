@@ -1,0 +1,151 @@
+//! FSDP-style sharding of the frozen base model (paper section 3.3).
+//!
+//! Symbiosis uses FSDP only for its *sharding* capability: base layers
+//! are frozen, so there is no gradient synchronization — each layer is an
+//! independent FSDP unit whose parameters are all-gathered right before
+//! execution and released right after ("only the parameters corresponding
+//! to that layer are fetched ... after the layer's execution, the fetched
+//! parameters are released").
+//!
+//! This module provides the per-GPU memory accounting and the per-layer
+//! fetch schedule the sharded benches consume; real numerics continue to
+//! run unsharded on the CPU substrate.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::device::Device;
+use crate::transport::LinkKind;
+
+/// A sharding plan: every base layer's parameters split evenly over
+/// `shards` devices.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub cfg: ModelConfig,
+    pub shards: usize,
+}
+
+impl ShardPlan {
+    pub fn new(cfg: ModelConfig, shards: usize) -> Self {
+        assert!(shards >= 1);
+        ShardPlan { cfg, shards }
+    }
+
+    /// Resident parameter bytes per GPU (the 1/shards slice).
+    pub fn resident_bytes_per_gpu(&self) -> u64 {
+        self.cfg.param_bytes() / self.shards as u64
+    }
+
+    /// Transient bytes materialized while one block executes: the full
+    /// parameters of that block (all-gathered working set).
+    pub fn block_working_set(&self) -> u64 {
+        let d = self.cfg.d_model as u64;
+        let kv_dim = (self.cfg.kv_heads * self.cfg.d_head()) as u64;
+        let per_block = d * d + 2 * d * kv_dim + d * d
+            + self.cfg.mlp_mats as u64 * d * self.cfg.d_ff as u64;
+        per_block * self.cfg.precision.bytes() as u64
+    }
+
+    /// Bytes each GPU must receive to materialize one block:
+    /// (shards-1)/shards of the block's parameters.
+    pub fn fetch_bytes_per_block(&self) -> u64 {
+        self.block_working_set() * (self.shards as u64 - 1)
+            / self.shards as u64
+    }
+
+    /// Simulated seconds of parameter fetches for one full pass
+    /// (every block all-gathered once; fetches pipeline with compute so
+    /// only the non-overlapped fraction is charged).
+    pub fn fetch_secs_per_pass(&self, overlap: f64) -> f64 {
+        let total = self.fetch_bytes_per_block()
+            * self.cfg.n_layers as u64;
+        LinkKind::NvLink.transfer_time(total) * (1.0 - overlap)
+    }
+
+    /// Charge the resident shard + one block working set to a GPU
+    /// ledger; errors if the device cannot hold it (the "model too large
+    /// for N GPUs" lines of Fig. 17).
+    pub fn charge(&self, dev: &mut Device) -> Result<()> {
+        dev.ledger
+            .set("base-shard", self.resident_bytes_per_gpu())?;
+        dev.ledger.set("base-gathered-block",
+                       self.block_working_set())?;
+        Ok(())
+    }
+
+    /// Peak per-GPU memory with `clients_per_gpu` fine-tuning clients
+    /// co-located (sharded-local), each with the given runtime state.
+    pub fn local_peak_bytes(&self, clients_per_gpu: usize,
+                            client_state: u64) -> u64 {
+        self.resident_bytes_per_gpu()
+            + self.block_working_set()
+            + clients_per_gpu as u64 * client_state
+    }
+}
+
+/// Check whether a model fits a set of identical GPUs under a plan.
+pub fn fits(plan: &ShardPlan, gpu_capacity: u64) -> bool {
+    plan.resident_bytes_per_gpu() + plan.block_working_set()
+        < gpu_capacity
+}
+
+/// Convenience: smallest shard count (power of two) that fits.
+pub fn min_shards(cfg: &ModelConfig, gpu_capacity: u64,
+                  max_shards: usize) -> Option<usize> {
+    let mut s = 1;
+    while s <= max_shards {
+        if fits(&ShardPlan::new(cfg.clone(), s), gpu_capacity) {
+            return Some(s);
+        }
+        s *= 2;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GEMMA2_27B, LLAMA2_13B, SYM_TINY};
+    use crate::device::{DeviceKind, GIB};
+
+    #[test]
+    fn sharding_divides_resident_bytes() {
+        let p1 = ShardPlan::new(LLAMA2_13B, 1);
+        let p2 = ShardPlan::new(LLAMA2_13B, 2);
+        assert!((p2.resident_bytes_per_gpu() as f64
+                 - p1.resident_bytes_per_gpu() as f64 / 2.0)
+                    .abs()
+                < GIB as f64);
+    }
+
+    #[test]
+    fn gemma27_needs_multiple_40gb_gpus() {
+        // 27B bf16 ~= 59GB > 40GB: must shard on 40GB cards.
+        assert_eq!(min_shards(&GEMMA2_27B, 40 * GIB, 8), Some(2));
+        // fits on a single 80GB card
+        assert_eq!(min_shards(&GEMMA2_27B, 80 * GIB, 8), Some(1));
+    }
+
+    #[test]
+    fn tiny_fits_everywhere() {
+        assert!(fits(&ShardPlan::new(SYM_TINY, 1), GIB));
+    }
+
+    #[test]
+    fn charge_respects_capacity() {
+        let mut dev = Device::new("g", DeviceKind::GpuFast40);
+        let plan = ShardPlan::new(GEMMA2_27B, 1);
+        assert!(plan.charge(&mut dev).is_err()); // 59GB > 40GB
+        let plan2 = ShardPlan::new(GEMMA2_27B, 4);
+        let mut dev2 = Device::new("g2", DeviceKind::GpuFast40);
+        assert!(plan2.charge(&mut dev2).is_ok());
+        assert!(dev2.ledger.used() > 0);
+    }
+
+    #[test]
+    fn fetch_overlap_reduces_cost() {
+        let plan = ShardPlan::new(LLAMA2_13B, 4);
+        assert!(plan.fetch_secs_per_pass(0.8)
+                < plan.fetch_secs_per_pass(0.0));
+    }
+}

@@ -1,0 +1,155 @@
+//! `VirtLayer` — the client-side proxy for a base-model layer.
+//!
+//! The paper replaces every frozen layer in the client's model definition
+//! with a `torch.nn.Module` whose forward/backward ship activations to
+//! the base executor (section 3.2, Fig. 4).  Here the proxy is a handle
+//! that packages the request, charges the client<->executor link, applies
+//! the privacy protocol when configured, and blocks on the response —
+//! keeping the *client* the driver of its own execution.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::privacy::PrivacyCtx;
+use crate::coordinator::proto::{ExecMsg, LayerId, LayerRequest,
+                                LayerResponse, OpKind, Urgency};
+use crate::tensor::Tensor;
+use crate::transport::Link;
+
+/// Per-client view of the executor: layer proxies share this context.
+pub struct VirtLayerCtx {
+    pub client_id: usize,
+    pub exec_tx: Sender<ExecMsg>,
+    /// Simulated link to the executor (charged per message).
+    pub link: Mutex<Link>,
+    /// Optional activation-privacy protocol state.
+    pub privacy: Option<PrivacyCtx>,
+    /// When set, simulated link delays are *realized* as actual sleeps,
+    /// so remote/network placements behave (not just account) slower —
+    /// used by the placement benches (Figs 7/13/21).
+    pub realize_delays: bool,
+    /// Accumulated queue-wait observed by this client (Fig 7).
+    pub wait_secs: Mutex<f64>,
+    /// Accumulated simulated link time.
+    pub link_secs: Mutex<f64>,
+}
+
+impl VirtLayerCtx {
+    pub fn new(client_id: usize, exec_tx: Sender<ExecMsg>,
+               link: Link) -> Self {
+        VirtLayerCtx {
+            client_id,
+            exec_tx,
+            link: Mutex::new(link),
+            privacy: None,
+            realize_delays: false,
+            wait_secs: Mutex::new(0.0),
+            link_secs: Mutex::new(0.0),
+        }
+    }
+
+    pub fn with_privacy(mut self, p: PrivacyCtx) -> Self {
+        self.privacy = Some(p);
+        self
+    }
+
+    /// Register with the executor (lockstep policies count clients).
+    pub fn register(&self) {
+        let _ = self.exec_tx.send(ExecMsg::Register {
+            client_id: self.client_id,
+        });
+    }
+
+    pub fn deregister(&self) {
+        let _ = self.exec_tx.send(ExecMsg::Deregister {
+            client_id: self.client_id,
+        });
+    }
+
+    /// Invoke the forward pass of a base linear layer with activations
+    /// `x: (T, Din)`.
+    pub fn forward(&self, layer: LayerId, x: Tensor, urgency: Urgency)
+                   -> Result<Tensor> {
+        // Privacy: ship x + n, receive W(x+n)+b, subtract n_eff = W.n.
+        if let Some(p) = &self.privacy {
+            let (noised, n_eff) = p.apply(layer, &x)?;
+            let y_noisy =
+                self.round_trip(layer, OpKind::Forward, noised, None,
+                                urgency)?;
+            return Ok(crate::tensor::ops::sub(&y_noisy, &n_eff));
+        }
+        self.round_trip(layer, OpKind::Forward, x, None, urgency)
+    }
+
+    /// Invoke the memory-optimized backward: returns `dX = dY . W^T`.
+    pub fn backward(&self, layer: LayerId, dy: Tensor, urgency: Urgency)
+                    -> Result<Tensor> {
+        self.round_trip(layer, OpKind::Backward, dy, None, urgency)
+    }
+
+    /// Embedding lookup: token ids + positions (both (T,) i32).
+    pub fn embed(&self, tokens: Tensor, positions: Tensor,
+                 urgency: Urgency) -> Result<Tensor> {
+        self.round_trip(LayerId::Embed, OpKind::Forward, tokens,
+                        Some(positions), urgency)
+    }
+
+    fn round_trip(&self, layer: LayerId, op: OpKind, x: Tensor,
+                  positions: Option<Tensor>, urgency: Urgency)
+                  -> Result<Tensor> {
+        // Charge the simulated link for the request payload.
+        {
+            let mut link = self.link.lock().unwrap();
+            let dt = link.send(&x);
+            *self.link_secs.lock().unwrap() += dt;
+            if self.realize_delays && dt > 20e-6 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+            }
+        }
+        let (tx, rx) = channel::<LayerResponse>();
+        self.exec_tx
+            .send(ExecMsg::Request(LayerRequest {
+                client_id: self.client_id,
+                layer,
+                op,
+                x,
+                positions,
+                urgency,
+                resp: tx,
+            }))
+            .ok()
+            .context("base executor is gone")?;
+        let resp = rx.recv().context("base executor dropped request")?;
+        // Charge the link for the response payload.
+        {
+            let mut link = self.link.lock().unwrap();
+            let dt = link.send(&resp.y);
+            *self.link_secs.lock().unwrap() += dt;
+            if self.realize_delays && dt > 20e-6 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+            }
+        }
+        *self.wait_secs.lock().unwrap() += resp.queue_wait_secs;
+        Ok(resp.y)
+    }
+
+    /// Total simulated link time charged so far.
+    pub fn link_time(&self) -> f64 {
+        *self.link_secs.lock().unwrap()
+    }
+
+    /// Total executor queue wait observed so far.
+    pub fn queue_wait(&self) -> f64 {
+        *self.wait_secs.lock().unwrap()
+    }
+}
+
+impl Drop for VirtLayerCtx {
+    /// Leaving clients must deregister, or lockstep barriers would wait
+    /// for them forever (bounded only by the safety cap).
+    fn drop(&mut self) {
+        self.deregister();
+    }
+}

@@ -1,0 +1,285 @@
+//! Simulated heterogeneous device fleet.
+//!
+//! The paper's testbed is 8xA100-80GB plus 40GB A100s at two power caps
+//! (350W "fast" / 100W "slow") and a 64-core EPYC host.  This environment
+//! is CPU-only, so placement/heterogeneity experiments run against this
+//! module: every device has a **memory ledger** (capacity + tagged
+//! allocations, OOM on overflow) and a **compute-rate model** (effective
+//! FLOP/s per precision).  Numerics still execute for real through PJRT;
+//! the fleet supplies the *accounting* that the paper's figures are made
+//! of (see DESIGN.md section 3).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::Precision;
+
+pub const GIB: u64 = 1 << 30;
+
+/// Device classes used across the paper's experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// A100 80GB, full power — the paper's main evaluation GPU.
+    GpuA100_80,
+    /// A100 40GB at 350W — "fast" GPU of the heterogeneous experiment.
+    GpuFast40,
+    /// A100 40GB capped at 100W — "slow" GPU of the heterogeneous
+    /// experiment (paper Fig. 18).
+    GpuSlow40,
+    /// Host CPU + DRAM (64-core EPYC, 512GB) — client placement target
+    /// for long-context inference (paper Figs. 19/20).
+    Cpu,
+}
+
+impl DeviceKind {
+    /// Memory capacity in bytes.
+    pub fn capacity(self) -> u64 {
+        match self {
+            DeviceKind::GpuA100_80 => 80 * GIB,
+            DeviceKind::GpuFast40 | DeviceKind::GpuSlow40 => 40 * GIB,
+            DeviceKind::Cpu => 512 * GIB,
+        }
+    }
+
+    /// Effective dense-matmul throughput in FLOP/s for a precision.
+    /// A100 peak: 312 TFLOP/s f16, 19.5 TFLOP/s f32; derated to a
+    /// realistic 60% efficiency. The 100W cap derates compute ~3.5x
+    /// (power-limited clocks); CPU ~1.5 TFLOP/s f32 (64 EPYC cores
+    /// with AVX2 FMA).
+    pub fn flops(self, p: Precision) -> f64 {
+        let eff = 0.6;
+        match (self, p) {
+            (DeviceKind::GpuA100_80, Precision::F16 | Precision::BF16)
+            | (DeviceKind::GpuFast40, Precision::F16 | Precision::BF16) => {
+                312e12 * eff
+            }
+            (DeviceKind::GpuA100_80, Precision::F32)
+            | (DeviceKind::GpuFast40, Precision::F32) => 19.5e12 * eff,
+            (DeviceKind::GpuSlow40, Precision::F16 | Precision::BF16) => {
+                312e12 * eff / 3.5
+            }
+            (DeviceKind::GpuSlow40, Precision::F32) => 19.5e12 * eff / 3.5,
+            (DeviceKind::Cpu, _) => 1.5e12,
+        }
+    }
+
+    /// HBM / DRAM bandwidth in bytes/s (A100: ~2 TB/s; DDR4-8ch: 200GB/s).
+    pub fn mem_bw(self) -> f64 {
+        match self {
+            DeviceKind::GpuA100_80 => 2.0e12,
+            DeviceKind::GpuFast40 | DeviceKind::GpuSlow40 => 1.5e12,
+            DeviceKind::Cpu => 2.0e11,
+        }
+    }
+
+    pub fn is_gpu(self) -> bool {
+        !matches!(self, DeviceKind::Cpu)
+    }
+}
+
+/// One tagged allocation in a ledger.
+#[derive(Debug, Clone)]
+struct Alloc {
+    bytes: u64,
+}
+
+/// Tagged memory accounting with capacity enforcement.
+///
+/// Tags let the figures split consumption by component ("base-model",
+/// "kv-cache:client3", "optimizer:client1", …), which is exactly how the
+/// paper plots Figs. 1/9/10.
+#[derive(Debug)]
+pub struct MemoryLedger {
+    capacity: u64,
+    used: u64,
+    peak: u64,
+    allocs: HashMap<String, Alloc>,
+}
+
+impl MemoryLedger {
+    pub fn new(capacity: u64) -> Self {
+        MemoryLedger { capacity, used: 0, peak: 0, allocs: HashMap::new() }
+    }
+
+    /// Allocate (or resize) the tagged region to `bytes` total.
+    /// Fails with OOM if the device capacity would be exceeded —
+    /// reproducing the paper's "baseline runs out of memory at N clients"
+    /// lines.
+    pub fn set(&mut self, tag: &str, bytes: u64) -> Result<()> {
+        let old = self.allocs.get(tag).map(|a| a.bytes).unwrap_or(0);
+        let new_used = self.used - old + bytes;
+        if new_used > self.capacity {
+            bail!("OOM: tag {tag} wants {bytes}B, used {}B of {}B",
+                  self.used - old, self.capacity);
+        }
+        self.used = new_used;
+        self.peak = self.peak.max(self.used);
+        if bytes == 0 {
+            self.allocs.remove(tag);
+        } else {
+            self.allocs.insert(tag.to_string(), Alloc { bytes });
+        }
+        Ok(())
+    }
+
+    /// Grow the tagged region by `delta` bytes.
+    pub fn grow(&mut self, tag: &str, delta: u64) -> Result<()> {
+        let old = self.allocs.get(tag).map(|a| a.bytes).unwrap_or(0);
+        self.set(tag, old + delta)
+    }
+
+    pub fn free(&mut self, tag: &str) {
+        if let Some(a) = self.allocs.remove(tag) {
+            self.used -= a.bytes;
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn tag_bytes(&self, tag: &str) -> u64 {
+        self.allocs.get(tag).map(|a| a.bytes).unwrap_or(0)
+    }
+
+    /// Sum over tags with a given prefix (e.g. all "kv-cache:" regions).
+    pub fn prefix_bytes(&self, prefix: &str) -> u64 {
+        self.allocs
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, a)| a.bytes)
+            .sum()
+    }
+
+    /// Invariant check: used == sum of allocations (property tests).
+    pub fn check_balanced(&self) -> bool {
+        self.used == self.allocs.values().map(|a| a.bytes).sum::<u64>()
+    }
+}
+
+/// A simulated device: kind + ledger + a monotonically advancing virtual
+/// clock (seconds of simulated busy time).
+#[derive(Debug)]
+pub struct Device {
+    pub name: String,
+    pub kind: DeviceKind,
+    pub ledger: MemoryLedger,
+    busy_until: f64,
+}
+
+impl Device {
+    pub fn new(name: &str, kind: DeviceKind) -> Self {
+        Device {
+            name: name.to_string(),
+            kind,
+            ledger: MemoryLedger::new(kind.capacity()),
+            busy_until: 0.0,
+        }
+    }
+
+    /// Time to run `flops` of dense math touching `bytes` of memory:
+    /// roofline max of compute and bandwidth terms, plus a fixed kernel
+    /// launch overhead.
+    pub fn op_time(&self, flops: u64, bytes: u64, p: Precision) -> f64 {
+        const LAUNCH: f64 = 5e-6;
+        let compute = flops as f64 / self.kind.flops(p);
+        let mem = bytes as f64 / self.kind.mem_bw();
+        LAUNCH + compute.max(mem)
+    }
+
+    /// Occupy the device from `start` for `dur` simulated seconds;
+    /// returns the completion time (work is serialized per device).
+    pub fn run(&mut self, start: f64, dur: f64) -> f64 {
+        let begin = start.max(self.busy_until);
+        self.busy_until = begin + dur;
+        self.busy_until
+    }
+
+    pub fn busy_until(&self) -> f64 {
+        self.busy_until
+    }
+
+    pub fn reset_clock(&mut self) {
+        self.busy_until = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_enforces_capacity() {
+        let mut l = MemoryLedger::new(100);
+        l.set("a", 60).unwrap();
+        assert!(l.set("b", 50).is_err());
+        l.set("b", 40).unwrap();
+        assert_eq!(l.used(), 100);
+        l.free("a");
+        assert_eq!(l.used(), 40);
+        assert!(l.check_balanced());
+    }
+
+    #[test]
+    fn ledger_grow_and_resize() {
+        let mut l = MemoryLedger::new(100);
+        l.set("kv", 10).unwrap();
+        l.grow("kv", 15).unwrap();
+        assert_eq!(l.tag_bytes("kv"), 25);
+        l.set("kv", 5).unwrap(); // shrink
+        assert_eq!(l.used(), 5);
+        assert_eq!(l.peak(), 25);
+    }
+
+    #[test]
+    fn oom_leaves_ledger_unchanged() {
+        let mut l = MemoryLedger::new(100);
+        l.set("a", 60).unwrap();
+        let before = l.used();
+        assert!(l.grow("a", 50).is_err());
+        assert_eq!(l.used(), before);
+        assert!(l.check_balanced());
+    }
+
+    #[test]
+    fn prefix_sums() {
+        let mut l = MemoryLedger::new(1000);
+        l.set("kv:c1", 10).unwrap();
+        l.set("kv:c2", 20).unwrap();
+        l.set("opt:c1", 5).unwrap();
+        assert_eq!(l.prefix_bytes("kv:"), 30);
+    }
+
+    #[test]
+    fn device_serializes_work() {
+        let mut d = Device::new("g0", DeviceKind::GpuA100_80);
+        let t1 = d.run(0.0, 1.0);
+        let t2 = d.run(0.5, 1.0); // arrives while busy
+        assert_eq!(t1, 1.0);
+        assert_eq!(t2, 2.0);
+    }
+
+    #[test]
+    fn slow_gpu_is_slower() {
+        let fast = Device::new("f", DeviceKind::GpuFast40);
+        let slow = Device::new("s", DeviceKind::GpuSlow40);
+        let f = fast.op_time(1 << 40, 1 << 20, Precision::F16);
+        let s = slow.op_time(1 << 40, 1 << 20, Precision::F16);
+        assert!(s > 3.0 * f);
+    }
+
+    #[test]
+    fn cpu_has_more_memory_than_gpu() {
+        assert!(DeviceKind::Cpu.capacity()
+                > DeviceKind::GpuA100_80.capacity());
+    }
+}

@@ -1,0 +1,27 @@
+//! # Symbiosis — multi-adapter inference and fine-tuning
+//!
+//! Reproduction of *"Symbiosis: Multi-Adapter Inference and Fine-Tuning"*
+//! (Gupta et al., 2025). A shared, frozen **base model** is served by a
+//! *base executor*; independent **clients** (inference or fine-tuning)
+//! own their adapters, attention, KV cache, and optimizer state, and
+//! invoke the executor per layer through a [`coordinator::virt_layer`]
+//! proxy. See DESIGN.md for the architecture and the experiment index.
+//!
+//! Layering:
+//! * [`runtime`] — PJRT engine executing AOT-compiled JAX/Pallas HLO.
+//! * [`coordinator`] — the paper's contribution: split execution,
+//!   per-layer opportunistic batching, flexible placement, privacy.
+//! * [`device`] / [`transport`] — simulated heterogeneous fleet (memory
+//!   ledger + cost model) standing in for the paper's 8xA100 testbed.
+//! * [`baselines`] — dedicated-instance, lockstep (vLLM/mLoRA-like) and
+//!   FSDP comparators used by the paper-figure benches.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod metrics;
+pub mod runtime;
+pub mod tensor;
+pub mod transport;

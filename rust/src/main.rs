@@ -1,0 +1,235 @@
+//! Symbiosis CLI — the launcher.
+//!
+//! Subcommands (hand-rolled parsing; clap is not in the vendored
+//! registry):
+//!   serve     — start a base executor + N inference clients
+//!   finetune  — co-train N adapters against the shared base
+//!   models    — print the model registry (executable + analytic)
+//!   artifacts — inspect the AOT manifest
+//!
+//! Examples live in `examples/`; paper-figure reproductions in
+//! `rust/benches/paper_benches.rs` (run: `cargo bench`).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use symbiosis::config::{self, SYM_TINY};
+use symbiosis::coordinator::adapter::LoraTargets;
+use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
+                             InferenceSession, KvPlacement, Placement,
+                             Trainer};
+use symbiosis::metrics::{gib, LatencyStats, Throughput};
+use symbiosis::runtime::Manifest;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => serve(&args),
+        "finetune" => finetune(&args),
+        "models" => models(),
+        "artifacts" => artifacts(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "symbiosis — multi-adapter inference and fine-tuning\n\n\
+         USAGE: symbiosis <COMMAND> [OPTIONS]\n\n\
+         COMMANDS:\n\
+           serve      --clients N --requests R --gen-len G [--policy \
+         no-lockstep|lockstep|opportunistic]\n\
+           finetune   --clients N --steps S --seq L\n\
+           models     print the model registry\n\
+           artifacts  [--dir PATH] inspect the AOT manifest\n"
+    );
+}
+
+fn opt<T: std::str::FromStr>(args: &[String], name: &str, default: T)
+                             -> T {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn opt_str(args: &[String], name: &str, default: &str) -> String {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn artifact_dir(args: &[String]) -> PathBuf {
+    PathBuf::from(opt_str(args, "--dir",
+                          concat!(env!("CARGO_MANIFEST_DIR"),
+                                  "/artifacts")))
+}
+
+fn policy(args: &[String]) -> Result<BatchPolicy> {
+    Ok(match opt_str(args, "--policy", "opportunistic").as_str() {
+        "no-lockstep" => BatchPolicy::NoLockstep,
+        "lockstep" => BatchPolicy::Lockstep,
+        "opportunistic" => BatchPolicy::opportunistic_default(),
+        other => bail!("unknown policy {other}"),
+    })
+}
+
+fn clone_core(core: &symbiosis::coordinator::ClientCore)
+              -> symbiosis::coordinator::ClientCore {
+    symbiosis::coordinator::ClientCore {
+        cfg: core.cfg.clone(),
+        engine: core.engine.clone(),
+        virt: core.virt.clone(),
+        weights: core.weights.clone(),
+        adapter: core.adapter.clone(),
+        lora_scale: core.lora_scale,
+    }
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let n_clients: usize = opt(args, "--clients", 4);
+    let n_requests: usize = opt(args, "--requests", 4);
+    let gen_len: usize = opt(args, "--gen-len", 16);
+    let dir = artifact_dir(args);
+    let dep = Deployment::start(&SYM_TINY, &dir, policy(args)?,
+                                Placement::Local)?;
+    println!("serving {} to {n_clients} clients...", SYM_TINY.name);
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let adapter = if c % 2 == 1 {
+            Some(Adapter::lora_from_artifacts(&SYM_TINY, &dir, 8,
+                                              LoraTargets::QKVO, 2.0)?)
+        } else {
+            None
+        };
+        let core = dep.client_core(adapter);
+        handles.push(std::thread::spawn(move || -> Result<_> {
+            let mut lat = LatencyStats::new();
+            let mut tput = Throughput::start();
+            for r in 0..n_requests {
+                let mut sess = InferenceSession::new(
+                    clone_core(&core), 1, KvPlacement::Device)?;
+                let prompt: Vec<i32> = (0..16)
+                    .map(|k| ((c * 71 + r * 13 + k) % 256) as i32)
+                    .collect();
+                sess.prefill(&prompt)?;
+                for _ in 1..gen_len {
+                    let t = std::time::Instant::now();
+                    sess.decode_step()?;
+                    lat.record(t.elapsed());
+                }
+                tput.add(gen_len as u64);
+            }
+            Ok((c, lat, tput.tokens_per_sec()))
+        }));
+    }
+    for h in handles {
+        let (c, lat, tps) = h.join().unwrap()?;
+        println!("client {c}: p50 {:.2}ms p99 {:.2}ms  {tps:.1} tok/s",
+                 lat.p50() * 1e3, lat.p99() * 1e3);
+    }
+    let stats = dep.shutdown();
+    println!("executor: {} flushes, avg batch {:.2}, wait {:.2}ms",
+             stats.flushes.len(), stats.mean_batch_clients(),
+             stats.mean_wait_secs() * 1e3);
+    Ok(())
+}
+
+fn finetune(args: &[String]) -> Result<()> {
+    let n_clients: usize = opt(args, "--clients", 2);
+    let steps: usize = opt(args, "--steps", 20);
+    let seq: usize = opt(args, "--seq", 32);
+    let dir = artifact_dir(args);
+    let dep = Deployment::start(&SYM_TINY, &dir, policy(args)?,
+                                Placement::Local)?;
+    println!("fine-tuning {n_clients} adapters x {steps} steps...");
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let adapter = Adapter::lora_from_artifacts(
+            &SYM_TINY, &dir, if c % 2 == 0 { 8 } else { 64 },
+            LoraTargets::QKVO, 2.0)?;
+        let core = dep.client_core(Some(adapter));
+        handles.push(std::thread::spawn(move || -> Result<_> {
+            let mut tr = Trainer::new(core, 1)?;
+            let mut first = 0.0;
+            let mut last = 0.0;
+            for s in 0..steps {
+                let tokens: Vec<i32> = (0..seq)
+                    .map(|k| ((c * 31 + s + k * 7) % 256) as i32)
+                    .collect();
+                let labels: Vec<i32> = tokens
+                    .iter()
+                    .map(|t| (t * 3 + 1) % 256)
+                    .collect();
+                let out = tr.train_step(&tokens, &labels)?;
+                if s == 0 {
+                    first = out.loss;
+                }
+                last = out.loss;
+            }
+            Ok((c, first, last))
+        }));
+    }
+    for h in handles {
+        let (c, first, last) = h.join().unwrap()?;
+        println!("client {c}: loss {first:.4} -> {last:.4}");
+    }
+    dep.shutdown();
+    Ok(())
+}
+
+fn models() -> Result<()> {
+    println!("{:<16} {:>8} {:>8} {:>8} {:>8} {:>10} {:>6}", "name",
+             "layers", "d_model", "heads", "d_ff", "params", "exec");
+    for name in ["sym-tiny", "sym-small", "gpt2-xl", "llama3-1b",
+                 "llama2-7b", "llama2-13b", "granite-20b",
+                 "starcoder-15b", "gemma2-27b"] {
+        let m = config::model_by_name(name).unwrap();
+        println!("{:<16} {:>8} {:>8} {:>8} {:>8} {:>9.1}B {:>6}",
+                 m.name, m.n_layers, m.d_model, m.n_heads, m.d_ff,
+                 m.n_params() as f64 / 1e9, m.executable);
+    }
+    println!("\nKV cache (batch 2, seq 512):");
+    for name in ["llama2-7b", "llama2-13b", "granite-20b"] {
+        let m = config::model_by_name(name).unwrap();
+        println!("  {:<14} {:.2} GiB", m.name,
+                 gib(m.kv_cache_bytes(2, 512)));
+    }
+    Ok(())
+}
+
+fn artifacts(args: &[String]) -> Result<()> {
+    let dir = artifact_dir(args);
+    let m = Manifest::load(&dir)?;
+    println!("manifest at {}:", dir.display());
+    for model in &m.models {
+        println!("  model {} (d={}, layers={})", model.name,
+                 model.d_model, model.n_layers);
+    }
+    let mut kinds: std::collections::BTreeMap<&str, usize> =
+        Default::default();
+    for name in m.artifacts.keys() {
+        let kind = name.split('_').next().unwrap_or("?");
+        *kinds.entry(kind).or_default() += 1;
+    }
+    println!("  {} artifacts:", m.artifacts.len());
+    for (k, n) in kinds {
+        println!("    {k:<12} {n}");
+    }
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! Latency/throughput/memory recorders used by the benches and examples.
+
+use std::time::{Duration, Instant};
+
+/// Streaming summary of a series of duration samples.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&mut self, s: f64) {
+        self.samples.push(s);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Percentile over recorded samples (q in [0, 100]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q / 100.0) * (s.len() - 1) as f64).floor() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+}
+
+/// Tokens-per-second counter over a wall-clock window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    pub tokens: u64,
+}
+
+impl Throughput {
+    pub fn start() -> Self {
+        Throughput { start: Instant::now(), tokens: 0 }
+    }
+
+    pub fn add(&mut self, tokens: u64) {
+        self.tokens += tokens;
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / dt
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Pretty-print bytes as GiB with 2 decimals (figure output helper).
+pub fn gib(bytes: u64) -> f64 {
+    bytes as f64 / (1u64 << 30) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyStats::new();
+        for i in 1..=100 {
+            l.record_secs(i as f64);
+        }
+        assert_eq!(l.p50(), 50.0);
+        assert_eq!(l.p99(), 99.0);
+        assert_eq!(l.min(), 1.0);
+        assert_eq!(l.max(), 100.0);
+        assert!((l.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let l = LatencyStats::new();
+        assert_eq!(l.mean(), 0.0);
+        assert_eq!(l.p99(), 0.0);
+    }
+
+    #[test]
+    fn gib_conversion() {
+        assert!((gib(1 << 30) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,338 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them on
+//! the CPU PJRT client (once, cached), and executes them with host
+//! tensors.
+//!
+//! The `xla` crate's client/executable types are not `Send`/`Sync`
+//! (internal `Rc` + raw pointers), so all PJRT objects live on **engine
+//! service threads** (a small worker pool, each with its own client and
+//! compile cache); [`Engine`] is a cheap, cloneable, thread-safe handle
+//! that round-trips execute requests over a channel.  One worker mirrors
+//! a single device stream; the pool mirrors multiple streams and is what
+//! lets independent clients' attention overlap with executor flushes
+//! (see EXPERIMENTS.md §Perf).
+//!
+//! This is the only place Python-produced bits are touched at run time —
+//! and only as static `.hlo.txt` files.  Pattern adapted from
+//! `/opt/xla-example/load_hlo/`: HLO *text* interchange, `return_tuple`
+//! outputs unwrapped via `to_tuple`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use crate::tensor::{DType, Tensor, TensorData};
+
+/// Cumulative execution statistics (for the perf pass / EXPERIMENTS.md).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executes: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+struct ExecuteReq {
+    name: String,
+    inputs: Vec<Tensor>,
+    resp: Sender<Result<Vec<Tensor>>>,
+}
+
+/// Thread-safe handle to the engine worker pool.  Two priority lanes:
+/// interactive (decode) work jumps ahead of queued bulk/training work —
+/// this is how "Symbiosis prioritizes the inference requests" (paper
+/// section 4.4) reaches the device queue.
+#[derive(Clone)]
+pub struct Engine {
+    tx_hi: Sender<ExecuteReq>,
+    tx_lo: Sender<ExecuteReq>,
+    manifest: Arc<Manifest>,
+    stats: Arc<Mutex<EngineStats>>,
+}
+
+/// Default worker count: one per available core, capped at 4
+/// (overridable via SYMBIOSIS_ENGINE_THREADS).  On a single-core host
+/// extra workers only multiply compile caches — measured in
+/// EXPERIMENTS.md §Perf.
+fn default_workers() -> usize {
+    std::env::var("SYMBIOSIS_ENGINE_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get().min(4))
+                .unwrap_or(1)
+        })
+}
+
+impl Engine {
+    /// Build an engine over `artifacts/` with the default worker pool.
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        Self::with_workers(artifact_dir, default_workers())
+    }
+
+    /// Build an engine with an explicit worker-pool size (each worker
+    /// owns a PJRT client + compile cache; 1 = a single device stream).
+    pub fn with_workers(artifact_dir: &Path, workers: usize)
+                        -> Result<Engine> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let stats = Arc::new(Mutex::new(EngineStats::default()));
+        let (tx_hi, rx_hi) = channel::<ExecuteReq>();
+        let (tx_lo, rx_lo) = channel::<ExecuteReq>();
+        let rx = Arc::new(Mutex::new((rx_hi, rx_lo)));
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        for w in 0..workers.max(1) {
+            let manifest = manifest.clone();
+            let stats = stats.clone();
+            let rx = rx.clone();
+            let ready_tx = ready_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("pjrt-engine-{w}"))
+                .spawn(move || {
+                    service_loop(manifest, stats, rx, ready_tx);
+                })
+                .expect("spawn engine thread");
+        }
+        for _ in 0..workers.max(1) {
+            ready_rx
+                .recv()
+                .context("engine worker died during init")??;
+        }
+        Ok(Engine { tx_hi, tx_lo, manifest, stats })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// True if the manifest has an artifact with this name.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.manifest.artifacts.contains_key(name)
+    }
+
+    /// Pre-compile a set of artifacts (warm-up before serving) by
+    /// executing them once with zero inputs.
+    pub fn warm_up<'a, I: IntoIterator<Item = &'a str>>(&self, names: I)
+                                                        -> Result<()> {
+        for n in names {
+            let spec = self.manifest.artifact(n)?;
+            let zeros: Vec<Tensor> = spec
+                .inputs
+                .iter()
+                .map(|s| zeros_for_spec(s.dtype, &s.shape))
+                .collect();
+            let refs: Vec<&Tensor> = zeros.iter().collect();
+            self.execute(n, &refs)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `inputs` on the normal lane.
+    pub fn execute(&self, name: &str, inputs: &[&Tensor])
+                   -> Result<Vec<Tensor>> {
+        self.execute_prio(name, inputs, false)
+    }
+
+    /// Execute with an explicit priority: `high` jumps the device queue
+    /// ahead of any queued bulk/training work.
+    pub fn execute_prio(&self, name: &str, inputs: &[&Tensor],
+                        high: bool) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?;
+        validate_inputs(spec, inputs)?;
+        let (tx, rx) = channel();
+        let lane = if high { &self.tx_hi } else { &self.tx_lo };
+        lane.send(ExecuteReq {
+            name: name.to_string(),
+            inputs: inputs.iter().map(|t| (*t).clone()).collect(),
+            resp: tx,
+        })
+        .ok()
+        .context("engine service thread is gone")?;
+        rx.recv().context("engine dropped the request")?
+    }
+}
+
+fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!("{}: expected {} inputs, got {}", spec.name,
+              spec.inputs.len(), inputs.len());
+    }
+    for (t, s) in inputs.iter().zip(&spec.inputs) {
+        if t.shape != s.shape {
+            bail!("{}: input {} shape {:?} != manifest {:?}", spec.name,
+                  s.name, t.shape, s.shape);
+        }
+        if t.dtype() != s.dtype {
+            bail!("{}: input {} dtype mismatch", spec.name, s.name);
+        }
+    }
+    Ok(())
+}
+
+/// One worker: owns a PJRT client and a compiled-executable cache;
+/// launches are serialized per worker, parallel across workers.  The
+/// high-priority lane is always drained before the low one.
+fn service_loop(manifest: Arc<Manifest>, stats: Arc<Mutex<EngineStats>>,
+                rx: Arc<Mutex<(Receiver<ExecuteReq>,
+                               Receiver<ExecuteReq>)>>,
+                ready: Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready
+                .send(Err(anyhow::anyhow!("PJRT cpu client: {e:?}")));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> =
+        HashMap::new();
+    loop {
+        // hold the receiver lock only while picking up the next request;
+        // prefer the high-priority lane, then poll both.
+        let req = {
+            let guard = rx.lock().unwrap();
+            let (hi, lo) = &*guard;
+            match hi.try_recv() {
+                Ok(r) => Some(r),
+                Err(std::sync::mpsc::TryRecvError::Empty) => {
+                    match lo.try_recv() {
+                        Ok(r) => Some(r),
+                        Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                        Err(std::sync::mpsc::TryRecvError::Disconnected)
+                            => return,
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    return
+                }
+            }
+        };
+        let req = match req {
+            Some(r) => r,
+            None => {
+                // nothing queued: park briefly without holding the lock
+                std::thread::sleep(Duration::from_micros(50));
+                continue;
+            }
+        };
+        let result = serve_one(&client, &manifest, &mut cache, &stats,
+                               &req);
+        let _ = req.resp.send(result);
+    }
+}
+
+fn serve_one(client: &xla::PjRtClient, manifest: &Manifest,
+             cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+             stats: &Arc<Mutex<EngineStats>>, req: &ExecuteReq)
+             -> Result<Vec<Tensor>> {
+    let spec = manifest.artifact(&req.name)?;
+    if !cache.contains_key(&req.name) {
+        let t0 = Instant::now();
+        let exe = compile(client, &spec.file, &req.name)?;
+        let mut s = stats.lock().unwrap();
+        s.compiles += 1;
+        s.compile_secs += t0.elapsed().as_secs_f64();
+        drop(s);
+        cache.insert(req.name.clone(), exe);
+    }
+    let exe = cache.get(&req.name).unwrap();
+    let literals = req
+        .inputs
+        .iter()
+        .map(tensor_to_literal)
+        .collect::<Result<Vec<_>>>()?;
+    let t0 = Instant::now();
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", req.name))?;
+    let tuple = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetch {}: {e:?}", req.name))?;
+    // aot.py lowers with return_tuple=True: always a tuple literal.
+    let parts = tuple
+        .to_tuple()
+        .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", req.name))?;
+    if parts.len() != spec.outputs.len() {
+        bail!("{}: expected {} outputs, got {}", req.name,
+              spec.outputs.len(), parts.len());
+    }
+    let outs = parts
+        .into_iter()
+        .zip(&spec.outputs)
+        .map(|(l, os)| literal_to_tensor(&l, &os.shape))
+        .collect::<Result<Vec<_>>>()?;
+    let mut s = stats.lock().unwrap();
+    s.executes += 1;
+    s.execute_secs += t0.elapsed().as_secs_f64();
+    Ok(outs)
+}
+
+fn compile(client: &xla::PjRtClient, file: &PathBuf, name: &str)
+           -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        file.to_str().context("artifact path utf-8")?)
+        .map_err(|e| anyhow::anyhow!("loading HLO {}: {e:?}",
+                                     file.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))
+}
+
+/// Host tensor -> xla Literal (row-major bytes).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let (ty, bytes): (xla::ElementType, &[u8]) = match &t.data {
+        TensorData::F32(v) => (xla::ElementType::F32, unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8,
+                                       v.len() * 4)
+        }),
+        TensorData::I32(v) => (xla::ElementType::S32, unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8,
+                                       v.len() * 4)
+        }),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
+        .map_err(|e| anyhow::anyhow!("literal create: {e:?}"))
+}
+
+/// xla Literal -> host tensor, shaped per the manifest spec.
+pub fn literal_to_tensor(l: &xla::Literal, shape: &[usize])
+                         -> Result<Tensor> {
+    let ty = l.ty().map_err(|e| anyhow::anyhow!("literal ty: {e:?}"))?;
+    let data = match ty {
+        xla::ElementType::F32 => TensorData::F32(
+            l.to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("literal f32: {e:?}"))?),
+        xla::ElementType::S32 => TensorData::I32(
+            l.to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("literal i32: {e:?}"))?),
+        other => bail!("unsupported literal type {other:?}"),
+    };
+    let t = Tensor { shape: shape.to_vec(), data };
+    if t.len() != l.element_count() {
+        bail!("literal element count {} != spec shape {:?}",
+              l.element_count(), shape);
+    }
+    Ok(t)
+}
+
+/// Zero tensor matching a manifest spec — test/warm-up helper.
+pub fn zeros_for_spec(dtype: DType, shape: &[usize]) -> Tensor {
+    match dtype {
+        DType::F32 => Tensor::zeros(shape),
+        DType::I32 => {
+            Tensor::from_i32(vec![0; shape.iter().product()], shape)
+        }
+    }
+}

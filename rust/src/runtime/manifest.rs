@@ -1,0 +1,200 @@
+//! Parser for `artifacts/manifest.txt` emitted by `python/compile/aot.py`.
+//!
+//! Line-oriented format (no serde in the vendored registry):
+//! ```text
+//! symbiosis-manifest v1
+//! model name=sym-tiny d_model=64 ...
+//! buckets tokens=8,16,... seq=... batches=... ranks=...
+//! artifact <name> <file> in=x:f32:8x64;w:f32:64x192 out=y:f32:8x192
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::DType;
+
+/// One named input/output slot of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn parse(s: &str) -> Result<Self> {
+        let mut it = s.split(':');
+        let name = it.next().context("spec name")?.to_string();
+        let dtype = DType::parse(it.next().context("spec dtype")?)?;
+        let dims = it.next().context("spec dims")?;
+        let shape = dims
+            .split('x')
+            .map(|d| d.parse::<usize>().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name, dtype, shape })
+    }
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Executable model dims as recorded by the AOT step (drift check against
+/// `config::ModelConfig`).
+#[derive(Debug, Clone, Default)]
+pub struct ManifestModel {
+    pub name: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+/// Parsed manifest: models + artifact table.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ManifestModel>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some(h) if h.starts_with("symbiosis-manifest") => {}
+            other => bail!("bad manifest header: {other:?}"),
+        }
+        let mut m = Manifest { dir: dir.to_path_buf(), ..Default::default() };
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("model") => {
+                    let kv: HashMap<&str, &str> = parts
+                        .filter_map(|p| p.split_once('='))
+                        .collect();
+                    let get = |k: &str| -> Result<usize> {
+                        kv.get(k)
+                            .with_context(|| format!("model missing {k}"))?
+                            .parse()
+                            .context("model dim")
+                    };
+                    m.models.push(ManifestModel {
+                        name: kv.get("name").context("model name")?
+                            .to_string(),
+                        d_model: get("d_model")?,
+                        n_heads: get("n_heads")?,
+                        n_layers: get("n_layers")?,
+                        d_ff: get("d_ff")?,
+                        vocab: get("vocab")?,
+                        max_seq: get("max_seq")?,
+                    });
+                }
+                Some("buckets") => {} // informational; mirrored in config/
+                Some("artifact") => {
+                    let name = parts.next().context("artifact name")?;
+                    let file = parts.next().context("artifact file")?;
+                    let mut inputs = Vec::new();
+                    let mut outputs = Vec::new();
+                    for p in parts {
+                        if let Some(rest) = p.strip_prefix("in=") {
+                            for s in rest.split(';') {
+                                inputs.push(TensorSpec::parse(s)?);
+                            }
+                        } else if let Some(rest) = p.strip_prefix("out=") {
+                            for s in rest.split(';') {
+                                outputs.push(TensorSpec::parse(s)?);
+                            }
+                        }
+                    }
+                    m.artifacts.insert(
+                        name.to_string(),
+                        ArtifactSpec {
+                            name: name.to_string(),
+                            file: dir.join(file),
+                            inputs,
+                            outputs,
+                        },
+                    );
+                }
+                Some(other) => bail!("unknown manifest record {other:?}"),
+                None => {}
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ManifestModel> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("model {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+symbiosis-manifest v1
+model name=sym-tiny d_model=64 n_heads=4 n_layers=4 d_ff=256 vocab=256 max_seq=512
+buckets tokens=8,16 seq=16 batches=1 ranks=8
+artifact linear_fwd_t8_64x192 linear_fwd_t8_64x192.hlo.txt in=x:f32:8x64;w:f32:64x192;b:f32:192 out=y:f32:8x192
+artifact adam_n1024 adam_n1024.hlo.txt in=p:f32:1024;g:f32:1024;m:f32:1024;v:f32:1024;t:f32:1 out=p2:f32:1024;m2:f32:1024;v2:f32:1024
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.models.len(), 1);
+        assert_eq!(m.models[0].d_model, 64);
+        let a = m.artifact("linear_fwd_t8_64x192").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].shape, vec![64, 192]);
+        assert_eq!(a.outputs[0].name, "y");
+        let adam = m.artifact("adam_n1024").unwrap();
+        assert_eq!(adam.outputs.len(), 3);
+        assert_eq!(adam.inputs[4].shape, vec![1]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("nonsense", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("symbiosis-manifest v1\nwat x",
+                                Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: manifest parsing + artifact compilation/execution.
+//!
+//! The Rust request path calls [`engine::Engine::execute`] with named
+//! artifacts; Python is never involved at run time.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineStats};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

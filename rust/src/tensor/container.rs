@@ -1,0 +1,146 @@
+//! SYMT named-tensor container reader/writer.
+//!
+//! Byte-compatible with `python/compile/container.py` (there is a
+//! round-trip test on each side). Layout: `b"SYMT"`, version u32, count
+//! u32, then per tensor: name (u32 len + utf-8), dtype u8, ndim u8,
+//! dims u32×ndim, raw little-endian data.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{DType, Tensor, TensorData};
+
+const MAGIC: &[u8; 4] = b"SYMT";
+const VERSION: u32 = 1;
+
+/// Read all tensors from a SYMT file.
+pub fn read_tensors(path: &Path) -> Result<HashMap<String, Tensor>> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    read_tensors_bytes(&buf)
+}
+
+/// Read all tensors from SYMT bytes.
+pub fn read_tensors_bytes(buf: &[u8]) -> Result<HashMap<String, Tensor>> {
+    let mut r = buf;
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad SYMT magic {:?}", magic);
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported SYMT version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = HashMap::with_capacity(count);
+    for _ in 0..count {
+        let nlen = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; nlen];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let dtype = DType::from_code(hdr[0])?;
+        let ndim = hdr[1] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1);
+        let data = match dtype {
+            DType::F32 => {
+                let mut v = vec![0f32; n];
+                let bytes = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        v.as_mut_ptr() as *mut u8, n * 4)
+                };
+                r.read_exact(bytes)?;
+                TensorData::F32(v)
+            }
+            DType::I32 => {
+                let mut v = vec![0i32; n];
+                let bytes = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        v.as_mut_ptr() as *mut u8, n * 4)
+                };
+                r.read_exact(bytes)?;
+                TensorData::I32(v)
+            }
+        };
+        out.insert(name, Tensor { shape, data });
+    }
+    Ok(out)
+}
+
+/// Write tensors to a SYMT file (sorted by name for determinism).
+pub fn write_tensors(path: &Path, tensors: &HashMap<String, Tensor>)
+                     -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    let mut names: Vec<&String> = tensors.keys().collect();
+    names.sort();
+    for name in names {
+        let t = &tensors[name];
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&[t.dtype().code(), t.shape.len() as u8])?;
+        for d in &t.shape {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        v.as_ptr() as *const u8, v.len() * 4)
+                };
+                f.write_all(bytes)?;
+            }
+            TensorData::I32(v) => {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        v.as_ptr() as *const u8, v.len() * 4)
+                };
+                f.write_all(bytes)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = HashMap::new();
+        m.insert("a".to_string(),
+                 Tensor::from_f32(vec![1.0, 2.5, -3.0], &[3]));
+        m.insert("b".to_string(),
+                 Tensor::from_i32(vec![7, -9], &[2, 1]));
+        let dir = std::env::temp_dir().join("symt_test.bin");
+        write_tensors(&dir, &m).unwrap();
+        let back = read_tensors(&dir).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back["a"], m["a"]);
+        assert_eq!(back["b"], m["b"]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(read_tensors_bytes(b"NOPE\0\0\0\0").is_err());
+    }
+}

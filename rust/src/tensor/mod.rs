@@ -1,0 +1,270 @@
+//! Host tensor type shared across the coordinator.
+//!
+//! The coordinator moves activations between clients and the base executor
+//! as plain row-major host tensors; the PJRT engine converts them to/from
+//! `xla::Literal` at the execute boundary.  Cheap client-side elementwise
+//! math (residuals, RMSNorm, GELU, LoRA scaling) is implemented natively
+//! here — the formulas are the normative reference in
+//! `python/compile/kernels/ref.py` and are covered by golden tests.
+
+pub mod container;
+pub mod ops;
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`Tensor`]. Mirrors the SYMT container codes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            _ => bail!("unknown dtype {s}"),
+        })
+    }
+}
+
+/// Raw storage: f32 or i32, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: shape + row-major data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor::from_f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::from_i32(vec![v], &[1])
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::from_f32(vec![v], &[1])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut Vec<f32> {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// Reshape without moving data (total element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch",
+                  self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Rows `lo..hi` of a rank-2 tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2, "slice_rows needs rank 2");
+        let cols = self.shape[1];
+        match &self.data {
+            TensorData::F32(v) => Tensor::from_f32(
+                v[lo * cols..hi * cols].to_vec(), &[hi - lo, cols]),
+            TensorData::I32(v) => Tensor::from_i32(
+                v[lo * cols..hi * cols].to_vec(), &[hi - lo, cols]),
+        }
+    }
+
+    /// Columns `lo..hi` of a rank-2 tensor (copies).
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2, "slice_cols needs rank 2");
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let src = self.as_f32();
+        let w = hi - lo;
+        let mut out = Vec::with_capacity(rows * w);
+        for r in 0..rows {
+            out.extend_from_slice(&src[r * cols + lo..r * cols + hi]);
+        }
+        Tensor::from_f32(out, &[rows, w])
+    }
+
+    /// Stack rank-2 tensors along rows (all must share the column count).
+    pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let cols = parts[0].shape[1];
+        let rows: usize = parts.iter().map(|t| t.shape[0]).sum();
+        let mut out = Vec::with_capacity(rows * cols);
+        for t in parts {
+            assert_eq!(t.shape[1], cols, "concat_rows: column mismatch");
+            out.extend_from_slice(t.as_f32());
+        }
+        Tensor::from_f32(out, &[rows, cols])
+    }
+
+    /// Zero-pad a rank-2 tensor's rows up to `rows` (bucket padding).
+    pub fn pad_rows(&self, rows: usize) -> Tensor {
+        assert!(rows >= self.shape[0]);
+        let cols = self.shape[1];
+        let mut v = self.as_f32().to_vec();
+        v.resize(rows * cols, 0.0);
+        Tensor::from_f32(v, &[rows, cols])
+    }
+
+    /// `(T, NH*H) -> (NH, T, H)` — client-side head split for attention.
+    pub fn split_heads(&self, n_heads: usize) -> Tensor {
+        let (t, d) = (self.shape[0], self.shape[1]);
+        let h = d / n_heads;
+        let src = self.as_f32();
+        let mut out = vec![0.0f32; t * d];
+        for ti in 0..t {
+            for nh in 0..n_heads {
+                let dst = (nh * t + ti) * h;
+                let s = ti * d + nh * h;
+                out[dst..dst + h].copy_from_slice(&src[s..s + h]);
+            }
+        }
+        Tensor::from_f32(out, &[n_heads, t, h])
+    }
+
+    /// `(NH, T, H) -> (T, NH*H)` — inverse of [`Tensor::split_heads`].
+    pub fn merge_heads(&self) -> Tensor {
+        let (nh, t, h) = (self.shape[0], self.shape[1], self.shape[2]);
+        let src = self.as_f32();
+        let mut out = vec![0.0f32; t * nh * h];
+        for ni in 0..nh {
+            for ti in 0..t {
+                let s = (ni * t + ti) * h;
+                let dst = ti * nh * h + ni * h;
+                out[dst..dst + h].copy_from_slice(&src[s..s + h]);
+            }
+        }
+        Tensor::from_f32(out, &[t, nh * h])
+    }
+
+    /// Max |a - b| over two same-shaped f32 tensors (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.as_f32()
+            .iter()
+            .zip(other.as_f32())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let t = Tensor::from_f32((0..12).map(|x| x as f32).collect(), &[4, 3]);
+        let a = t.slice_rows(0, 2);
+        let b = t.slice_rows(2, 4);
+        let back = Tensor::concat_rows(&[&a, &b]);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn slice_cols_picks_columns() {
+        let t = Tensor::from_f32((0..12).map(|x| x as f32).collect(), &[3, 4]);
+        let c = t.slice_cols(1, 3);
+        assert_eq!(c.shape, vec![3, 2]);
+        assert_eq!(c.as_f32(), &[1.0, 2.0, 5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn head_split_merge_roundtrip() {
+        let t = Tensor::from_f32((0..24).map(|x| x as f32).collect(), &[3, 8]);
+        let split = t.split_heads(2);
+        assert_eq!(split.shape, vec![2, 3, 4]);
+        assert_eq!(split.merge_heads(), t);
+    }
+
+    #[test]
+    fn pad_rows_zero_fills() {
+        let t = Tensor::from_f32(vec![1.0, 2.0], &[1, 2]);
+        let p = t.pad_rows(3);
+        assert_eq!(p.shape, vec![3, 2]);
+        assert_eq!(p.as_f32(), &[1.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn reshape_validates_count() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert!(t.clone().reshape(&[3, 2]).is_ok());
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Native client-side math: the cheap elementwise pieces of the model that
+//! are not worth a PJRT dispatch (residuals, RMSNorm, GELU, LoRA scaling,
+//! noise add/sub for the privacy protocol, argmax).
+//!
+//! Formulas mirror `python/compile/kernels/ref.py` exactly — the Rust
+//! integration tests compare full-model outputs against jax goldens, which
+//! transitively pins these implementations.
+
+use super::Tensor;
+
+const RMS_EPS: f32 = 1e-6;
+
+/// Elementwise `a + b` (same shape).
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    let v = a.as_f32().iter().zip(b.as_f32()).map(|(x, y)| x + y).collect();
+    Tensor::from_f32(v, &a.shape)
+}
+
+/// In-place `a += b`.
+pub fn add_assign(a: &mut Tensor, b: &Tensor) {
+    assert_eq!(a.shape, b.shape);
+    let bv = b.as_f32();
+    for (x, y) in a.as_f32_mut().iter_mut().zip(bv) {
+        *x += *y;
+    }
+}
+
+/// Elementwise `a - b`.
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    let v = a.as_f32().iter().zip(b.as_f32()).map(|(x, y)| x - y).collect();
+    Tensor::from_f32(v, &a.shape)
+}
+
+/// `a * s` (scalar).
+pub fn scale(a: &Tensor, s: f32) -> Tensor {
+    Tensor::from_f32(a.as_f32().iter().map(|x| x * s).collect(), &a.shape)
+}
+
+/// In-place `a += b * s` — used for LoRA delta accumulation.
+pub fn add_scaled(a: &mut Tensor, b: &Tensor, s: f32) {
+    assert_eq!(a.shape, b.shape);
+    let bv = b.as_f32();
+    for (x, y) in a.as_f32_mut().iter_mut().zip(bv) {
+        *x += *y * s;
+    }
+}
+
+/// RMSNorm over the last axis of a (T, D) tensor with a (D,) gain.
+pub fn rmsnorm(x: &Tensor, gain: &Tensor) -> Tensor {
+    let (t, d) = (x.shape[0], x.shape[1]);
+    let xv = x.as_f32();
+    let g = gain.as_f32();
+    let mut out = vec![0.0f32; t * d];
+    for r in 0..t {
+        let row = &xv[r * d..(r + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        for c in 0..d {
+            out[r * d + c] = row[c] * inv * g[c];
+        }
+    }
+    Tensor::from_f32(out, &[t, d])
+}
+
+/// dX of RMSNorm with frozen gain: for row x, y = x*g/rms,
+/// dx = (dy*g)/rms - x * (x . (dy*g)) / (d * rms^3).
+pub fn rmsnorm_bwd(x: &Tensor, gain: &Tensor, dy: &Tensor) -> Tensor {
+    let (t, d) = (x.shape[0], x.shape[1]);
+    let (xv, g, dyv) = (x.as_f32(), gain.as_f32(), dy.as_f32());
+    let mut out = vec![0.0f32; t * d];
+    for r in 0..t {
+        let row = &xv[r * d..(r + 1) * d];
+        let dyr = &dyv[r * d..(r + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let rms2 = ms + RMS_EPS;
+        let rms = rms2.sqrt();
+        let mut dot = 0.0f32;
+        for c in 0..d {
+            dot += row[c] * dyr[c] * g[c];
+        }
+        let k = dot / (d as f32 * rms2 * rms);
+        for c in 0..d {
+            out[r * d + c] = dyr[c] * g[c] / rms - row[c] * k;
+        }
+    }
+    Tensor::from_f32(out, &[t, d])
+}
+
+/// Tanh-approximate GELU, matching `jax.nn.gelu(x, approximate=True)`:
+/// 0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3))).
+pub fn gelu(x: &Tensor) -> Tensor {
+    let v = x.as_f32().iter().map(|&x| gelu_scalar(x)).collect();
+    Tensor::from_f32(v, &x.shape)
+}
+
+fn gelu_scalar(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d/dx of the tanh-approximate GELU, evaluated at the saved input.
+pub fn gelu_bwd(x: &Tensor, dy: &Tensor) -> Tensor {
+    assert_eq!(x.shape, dy.shape);
+    const C: f32 = 0.797_884_6;
+    let v = x
+        .as_f32()
+        .iter()
+        .zip(dy.as_f32())
+        .map(|(&x, &dy)| {
+            let u = C * (x + 0.044715 * x * x * x);
+            let t = u.tanh();
+            let du = C * (1.0 + 3.0 * 0.044715 * x * x);
+            dy * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du)
+        })
+        .collect();
+    Tensor::from_f32(v, &x.shape)
+}
+
+/// Argmax over the last row of a (T, V) logits tensor (greedy decoding).
+pub fn argmax_last_row(logits: &Tensor) -> i32 {
+    let (t, v) = (logits.shape[0], logits.shape[1]);
+    let row = &logits.as_f32()[(t - 1) * v..t * v];
+    let mut best = 0usize;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Argmax of row `r` of a (T, V) logits tensor.
+pub fn argmax_row(logits: &Tensor, r: usize) -> i32 {
+    let v = logits.shape[1];
+    let row = &logits.as_f32()[r * v..(r + 1) * v];
+    let mut best = 0usize;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Naive matmul for tests and tiny baseline paths: (m,k) @ (k,n).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2);
+    let (av, bv) = (a.as_f32(), b.as_f32());
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let aip = av[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &bv[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += aip * brow[j];
+            }
+        }
+    }
+    Tensor::from_f32(out, &[m, n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain_normalizes() {
+        let x = Tensor::from_f32(vec![3.0, 4.0], &[1, 2]);
+        let g = Tensor::from_f32(vec![1.0, 1.0], &[2]);
+        let y = rmsnorm(&x, &g);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert_close(y.as_f32(), &[3.0 / rms, 4.0 / rms], 1e-5);
+    }
+
+    #[test]
+    fn rmsnorm_bwd_matches_finite_difference() {
+        let x = Tensor::from_f32(vec![0.5, -1.2, 2.0, 0.1], &[1, 4]);
+        let g = Tensor::from_f32(vec![1.1, 0.9, 1.3, 0.7], &[4]);
+        let dy = Tensor::from_f32(vec![0.3, -0.2, 0.5, 1.0], &[1, 4]);
+        let grad = rmsnorm_bwd(&x, &g, &dy);
+        let eps = 1e-3f32;
+        for i in 0..4 {
+            let mut xp = x.clone();
+            xp.as_f32_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.as_f32_mut()[i] -= eps;
+            let yp = rmsnorm(&xp, &g);
+            let ym = rmsnorm(&xm, &g);
+            let fd: f32 = yp
+                .as_f32()
+                .iter()
+                .zip(ym.as_f32())
+                .zip(dy.as_f32())
+                .map(|((p, m), d)| (p - m) / (2.0 * eps) * d)
+                .sum();
+            assert!((fd - grad.as_f32()[i]).abs() < 1e-2,
+                    "fd {fd} vs analytic {}", grad.as_f32()[i]);
+        }
+    }
+
+    #[test]
+    fn gelu_bwd_matches_finite_difference() {
+        for &x0 in &[-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let x = Tensor::from_f32(vec![x0], &[1]);
+            let dy = Tensor::from_f32(vec![1.0], &[1]);
+            let g = gelu_bwd(&x, &dy).as_f32()[0];
+            let eps = 1e-3;
+            let fd = (gelu_scalar(x0 + eps) - gelu_scalar(x0 - eps))
+                / (2.0 * eps);
+            assert!((g - fd).abs() < 1e-3, "x={x0}: {g} vs {fd}");
+        }
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::from_f32(vec![1.0, 0.0, 0.0, 1.0], &[2, 2]);
+        assert_eq!(matmul(&a, &b), a);
+    }
+
+    #[test]
+    fn noise_add_sub_is_exact_identity() {
+        // the privacy protocol's arithmetic: (x + n) processed linearly,
+        // then n_effect subtracted, must equal processing x directly.
+        let x = Tensor::from_f32(vec![1.0, -2.0, 0.5, 3.0], &[2, 2]);
+        let n = Tensor::from_f32(vec![0.1, 0.2, -0.3, 0.4], &[2, 2]);
+        let w = Tensor::from_f32(vec![2.0, 1.0, -1.0, 0.5], &[2, 2]);
+        let y_noisy = matmul(&add(&x, &n), &w);
+        let n_eff = matmul(&n, &w);
+        let y = sub(&y_noisy, &n_eff);
+        let want = matmul(&x, &w);
+        assert_close(y.as_f32(), want.as_f32(), 1e-5);
+    }
+}

@@ -1,0 +1,158 @@
+//! Client <-> base-executor communication links.
+//!
+//! The paper uses three mechanisms (section 3.5): a pre-allocated shared
+//! CUDA tensor + ZeroMQ control channel when co-located, NCCL over NVLink
+//! across GPUs, and TCP across nodes.  Here each mechanism is a
+//! [`LinkKind`] with a latency + bandwidth model; tensors move for real
+//! (in-process) and the link charges simulated transfer time, which the
+//! placement experiments consume.
+
+use crate::tensor::Tensor;
+
+/// Physical link classes between a client and the base executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Same device: pre-allocated shared tensor, ZeroMQ metadata only.
+    SharedLocal,
+    /// GPU<->GPU over NVLink (NCCL). ~300 GB/s effective, ~10us setup.
+    NvLink,
+    /// GPU<->CPU over PCIe gen4 x16. ~25 GB/s effective, ~15us setup.
+    Pcie,
+    /// Cross-node TCP (the privacy deployment). ~10 Gb/s, ~100us RTT.
+    Tcp,
+}
+
+impl LinkKind {
+    /// One-way latency floor in seconds (control message / kernel setup).
+    pub fn latency(self) -> f64 {
+        match self {
+            LinkKind::SharedLocal => 2e-6, // ZeroMQ metadata ping
+            LinkKind::NvLink => 1e-5,
+            LinkKind::Pcie => 1.5e-5,
+            LinkKind::Tcp => 1e-4,
+        }
+    }
+
+    /// Effective bandwidth in bytes/s. `SharedLocal` moves no data — the
+    /// tensor is shared, only metadata crosses (paper: "sharing obviates
+    /// the need to transfer or copy the data").
+    pub fn bandwidth(self) -> f64 {
+        match self {
+            LinkKind::SharedLocal => f64::INFINITY,
+            LinkKind::NvLink => 3.0e11,
+            LinkKind::Pcie => 2.5e10,
+            LinkKind::Tcp => 1.25e9,
+        }
+    }
+
+    /// Simulated time to move `bytes` across this link.
+    pub fn transfer_time(self, bytes: u64) -> f64 {
+        self.latency() + bytes as f64 / self.bandwidth()
+    }
+}
+
+/// A link instance with accumulated traffic statistics.
+#[derive(Debug)]
+pub struct Link {
+    pub kind: LinkKind,
+    pub bytes_moved: u64,
+    pub messages: u64,
+    pub sim_time: f64,
+}
+
+impl Link {
+    pub fn new(kind: LinkKind) -> Self {
+        Link { kind, bytes_moved: 0, messages: 0, sim_time: 0.0 }
+    }
+
+    /// Account a tensor crossing the link; returns the simulated transfer
+    /// time for this message.
+    pub fn send(&mut self, t: &Tensor) -> f64 {
+        self.send_bytes(t.size_bytes() as u64)
+    }
+
+    pub fn send_bytes(&mut self, bytes: u64) -> f64 {
+        let dt = self.kind.transfer_time(bytes);
+        // SharedLocal counts messages, not payload bytes.
+        if self.kind != LinkKind::SharedLocal {
+            self.bytes_moved += bytes;
+        }
+        self.messages += 1;
+        self.sim_time += dt;
+        dt
+    }
+}
+
+/// Shared pre-allocated exchange buffer, mirroring the paper's
+/// `share_memory_()` / `rebuild_cuda_tensor()` optimization: allocated
+/// once at `batch x seq x max(din, dout)` and resized only when a request
+/// exceeds it (section 3.5).
+#[derive(Debug)]
+pub struct SharedBuffer {
+    capacity_elems: usize,
+    pub resizes: u64,
+}
+
+impl SharedBuffer {
+    pub fn new(batch: usize, seq: usize, max_dim: usize) -> Self {
+        SharedBuffer { capacity_elems: batch * seq * max_dim, resizes: 0 }
+    }
+
+    /// Ensure the buffer can hold a tensor; grows (and counts a resize —
+    /// the expensive CUDA-call path in the paper) when too small.
+    pub fn ensure(&mut self, t: &Tensor) {
+        if t.len() > self.capacity_elems {
+            self.capacity_elems = t.len();
+            self.resizes += 1;
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity_elems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_local_is_fastest() {
+        let b = 1 << 20; // 1 MiB
+        let t_local = LinkKind::SharedLocal.transfer_time(b);
+        let t_nv = LinkKind::NvLink.transfer_time(b);
+        let t_pcie = LinkKind::Pcie.transfer_time(b);
+        let t_tcp = LinkKind::Tcp.transfer_time(b);
+        assert!(t_local < t_nv && t_nv < t_pcie && t_pcie < t_tcp);
+    }
+
+    #[test]
+    fn link_accumulates_stats() {
+        let mut l = Link::new(LinkKind::NvLink);
+        let t = Tensor::zeros(&[16, 64]);
+        l.send(&t);
+        l.send(&t);
+        assert_eq!(l.messages, 2);
+        assert_eq!(l.bytes_moved, 2 * 16 * 64 * 4);
+        assert!(l.sim_time > 0.0);
+    }
+
+    #[test]
+    fn shared_local_moves_no_bytes() {
+        let mut l = Link::new(LinkKind::SharedLocal);
+        l.send(&Tensor::zeros(&[1024]));
+        assert_eq!(l.bytes_moved, 0);
+        assert_eq!(l.messages, 1);
+    }
+
+    #[test]
+    fn shared_buffer_grows_once() {
+        let mut b = SharedBuffer::new(2, 128, 256);
+        b.ensure(&Tensor::zeros(&[2 * 128, 256]));
+        assert_eq!(b.resizes, 0);
+        b.ensure(&Tensor::zeros(&[2 * 512, 256]));
+        assert_eq!(b.resizes, 1);
+        b.ensure(&Tensor::zeros(&[2 * 256, 256]));
+        assert_eq!(b.resizes, 1);
+    }
+}

@@ -1,0 +1,182 @@
+//! Engine-level integration: load AOT artifacts, execute, compare
+//! against python-side goldens. Requires `make artifacts` to have run.
+
+use std::path::PathBuf;
+
+use symbiosis::runtime::Engine;
+use symbiosis::tensor::{container, ops, Tensor};
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("manifest.txt").exists()
+}
+
+#[test]
+fn linear_fwd_matches_native_matmul() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::new(&artifact_dir()).unwrap();
+    // deterministic input
+    let t = 8;
+    let x = Tensor::from_f32(
+        (0..t * 64).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect(),
+        &[t, 64],
+    );
+    let w = Tensor::from_f32(
+        (0..64 * 192).map(|i| ((i % 7) as f32 - 3.0) * 0.05).collect(),
+        &[64, 192],
+    );
+    let b = Tensor::from_f32((0..192).map(|i| i as f32 * 0.01).collect(),
+                             &[192]);
+    let out = engine
+        .execute("linear_fwd_t8_64x192", &[&x, &w, &b])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![8, 192]);
+    let mut want = ops::matmul(&x, &w);
+    for r in 0..t {
+        for c in 0..192 {
+            want.as_f32_mut()[r * 192 + c] += b.as_f32()[c];
+        }
+    }
+    assert!(out[0].max_abs_diff(&want) < 1e-4,
+            "diff {}", out[0].max_abs_diff(&want));
+}
+
+#[test]
+fn linear_bwd_is_dy_w_transpose() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::new(&artifact_dir()).unwrap();
+    let dy = Tensor::from_f32(
+        (0..8 * 192).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect(),
+        &[8, 192],
+    );
+    let w = Tensor::from_f32(
+        (0..64 * 192).map(|i| ((i % 5) as f32 - 2.0) * 0.1).collect(),
+        &[64, 192],
+    );
+    let out = engine.execute("linear_bwd_t8_64x192", &[&dy, &w]).unwrap();
+    // want: dy @ w^T
+    let mut wt = vec![0.0f32; 192 * 64];
+    for i in 0..64 {
+        for j in 0..192 {
+            wt[j * 64 + i] = w.as_f32()[i * 192 + j];
+        }
+    }
+    let want = ops::matmul(&dy, &Tensor::from_f32(wt, &[192, 64]));
+    assert!(out[0].max_abs_diff(&want) < 1e-4);
+}
+
+#[test]
+fn engine_validates_shapes() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::new(&artifact_dir()).unwrap();
+    let bad = Tensor::zeros(&[4, 64]); // artifact wants t=8
+    let w = Tensor::zeros(&[64, 192]);
+    let b = Tensor::zeros(&[192]);
+    assert!(engine.execute("linear_fwd_t8_64x192", &[&bad, &w, &b]).is_err());
+    assert!(engine.execute("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn weights_and_golden_load() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let weights =
+        container::read_tensors(&artifact_dir().join("weights_sym-tiny.bin"))
+            .unwrap();
+    assert_eq!(weights["embed"].shape, vec![256, 64]);
+    assert_eq!(weights["l0.wqkv"].shape, vec![64, 192]);
+    let golden =
+        container::read_tensors(&artifact_dir().join("golden_sym-tiny.bin"))
+            .unwrap();
+    assert_eq!(golden["tokens16"].shape, vec![16]);
+    assert_eq!(golden["base_logits16"].shape, vec![16, 256]);
+}
+
+#[test]
+fn adam_artifact_steps_against_gradient() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::new(&artifact_dir()).unwrap();
+    let n = 1024;
+    let p = Tensor::from_f32(vec![1.0; n], &[n]);
+    let g = Tensor::from_f32(
+        (0..n).map(|i| if i % 2 == 0 { 0.5 } else { -0.5 }).collect(),
+        &[n],
+    );
+    let m = Tensor::zeros(&[n]);
+    let v = Tensor::zeros(&[n]);
+    let t = Tensor::scalar_f32(1.0);
+    let out = engine.execute("adam_n1024", &[&p, &g, &m, &v, &t]).unwrap();
+    assert_eq!(out.len(), 3);
+    let p2 = &out[0];
+    // positive grad -> param decreases; negative grad -> increases
+    assert!(p2.as_f32()[0] < 1.0);
+    assert!(p2.as_f32()[1] > 1.0);
+}
+
+#[test]
+fn attention_decode_ignores_padding() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::new(&artifact_dir()).unwrap();
+    let bh = 4;
+    let s = 16;
+    let h = 16;
+    let q = Tensor::from_f32(
+        (0..bh * h).map(|i| (i as f32 * 0.01).sin()).collect(),
+        &[bh, 1, h],
+    );
+    let mk = |seed: f32| {
+        Tensor::from_f32(
+            (0..bh * s * h).map(|i| ((i as f32) * seed).cos() * 0.3)
+                .collect(),
+            &[bh, s, h],
+        )
+    };
+    let (k, v) = (mk(0.013), mk(0.027));
+    let kv_len = Tensor::scalar_i32(10);
+    let base = engine
+        .execute("attn_decode_bh4_s16_h16", &[&q, &k, &v, &kv_len])
+        .unwrap();
+    // poison the padded tail; output must be unchanged
+    let mut k2 = k.clone();
+    let mut v2 = v.clone();
+    for i in bh * 10 * h..bh * s * h {
+        k2.as_f32_mut()[i % (bh * s * h)] = 1e6;
+        v2.as_f32_mut()[i % (bh * s * h)] = -1e6;
+    }
+    // poison only positions >= 10 per (bh) row
+    let mut k3 = k.clone();
+    let mut v3 = v.clone();
+    for b in 0..bh {
+        for p in 10..s {
+            for c in 0..h {
+                k3.as_f32_mut()[(b * s + p) * h + c] = 1e6;
+                v3.as_f32_mut()[(b * s + p) * h + c] = -1e6;
+            }
+        }
+    }
+    let poisoned = engine
+        .execute("attn_decode_bh4_s16_h16", &[&q, &k3, &v3, &kv_len])
+        .unwrap();
+    assert!(base[0].max_abs_diff(&poisoned[0]) < 1e-5);
+}

@@ -1,0 +1,563 @@
+//! Full-system integration: Rust split execution must reproduce the jax
+//! monolithic reference (goldens exported by `python/compile/aot.py`).
+//!
+//! This encodes the paper's central correctness claim: "the output with
+//! Symbiosis is exactly identical to that of the baseline" — forward,
+//! training gradients, optimizer updates, greedy generation, and the
+//! privacy protocol all match, and cross-client batching does not change
+//! any client's numerics.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use symbiosis::config::SYM_TINY;
+use symbiosis::coordinator::adapter::LoraTargets;
+use symbiosis::coordinator::kv_cache::KvPlacement;
+use symbiosis::coordinator::privacy::{NoiseGen, PrivacyCtx};
+use symbiosis::coordinator::proto::LayerId;
+use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
+                             InferenceSession, Placement, Trainer};
+use symbiosis::tensor::{container, Tensor};
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("manifest.txt").exists()
+}
+
+fn golden() -> HashMap<String, Tensor> {
+    container::read_tensors(&artifact_dir().join("golden_sym-tiny.bin"))
+        .unwrap()
+}
+
+fn start(policy: BatchPolicy) -> Deployment {
+    Deployment::start(&SYM_TINY, &artifact_dir(), policy, Placement::Local)
+        .unwrap()
+}
+
+fn lora8() -> Adapter {
+    Adapter::lora_from_artifacts(&SYM_TINY, &artifact_dir(), 8,
+                                 LoraTargets::QKVO, 2.0)
+        .unwrap()
+}
+
+fn argmax_row(t: &Tensor, row: usize) -> i32 {
+    let v = t.shape[1];
+    let r = &t.as_f32()[row * v..(row + 1) * v];
+    r.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as i32
+}
+
+#[test]
+fn split_forward_matches_jax_monolith() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let dep = start(BatchPolicy::NoLockstep);
+    let core = dep.client_core(None);
+    let mut sess =
+        InferenceSession::new(core, 1, KvPlacement::Device).unwrap();
+    let tokens: Vec<i32> = g["tokens16"].as_i32().to_vec();
+    let first = sess.prefill(&tokens).unwrap();
+    assert_eq!(first[0], argmax_row(&g["base_logits16"], 15));
+    drop(sess);
+    dep.shutdown();
+}
+
+#[test]
+fn trainer_forward_loss_matches_golden() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let dep = start(BatchPolicy::NoLockstep);
+    let core = dep.client_core(Some(lora8()));
+    let mut tr = Trainer::new(core, 1).unwrap();
+    let tokens: Vec<i32> = g["tokens16"].as_i32().to_vec();
+    let labels: Vec<i32> = g["labels16"].as_i32().to_vec();
+    let (loss, _grads) = tr.loss_and_grads(&tokens, &labels).unwrap();
+    let want_loss = g["train_loss"].as_f32()[0];
+    assert!((loss - want_loss).abs() < 1e-3,
+            "loss {loss} vs golden {want_loss}");
+    drop(tr);
+    dep.shutdown();
+}
+
+#[test]
+fn training_gradients_match_jax_autodiff() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let dep = start(BatchPolicy::NoLockstep);
+    let core = dep.client_core(Some(lora8()));
+    let mut tr = Trainer::new(core, 1).unwrap();
+    let tokens: Vec<i32> = g["tokens16"].as_i32().to_vec();
+    let labels: Vec<i32> = g["labels16"].as_i32().to_vec();
+    let (_loss, grads) = tr.loss_and_grads(&tokens, &labels).unwrap();
+
+    // flatten layout: layer-major, targets q,k,v,o, A then B
+    let (d, r) = (64usize, 8usize);
+    let mut off = 0;
+    let mut max_diff = 0.0f32;
+    for l in 0..SYM_TINY.n_layers {
+        for t in ["q", "k", "v", "o"] {
+            let ga = &g[&format!("grad.l{l}.{t}.a")];
+            let gb = &g[&format!("grad.l{l}.{t}.b")];
+            for (i, w) in ga.as_f32().iter().enumerate() {
+                max_diff = max_diff.max((grads.flat[off + i] - w).abs());
+            }
+            off += d * r;
+            for (i, w) in gb.as_f32().iter().enumerate() {
+                max_diff = max_diff.max((grads.flat[off + i] - w).abs());
+            }
+            off += r * d;
+        }
+    }
+    assert_eq!(off, grads.flat.len());
+    assert!(max_diff < 5e-4, "max grad diff vs jax autodiff: {max_diff}");
+    drop(tr);
+    dep.shutdown();
+}
+
+#[test]
+fn adam_update_matches_golden_step() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let dep = start(BatchPolicy::NoLockstep);
+    let core = dep.client_core(Some(lora8()));
+    let mut tr = Trainer::new(core, 1).unwrap();
+    let tokens: Vec<i32> = g["tokens16"].as_i32().to_vec();
+    let labels: Vec<i32> = g["labels16"].as_i32().to_vec();
+    tr.train_step(&tokens, &labels).unwrap();
+    let adapter = tr.core.adapter.as_ref().unwrap().flatten();
+    let (d, r) = (64usize, 8usize);
+    let mut off = 0;
+    let mut max_diff = 0.0f32;
+    for l in 0..SYM_TINY.n_layers {
+        for t in ["q", "k", "v", "o"] {
+            let pa = &g[&format!("step1.l{l}.{t}.a")];
+            let pb = &g[&format!("step1.l{l}.{t}.b")];
+            for (i, w) in pa.as_f32().iter().enumerate() {
+                max_diff = max_diff.max((adapter[off + i] - w).abs());
+            }
+            off += d * r;
+            for (i, w) in pb.as_f32().iter().enumerate() {
+                max_diff = max_diff.max((adapter[off + i] - w).abs());
+            }
+            off += r * d;
+        }
+    }
+    assert!(max_diff < 1e-3, "max adam diff: {max_diff}");
+    drop(tr);
+    dep.shutdown();
+}
+
+#[test]
+fn greedy_generation_matches_jax() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let dep = start(BatchPolicy::NoLockstep);
+    let core = dep.client_core(Some(lora8()));
+    let mut sess =
+        InferenceSession::new(core, 1, KvPlacement::Device).unwrap();
+    let prompt: Vec<i32> = g["gen_prompt"].as_i32().to_vec();
+    sess.prefill(&prompt).unwrap();
+    for _ in 1..8 {
+        sess.decode_step().unwrap();
+    }
+    let want: Vec<i32> = g["gen_tokens"].as_i32().to_vec();
+    assert_eq!(sess.generated[0], want,
+               "KV-cache decode diverged from jax full-recompute");
+    drop(sess);
+    dep.shutdown();
+}
+
+#[test]
+fn bucket_padding_does_not_change_results() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let dep = start(BatchPolicy::NoLockstep);
+    // 24 tokens pad to the 32 seq bucket and odd token buckets: the
+    // result must still match jax (which never pads).
+    let tokens: Vec<i32> = g["tokens24"].as_i32().to_vec();
+    let core = dep.client_core(None);
+    let mut sess =
+        InferenceSession::new(core, 1, KvPlacement::Device).unwrap();
+    let first = sess.prefill(&tokens).unwrap();
+    assert_eq!(first[0], argmax_row(&g["base_logits24"], 23));
+    drop(sess);
+    dep.shutdown();
+}
+
+#[test]
+fn cross_client_batching_is_numerics_invariant() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let tokens: Vec<i32> = g["tokens16"].as_i32().to_vec();
+    let labels: Vec<i32> = g["labels16"].as_i32().to_vec();
+    let want_loss = g["train_loss"].as_f32()[0];
+
+    // 3 concurrent trainers sharing the executor with opportunistic
+    // batching: every client must still get the exact single-client loss.
+    let dep = start(BatchPolicy::opportunistic_default());
+    let mut handles = Vec::new();
+    for _ in 0..3 {
+        let core = dep.client_core(Some(lora8()));
+        let tokens = tokens.clone();
+        let labels = labels.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut tr = Trainer::new(core, 1).unwrap();
+            let (loss, grads) =
+                tr.loss_and_grads(&tokens, &labels).unwrap();
+            (loss, grads.flat)
+        }));
+    }
+    let results: Vec<(f32, Vec<f32>)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (loss, _) in &results {
+        assert!((loss - want_loss).abs() < 1e-3,
+                "batched loss {loss} vs {want_loss}");
+    }
+    // all clients computed identical gradients (same data + adapter)
+    for w in results.windows(2) {
+        let max: f32 = w[0]
+            .1
+            .iter()
+            .zip(&w[1].1)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max < 1e-4, "cross-client grad divergence {max}");
+    }
+    let stats = dep.shutdown();
+    assert!(stats.requests_served > 0);
+}
+
+#[test]
+fn privacy_protocol_is_exact_and_hides_activations() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let prompt: Vec<i32> = g["gen_prompt"].as_i32().to_vec();
+
+    // Plain run.
+    let dep = start(BatchPolicy::NoLockstep);
+    let core = dep.client_core(Some(lora8()));
+    let mut plain =
+        InferenceSession::new(core, 1, KvPlacement::Device).unwrap();
+    plain.prefill(&prompt).unwrap();
+    for _ in 1..8 {
+        plain.decode_step().unwrap();
+    }
+    let want = plain.generated[0].clone();
+    drop(plain);
+
+    // Private run: register noise for every linear layer at the prefill
+    // token count (decode iterations slice the leading row).
+    let mut core = dep.client_core(Some(lora8()));
+    let privacy = PrivacyCtx::new();
+    let mut gen = NoiseGen::new(0xC0FFEE, 0.05);
+    let tx = dep.executor.sender();
+    let d = SYM_TINY.d_model;
+    let f = SYM_TINY.d_ff;
+    for l in 0..SYM_TINY.n_layers {
+        for (layer, din) in [
+            (LayerId::Qkv(l), d),
+            (LayerId::AttnOut(l), d),
+            (LayerId::MlpUp(l), d),
+            (LayerId::MlpDown(l), f),
+        ] {
+            privacy
+                .register_layer(&tx, layer, 8, din, &mut gen, 2)
+                .unwrap();
+        }
+    }
+    privacy
+        .register_layer(&tx, LayerId::LmHead, 8, d, &mut gen, 2)
+        .unwrap();
+    {
+        let virt = std::sync::Arc::get_mut(&mut core.virt).unwrap();
+        virt.privacy = Some(privacy);
+    }
+
+    let mut private =
+        InferenceSession::new(core, 1, KvPlacement::Device).unwrap();
+    private.prefill(&prompt).unwrap();
+    for _ in 1..8 {
+        private.decode_step().unwrap();
+    }
+    assert_eq!(private.generated[0], want,
+               "privacy protocol changed the output");
+    // the executor-facing log must show noised (not raw) activations
+    let p = private.core.virt.privacy.as_ref().unwrap();
+    assert!(!p.sent_log.lock().unwrap().is_empty());
+    drop(private);
+    dep.shutdown();
+}
+
+#[test]
+fn incremental_prefill_equals_batch_prefill() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let prompt: Vec<i32> = g["gen_prompt"].as_i32().to_vec();
+    let dep = start(BatchPolicy::NoLockstep);
+
+    let core = dep.client_core(Some(lora8()));
+    let mut a = InferenceSession::new(core, 1, KvPlacement::Device)
+        .unwrap();
+    a.prefill(&prompt).unwrap();
+    for _ in 1..6 {
+        a.decode_step().unwrap();
+    }
+
+    let core = dep.client_core(Some(lora8()));
+    let mut b = InferenceSession::new(core, 1, KvPlacement::Device)
+        .unwrap();
+    b.prefill_incremental(&prompt).unwrap();
+    for _ in 1..6 {
+        b.decode_step().unwrap();
+    }
+    assert_eq!(a.generated[0], b.generated[0],
+               "token-by-token prefill diverged from batch prefill");
+    dep.shutdown();
+}
+
+#[test]
+fn prefix_adapter_changes_output_and_decodes() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let prompt: Vec<i32> = g["gen_prompt"].as_i32().to_vec();
+    let dep = start(BatchPolicy::NoLockstep);
+
+    // plain base model, incremental path
+    let core = dep.client_core(None);
+    let mut plain = InferenceSession::new(core, 1, KvPlacement::Device)
+        .unwrap();
+    plain.prefill_incremental(&prompt).unwrap();
+    for _ in 1..6 {
+        plain.decode_step().unwrap();
+    }
+
+    // prefix-tuned client: learned KV prefix seeds the cache
+    let prefix = Adapter::prefix(&SYM_TINY, 1, 4, 99);
+    let core = dep.client_core(Some(prefix));
+    let mut tuned = InferenceSession::new(core, 1, KvPlacement::Device)
+        .unwrap();
+    tuned.seed_prefix();
+    tuned.prefill_incremental(&prompt).unwrap();
+    for _ in 1..6 {
+        tuned.decode_step().unwrap();
+    }
+    assert_eq!(tuned.generated[0].len(), plain.generated[0].len());
+    assert_ne!(tuned.generated[0], plain.generated[0],
+               "a non-trivial prefix must change the distribution");
+    dep.shutdown();
+}
+
+#[test]
+fn ia3_adapter_serves_and_differs_from_base() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let prompt: Vec<i32> = g["gen_prompt"].as_i32().to_vec();
+    let dep = start(BatchPolicy::NoLockstep);
+
+    let core = dep.client_core(None);
+    let mut base = InferenceSession::new(core, 1, KvPlacement::Device)
+        .unwrap();
+    base.prefill(&prompt).unwrap();
+
+    // identity IA3 == base model exactly
+    let core = dep.client_core(Some(Adapter::ia3(&SYM_TINY)));
+    let mut ident = InferenceSession::new(core, 1, KvPlacement::Device)
+        .unwrap();
+    ident.prefill(&prompt).unwrap();
+    assert_eq!(base.generated[0], ident.generated[0]);
+
+    // perturbed IA3 (v and ff rescaled) changes the decoded sequence
+    let mut ia3 = Adapter::ia3(&SYM_TINY);
+    if let Adapter::Ia3 { v_scale, ff_scale, .. } = &mut ia3 {
+        for t in v_scale.iter_mut().chain(ff_scale.iter_mut()) {
+            for (i, v) in t.as_f32_mut().iter_mut().enumerate() {
+                *v = if i % 2 == 0 { 1.6 } else { 0.5 };
+            }
+        }
+    }
+    let core = dep.client_core(Some(ia3));
+    let mut tuned = InferenceSession::new(core, 1, KvPlacement::Device)
+        .unwrap();
+    tuned.prefill(&prompt).unwrap();
+    for _ in 1..6 {
+        tuned.decode_step().unwrap();
+        base.decode_step().unwrap();
+    }
+    assert_ne!(base.generated[0], tuned.generated[0]);
+    dep.shutdown();
+}
+
+#[test]
+fn trainer_rejects_inference_only_adapters() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = start(BatchPolicy::NoLockstep);
+    let core = dep.client_core(Some(Adapter::ia3(&SYM_TINY)));
+    assert!(Trainer::new(core, 1).is_err());
+    let core = dep.client_core(None);
+    assert!(Trainer::new(core, 1).is_err());
+    dep.shutdown();
+}
+
+#[test]
+fn unsupported_batch_size_is_rejected() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = start(BatchPolicy::NoLockstep);
+    let core = dep.client_core(None);
+    // batch 3 has no attention artifact (exported: 1, 2, 4)
+    assert!(InferenceSession::new(core, 3, KvPlacement::Device).is_err());
+    dep.shutdown();
+}
+
+#[test]
+fn executor_survives_client_churn() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let prompt: Vec<i32> = g["gen_prompt"].as_i32().to_vec();
+    let dep = start(BatchPolicy::opportunistic_default());
+    // waves of clients appearing and vanishing (deregistration on drop)
+    for _wave in 0..3 {
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let core = dep.client_core(None);
+            let prompt = prompt.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut s = InferenceSession::new(
+                    core, 1, KvPlacement::Device).unwrap();
+                s.prefill(&prompt).unwrap();
+                s.decode_step().unwrap();
+                s.generated[0].clone()
+            }));
+        }
+        let first: Vec<Vec<i32>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // same prompt, same base model => identical outputs every wave
+        assert!(first.windows(2).all(|w| w[0] == w[1]));
+    }
+    let stats = dep.shutdown();
+    assert!(stats.requests_served > 0);
+}
+
+#[test]
+fn sym_small_generality_forward_and_generation() {
+    // The second executable config (8 layers, d=128, 8 heads) proves the
+    // split-execution machinery is not specialized to one model shape —
+    // the paper's model-transparency goal (section 3.1, goal 3).
+    use symbiosis::config::SYM_SMALL;
+    let dir = artifact_dir();
+    if !dir.join("golden_sym-small.bin").exists() {
+        eprintln!("skipping: sym-small artifacts not built");
+        return;
+    }
+    let g = container::read_tensors(&dir.join("golden_sym-small.bin"))
+        .unwrap();
+    let dep = Deployment::start(&SYM_SMALL, &dir,
+                                BatchPolicy::NoLockstep,
+                                Placement::Local)
+        .unwrap();
+    // forward matches the jax monolith
+    let core = dep.client_core(None);
+    let mut sess =
+        InferenceSession::new(core, 1, KvPlacement::Device).unwrap();
+    let tokens: Vec<i32> = g["tokens16"].as_i32().to_vec();
+    let first = sess.prefill(&tokens).unwrap();
+    assert_eq!(first[0], argmax_row(&g["base_logits16"], 15));
+    drop(sess);
+
+    // LoRA generation matches jax full-recompute decoding
+    let adapter = Adapter::lora_from_artifacts(
+        &SYM_SMALL, &dir, 8, LoraTargets::QKVO, 2.0).unwrap();
+    let core = dep.client_core(Some(adapter));
+    let mut sess =
+        InferenceSession::new(core, 1, KvPlacement::Device).unwrap();
+    let prompt: Vec<i32> = g["gen_prompt"].as_i32().to_vec();
+    sess.prefill(&prompt).unwrap();
+    for _ in 1..8 {
+        sess.decode_step().unwrap();
+    }
+    let want: Vec<i32> = g["gen_tokens"].as_i32().to_vec();
+    assert_eq!(sess.generated[0], want);
+    drop(sess);
+    dep.shutdown();
+}
+
+#[test]
+fn sym_small_training_matches_jax() {
+    use symbiosis::config::SYM_SMALL;
+    let dir = artifact_dir();
+    if !dir.join("golden_sym-small.bin").exists() {
+        eprintln!("skipping: sym-small artifacts not built");
+        return;
+    }
+    let g = container::read_tensors(&dir.join("golden_sym-small.bin"))
+        .unwrap();
+    let dep = Deployment::start(&SYM_SMALL, &dir,
+                                BatchPolicy::NoLockstep,
+                                Placement::Local)
+        .unwrap();
+    let adapter = Adapter::lora_from_artifacts(
+        &SYM_SMALL, &dir, 8, LoraTargets::QKVO, 2.0).unwrap();
+    let core = dep.client_core(Some(adapter));
+    let mut tr = Trainer::new(core, 1).unwrap();
+    let tokens: Vec<i32> = g["tokens16"].as_i32().to_vec();
+    let labels: Vec<i32> = g["labels16"].as_i32().to_vec();
+    let (loss, grads) = tr.loss_and_grads(&tokens, &labels).unwrap();
+    let want = g["train_loss"].as_f32()[0];
+    assert!((loss - want).abs() < 1e-3, "loss {loss} vs {want}");
+    // spot-check gradient block 0 against jax autodiff
+    let ga = &g["grad.l0.q.a"];
+    let mut max_diff = 0.0f32;
+    for (i, w) in ga.as_f32().iter().enumerate() {
+        max_diff = max_diff.max((grads.flat[i] - w).abs());
+    }
+    assert!(max_diff < 5e-4, "grad diff {max_diff}");
+    drop(tr);
+    dep.shutdown();
+}

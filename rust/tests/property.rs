@@ -1,0 +1,335 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! proptest is not in the vendored registry (DESIGN.md section 8), so
+//! this file carries a minimal deterministic strategy framework: a
+//! splitmix64 RNG drives randomized cases; failures print the case seed
+//! so they can be replayed exactly.
+
+use symbiosis::config::{bucket_for, SEQ_BUCKETS, TOKEN_BUCKETS};
+use symbiosis::coordinator::kv_cache::{KvCache, KvPlacement};
+use symbiosis::coordinator::optimizer::Adam;
+use symbiosis::device::MemoryLedger;
+use symbiosis::tensor::{ops, Tensor};
+
+// ---------------------------------------------------------------------
+// mini framework
+// ---------------------------------------------------------------------
+
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo)
+    }
+
+    fn f32(&mut self) -> f32 {
+        ((self.next() >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+    }
+
+    fn tensor(&mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_f32((0..n).map(|_| self.f32()).collect(), shape)
+    }
+}
+
+/// Run `f` over `cases` deterministic seeds; panic message carries the
+/// seed for replay.
+fn for_all<F: Fn(&mut Rng)>(name: &str, cases: u64, f: F) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed * 7919 + 13);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// buckets
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_bucket_is_minimal_cover() {
+    for_all("bucket_minimal", 500, |rng| {
+        let n = rng.range(1, 2049);
+        let b = bucket_for(n, TOKEN_BUCKETS).unwrap();
+        assert!(b >= n);
+        // minimal: no smaller bucket covers n
+        for &other in TOKEN_BUCKETS {
+            if other < b {
+                assert!(other < n);
+            }
+        }
+        // bounded padding overhead: bucket < 2n (buckets are pow2-spaced)
+        assert!(b < 2 * n.max(TOKEN_BUCKETS[0]));
+    });
+}
+
+// ---------------------------------------------------------------------
+// memory ledger
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_ledger_balanced_under_random_ops() {
+    for_all("ledger_balanced", 200, |rng| {
+        let cap = rng.range(1000, 100_000) as u64;
+        let mut ledger = MemoryLedger::new(cap);
+        let tags: Vec<String> =
+            (0..rng.range(2, 8)).map(|i| format!("t{i}")).collect();
+        for _ in 0..rng.range(10, 100) {
+            let tag = &tags[rng.range(0, tags.len())];
+            match rng.range(0, 3) {
+                0 => {
+                    let _ = ledger.set(tag, rng.next() % (cap / 2));
+                }
+                1 => {
+                    let _ = ledger.grow(tag, rng.next() % (cap / 8));
+                }
+                _ => ledger.free(tag),
+            }
+            assert!(ledger.check_balanced());
+            assert!(ledger.used() <= ledger.capacity());
+            assert!(ledger.peak() >= ledger.used());
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// KV cache vs naive reference
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_kv_cache_matches_naive_reference() {
+    for_all("kv_cache_ref", 50, |rng| {
+        let n_layers = rng.range(1, 4);
+        let bh = rng.range(1, 5);
+        let h = rng.range(2, 9);
+        let mut cache =
+            KvCache::new(n_layers, bh, h, KvPlacement::Device);
+        // naive reference: per layer, per bh, Vec of rows
+        let mut refk = vec![vec![Vec::<f32>::new(); bh]; n_layers];
+        let mut refv = vec![vec![Vec::<f32>::new(); bh]; n_layers];
+        for _ in 0..rng.range(1, 12) {
+            let t_new = rng.range(1, 5);
+            for layer in 0..n_layers {
+                let k = rng.tensor(&[bh, t_new, h]);
+                let v = rng.tensor(&[bh, t_new, h]);
+                cache.append(layer, &k, &v);
+                for b in 0..bh {
+                    for t in 0..t_new {
+                        let off = (b * t_new + t) * h;
+                        refk[layer][b]
+                            .extend_from_slice(&k.as_f32()[off..off + h]);
+                        refv[layer][b]
+                            .extend_from_slice(&v.as_f32()[off..off + h]);
+                    }
+                }
+            }
+        }
+        let len = cache.len();
+        let bucket = bucket_for(len, SEQ_BUCKETS).unwrap();
+        for layer in 0..n_layers {
+            let (k, v) = cache.padded(layer, bucket);
+            for b in 0..bh {
+                let got = &k.as_f32()[b * bucket * h..][..len * h];
+                assert_eq!(got, &refk[layer][b][..],
+                           "layer {layer} bh {b} K mismatch");
+                let gotv = &v.as_f32()[b * bucket * h..][..len * h];
+                assert_eq!(gotv, &refv[layer][b][..]);
+                // padding region is zero
+                for x in
+                    &k.as_f32()[b * bucket * h + len * h..(b + 1) * bucket * h]
+                {
+                    assert_eq!(*x, 0.0);
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// tensor ops
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_slice_concat_roundtrip() {
+    for_all("slice_concat", 200, |rng| {
+        let rows = rng.range(1, 30);
+        let cols = rng.range(1, 20);
+        let t = rng.tensor(&[rows, cols]);
+        let cut = rng.range(0, rows + 1);
+        if cut == 0 || cut == rows {
+            return;
+        }
+        let a = t.slice_rows(0, cut);
+        let b = t.slice_rows(cut, rows);
+        assert_eq!(Tensor::concat_rows(&[&a, &b]), t);
+    });
+}
+
+#[test]
+fn prop_head_split_merge_roundtrip() {
+    for_all("head_roundtrip", 200, |rng| {
+        let nh = [1usize, 2, 4, 8][rng.range(0, 4)];
+        let h = rng.range(1, 10);
+        let t = rng.range(1, 20);
+        let x = rng.tensor(&[t, nh * h]);
+        assert_eq!(x.split_heads(nh).merge_heads(), x);
+    });
+}
+
+#[test]
+fn prop_pad_rows_preserves_prefix() {
+    for_all("pad_rows", 200, |rng| {
+        let rows = rng.range(1, 20);
+        let cols = rng.range(1, 16);
+        let x = rng.tensor(&[rows, cols]);
+        let padded = x.pad_rows(rows + rng.range(0, 10));
+        assert_eq!(&padded.as_f32()[..rows * cols], x.as_f32());
+        for v in &padded.as_f32()[rows * cols..] {
+            assert_eq!(*v, 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_privacy_arithmetic_is_exact_for_linear() {
+    // (x + n) W - nW == x W for arbitrary x, n, W (fp tolerance) —
+    // the linearity that makes the noise protocol exact.
+    for_all("privacy_linear", 100, |rng| {
+        let t = rng.range(1, 10);
+        let din = rng.range(1, 12);
+        let dout = rng.range(1, 12);
+        let x = rng.tensor(&[t, din]);
+        let n = rng.tensor(&[t, din]);
+        let w = rng.tensor(&[din, dout]);
+        let noisy = ops::matmul(&ops::add(&x, &n), &w);
+        let n_eff = ops::matmul(&n, &w);
+        let recovered = ops::sub(&noisy, &n_eff);
+        let want = ops::matmul(&x, &w);
+        assert!(recovered.max_abs_diff(&want) < 1e-4);
+    });
+}
+
+#[test]
+fn prop_rmsnorm_bwd_matches_finite_difference() {
+    for_all("rmsnorm_fd", 30, |rng| {
+        let d = rng.range(2, 10);
+        let x = rng.tensor(&[1, d]);
+        let gain = rng.tensor(&[d]);
+        let dy = rng.tensor(&[1, d]);
+        let grad = ops::rmsnorm_bwd(&x, &gain, &dy);
+        let eps = 1e-3f32;
+        for i in 0..d {
+            let mut xp = x.clone();
+            xp.as_f32_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.as_f32_mut()[i] -= eps;
+            let fd: f32 = ops::rmsnorm(&xp, &gain)
+                .as_f32()
+                .iter()
+                .zip(ops::rmsnorm(&xm, &gain).as_f32())
+                .zip(dy.as_f32())
+                .map(|((p, m), g)| (p - m) / (2.0 * eps) * g)
+                .sum();
+            assert!((fd - grad.as_f32()[i]).abs() < 3e-2,
+                    "d{i}: fd {fd} vs {}", grad.as_f32()[i]);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// optimizer: native == artifact formula
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_adam_native_monotone_moments() {
+    for_all("adam_native", 100, |rng| {
+        let n = rng.range(1, 50);
+        let mut adam = Adam::new(n);
+        let mut p: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let p0 = p.clone();
+        let g: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        adam.step_native(&mut p, &g);
+        for i in 0..n {
+            if g[i] == 0.0 {
+                assert_eq!(p[i], p0[i], "zero grad moved a param");
+            } else {
+                // step direction opposes gradient
+                assert!((p0[i] - p[i]).signum() == g[i].signum()
+                        || (p0[i] - p[i]).abs() < 1e-9);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// end-to-end randomized batching invariance (needs artifacts)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_executor_batching_matches_direct_execution() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use symbiosis::coordinator::proto::{LayerId, Urgency};
+    use symbiosis::coordinator::{BatchPolicy, Deployment, Placement};
+    let dep = Deployment::start(&symbiosis::config::SYM_TINY, &dir,
+                                BatchPolicy::opportunistic_default(),
+                                Placement::Local)
+        .unwrap();
+    let engine = dep.engine.clone();
+    let weights = symbiosis::tensor::container::read_tensors(
+        &dir.join("weights_sym-tiny.bin"))
+        .unwrap();
+
+    // random per-client token counts, concurrent submissions — each
+    // client's result must equal a direct single-tensor execution.
+    for_all("exec_batching", 5, |rng| {
+        let n_clients = rng.range(2, 5);
+        let mut handles = Vec::new();
+        for _ in 0..n_clients {
+            let t = rng.range(1, 24);
+            let x = rng.tensor(&[t, 64]);
+            let core = dep.client_core(None);
+            let engine = engine.clone();
+            let w = weights["l0.wqkv"].clone();
+            let b = weights["l0.bqkv"].clone();
+            handles.push(std::thread::spawn(move || {
+                let got = core
+                    .virt
+                    .forward(LayerId::Qkv(0), x.clone(),
+                             Urgency::Training)
+                    .unwrap();
+                // direct execution (unbatched) for comparison
+                let bucket = bucket_for(t, TOKEN_BUCKETS).unwrap();
+                let name = format!("linear_fwd_t{bucket}_64x192");
+                let direct = engine
+                    .execute(&name, &[&x.pad_rows(bucket), &w, &b])
+                    .unwrap()[0]
+                    .slice_rows(0, t);
+                assert!(got.max_abs_diff(&direct) < 1e-4,
+                        "batched != direct");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
