@@ -121,7 +121,7 @@ fn main() -> anyhow::Result<()> {
 
     let stats = dep.shutdown();
     println!("executor: {} flushes, avg batch {:.2} clients, padding \
-              overhead {:.1}%", stats.flushes.len(),
+              overhead {:.1}%", stats.n_flushes,
              stats.mean_batch_clients(),
              stats.padding_overhead() * 100.0);
     if !all_ok {

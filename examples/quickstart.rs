@@ -99,14 +99,16 @@ fn main() -> anyhow::Result<()> {
     let stats = dep.shutdown();
     println!("executor: {} requests, {} flushes, avg batch {:.2} \
               clients, mean queue wait {:.2}ms, padding overhead {:.1}%",
-             stats.requests_served, stats.flushes.len(),
+             stats.requests_served, stats.n_flushes,
              stats.mean_batch_clients(), stats.mean_wait_secs() * 1e3,
              stats.padding_overhead() * 100.0);
     println!("engine: {} executes ({:.0}us avg), {} compiles \
-              ({:.2}s total)",
+              ({:.2}s total), weight-literal cache {}/{} hits",
              estats.executes,
              estats.execute_secs / estats.executes.max(1) as f64 * 1e6,
-             estats.compiles, estats.compile_secs);
+             estats.compiles, estats.compile_secs,
+             estats.weight_cache_hits,
+             estats.weight_cache_hits + estats.weight_cache_misses);
     Ok(())
 }
 

@@ -87,7 +87,113 @@ fn main() {
     if run("tab04") { tab04_vllm_lockstep(); }
     if run("tab05") { tab05_policies(); }
     if run("ablation") { ablation_wait_budget(); }
+    if run("dispatch") { dispatch_overhead(); }
     println!("\nall requested bench sections complete.");
+}
+
+// =========================================================================
+// Dispatch overhead — host bytes copied + wall time per layer call, seed
+// (deep-copy) dispatch vs the zero-copy hot path.  Pure host-tensor
+// measurement: needs no artifacts, isolates exactly the copies the
+// Arc-backed refactor removed (weight clones per execute, concat + pad
+// copies per flush, per-request output copies).  Results are recorded in
+// EXPERIMENTS.md §Dispatch overhead.
+// =========================================================================
+fn dispatch_overhead() {
+    use symbiosis::config::bucket_for as bfor;
+    use symbiosis::config::TOKEN_BUCKETS as TB;
+    use symbiosis::tensor::Tensor;
+
+    println!("\n== Dispatch overhead: bytes copied + wall time per layer \
+              call (host path, d=1024, T=16 tokens/client) ==");
+    let (din, dout) = (1024usize, 1024usize);
+    let t_per_client = 16usize;
+    let w = Tensor::from_f32(
+        (0..din * dout).map(|i| (i % 97) as f32 * 1e-3).collect(),
+        &[din, dout]);
+    let b = Tensor::from_f32(vec![0.1; dout], &[dout]);
+    w.device_pin(); // weights are device-resident in the new path
+    b.device_pin();
+    let deep = |t: &Tensor| Tensor::from_f32(t.as_f32().to_vec(), &t.shape);
+    let iters = 50usize;
+    println!("{:>9} {:>16} {:>16} {:>9} {:>12} {:>12}", "clients",
+             "seed B/call", "zerocopy B/call", "ratio", "seed us",
+             "zerocopy us");
+    for n_clients in [1usize, 8, 32] {
+        let xs: Vec<Tensor> = (0..n_clients)
+            .map(|c| Tensor::from_f32(
+                (0..t_per_client * din)
+                    .map(|i| ((i + c) % 31) as f32 * 0.01)
+                    .collect(),
+                &[t_per_client, din]))
+            .collect();
+        let real = n_clients * t_per_client;
+        let bucket = bfor(real, TB).expect("fits the largest bucket");
+
+        // -- seed semantics: per flush, every input is deep-cloned into
+        // the execute request (x_batch, W, b), after a concat copy and a
+        // pad copy; outputs are sliced back out by copy.
+        let t0 = Instant::now();
+        let mut sink = 0.0f32;
+        for _ in 0..iters {
+            let parts: Vec<&Tensor> = xs.iter().collect();
+            let flat = Tensor::concat_rows(&parts);
+            let mut padded = flat.as_f32().to_vec(); // pad_rows copy
+            padded.resize(bucket * din, 0.0);
+            let x = Tensor::from_f32(padded, &[bucket, din]);
+            let (xc, wc, bc) = (deep(&x), deep(&w), deep(&b)); // req clone
+            sink += xc.as_f32()[0] + wc.as_f32()[0] + bc.as_f32()[0];
+            // scatter by copy (seed split_rows)
+            let mut row = 0;
+            for xi in &xs {
+                let t = xi.shape[0];
+                let out = Tensor::from_f32(
+                    xc.as_f32()[row * din..(row + t) * din].to_vec(),
+                    &[t, din]);
+                sink += out.as_f32()[0];
+                row += t;
+            }
+        }
+        let seed_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+        let seed_bytes = 4 * (real * din          // concat
+            + bucket * din                         // pad
+            + bucket * din + din * dout + dout     // request deep-clones
+            + real * din);                         // scatter copies
+
+        // -- zero-copy path: one single-pass assembly into a recycled
+        // scratch buffer; weights + request ride as Arc views; scatter
+        // is row views.
+        let t0 = Instant::now();
+        let mut scratch: Vec<f32> = Vec::new();
+        for _ in 0..iters {
+            let parts: Vec<&Tensor> = xs.iter().collect();
+            let x = Tensor::assemble_rows(std::mem::take(&mut scratch),
+                                          &parts, bucket);
+            let (xc, wc, bc) = (x.clone(), w.clone(), b.clone()); // views
+            sink += xc.as_f32()[0] + wc.as_f32()[0] + bc.as_f32()[0];
+            for (i, xi) in xs.iter().enumerate() {
+                let out = x.slice_rows(i * t_per_client,
+                                       i * t_per_client + xi.shape[0]);
+                sink += out.as_f32()[0];
+            }
+            drop((xc, wc, bc));
+            if let Some(v) = x.try_into_f32_vec() {
+                scratch = v;
+            }
+        }
+        let zc_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+        let zc_bytes = 4 * bucket * din; // the one assembly pass
+
+        // per layer call = per co-batched flush / clients in it
+        let per = |total: usize| total / n_clients;
+        println!("{:>9} {:>16} {:>16} {:>8.1}x {:>12.1} {:>12.1}",
+                 n_clients, per(seed_bytes), per(zc_bytes),
+                 seed_bytes as f64 / zc_bytes as f64, seed_us, zc_us);
+        std::hint::black_box(sink);
+    }
+    println!("(bytes are exact copy counts of each path; the seed column \
+              includes the per-execute weight clone that dominated \
+              multi-client dispatch)");
 }
 
 // =========================================================================
@@ -221,10 +327,11 @@ fn fig07_wait_time() {
             stats.flushes.iter().map(|f| f.mean_wait_secs).collect();
         waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let p50 = waits.get(waits.len() / 2).copied().unwrap_or(0.0);
-        println!("{label:<28} p50 wait {:>7.2} ms, mean {:>7.2} ms over \
-                  {} flushes, avg batch {:.2}",
-                 p50 * 1e3, stats.mean_wait_secs() * 1e3,
-                 stats.flushes.len(), stats.mean_batch_clients());
+        println!("{label:<28} p50 wait {:>7.2} ms (last {} flushes), \
+                  mean {:>7.2} ms over all {} flushes, avg batch {:.2}",
+                 p50 * 1e3, stats.flushes.len(),
+                 stats.mean_wait_secs() * 1e3, stats.n_flushes,
+                 stats.mean_batch_clients());
     }
     println!("paper Fig 7: per-layer lockstep waits are substantial and \
               grow when clients are remote/slow — motivates breaking \

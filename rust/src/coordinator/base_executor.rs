@@ -8,12 +8,18 @@
 //! pad up to the artifact's token bucket), executed once, and scattered
 //! back to the per-request response channels (paper sections 3.2, 3.7).
 //!
+//! The flush path is zero-copy end to end: batch assembly is a single
+//! pass into a reusable per-`(layer, op)` scratch buffer (reclaimed
+//! after every execute via `Tensor::try_into_f32_vec`), the frozen
+//! weights ride to the engine as `Arc` views, and the scatter returns
+//! each client a zero-copy row view of the one batched output.
+//!
 //! The executor is stateless across iterations: the memory-optimized
 //! backward (`dX = dY . W^T`, section 3.6) means no forward activation is
 //! ever stored here, which is what keeps its memory footprint flat in
 //! Figs. 9/10.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -41,73 +47,150 @@ pub struct FlushRecord {
     pub mean_wait_secs: f64,
 }
 
-/// Aggregated executor statistics.
+/// How many recent [`FlushRecord`]s the executor retains.  Aggregates
+/// (`mean_batch_clients`, `padding_overhead`, …) are running sums over
+/// *all* flushes and stay exact; only the per-record detail is bounded,
+/// so executor memory no longer grows with traffic.
+pub const FLUSH_RECORD_CAP: usize = 1024;
+
+/// Accumulating statistics held by the executor thread: bounded ring of
+/// recent records + exact running aggregates.
 #[derive(Debug, Default)]
+struct StatsInner {
+    recent: VecDeque<FlushRecord>,
+    n_flushes: u64,
+    sum_batch_clients: f64,
+    sum_wait_secs: f64,
+    real_tokens: u64,
+    bucket_tokens: u64,
+    requests_served: u64,
+    noise_registrations: u64,
+}
+
+impl StatsInner {
+    fn record(&mut self, rec: FlushRecord) {
+        self.n_flushes += 1;
+        self.sum_batch_clients += rec.n_clients as f64;
+        self.sum_wait_secs += rec.mean_wait_secs;
+        self.real_tokens += rec.real_tokens as u64;
+        self.bucket_tokens += rec.bucket_tokens as u64;
+        if self.recent.len() == FLUSH_RECORD_CAP {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(rec);
+    }
+
+    fn snapshot(&self) -> ExecutorStats {
+        ExecutorStats {
+            flushes: self.recent.iter().cloned().collect(),
+            n_flushes: self.n_flushes,
+            sum_batch_clients: self.sum_batch_clients,
+            sum_wait_secs: self.sum_wait_secs,
+            real_tokens: self.real_tokens,
+            bucket_tokens: self.bucket_tokens,
+            requests_served: self.requests_served,
+            noise_registrations: self.noise_registrations,
+        }
+    }
+}
+
+/// Snapshot of executor statistics.  `flushes` holds at most
+/// [`FLUSH_RECORD_CAP`] *recent* records; the aggregate accessors are
+/// exact over the executor's whole lifetime.
+#[derive(Debug, Default, Clone)]
 pub struct ExecutorStats {
+    /// Most recent flush records (bounded ring).
     pub flushes: Vec<FlushRecord>,
+    /// Total flushes ever executed (may exceed `flushes.len()`).
+    pub n_flushes: u64,
+    pub sum_batch_clients: f64,
+    pub sum_wait_secs: f64,
+    pub real_tokens: u64,
+    pub bucket_tokens: u64,
     pub requests_served: u64,
     pub noise_registrations: u64,
 }
 
 impl ExecutorStats {
-    /// Mean co-batched clients per flush (Table 5 "Average Batch Size").
+    /// Mean co-batched clients per flush (Table 5 "Average Batch Size"),
+    /// exact over all flushes.
     pub fn mean_batch_clients(&self) -> f64 {
-        if self.flushes.is_empty() {
+        if self.n_flushes == 0 {
             return 0.0;
         }
-        self.flushes.iter().map(|f| f.n_clients as f64).sum::<f64>()
-            / self.flushes.len() as f64
+        self.sum_batch_clients / self.n_flushes as f64
     }
 
-    /// Mean queue wait across flushes (Fig 7).
+    /// Mean queue wait across flushes (Fig 7), exact over all flushes.
     pub fn mean_wait_secs(&self) -> f64 {
-        if self.flushes.is_empty() {
+        if self.n_flushes == 0 {
             return 0.0;
         }
-        self.flushes.iter().map(|f| f.mean_wait_secs).sum::<f64>()
-            / self.flushes.len() as f64
+        self.sum_wait_secs / self.n_flushes as f64
     }
 
-    /// Fraction of executed token rows that were bucket padding.
+    /// Fraction of executed token rows that were bucket padding, exact
+    /// over all flushes.
     pub fn padding_overhead(&self) -> f64 {
-        let real: usize = self.flushes.iter().map(|f| f.real_tokens).sum();
-        let bucket: usize =
-            self.flushes.iter().map(|f| f.bucket_tokens).sum();
-        if bucket == 0 {
+        if self.bucket_tokens == 0 {
             0.0
         } else {
-            1.0 - real as f64 / bucket as f64
+            1.0 - self.real_tokens as f64 / self.bucket_tokens as f64
         }
     }
 }
 
+/// A pending batch for one (layer, op).  Token count and the distinct
+/// client set are maintained incrementally on enqueue, so ready-checks
+/// and overflow tests never re-scan `reqs`.
 struct Pending {
     reqs: Vec<(LayerRequest, Instant)>,
     deadline: Instant,
     /// Whether any queued request is latency-sensitive (decode): such
     /// batches flush as soon as the executor would otherwise idle.
     has_interactive: bool,
+    /// Running sum of queued token rows.
+    tokens: usize,
+    /// Distinct client ids in arrival order (small; linear scan).
+    clients: Vec<usize>,
 }
 
 impl Pending {
+    fn new(deadline: Instant) -> Self {
+        Pending {
+            reqs: Vec::new(),
+            deadline,
+            has_interactive: false,
+            tokens: 0,
+            clients: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, req: LayerRequest, at: Instant) {
+        self.tokens += req.x.shape[0];
+        if !self.clients.contains(&req.client_id) {
+            self.clients.push(req.client_id);
+        }
+        self.reqs.push((req, at));
+    }
+
     fn distinct_clients(&self) -> usize {
-        let mut ids: Vec<usize> =
-            self.reqs.iter().map(|(r, _)| r.client_id).collect();
-        ids.sort_unstable();
-        ids.dedup();
-        ids.len()
+        self.clients.len()
     }
 
     fn total_tokens(&self) -> usize {
-        self.reqs.iter().map(|(r, _)| r.x.shape[0]).sum()
+        self.tokens
     }
 }
+
+/// Reusable per-(layer, op) batch-assembly buffers.
+type ScratchMap = HashMap<(LayerId, OpKind), Vec<f32>>;
 
 /// Handle to a running base-executor thread.
 pub struct BaseExecutor {
     tx: Sender<ExecMsg>,
     handle: Option<JoinHandle<()>>,
-    stats: Arc<Mutex<ExecutorStats>>,
+    stats: Arc<Mutex<StatsInner>>,
 }
 
 impl BaseExecutor {
@@ -115,7 +198,7 @@ impl BaseExecutor {
     pub fn spawn(engine: Arc<Engine>, base: BaseWeights,
                  policy: BatchPolicy) -> BaseExecutor {
         let (tx, rx) = channel();
-        let stats = Arc::new(Mutex::new(ExecutorStats::default()));
+        let stats = Arc::new(Mutex::new(StatsInner::default()));
         let stats2 = stats.clone();
         let handle = std::thread::Builder::new()
             .name("base-executor".into())
@@ -131,12 +214,7 @@ impl BaseExecutor {
 
     /// Snapshot of accumulated statistics.
     pub fn stats(&self) -> ExecutorStats {
-        let s = self.stats.lock().unwrap();
-        ExecutorStats {
-            flushes: s.flushes.clone(),
-            requests_served: s.requests_served,
-            noise_registrations: s.noise_registrations,
-        }
+        self.stats.lock().unwrap().snapshot()
     }
 
     /// Stop the executor and join its thread.
@@ -145,12 +223,7 @@ impl BaseExecutor {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
-        let s = self.stats.lock().unwrap();
-        ExecutorStats {
-            flushes: s.flushes.clone(),
-            requests_served: s.requests_served,
-            noise_registrations: s.noise_registrations,
-        }
+        self.stats.lock().unwrap().snapshot()
     }
 }
 
@@ -164,8 +237,9 @@ impl Drop for BaseExecutor {
 }
 
 fn run_loop(engine: Arc<Engine>, base: BaseWeights, policy: BatchPolicy,
-            rx: Receiver<ExecMsg>, stats: Arc<Mutex<ExecutorStats>>) {
+            rx: Receiver<ExecMsg>, stats: Arc<Mutex<StatsInner>>) {
     let mut pending: HashMap<(LayerId, OpKind), Pending> = HashMap::new();
+    let mut scratch: ScratchMap = HashMap::new();
     let mut registered: usize = 0;
     loop {
         // Earliest deadline among pending batches bounds the wait.
@@ -181,7 +255,7 @@ fn run_loop(engine: Arc<Engine>, base: BaseWeights, policy: BatchPolicy,
             Err(RecvTimeoutError::Timeout) => None,
             Err(RecvTimeoutError::Disconnected) => {
                 for (key, p) in pending.drain() {
-                    flush(&engine, &base, p, key, &stats);
+                    flush(&engine, &base, p, key, &stats, &mut scratch);
                 }
                 return;
             }
@@ -213,7 +287,7 @@ fn run_loop(engine: Arc<Engine>, base: BaseWeights, policy: BatchPolicy,
                 }
                 ExecMsg::Request(req) => {
                     enqueue(&engine, &base, &policy, &stats, &mut pending,
-                            req);
+                            &mut scratch, req);
                 }
                 ExecMsg::Shutdown => shutdown = true,
             }
@@ -237,11 +311,11 @@ fn run_loop(engine: Arc<Engine>, base: BaseWeights, policy: BatchPolicy,
             .collect();
         for key in due {
             let p = pending.remove(&key).unwrap();
-            flush(&engine, &base, p, key, &stats);
+            flush(&engine, &base, p, key, &stats, &mut scratch);
         }
         if shutdown {
             for (key, p) in pending.drain() {
-                flush(&engine, &base, p, key, &stats);
+                flush(&engine, &base, p, key, &stats, &mut scratch);
             }
             return;
         }
@@ -251,39 +325,40 @@ fn run_loop(engine: Arc<Engine>, base: BaseWeights, policy: BatchPolicy,
 /// Queue one request, flushing early if the batch would overflow the
 /// largest token bucket.
 fn enqueue(engine: &Engine, base: &BaseWeights, policy: &BatchPolicy,
-           stats: &Arc<Mutex<ExecutorStats>>,
+           stats: &Arc<Mutex<StatsInner>>,
            pending: &mut HashMap<(LayerId, OpKind), Pending>,
-           req: LayerRequest) {
+           scratch: &mut ScratchMap, req: LayerRequest) {
     let key = (req.layer, req.op);
     let budget = policy.wait_budget(req.urgency);
     let now = Instant::now();
     let interactive = req.urgency == crate::coordinator::proto::Urgency::Interactive;
-    let p = pending.entry(key).or_insert_with(|| Pending {
-        reqs: Vec::new(),
-        deadline: now + budget,
-        has_interactive: false,
-    });
-    // A latency-sensitive request tightens the deadline of the batch
-    // it joins.
-    p.deadline = p.deadline.min(now + budget);
-    p.has_interactive |= interactive;
     let max_bucket = *TOKEN_BUCKETS.last().unwrap();
-    if p.total_tokens() + req.x.shape[0] > max_bucket {
+    let overflows = {
+        let p = pending
+            .entry(key)
+            .or_insert_with(|| Pending::new(now + budget));
+        // A latency-sensitive request tightens the deadline of the batch
+        // it joins.
+        p.deadline = p.deadline.min(now + budget);
+        p.has_interactive |= interactive;
+        p.total_tokens() + req.x.shape[0] > max_bucket
+    };
+    if overflows {
         let full = pending.remove(&key).unwrap();
-        flush(engine, base, full, key, stats);
-        pending.insert(key, Pending {
-            reqs: vec![(req, now)],
-            deadline: now + budget,
-            has_interactive: interactive,
-        });
+        flush(engine, base, full, key, stats, scratch);
+        let mut fresh = Pending::new(now + budget);
+        fresh.has_interactive = interactive;
+        fresh.push(req, now);
+        pending.insert(key, fresh);
     } else {
-        pending.get_mut(&key).unwrap().reqs.push((req, now));
+        pending.get_mut(&key).unwrap().push(req, now);
     }
 }
 
 /// Execute one batched flush and scatter the outputs.
 fn flush(engine: &Engine, base: &BaseWeights, p: Pending,
-         key: (LayerId, OpKind), stats: &Arc<Mutex<ExecutorStats>>) {
+         key: (LayerId, OpKind), stats: &Arc<Mutex<StatsInner>>,
+         scratch: &mut ScratchMap) {
     if p.reqs.is_empty() {
         return;
     }
@@ -297,7 +372,8 @@ fn flush(engine: &Engine, base: &BaseWeights, p: Pending,
     let n_requests = p.reqs.len();
     let high = p.has_interactive; // decode batches jump the device queue
     let (layer, op) = key;
-    let result = execute_batch(engine, base, layer, op, &p.reqs, high);
+    let result =
+        execute_batch(engine, base, layer, op, &p.reqs, high, scratch);
     let (real_tokens, bucket_tokens) = match &result {
         Ok((_, real, bucket)) => (*real, *bucket),
         Err(_) => (0, 0),
@@ -317,7 +393,7 @@ fn flush(engine: &Engine, base: &BaseWeights, p: Pending,
             }
             let mut s = stats.lock().unwrap();
             s.requests_served += n_requests as u64;
-            s.flushes.push(FlushRecord {
+            s.record(FlushRecord {
                 layer,
                 op,
                 n_requests,
@@ -334,10 +410,12 @@ fn flush(engine: &Engine, base: &BaseWeights, p: Pending,
     }
 }
 
-/// Token-flatten, pad to bucket, execute the right artifact, split.
+/// Token-flatten + pad in one pass, execute the right artifact, scatter
+/// zero-copy views.  The assembly buffer is recycled through `scratch`.
 fn execute_batch(engine: &Engine, base: &BaseWeights, layer: LayerId,
-                 op: OpKind, reqs: &[(LayerRequest, Instant)],
-                 high: bool) -> Result<(Vec<Tensor>, usize, usize)> {
+                 op: OpKind, reqs: &[(LayerRequest, Instant)], high: bool,
+                 scratch: &mut ScratchMap)
+                 -> Result<(Vec<Tensor>, usize, usize)> {
     let real_tokens: usize =
         reqs.iter().map(|(r, _)| r.x.shape[0]).sum();
     let bucket = bucket_for(real_tokens, TOKEN_BUCKETS)
@@ -374,36 +452,36 @@ fn execute_batch(engine: &Engine, base: &BaseWeights, layer: LayerId,
             let (w, b) = base.linear(layer);
             let (din, dout) = base.linear_dims(layer);
             // Token-flattened concat — the paper's no-padding batching:
-            // requests of different lengths stack directly.
+            // requests of different lengths stack directly.  Assembly +
+            // bucket pad happen in one pass into the recycled scratch
+            // buffer; the weights go to the engine as shared views.
             let parts: Vec<&Tensor> =
                 reqs.iter().map(|(r, _)| &r.x).collect();
-            let flat = Tensor::concat_rows(&parts);
-            match op {
-                OpKind::Forward => {
-                    let x = flat.pad_rows(bucket);
-                    let name =
-                        format!("linear_fwd_t{bucket}_{din}x{dout}");
-                    let out =
-                        engine.execute_prio(&name, &[&x, w, b], high)?;
-                    split_rows(&out[0], reqs)
-                }
-                OpKind::Backward => {
-                    // dX = dY . W^T from parameters only (section 3.6).
-                    let dy = flat.pad_rows(bucket);
-                    let name =
-                        format!("linear_bwd_t{bucket}_{din}x{dout}");
-                    let out =
-                        engine.execute_prio(&name, &[&dy, w], high)?;
-                    split_rows(&out[0], reqs)
-                }
+            let buf = scratch.remove(&(layer, op)).unwrap_or_default();
+            let x = Tensor::assemble_rows(buf, &parts, bucket);
+            let out = match op {
+                OpKind::Forward => engine.execute_prio(
+                    &format!("linear_fwd_t{bucket}_{din}x{dout}"),
+                    &[&x, w, b], high),
+                // dX = dY . W^T from parameters only (section 3.6).
+                OpKind::Backward => engine.execute_prio(
+                    &format!("linear_bwd_t{bucket}_{din}x{dout}"),
+                    &[&x, w], high),
+            };
+            // The engine dropped its share of `x` before responding, so
+            // the assembly buffer can be reclaimed for the next flush.
+            if let Some(v) = x.try_into_f32_vec() {
+                scratch.insert((layer, op), v);
             }
+            split_rows(&out?[0], reqs)
         }
     };
     Ok((outputs, real_tokens, bucket))
 }
 
-/// Slice the batched output back into per-request tensors (dropping the
-/// bucket padding tail).
+/// Scatter the batched output back into per-request tensors — zero-copy
+/// row views of the one batched buffer (the bucket padding tail is
+/// simply never viewed).
 fn split_rows(batched: &Tensor, reqs: &[(LayerRequest, Instant)])
               -> Vec<Tensor> {
     let mut outs = Vec::with_capacity(reqs.len());

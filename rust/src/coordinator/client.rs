@@ -85,7 +85,7 @@ impl ClientCore {
     fn pad_seq(x: &Tensor, sb: usize) -> Tensor {
         let (bh, s, h) = (x.shape[0], x.shape[1], x.shape[2]);
         if s == sb {
-            return x.clone();
+            return x.clone(); // refcount bump, not a copy
         }
         let src = x.as_f32();
         let mut out = vec![0.0f32; bh * sb * h];

@@ -70,6 +70,27 @@ impl BaseWeights {
         (w.shape[0], w.shape[1])
     }
 
+    /// Pin every frozen tensor for the engine's device-resident literal
+    /// cache (see `Tensor::device_pin`): each engine worker converts a
+    /// pinned weight to an `xla::Literal` once, instead of once per
+    /// layer call.  Idempotent.
+    pub fn pin_for_device_cache(&self) {
+        self.embed.device_pin();
+        self.pos.device_pin();
+        self.lm_head_w.device_pin();
+        self.lm_head_b.device_pin();
+        for b in &self.blocks {
+            b.wqkv.device_pin();
+            b.bqkv.device_pin();
+            b.wo.device_pin();
+            b.bo.device_pin();
+            b.wup.device_pin();
+            b.bup.device_pin();
+            b.wdown.device_pin();
+            b.bdown.device_pin();
+        }
+    }
+
     /// Total parameter bytes held by the executor (memory accounting).
     pub fn param_bytes(&self) -> u64 {
         let mut total = self.embed.size_bytes() + self.pos.size_bytes()
@@ -107,17 +128,18 @@ pub fn scan(cfg: &ModelConfig, weights: &HashMap<String, Tensor>)
         norm1.push(get(&format!("l{l}.norm1"))?);
         norm2.push(get(&format!("l{l}.norm2"))?);
     }
-    Ok((
-        BaseWeights {
-            cfg: cfg.clone(),
-            embed: get("embed")?,
-            pos: get("pos")?,
-            lm_head_w: get("lm_head_w")?,
-            lm_head_b: get("lm_head_b")?,
-            blocks,
-        },
-        ClientWeights { norm1, norm2, norm_f: get("norm_f")? },
-    ))
+    let base = BaseWeights {
+        cfg: cfg.clone(),
+        embed: get("embed")?,
+        pos: get("pos")?,
+        lm_head_w: get("lm_head_w")?,
+        lm_head_b: get("lm_head_b")?,
+        blocks,
+    };
+    // Frozen for the deployment's lifetime: let engine workers keep the
+    // device literals resident instead of re-converting per dispatch.
+    base.pin_for_device_cache();
+    Ok((base, ClientWeights { norm1, norm2, norm_f: get("norm_f")? }))
 }
 
 /// Load + split `artifacts/weights_<model>.bin`.

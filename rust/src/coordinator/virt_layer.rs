@@ -6,6 +6,12 @@
 //! that packages the request, charges the client<->executor link, applies
 //! the privacy protocol when configured, and blocks on the response —
 //! keeping the *client* the driver of its own execution.
+//!
+//! With Arc-backed tensors the request/response payloads are shared
+//! views: shipping `x` to the executor (and receiving the scattered
+//! output slice back) moves no activation bytes in-process.  The [`Link`]
+//! still charges the *modeled* transfer for the placement being
+//! simulated — accounting is unchanged, only real host copies went away.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;

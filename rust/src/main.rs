@@ -145,7 +145,7 @@ fn serve(args: &[String]) -> Result<()> {
     }
     let stats = dep.shutdown();
     println!("executor: {} flushes, avg batch {:.2}, wait {:.2}ms",
-             stats.flushes.len(), stats.mean_batch_clients(),
+             stats.n_flushes, stats.mean_batch_clients(),
              stats.mean_wait_secs() * 1e3);
     Ok(())
 }

@@ -6,26 +6,39 @@
 //! (internal `Rc` + raw pointers), so all PJRT objects live on **engine
 //! service threads** (a small worker pool, each with its own client and
 //! compile cache); [`Engine`] is a cheap, cloneable, thread-safe handle
-//! that round-trips execute requests over a channel.  One worker mirrors
-//! a single device stream; the pool mirrors multiple streams and is what
-//! lets independent clients' attention overlap with executor flushes
-//! (see EXPERIMENTS.md §Perf).
+//! that hands execute requests to the pool.  One worker mirrors a single
+//! device stream; the pool mirrors multiple streams and is what lets
+//! independent clients' attention overlap with executor flushes (see
+//! EXPERIMENTS.md §Perf).
+//!
+//! Dispatch is zero-copy and wake-on-work:
+//! * Inputs ride into [`ExecuteReq`] as `Arc`-backed tensor views —
+//!   submitting a request bumps refcounts instead of duplicating the
+//!   activation (or worse, the frozen weight) bytes.
+//! * The two priority lanes are `VecDeque`s behind one mutex with a
+//!   `Condvar`: idle workers park and are woken by `submit`, so there is
+//!   no timed sleep anywhere on the request path (the old design polled
+//!   both lanes every 50µs).
+//! * Each worker keeps a device-resident literal cache for tensors
+//!   pinned via [`Tensor::device_pin`] (the base weights): the host →
+//!   `xla::Literal` conversion of a weight matrix happens once per
+//!   worker, not once per layer call.
 //!
 //! This is the only place Python-produced bits are touched at run time —
 //! and only as static `.hlo.txt` files.  Pattern adapted from
 //! `/opt/xla-example/load_hlo/`: HLO *text* interchange, `return_tuple`
 //! outputs unwrapped via `to_tuple`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::manifest::{ArtifactSpec, Manifest};
-use crate::tensor::{DType, Tensor, TensorData};
+use crate::tensor::{DType, Tensor};
 
 /// Cumulative execution statistics (for the perf pass / EXPERIMENTS.md).
 #[derive(Debug, Default, Clone)]
@@ -34,24 +47,123 @@ pub struct EngineStats {
     pub executes: u64,
     pub compile_secs: f64,
     pub execute_secs: f64,
+    /// Host bytes converted to device literals (excludes cache hits).
+    pub literal_bytes: u64,
+    /// Pinned-weight literal conversions served from the worker cache.
+    pub weight_cache_hits: u64,
+    /// Pinned-weight literal conversions that had to run.
+    pub weight_cache_misses: u64,
 }
 
 struct ExecuteReq {
     name: String,
+    /// Arc-backed views — cloning into the request is a refcount bump.
     inputs: Vec<Tensor>,
     resp: Sender<Result<Vec<Tensor>>>,
 }
 
-/// Thread-safe handle to the engine worker pool.  Two priority lanes:
-/// interactive (decode) work jumps ahead of queued bulk/training work —
-/// this is how "Symbiosis prioritizes the inference requests" (paper
-/// section 4.4) reaches the device queue.
+/// Two-lane work queue: interactive (decode) work jumps ahead of queued
+/// bulk/training work — this is how "Symbiosis prioritizes the inference
+/// requests" (paper section 4.4) reaches the device queue.  Workers park
+/// on the condvar when both lanes are empty and are woken by `submit`.
+struct LaneState {
+    hi: VecDeque<ExecuteReq>,
+    lo: VecDeque<ExecuteReq>,
+    /// Set when every [`Engine`] handle is gone; workers drain and exit.
+    closed: bool,
+}
+
+struct WorkQueues {
+    state: Mutex<LaneState>,
+    cv: Condvar,
+}
+
+impl WorkQueues {
+    fn new() -> Self {
+        WorkQueues {
+            state: Mutex::new(LaneState {
+                hi: VecDeque::new(),
+                lo: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn submit(&self, req: ExecuteReq, high: bool) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            bail!("engine service threads are gone");
+        }
+        if high {
+            st.hi.push_back(req);
+        } else {
+            st.lo.push_back(req);
+        }
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block until a request is available (high lane first) or the
+    /// queues are closed *and* drained.
+    fn next(&self) -> Option<ExecuteReq> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.hi.pop_front() {
+                return Some(r);
+            }
+            if let Some(r) = st.lo.pop_front() {
+                return Some(r);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queues: no further submits are accepted and queued
+    /// requests are dropped (their response senders with them, so blocked
+    /// callers observe a disconnect instead of hanging).  Called when the
+    /// last [`Engine`] handle goes away — at which point no caller can be
+    /// blocked, since `execute_prio` borrows the engine — or when the
+    /// last worker dies, where dropping the queued requests is exactly
+    /// what unblocks the waiting callers.  Panic-proof (runs in `Drop`
+    /// during unwinds): a poisoned lock is taken anyway.
+    fn close(&self) {
+        let mut st = self
+            .state
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        st.closed = true;
+        st.hi.clear();
+        st.lo.clear();
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// Closes the work queues when dropped.  Two instances exist: one shared
+/// by all [`Engine`] handles (so parked workers wake up and exit instead
+/// of leaking when the engine goes away) and one shared by all workers
+/// (so callers get a disconnect error instead of parking forever if the
+/// whole pool dies — including by panic, since locals drop on unwind).
+struct QueueCloser(Arc<WorkQueues>);
+
+impl Drop for QueueCloser {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Thread-safe handle to the engine worker pool.
 #[derive(Clone)]
 pub struct Engine {
-    tx_hi: Sender<ExecuteReq>,
-    tx_lo: Sender<ExecuteReq>,
+    queues: Arc<WorkQueues>,
     manifest: Arc<Manifest>,
     stats: Arc<Mutex<EngineStats>>,
+    _closer: Arc<QueueCloser>,
 }
 
 /// Default worker count: one per available core, capped at 4
@@ -81,28 +193,37 @@ impl Engine {
                         -> Result<Engine> {
         let manifest = Arc::new(Manifest::load(artifact_dir)?);
         let stats = Arc::new(Mutex::new(EngineStats::default()));
-        let (tx_hi, rx_hi) = channel::<ExecuteReq>();
-        let (tx_lo, rx_lo) = channel::<ExecuteReq>();
-        let rx = Arc::new(Mutex::new((rx_hi, rx_lo)));
+        let queues = Arc::new(WorkQueues::new());
         let (ready_tx, ready_rx) = channel::<Result<()>>();
+        // Shared by the workers only: when the last worker exits (or
+        // panics), its drop closes the queues so blocked and future
+        // callers error out instead of waiting forever.
+        let worker_closer = Arc::new(QueueCloser(queues.clone()));
         for w in 0..workers.max(1) {
             let manifest = manifest.clone();
             let stats = stats.clone();
-            let rx = rx.clone();
+            let queues = queues.clone();
             let ready_tx = ready_tx.clone();
+            let alive = worker_closer.clone();
             std::thread::Builder::new()
                 .name(format!("pjrt-engine-{w}"))
                 .spawn(move || {
-                    service_loop(manifest, stats, rx, ready_tx);
+                    let _alive = alive;
+                    service_loop(manifest, stats, queues, ready_tx);
                 })
                 .expect("spawn engine thread");
         }
+        drop(worker_closer);
+        // Created before the ready-wait: if any worker fails to init and
+        // we bail with `?`, dropping the closer closes the queues so the
+        // surviving workers wake and exit instead of parking forever.
+        let closer = Arc::new(QueueCloser(queues.clone()));
         for _ in 0..workers.max(1) {
             ready_rx
                 .recv()
                 .context("engine worker died during init")??;
         }
-        Ok(Engine { tx_hi, tx_lo, manifest, stats })
+        Ok(Engine { queues, manifest, stats, _closer: closer })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -142,20 +263,23 @@ impl Engine {
     }
 
     /// Execute with an explicit priority: `high` jumps the device queue
-    /// ahead of any queued bulk/training work.
+    /// ahead of any queued bulk/training work.  Inputs are shared with
+    /// the worker (refcount bump), never deep-copied.
     pub fn execute_prio(&self, name: &str, inputs: &[&Tensor],
                         high: bool) -> Result<Vec<Tensor>> {
         let spec = self.manifest.artifact(name)?;
         validate_inputs(spec, inputs)?;
         let (tx, rx) = channel();
-        let lane = if high { &self.tx_hi } else { &self.tx_lo };
-        lane.send(ExecuteReq {
-            name: name.to_string(),
-            inputs: inputs.iter().map(|t| (*t).clone()).collect(),
-            resp: tx,
-        })
-        .ok()
-        .context("engine service thread is gone")?;
+        self.queues
+            .submit(
+                ExecuteReq {
+                    name: name.to_string(),
+                    inputs: inputs.iter().map(|t| (*t).clone()).collect(),
+                    resp: tx,
+                },
+                high,
+            )
+            .context("engine service thread is gone")?;
         rx.recv().context("engine dropped the request")?
     }
 }
@@ -177,13 +301,60 @@ fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
     Ok(())
 }
 
-/// One worker: owns a PJRT client and a compiled-executable cache;
-/// launches are serialized per worker, parallel across workers.  The
-/// high-priority lane is always drained before the low one.
+/// Per-worker cache of device literals for pinned (weight) buffers,
+/// keyed by the buffer's process-unique pin key.  The shape is kept to
+/// guard against a pinned buffer being viewed under a different shape.
+/// Entries live for the worker's lifetime — keys are never reused, so an
+/// entry whose weights were dropped is only a memory cost (bounded by
+/// the number of model loads per process), never a stale answer.
+struct WeightLiteralCache {
+    map: HashMap<u64, (Vec<usize>, xla::Literal)>,
+}
+
+impl WeightLiteralCache {
+    fn new() -> Self {
+        WeightLiteralCache { map: HashMap::new() }
+    }
+
+    /// Make sure the pinned tensor's literal is resident (converting on
+    /// a miss), updating hit/miss statistics.
+    fn ensure(&mut self, t: &Tensor, stats: &Arc<Mutex<EngineStats>>)
+              -> Result<()> {
+        let key = t.device_key().expect("cache requires a pinned tensor");
+        if let Some((shape, _)) = self.map.get(&key) {
+            if *shape == t.shape {
+                stats.lock().unwrap().weight_cache_hits += 1;
+                return Ok(());
+            }
+            self.map.remove(&key);
+        }
+        let lit = tensor_to_literal(t)?;
+        {
+            let mut s = stats.lock().unwrap();
+            s.weight_cache_misses += 1;
+            s.literal_bytes += t.size_bytes() as u64;
+        }
+        self.map.insert(key, (t.shape.clone(), lit));
+        Ok(())
+    }
+
+    /// Borrow the resident literal for a pinned tensor (after `ensure`).
+    fn get(&self, t: &Tensor) -> Result<&xla::Literal> {
+        let key = t.device_key().expect("cache requires a pinned tensor");
+        match self.map.get(&key) {
+            Some((shape, lit)) if *shape == t.shape => Ok(lit),
+            _ => bail!("pinned literal not resident (shape drift?)"),
+        }
+    }
+}
+
+/// One worker: owns a PJRT client, a compiled-executable cache, and a
+/// pinned-weight literal cache; launches are serialized per worker,
+/// parallel across workers.  The high-priority lane is always drained
+/// before the low one; with nothing queued the worker parks on the
+/// condvar (no sleep polling).
 fn service_loop(manifest: Arc<Manifest>, stats: Arc<Mutex<EngineStats>>,
-                rx: Arc<Mutex<(Receiver<ExecuteReq>,
-                               Receiver<ExecuteReq>)>>,
-                ready: Sender<Result<()>>) {
+                queues: Arc<WorkQueues>, ready: Sender<Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => {
             let _ = ready.send(Ok(()));
@@ -197,75 +368,83 @@ fn service_loop(manifest: Arc<Manifest>, stats: Arc<Mutex<EngineStats>>,
     };
     let mut cache: HashMap<String, xla::PjRtLoadedExecutable> =
         HashMap::new();
-    loop {
-        // hold the receiver lock only while picking up the next request;
-        // prefer the high-priority lane, then poll both.
-        let req = {
-            let guard = rx.lock().unwrap();
-            let (hi, lo) = &*guard;
-            match hi.try_recv() {
-                Ok(r) => Some(r),
-                Err(std::sync::mpsc::TryRecvError::Empty) => {
-                    match lo.try_recv() {
-                        Ok(r) => Some(r),
-                        Err(std::sync::mpsc::TryRecvError::Empty) => None,
-                        Err(std::sync::mpsc::TryRecvError::Disconnected)
-                            => return,
-                    }
-                }
-                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                    return
-                }
-            }
-        };
-        let req = match req {
-            Some(r) => r,
-            None => {
-                // nothing queued: park briefly without holding the lock
-                std::thread::sleep(Duration::from_micros(50));
-                continue;
-            }
-        };
-        let result = serve_one(&client, &manifest, &mut cache, &stats,
-                               &req);
-        let _ = req.resp.send(result);
+    let mut weights = WeightLiteralCache::new();
+    while let Some(req) = queues.next() {
+        let ExecuteReq { name, inputs, resp } = req;
+        let result = serve_one(&client, &manifest, &mut cache,
+                               &mut weights, &stats, &name, &inputs);
+        // Release our share of the input buffers before answering, so a
+        // caller that wants to reclaim its scratch buffer (see
+        // `Tensor::try_into_f32_vec`) observes a unique Arc.
+        drop(inputs);
+        let _ = resp.send(result);
     }
 }
 
 fn serve_one(client: &xla::PjRtClient, manifest: &Manifest,
              cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
-             stats: &Arc<Mutex<EngineStats>>, req: &ExecuteReq)
-             -> Result<Vec<Tensor>> {
-    let spec = manifest.artifact(&req.name)?;
-    if !cache.contains_key(&req.name) {
+             weights: &mut WeightLiteralCache,
+             stats: &Arc<Mutex<EngineStats>>, name: &str,
+             inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let spec = manifest.artifact(name)?;
+    if !cache.contains_key(name) {
         let t0 = Instant::now();
-        let exe = compile(client, &spec.file, &req.name)?;
+        let exe = compile(client, &spec.file, name)?;
         let mut s = stats.lock().unwrap();
         s.compiles += 1;
         s.compile_secs += t0.elapsed().as_secs_f64();
         drop(s);
-        cache.insert(req.name.clone(), exe);
+        cache.insert(name.to_string(), exe);
     }
-    let exe = cache.get(&req.name).unwrap();
-    let literals = req
-        .inputs
+    let exe = cache.get(name).unwrap();
+    // Convert inputs: pinned weights come from (or enter) the worker's
+    // device-resident cache; activations are converted fresh.  Owned
+    // literals are kept alive in `fresh` while `literals` borrows.
+    let mut fresh: Vec<xla::Literal> = Vec::new();
+    let mut slots: Vec<Option<usize>> = Vec::with_capacity(inputs.len());
+    let mut fresh_bytes = 0u64;
+    for t in inputs {
+        if t.device_key().is_some() {
+            slots.push(None); // resolved via the cache below
+        } else {
+            fresh_bytes += t.size_bytes() as u64;
+            fresh.push(tensor_to_literal(t)?);
+            slots.push(Some(fresh.len() - 1));
+        }
+    }
+    if fresh_bytes > 0 {
+        stats.lock().unwrap().literal_bytes += fresh_bytes;
+    }
+    // Two passes because the cache hands out borrows: first ensure every
+    // pinned input is resident (mutable), then assemble the borrow list
+    // (immutable).
+    for t in inputs {
+        if t.device_key().is_some() {
+            weights.ensure(t, stats)?;
+        }
+    }
+    let literals: Vec<&xla::Literal> = inputs
         .iter()
-        .map(tensor_to_literal)
+        .zip(&slots)
+        .map(|(t, slot)| match slot {
+            Some(i) => Ok(&fresh[*i]),
+            None => weights.get(t),
+        })
         .collect::<Result<Vec<_>>>()?;
     let t0 = Instant::now();
     let result = exe
-        .execute::<xla::Literal>(&literals)
-        .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", req.name))?;
+        .execute::<&xla::Literal>(&literals)
+        .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
     let tuple = result[0][0]
         .to_literal_sync()
-        .map_err(|e| anyhow::anyhow!("fetch {}: {e:?}", req.name))?;
+        .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
     // aot.py lowers with return_tuple=True: always a tuple literal.
     let parts = tuple
         .to_tuple()
-        .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", req.name))?;
+        .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
     if parts.len() != spec.outputs.len() {
-        bail!("{}: expected {} outputs, got {}", req.name,
-              spec.outputs.len(), parts.len());
+        bail!("{name}: expected {} outputs, got {}", spec.outputs.len(),
+              parts.len());
     }
     let outs = parts
         .into_iter()
@@ -290,17 +469,23 @@ fn compile(client: &xla::PjRtClient, file: &PathBuf, name: &str)
         .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))
 }
 
-/// Host tensor -> xla Literal (row-major bytes).
+/// Host tensor -> xla Literal (row-major bytes of the view).
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let (ty, bytes): (xla::ElementType, &[u8]) = match &t.data {
-        TensorData::F32(v) => (xla::ElementType::F32, unsafe {
-            std::slice::from_raw_parts(v.as_ptr() as *const u8,
-                                       v.len() * 4)
-        }),
-        TensorData::I32(v) => (xla::ElementType::S32, unsafe {
-            std::slice::from_raw_parts(v.as_ptr() as *const u8,
-                                       v.len() * 4)
-        }),
+    let (ty, bytes): (xla::ElementType, &[u8]) = match t.dtype() {
+        DType::F32 => {
+            let v = t.as_f32();
+            (xla::ElementType::F32, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8,
+                                           v.len() * 4)
+            })
+        }
+        DType::I32 => {
+            let v = t.as_i32();
+            (xla::ElementType::S32, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8,
+                                           v.len() * 4)
+            })
+        }
     };
     xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
         .map_err(|e| anyhow::anyhow!("literal create: {e:?}"))
@@ -310,16 +495,17 @@ pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
 pub fn literal_to_tensor(l: &xla::Literal, shape: &[usize])
                          -> Result<Tensor> {
     let ty = l.ty().map_err(|e| anyhow::anyhow!("literal ty: {e:?}"))?;
-    let data = match ty {
-        xla::ElementType::F32 => TensorData::F32(
+    let t = match ty {
+        xla::ElementType::F32 => Tensor::from_f32_raw(
             l.to_vec::<f32>()
-                .map_err(|e| anyhow::anyhow!("literal f32: {e:?}"))?),
-        xla::ElementType::S32 => TensorData::I32(
+                .map_err(|e| anyhow::anyhow!("literal f32: {e:?}"))?,
+            shape),
+        xla::ElementType::S32 => Tensor::from_i32_raw(
             l.to_vec::<i32>()
-                .map_err(|e| anyhow::anyhow!("literal i32: {e:?}"))?),
+                .map_err(|e| anyhow::anyhow!("literal i32: {e:?}"))?,
+            shape),
         other => bail!("unsupported literal type {other:?}"),
     };
-    let t = Tensor { shape: shape.to_vec(), data };
     if t.len() != l.element_count() {
         bail!("literal element count {} != spec shape {:?}",
               l.element_count(), shape);

@@ -11,7 +11,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::{DType, Tensor, TensorData};
+use super::{DType, Tensor};
 
 const MAGIC: &[u8; 4] = b"SYMT";
 const VERSION: u32 = 1;
@@ -51,7 +51,7 @@ pub fn read_tensors_bytes(buf: &[u8]) -> Result<HashMap<String, Tensor>> {
             shape.push(read_u32(&mut r)? as usize);
         }
         let n: usize = shape.iter().product::<usize>().max(1);
-        let data = match dtype {
+        let t = match dtype {
             DType::F32 => {
                 let mut v = vec![0f32; n];
                 let bytes = unsafe {
@@ -59,7 +59,7 @@ pub fn read_tensors_bytes(buf: &[u8]) -> Result<HashMap<String, Tensor>> {
                         v.as_mut_ptr() as *mut u8, n * 4)
                 };
                 r.read_exact(bytes)?;
-                TensorData::F32(v)
+                Tensor::from_f32_raw(v, &shape)
             }
             DType::I32 => {
                 let mut v = vec![0i32; n];
@@ -68,10 +68,10 @@ pub fn read_tensors_bytes(buf: &[u8]) -> Result<HashMap<String, Tensor>> {
                         v.as_mut_ptr() as *mut u8, n * 4)
                 };
                 r.read_exact(bytes)?;
-                TensorData::I32(v)
+                Tensor::from_i32_raw(v, &shape)
             }
         };
-        out.insert(name, Tensor { shape, data });
+        out.insert(name, t);
     }
     Ok(out)
 }
@@ -94,15 +94,17 @@ pub fn write_tensors(path: &Path, tensors: &HashMap<String, Tensor>)
         for d in &t.shape {
             f.write_all(&(*d as u32).to_le_bytes())?;
         }
-        match &t.data {
-            TensorData::F32(v) => {
+        match t.dtype() {
+            DType::F32 => {
+                let v = t.as_f32();
                 let bytes = unsafe {
                     std::slice::from_raw_parts(
                         v.as_ptr() as *const u8, v.len() * 4)
                 };
                 f.write_all(bytes)?;
             }
-            TensorData::I32(v) => {
+            DType::I32 => {
+                let v = t.as_i32();
                 let bytes = unsafe {
                     std::slice::from_raw_parts(
                         v.as_ptr() as *const u8, v.len() * 4)

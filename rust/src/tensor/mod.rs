@@ -6,9 +6,40 @@
 //! math (residuals, RMSNorm, GELU, LoRA scaling) is implemented natively
 //! here — the formulas are the normative reference in
 //! `python/compile/kernels/ref.py` and are covered by golden tests.
+//!
+//! # Storage model: shared buffers, views, copy-on-write
+//!
+//! A [`Tensor`] is a *view* `(offset, len)` into an immutable,
+//! reference-counted buffer (`Arc<TensorBuf>`).  This is what makes the
+//! multi-client dispatch hot path zero-copy:
+//!
+//! * **`clone` is a refcount bump.**  Shipping a tensor to the engine or
+//!   into a [`crate::coordinator::proto::LayerRequest`] shares the buffer
+//!   instead of duplicating the bytes.  In particular the frozen base
+//!   weight matrices are never copied per layer call.
+//! * **`slice_rows` is a zero-copy view** over the parent buffer (rank-2,
+//!   row-major, so a row range is contiguous).  The executor's scatter
+//!   path returns per-request outputs as views of the one batched result.
+//! * **Mutation is copy-on-write.**  The mutable API (`as_f32_mut`, and
+//!   through it `ops::add_assign` / `ops::add_scaled`, `Adapter::
+//!   unflatten`, …) first makes the storage unique: if the buffer is
+//!   shared — or pinned for the device-side literal cache, see
+//!   [`Tensor::device_pin`] — exactly the viewed elements are copied into
+//!   a fresh buffer.  A mutation can therefore never alias into a sibling
+//!   view, which keeps the semantics bit-identical to the former
+//!   deep-copy storage (pinned by `tests/property.rs`).
+//! * **`device_pin` tags a buffer with a process-unique key** so the
+//!   engine workers can cache the host→device literal conversion of
+//!   long-lived tensors (base weights) by buffer identity.  Keys are
+//!   never reused, and copy-on-write clears the tag on the copy, so a
+//!   cached literal can never go stale.
 
 pub mod container;
 pub mod ops;
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -49,28 +80,72 @@ impl DType {
 }
 
 /// Raw storage: f32 or i32, row-major.
-#[derive(Debug, Clone, PartialEq)]
-pub enum TensorData {
+#[derive(Debug)]
+enum BufData {
     F32(Vec<f32>),
     I32(Vec<i32>),
 }
 
-/// A host tensor: shape + row-major data.
-#[derive(Debug, Clone, PartialEq)]
+/// A shared storage buffer.  `device_key` is 0 until the buffer is pinned
+/// via [`Tensor::device_pin`]; keys come from a global counter and are
+/// never reused, so they are safe cache identities (unlike pointers).
+#[derive(Debug)]
+pub struct TensorBuf {
+    data: BufData,
+    device_key: AtomicU64,
+}
+
+impl TensorBuf {
+    fn new(data: BufData) -> Self {
+        TensorBuf { data, device_key: AtomicU64::new(0) }
+    }
+}
+
+static NEXT_DEVICE_KEY: AtomicU64 = AtomicU64::new(1);
+
+/// A host tensor: shape + view into a shared row-major buffer.
+#[derive(Clone)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    pub data: TensorData,
+    buf: Arc<TensorBuf>,
+    /// Element offset of this view into `buf`.
+    off: usize,
+    /// Element count of this view.
+    elems: usize,
 }
 
 impl Tensor {
     pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
-        Tensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+        Self::from_f32_raw(data, shape)
+    }
+
+    /// Like [`Tensor::from_f32`] but without the element-count check —
+    /// only for the container reader, which preserves whatever byte
+    /// stream is on disk.
+    pub(crate) fn from_f32_raw(data: Vec<f32>, shape: &[usize]) -> Self {
+        let elems = data.len();
+        Tensor {
+            shape: shape.to_vec(),
+            buf: Arc::new(TensorBuf::new(BufData::F32(data))),
+            off: 0,
+            elems,
+        }
     }
 
     pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
-        Tensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+        Self::from_i32_raw(data, shape)
+    }
+
+    pub(crate) fn from_i32_raw(data: Vec<i32>, shape: &[usize]) -> Self {
+        let elems = data.len();
+        Tensor {
+            shape: shape.to_vec(),
+            buf: Arc::new(TensorBuf::new(BufData::I32(data))),
+            off: 0,
+            elems,
+        }
     }
 
     pub fn zeros(shape: &[usize]) -> Self {
@@ -86,9 +161,9 @@ impl Tensor {
     }
 
     pub fn dtype(&self) -> DType {
-        match self.data {
-            TensorData::F32(_) => DType::F32,
-            TensorData::I32(_) => DType::I32,
+        match self.buf.data {
+            BufData::F32(_) => DType::F32,
+            BufData::I32(_) => DType::I32,
         }
     }
 
@@ -104,24 +179,113 @@ impl Tensor {
         self.len() * self.dtype().size_bytes()
     }
 
-    pub fn as_f32(&self) -> &[f32] {
-        match &self.data {
-            TensorData::F32(v) => v,
-            _ => panic!("tensor is not f32"),
-        }
+    /// True if this view shares its buffer with at least one other
+    /// tensor (test/diagnostic hook for the zero-copy invariants).
+    pub fn is_shared(&self) -> bool {
+        Arc::strong_count(&self.buf) > 1
     }
 
-    pub fn as_f32_mut(&mut self) -> &mut Vec<f32> {
-        match &mut self.data {
-            TensorData::F32(v) => v,
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.buf.data {
+            BufData::F32(v) => &v[self.off..self.off + self.elems],
             _ => panic!("tensor is not f32"),
         }
     }
 
     pub fn as_i32(&self) -> &[i32] {
-        match &self.data {
-            TensorData::I32(v) => v,
+        match &self.buf.data {
+            BufData::I32(v) => &v[self.off..self.off + self.elems],
             _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// Make this view's storage unique (copy-on-write): if the buffer is
+    /// shared, partially viewed, or pinned for the device literal cache,
+    /// copy exactly the viewed elements into a fresh unpinned buffer.
+    fn ensure_unique(&mut self) {
+        if self.buf.device_key.load(Ordering::Relaxed) == 0
+            && Arc::get_mut(&mut self.buf).is_some()
+        {
+            return;
+        }
+        let data = match &self.buf.data {
+            BufData::F32(v) => {
+                BufData::F32(v[self.off..self.off + self.elems].to_vec())
+            }
+            BufData::I32(v) => {
+                BufData::I32(v[self.off..self.off + self.elems].to_vec())
+            }
+        };
+        self.buf = Arc::new(TensorBuf::new(data));
+        self.off = 0;
+    }
+
+    /// Mutable element access.  Copy-on-write: the storage is made
+    /// unique first, so sibling views never observe the mutation.
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        self.ensure_unique();
+        let (off, elems) = (self.off, self.elems);
+        let buf = Arc::get_mut(&mut self.buf)
+            .expect("storage unique after ensure_unique");
+        match &mut buf.data {
+            BufData::F32(v) => &mut v[off..off + elems],
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    /// Pin this tensor's buffer for the engine's device-side literal
+    /// cache and return its process-unique key.  Intended for long-lived
+    /// frozen tensors (base weights): engine workers convert a pinned
+    /// buffer to an `xla::Literal` once and reuse it on every execute.
+    /// Pinned buffers are never mutated in place (copy-on-write always
+    /// copies them), so a cached conversion cannot go stale.
+    pub fn device_pin(&self) -> u64 {
+        let key = self.buf.device_key.load(Ordering::Relaxed);
+        if key != 0 {
+            return key;
+        }
+        let fresh = NEXT_DEVICE_KEY.fetch_add(1, Ordering::Relaxed);
+        match self.buf.device_key.compare_exchange(
+            0, fresh, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => fresh,
+            Err(existing) => existing,
+        }
+    }
+
+    /// The device-cache key, if this tensor is a whole-buffer view of a
+    /// pinned buffer (partial views are not cacheable identities).
+    pub fn device_key(&self) -> Option<u64> {
+        if self.off != 0 || !self.is_full_view() {
+            return None;
+        }
+        match self.buf.device_key.load(Ordering::Relaxed) {
+            0 => None,
+            k => Some(k),
+        }
+    }
+
+    fn buf_elems(&self) -> usize {
+        match &self.buf.data {
+            BufData::F32(v) => v.len(),
+            BufData::I32(v) => v.len(),
+        }
+    }
+
+    fn is_full_view(&self) -> bool {
+        self.off == 0 && self.elems == self.buf_elems()
+    }
+
+    /// Reclaim the backing `Vec<f32>` if this tensor is the sole owner of
+    /// a whole-buffer f32 view — the base executor uses this to recycle
+    /// its batch-assembly scratch buffer across flushes.  Returns `None`
+    /// (dropping the tensor) when the buffer is shared or partial.
+    pub fn try_into_f32_vec(self) -> Option<Vec<f32>> {
+        if !self.is_full_view() {
+            return None;
+        }
+        match Arc::try_unwrap(self.buf) {
+            Ok(TensorBuf { data: BufData::F32(v), .. }) => Some(v),
+            _ => None,
         }
     }
 
@@ -135,49 +299,93 @@ impl Tensor {
         Ok(self)
     }
 
-    /// Rows `lo..hi` of a rank-2 tensor.
+    /// Rows `lo..hi` of a rank-2 tensor — a zero-copy view sharing this
+    /// tensor's buffer (rows are contiguous in row-major order).
     pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
         assert_eq!(self.shape.len(), 2, "slice_rows needs rank 2");
-        let cols = self.shape[1];
-        match &self.data {
-            TensorData::F32(v) => Tensor::from_f32(
-                v[lo * cols..hi * cols].to_vec(), &[hi - lo, cols]),
-            TensorData::I32(v) => Tensor::from_i32(
-                v[lo * cols..hi * cols].to_vec(), &[hi - lo, cols]),
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        assert!(lo <= hi && hi <= rows,
+                "slice_rows {lo}..{hi} out of {rows} rows");
+        Tensor {
+            shape: vec![hi - lo, cols],
+            buf: self.buf.clone(),
+            off: self.off + lo * cols,
+            elems: (hi - lo) * cols,
         }
     }
 
-    /// Columns `lo..hi` of a rank-2 tensor (copies).
+    /// Columns `lo..hi` of a rank-2 tensor (gathers, so it copies —
+    /// columns are strided).  Works for both dtypes.
     pub fn slice_cols(&self, lo: usize, hi: usize) -> Tensor {
         assert_eq!(self.shape.len(), 2, "slice_cols needs rank 2");
         let (rows, cols) = (self.shape[0], self.shape[1]);
-        let src = self.as_f32();
+        assert!(lo <= hi && hi <= cols,
+                "slice_cols {lo}..{hi} out of {cols} cols");
         let w = hi - lo;
-        let mut out = Vec::with_capacity(rows * w);
-        for r in 0..rows {
-            out.extend_from_slice(&src[r * cols + lo..r * cols + hi]);
+        match &self.buf.data {
+            BufData::F32(_) => {
+                let src = self.as_f32();
+                let mut out = Vec::with_capacity(rows * w);
+                for r in 0..rows {
+                    out.extend_from_slice(&src[r * cols + lo..r * cols + hi]);
+                }
+                Tensor::from_f32(out, &[rows, w])
+            }
+            BufData::I32(_) => {
+                let src = self.as_i32();
+                let mut out = Vec::with_capacity(rows * w);
+                for r in 0..rows {
+                    out.extend_from_slice(&src[r * cols + lo..r * cols + hi]);
+                }
+                Tensor::from_i32(out, &[rows, w])
+            }
         }
-        Tensor::from_f32(out, &[rows, w])
     }
 
     /// Stack rank-2 tensors along rows (all must share the column count).
     pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
         assert!(!parts.is_empty());
-        let cols = parts[0].shape[1];
         let rows: usize = parts.iter().map(|t| t.shape[0]).sum();
-        let mut out = Vec::with_capacity(rows * cols);
+        Self::assemble_rows(Vec::new(), parts, rows)
+    }
+
+    /// Fused `concat_rows` + `pad_rows`: stack `parts` and zero-fill up
+    /// to `rows` in one pass / one allocation.
+    pub fn concat_rows_padded(parts: &[&Tensor], rows: usize) -> Tensor {
+        Self::assemble_rows(Vec::new(), parts, rows)
+    }
+
+    /// Single-pass batch assembly into a caller-provided scratch vector:
+    /// stack `parts` row-wise and zero-pad to `rows` rows.  The scratch's
+    /// capacity is reused (pair with [`Tensor::try_into_f32_vec`] to
+    /// recycle it after the downstream consumer is done).
+    pub fn assemble_rows(mut scratch: Vec<f32>, parts: &[&Tensor],
+                         rows: usize) -> Tensor {
+        assert!(!parts.is_empty());
+        let cols = parts[0].shape[1];
+        scratch.clear();
+        scratch.reserve(rows * cols);
         for t in parts {
-            assert_eq!(t.shape[1], cols, "concat_rows: column mismatch");
-            out.extend_from_slice(t.as_f32());
+            assert_eq!(t.shape[1], cols, "assemble_rows: column mismatch");
+            scratch.extend_from_slice(t.as_f32());
         }
-        Tensor::from_f32(out, &[rows, cols])
+        assert!(scratch.len() <= rows * cols,
+                "assemble_rows: {} rows exceed target {rows}",
+                scratch.len() / cols.max(1));
+        scratch.resize(rows * cols, 0.0);
+        Tensor::from_f32(scratch, &[rows, cols])
     }
 
     /// Zero-pad a rank-2 tensor's rows up to `rows` (bucket padding).
+    /// When no padding is needed this is a zero-copy view.
     pub fn pad_rows(&self, rows: usize) -> Tensor {
         assert!(rows >= self.shape[0]);
+        if rows == self.shape[0] {
+            return self.clone();
+        }
         let cols = self.shape[1];
-        let mut v = self.as_f32().to_vec();
+        let mut v = Vec::with_capacity(rows * cols);
+        v.extend_from_slice(self.as_f32());
         v.resize(rows * cols, 0.0);
         Tensor::from_f32(v, &[rows, cols])
     }
@@ -224,6 +432,37 @@ impl Tensor {
     }
 }
 
+impl PartialEq for Tensor {
+    /// Logical equality: same shape and same viewed elements (buffer
+    /// identity and view offsets are irrelevant).
+    fn eq(&self, other: &Self) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        match (&self.buf.data, &other.buf.data) {
+            (BufData::F32(_), BufData::F32(_)) => {
+                self.as_f32() == other.as_f32()
+            }
+            (BufData::I32(_), BufData::I32(_)) => {
+                self.as_i32() == other.as_i32()
+            }
+            _ => false,
+        }
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut d = f.debug_struct("Tensor");
+        d.field("shape", &self.shape);
+        match &self.buf.data {
+            BufData::F32(_) => d.field("f32", &self.as_f32()),
+            BufData::I32(_) => d.field("i32", &self.as_i32()),
+        };
+        d.finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,11 +477,56 @@ mod tests {
     }
 
     #[test]
+    fn slice_rows_is_zero_copy_view() {
+        let t = Tensor::from_f32((0..12).map(|x| x as f32).collect(), &[4, 3]);
+        let v = t.slice_rows(1, 3);
+        assert!(v.is_shared() && t.is_shared());
+        assert_eq!(v.as_f32(), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn clone_is_refcount_bump_until_mutated() {
+        let t = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let mut c = t.clone();
+        assert!(t.is_shared());
+        c.as_f32_mut()[0] = 9.0; // copy-on-write detaches c
+        assert!(!t.is_shared());
+        assert_eq!(t.as_f32()[0], 1.0);
+        assert_eq!(c.as_f32()[0], 9.0);
+    }
+
+    #[test]
+    fn cow_detaches_views_from_parent_mutation() {
+        let mut t =
+            Tensor::from_f32((0..12).map(|x| x as f32).collect(), &[4, 3]);
+        let view = t.slice_rows(0, 2);
+        let before: Vec<f32> = view.as_f32().to_vec();
+        t.as_f32_mut()[0] = 100.0;
+        assert_eq!(view.as_f32(), &before[..], "mutation aliased a view");
+    }
+
+    #[test]
     fn slice_cols_picks_columns() {
         let t = Tensor::from_f32((0..12).map(|x| x as f32).collect(), &[3, 4]);
         let c = t.slice_cols(1, 3);
         assert_eq!(c.shape, vec![3, 2]);
         assert_eq!(c.as_f32(), &[1.0, 2.0, 5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn slice_cols_works_on_i32() {
+        let t = Tensor::from_i32((0..6).collect(), &[2, 3]);
+        let c = t.slice_cols(1, 3);
+        assert_eq!(c.dtype(), DType::I32);
+        assert_eq!(c.as_i32(), &[1, 2, 4, 5]);
+    }
+
+    #[test]
+    fn slice_rows_preserves_i32_dtype() {
+        let t = Tensor::from_i32((0..6).collect(), &[3, 2]);
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.dtype(), DType::I32);
+        assert_eq!(s.as_i32(), &[2, 3, 4, 5]);
     }
 
     #[test]
@@ -259,6 +543,50 @@ mod tests {
         let p = t.pad_rows(3);
         assert_eq!(p.shape, vec![3, 2]);
         assert_eq!(p.as_f32(), &[1.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn concat_rows_padded_matches_concat_then_pad() {
+        let a = Tensor::from_f32(vec![1.0, 2.0], &[1, 2]);
+        let b = Tensor::from_f32(vec![3.0, 4.0, 5.0, 6.0], &[2, 2]);
+        let fused = Tensor::concat_rows_padded(&[&a, &b], 5);
+        let two_pass = Tensor::concat_rows(&[&a, &b]).pad_rows(5);
+        assert_eq!(fused, two_pass);
+    }
+
+    #[test]
+    fn scratch_recycles_through_try_into() {
+        let a = Tensor::from_f32(vec![1.0, 2.0], &[1, 2]);
+        let t = Tensor::assemble_rows(Vec::with_capacity(64), &[&a], 4);
+        assert_eq!(t.shape, vec![4, 2]);
+        let v = t.try_into_f32_vec().expect("sole owner reclaims");
+        assert_eq!(v.len(), 8);
+        // a shared tensor cannot be reclaimed
+        let t = Tensor::zeros(&[2, 2]);
+        let _keep = t.clone();
+        assert!(t.try_into_f32_vec().is_none());
+    }
+
+    #[test]
+    fn device_pin_is_stable_and_unique() {
+        let t = Tensor::zeros(&[2, 2]);
+        let k1 = t.device_pin();
+        assert_eq!(t.device_pin(), k1);
+        assert_eq!(t.device_key(), Some(k1));
+        let u = Tensor::zeros(&[2, 2]);
+        assert_ne!(u.device_pin(), k1);
+        // views of a pinned buffer are not cacheable identities
+        assert_eq!(t.slice_rows(0, 1).device_key(), None);
+    }
+
+    #[test]
+    fn pinned_buffer_is_never_mutated_in_place() {
+        let mut t = Tensor::zeros(&[2, 2]);
+        let k = t.device_pin();
+        t.as_f32_mut()[0] = 5.0; // must COW even though refcount is 1
+        assert_eq!(t.device_key(), None, "mutation kept the pin");
+        let fresh = Tensor::zeros(&[2, 2]);
+        assert_ne!(fresh.device_pin(), k);
     }
 
     #[test]

@@ -118,30 +118,44 @@ pub fn gelu_bwd(x: &Tensor, dy: &Tensor) -> Tensor {
     Tensor::from_f32(v, &x.shape)
 }
 
+/// NaN-safe argmax over a slice: NaNs are skipped, ties keep the first
+/// occurrence (matching `jnp.argmax`), and an all-NaN row falls back to
+/// `total_cmp` total-order selection instead of silently returning 0.
+fn argmax_slice(row: &[f32]) -> usize {
+    let mut best: Option<usize> = None;
+    for (i, &x) in row.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if row[b].total_cmp(&x).is_ge() => {}
+            _ => best = Some(i),
+        }
+    }
+    best.unwrap_or_else(|| {
+        // All NaN: pick the total_cmp maximum (a positive-sign NaN beats
+        // a negative-sign one) so degenerate logits yield a
+        // deterministic, non-misleading index rather than token 0.
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    })
+}
+
 /// Argmax over the last row of a (T, V) logits tensor (greedy decoding).
 pub fn argmax_last_row(logits: &Tensor) -> i32 {
     let (t, v) = (logits.shape[0], logits.shape[1]);
     let row = &logits.as_f32()[(t - 1) * v..t * v];
-    let mut best = 0usize;
-    for (i, &x) in row.iter().enumerate() {
-        if x > row[best] {
-            best = i;
-        }
-    }
-    best as i32
+    argmax_slice(row) as i32
 }
 
 /// Argmax of row `r` of a (T, V) logits tensor.
 pub fn argmax_row(logits: &Tensor, r: usize) -> i32 {
     let v = logits.shape[1];
     let row = &logits.as_f32()[r * v..(r + 1) * v];
-    let mut best = 0usize;
-    for (i, &x) in row.iter().enumerate() {
-        if x > row[best] {
-            best = i;
-        }
-    }
-    best as i32
+    argmax_slice(row) as i32
 }
 
 /// Naive matmul for tests and tiny baseline paths: (m,k) @ (k,n).
@@ -232,6 +246,35 @@ mod tests {
         let a = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
         let b = Tensor::from_f32(vec![1.0, 0.0, 0.0, 1.0], &[2, 2]);
         assert_eq!(matmul(&a, &b), a);
+    }
+
+    #[test]
+    fn argmax_ignores_nan_entries() {
+        // A stray NaN must not mask the true maximum (the old `>` scan
+        // returned index 0 whenever row[0] was NaN).
+        let t = Tensor::from_f32(vec![f32::NAN, 1.0, 3.0, 2.0], &[1, 4]);
+        assert_eq!(argmax_last_row(&t), 2);
+        assert_eq!(argmax_row(&t, 0), 2);
+        let t = Tensor::from_f32(vec![0.5, f32::NAN, -1.0], &[1, 3]);
+        assert_eq!(argmax_last_row(&t), 0);
+    }
+
+    #[test]
+    fn argmax_all_nan_row_is_deterministic_not_zero() {
+        let t = Tensor::from_f32(vec![f32::NAN; 5], &[1, 5]);
+        let a = argmax_last_row(&t);
+        assert_eq!(a, argmax_last_row(&t));
+        assert_ne!(a, 0, "all-NaN row silently decoded as token 0");
+    }
+
+    #[test]
+    fn argmax_ties_keep_first_occurrence() {
+        let t = Tensor::from_f32(vec![1.0, 7.0, 7.0, 0.0], &[1, 4]);
+        assert_eq!(argmax_last_row(&t), 1);
+        // multi-row selection unaffected
+        let t = Tensor::from_f32(vec![9.0, 1.0, 1.0, 9.0], &[2, 2]);
+        assert_eq!(argmax_row(&t, 0), 0);
+        assert_eq!(argmax_row(&t, 1), 1);
     }
 
     #[test]

@@ -181,6 +181,80 @@ fn prop_slice_concat_roundtrip() {
 }
 
 #[test]
+fn prop_zero_copy_views_match_seed_copying_semantics() {
+    // slice_rows is now a zero-copy view and concat/pad assembly is a
+    // single fused pass; both must stay bit-identical to the seed's
+    // copy-based reference implementations.
+    for_all("views_match_copies", 200, |rng| {
+        let rows = rng.range(1, 24);
+        let cols = rng.range(1, 16);
+        let t = rng.tensor(&[rows, cols]);
+        let lo = rng.range(0, rows);
+        let hi = lo + rng.range(0, rows - lo + 1);
+        let view = t.slice_rows(lo, hi);
+        // seed reference: copy the row range out
+        let want = Tensor::from_f32(
+            t.as_f32()[lo * cols..hi * cols].to_vec(), &[hi - lo, cols]);
+        assert_eq!(view, want, "slice_rows view != copied slice");
+
+        // fused concat+pad vs the seed's two-pass reference
+        let n_parts = rng.range(1, 5);
+        let mut parts: Vec<Tensor> = Vec::with_capacity(n_parts);
+        for _ in 0..n_parts {
+            let r = rng.range(1, 6);
+            parts.push(rng.tensor(&[r, cols]));
+        }
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let total: usize = parts.iter().map(|p| p.shape[0]).sum();
+        let bucket = total + rng.range(0, 8);
+        let fused = Tensor::concat_rows_padded(&refs, bucket);
+        let mut seed = Vec::new();
+        for p in &parts {
+            seed.extend_from_slice(p.as_f32());
+        }
+        seed.resize(bucket * cols, 0.0);
+        assert_eq!(fused, Tensor::from_f32(seed, &[bucket, cols]),
+                   "fused assembly != concat_rows + pad_rows");
+    });
+}
+
+#[test]
+fn prop_copy_on_write_never_aliases_sibling_views() {
+    for_all("cow_no_alias", 200, |rng| {
+        let rows = rng.range(2, 16);
+        let cols = rng.range(1, 12);
+        let mut parent = rng.tensor(&[rows, cols]);
+        let cut = rng.range(1, rows);
+        let mut view_a = parent.slice_rows(0, cut);
+        let view_b = parent.slice_rows(cut, rows);
+        let clone = parent.clone();
+        let snap_parent: Vec<f32> = parent.as_f32().to_vec();
+        let snap_b: Vec<f32> = view_b.as_f32().to_vec();
+        let snap_clone: Vec<f32> = clone.as_f32().to_vec();
+
+        // mutate the first view through every mutating entry point
+        let delta = rng.tensor(&[cut, cols]);
+        ops::add_assign(&mut view_a, &delta);
+        ops::add_scaled(&mut view_a, &delta, rng.f32());
+        view_a.as_f32_mut()[0] += 1.0;
+        assert_eq!(parent.as_f32(), &snap_parent[..],
+                   "view mutation leaked into parent");
+        assert_eq!(view_b.as_f32(), &snap_b[..],
+                   "view mutation leaked into sibling view");
+
+        // and mutate the parent: outstanding views/clones must hold
+        let snap_a: Vec<f32> = view_a.as_f32().to_vec();
+        parent.as_f32_mut()[rng.range(0, rows * cols)] = 42.0;
+        assert_eq!(view_a.as_f32(), &snap_a[..],
+                   "parent mutation leaked into view");
+        assert_eq!(view_b.as_f32(), &snap_b[..],
+                   "parent mutation leaked into view");
+        assert_eq!(clone.as_f32(), &snap_clone[..],
+                   "parent mutation leaked into clone");
+    });
+}
+
+#[test]
 fn prop_head_split_merge_roundtrip() {
     for_all("head_roundtrip", 200, |rng| {
         let nh = [1usize, 2, 4, 8][rng.range(0, 4)];
