@@ -17,8 +17,8 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use symbiosis::config::{LLAMA2_7B, SYM_TINY};
-use symbiosis::coordinator::{BatchPolicy, Deployment, InferenceSession,
-                             KvPlacement, Placement};
+use symbiosis::coordinator::{BatchPolicy, Deployment, KvPlacement,
+                             Placement};
 use symbiosis::device::{Device, DeviceKind, GIB};
 use symbiosis::transport::LinkKind;
 
@@ -39,8 +39,7 @@ fn real_tiny_run() -> anyhow::Result<()> {
     let dep = Deployment::start(&SYM_TINY, &artifact_dir,
                                 BatchPolicy::NoLockstep,
                                 Placement::CpuClient)?;
-    let core = dep.client_core(None);
-    let mut sess = InferenceSession::new(core, 1, KvPlacement::Host)?;
+    let mut sess = dep.session().kv(KvPlacement::Host).build()?;
     let prompt: Vec<i32> = (0..64).map(|i| (i * 5 % 256) as i32).collect();
     sess.prefill(&prompt)?;
     println!("prefill done: kv cache {} tokens, {} KiB (host-offloaded)",

@@ -16,7 +16,7 @@ use std::time::Instant;
 use symbiosis::config::SYM_TINY;
 use symbiosis::coordinator::adapter::{lora_table2, LoraTargets};
 use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
-                             Placement, Trainer};
+                             Placement};
 
 /// Synthetic corpus: token[i+1] = (a * token[i] + b) mod vocab — an
 /// affine next-token rule each adapter can learn.  Each client cycles
@@ -77,10 +77,9 @@ fn main() -> anyhow::Result<()> {
             Adapter::lora_from_artifacts(&SYM_TINY, &artifact_dir, rank,
                                          targets, scale)?
         };
-        let core = dep.client_core(Some(adapter));
+        let tr = dep.trainer().adapter(adapter).lr(5e-3).build()?;
         handles.push(std::thread::spawn(move || -> anyhow::Result<_> {
-            let mut tr = Trainer::new(core, 1)?;
-            tr.optimizer.lr = 5e-3;
+            let mut tr = tr;
             let mut curve = Vec::with_capacity(steps);
             for s in 0..steps {
                 let (tokens, labels) = batch_for(c, s, seq);

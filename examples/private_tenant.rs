@@ -18,7 +18,7 @@ use symbiosis::coordinator::adapter::LoraTargets;
 use symbiosis::coordinator::privacy::{NoiseGen, PrivacyCtx};
 use symbiosis::coordinator::proto::LayerId;
 use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
-                             InferenceSession, KvPlacement, Placement};
+                             GenerationConfig, Placement};
 use symbiosis::transport::LinkKind;
 
 fn main() -> anyhow::Result<()> {
@@ -41,21 +41,15 @@ fn main() -> anyhow::Result<()> {
     let gen_len = 16;
 
     // -- plain tenant (no privacy), local link --
-    let core = dep.client_core(Some(adapter.clone()));
-    let mut plain = InferenceSession::new(core, 1, KvPlacement::Device)?;
+    let mut plain = dep.session().adapter(adapter.clone()).build()?;
     let t0 = Instant::now();
-    plain.prefill(&prompt)?;
-    for _ in 1..gen_len {
-        plain.decode_step()?;
-    }
+    plain.generate(&prompt, &GenerationConfig::greedy(gen_len))?;
     let plain_time = t0.elapsed().as_secs_f64();
     let want = plain.generated[0].clone();
     let plain_link = plain.core.virt.link_time();
     drop(plain);
 
     // -- private tenant: noise on every linear layer, TCP-class link --
-    let mut core =
-        dep.client_core_with_link(Some(adapter), LinkKind::Tcp);
     let privacy = PrivacyCtx::new();
     let mut gen = NoiseGen::new(0xDEADBEEF, 0.1);
     let tx = dep.executor.sender();
@@ -77,17 +71,13 @@ fn main() -> anyhow::Result<()> {
     privacy.register_layer(&tx, LayerId::LmHead, prompt.len(), d,
                            &mut gen, 4)?;
     let setup_time = setup0.elapsed().as_secs_f64();
-    {
-        let virt = std::sync::Arc::get_mut(&mut core.virt).unwrap();
-        virt.privacy = Some(privacy);
-    }
-    let mut private =
-        InferenceSession::new(core, 1, KvPlacement::Device)?;
+    let mut private = dep.session()
+        .adapter(adapter)
+        .link(LinkKind::Tcp)
+        .privacy(privacy)
+        .build()?;
     let t1 = Instant::now();
-    private.prefill(&prompt)?;
-    for _ in 1..gen_len {
-        private.decode_step()?;
-    }
+    private.generate(&prompt, &GenerationConfig::greedy(gen_len))?;
     let private_time = t1.elapsed().as_secs_f64();
 
     assert_eq!(private.generated[0], want,

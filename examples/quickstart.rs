@@ -2,10 +2,11 @@
 //!
 //! The end-to-end serving driver: loads the AOT-compiled `sym-tiny`
 //! model, starts one shared base executor, attaches four inference
-//! clients with *different* adapters (LoRA r=8, LoRA r=64, IA3, and the
-//! plain base model), serves batched requests concurrently, and reports
-//! per-client latency plus aggregate throughput and executor batching
-//! statistics.  Results are recorded in EXPERIMENTS.md.
+//! tenants with *different* adapters (LoRA r=8, LoRA r=64, IA3, and the
+//! plain base model) through the session-first builder API, serves
+//! batched requests concurrently, and reports per-client latency plus
+//! aggregate throughput and executor batching statistics.  Results are
+//! recorded in EXPERIMENTS.md.
 //!
 //! Run:  cargo run --release --example quickstart
 //! (requires `make artifacts` first)
@@ -15,9 +16,8 @@ use std::time::Instant;
 
 use symbiosis::config::SYM_TINY;
 use symbiosis::coordinator::adapter::LoraTargets;
-use symbiosis::coordinator::{Adapter, BatchPolicy, ClientCore,
-                             Deployment, InferenceSession, KvPlacement,
-                             Placement};
+use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
+                             GenerationConfig, Placement};
 use symbiosis::metrics::LatencyStats;
 
 fn main() -> anyhow::Result<()> {
@@ -52,14 +52,30 @@ fn main() -> anyhow::Result<()> {
         ("ia3", Some(Adapter::ia3(&SYM_TINY))),
     ];
 
+    // warm-up + the one-call path: a whole request through generate().
+    // Running it first keeps lazy HLO compiles out of the measured
+    // latencies below.
+    let mut smoke = dep.session().build()?;
+    let warm_prompt: Vec<i32> =
+        (0..prompt_len).map(|k| (k * 3 % 256) as i32).collect();
+    let out = smoke.generate(&warm_prompt, &GenerationConfig::greedy(8))?;
+    println!("generate() smoke: {} tokens for the base tenant",
+             out[0].len());
+    drop(smoke);
+
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for (i, (name, adapter)) in tenants.into_iter().enumerate() {
-        let core = dep.client_core(adapter);
+        // one session (= one registered client) per tenant; reset()
+        // clears the per-request state between requests
+        let mut b = dep.session();
+        if let Some(a) = adapter {
+            b = b.adapter(a);
+        }
+        let sess = b.build()?;
         handles.push(std::thread::spawn(move || -> anyhow::Result<_> {
+            let mut sess = sess;
             let mut lat = LatencyStats::new();
-            let mut sess =
-                InferenceSession::new(core, 1, KvPlacement::Device)?;
             let mut tokens_out = 0u64;
             for r in 0..n_requests {
                 let prompt: Vec<i32> = (0..prompt_len)
@@ -72,10 +88,7 @@ fn main() -> anyhow::Result<()> {
                     lat.record(step.elapsed());
                 }
                 tokens_out += gen_len as u64;
-                // fresh session per request (cache reset)
-                let core2 = rebuild(&sess);
-                sess = InferenceSession::new(core2, 1,
-                                             KvPlacement::Device)?;
+                sess.reset()?;
             }
             Ok((name, lat, tokens_out))
         }));
@@ -110,19 +123,6 @@ fn main() -> anyhow::Result<()> {
              estats.weight_cache_hits,
              estats.weight_cache_hits + estats.weight_cache_misses);
     Ok(())
-}
-
-/// Rebuild a fresh ClientCore from a finished session (keeps adapter +
-/// executor wiring, drops the KV cache).
-fn rebuild(sess: &InferenceSession) -> ClientCore {
-    ClientCore {
-        cfg: sess.core.cfg.clone(),
-        engine: sess.core.engine.clone(),
-        virt: sess.core.virt.clone(),
-        weights: sess.core.weights.clone(),
-        adapter: sess.core.adapter.clone(),
-        lora_scale: sess.core.lora_scale,
-    }
 }
 
 fn arg<T: std::str::FromStr>(args: &[String], name: &str, default: T)

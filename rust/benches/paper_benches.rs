@@ -23,8 +23,7 @@ use symbiosis::coordinator::adapter::{lora_table2, LoraTargets};
 use symbiosis::coordinator::placement::IterationModel;
 use symbiosis::coordinator::sharding::ShardPlan;
 use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
-                             InferenceSession, KvPlacement, Placement,
-                             Trainer};
+                             Placement};
 use symbiosis::device::{Device, DeviceKind, GIB};
 use symbiosis::metrics::{gib, LatencyStats};
 use symbiosis::transport::LinkKind;
@@ -239,11 +238,15 @@ fn tab02_lora_configs() {
         let (rank, targets) = lora_table2(which);
         let mut times = Vec::new();
         for shared in [false, true] {
-            let dep = deploy(if shared {                     BatchPolicy::opportunistic_default()                 } else {                     BatchPolicy::NoLockstep                 });
+            let dep = deploy(if shared {
+                BatchPolicy::opportunistic_default()
+            } else {
+                BatchPolicy::NoLockstep
+            });
             let adapter = Adapter::lora_from_artifacts(
                 &SYM_TINY, &dir, rank, targets, 2.0).unwrap();
-            let core = dep.client_core(Some(adapter));
-            let mut tr = Trainer::new(core, 1).unwrap();
+            let mut tr =
+                dep.trainer().adapter(adapter).build().unwrap();
             let tokens: Vec<i32> =
                 (0..32).map(|k| (k * 7 % 256) as i32).collect();
             let labels: Vec<i32> =
@@ -282,10 +285,7 @@ fn fig07_wait_time() {
     {
         let dep = deploy(BatchPolicy::NoLockstep);
         for (c, plen) in [(0usize, 16usize), (1, 64), (2, 128), (3, 256)] {
-            let core = dep.client_core(None);
-            let mut sess =
-                InferenceSession::new(core, 1, KvPlacement::Device)
-                    .unwrap();
+            let mut sess = dep.session().build().unwrap();
             let prompt: Vec<i32> =
                 (0..plen).map(|k| ((c + k) % 256) as i32).collect();
             sess.prefill(&prompt).unwrap();
@@ -303,14 +303,17 @@ fn fig07_wait_time() {
         let mut handles = Vec::new();
         for (c, plen) in [(0usize, 64usize), (1, 64), (2, 64), (3, 64)] {
             let remote = c < remote_clients;
-            let core = dep.client_core_opts(
-                None,
-                if remote { LinkKind::Tcp } else { LinkKind::SharedLocal },
-                remote,
-            );
+            let sess = dep.session()
+                .link(if remote {
+                    LinkKind::Tcp
+                } else {
+                    LinkKind::SharedLocal
+                })
+                .realize_delays(remote)
+                .build()
+                .unwrap();
             handles.push(std::thread::spawn(move || {
-                let mut sess = InferenceSession::new(
-                    core, 1, KvPlacement::Device).unwrap();
+                let mut sess = sess;
                 let prompt: Vec<i32> =
                     (0..plen).map(|k| ((c + k) % 256) as i32).collect();
                 sess.prefill(&prompt).unwrap();
@@ -466,9 +469,9 @@ fn run_ft_group(dir: &std::path::Path, n: usize, shared: bool)
         let dep = if shared { &deployments[0] } else { &deployments[c] };
         let adapter = Adapter::lora_from_artifacts(
             &SYM_TINY, dir, 8, LoraTargets::QKVO, 2.0).unwrap();
-        let core = dep.client_core(Some(adapter));
+        let tr = dep.trainer().adapter(adapter).build().unwrap();
         handles.push(std::thread::spawn(move || {
-            let mut tr = Trainer::new(core, 1).unwrap();
+            let mut tr = tr;
             let tokens: Vec<i32> =
                 (0..seq).map(|k| ((c * 31 + k * 7) % 256) as i32)
                     .collect();
@@ -742,7 +745,7 @@ fn fig21_privacy() {
         ("network, no privacy", LinkKind::Tcp, false),
         ("network + privacy", LinkKind::Tcp, true),
     ] {
-        let mut core = dep.client_core_with_link(None, link);
+        let mut builder = dep.session().link(link);
         if private {
             let privacy = PrivacyCtx::new();
             let mut gen = NoiseGen::new(7, 0.05);
@@ -759,11 +762,9 @@ fn fig21_privacy() {
             }
             privacy.register_layer(&tx, LayerId::LmHead, 16, d,
                                    &mut gen, 2).unwrap();
-            let virt = std::sync::Arc::get_mut(&mut core.virt).unwrap();
-            virt.privacy = Some(privacy);
+            builder = builder.privacy(privacy);
         }
-        let mut sess =
-            InferenceSession::new(core, 1, KvPlacement::Device).unwrap();
+        let mut sess = builder.build().unwrap();
         let t0 = Instant::now();
         sess.prefill(&prompt).unwrap();
         for _ in 0..8 {
@@ -804,10 +805,9 @@ fn fig22_23_mixed() {
         let mut handles: Vec<std::thread::JoinHandle<(u64, f64)>> =
             Vec::new();
         for c in 0..n_inf {
-            let core = dep.client_core(None);
+            let sess = dep.session().build().unwrap();
             handles.push(std::thread::spawn(move || {
-                let mut sess = InferenceSession::new(
-                    core, 1, KvPlacement::Device).unwrap();
+                let mut sess = sess;
                 let prompt: Vec<i32> =
                     (0..16).map(|k| ((c + k) % 256) as i32).collect();
                 let mut lat = LatencyStats::new();
@@ -823,9 +823,9 @@ fn fig22_23_mixed() {
         for c in 0..n_ft {
             let adapter = Adapter::lora_from_artifacts(
                 &SYM_TINY, &dir, 8, LoraTargets::QKVO, 2.0).unwrap();
-            let core = dep.client_core(Some(adapter));
+            let tr = dep.trainer().adapter(adapter).build().unwrap();
             handles.push(std::thread::spawn(move || {
-                let mut tr = Trainer::new(core, 1).unwrap();
+                let mut tr = tr;
                 let tokens: Vec<i32> =
                     (0..64).map(|k| ((c * 7 + k) % 256) as i32).collect();
                 let labels: Vec<i32> =
@@ -889,10 +889,9 @@ fn tab04_vllm_lockstep() {
         let dep = deploy(BatchPolicy::Lockstep);
         let mut handles = Vec::new();
         for (c, plen) in [(0usize, 8usize), (1, 256)] {
-            let core = dep.client_core(None);
+            let sess = dep.session().build().unwrap();
             handles.push(std::thread::spawn(move || {
-                let mut sess = InferenceSession::new(
-                    core, 1, KvPlacement::Device).unwrap();
+                let mut sess = sess;
                 let prompt: Vec<i32> =
                     (0..plen).map(|k| ((c + k) % 256) as i32).collect();
                 let t = Instant::now();
@@ -945,10 +944,13 @@ fn tab05_policies() {
                     &SYM_TINY, &dir, 64, LoraTargets::QKVO, 0.25)
                     .unwrap()),
             };
-            let core = dep.client_core(adapter);
+            let mut builder = dep.session().batch(batch);
+            if let Some(a) = adapter {
+                builder = builder.adapter(a);
+            }
+            let sess = builder.build().unwrap();
             handles.push(std::thread::spawn(move || {
-                let mut sess = InferenceSession::new(
-                    core, batch, KvPlacement::Device).unwrap();
+                let mut sess = sess;
                 let prompt: Vec<i32> = (0..plen * batch)
                     .map(|k| ((c + k) % 256) as i32)
                     .collect();
@@ -1008,10 +1010,9 @@ fn ablation_wait_budget() {
         let mut handles: Vec<std::thread::JoinHandle<(u64, f64)>> =
             Vec::new();
         for c in 0..4usize {
-            let core = dep.client_core(None);
+            let sess = dep.session().build().unwrap();
             handles.push(std::thread::spawn(move || {
-                let mut sess = InferenceSession::new(
-                    core, 1, KvPlacement::Device).unwrap();
+                let mut sess = sess;
                 let prompt: Vec<i32> =
                     (0..16).map(|k| ((c + k) % 256) as i32).collect();
                 sess.prefill(&prompt).unwrap();
@@ -1027,9 +1028,9 @@ fn ablation_wait_budget() {
         for c in 0..2usize {
             let adapter = Adapter::lora_from_artifacts(
                 &SYM_TINY, &dir, 8, LoraTargets::QKVO, 2.0).unwrap();
-            let core = dep.client_core(Some(adapter));
+            let tr = dep.trainer().adapter(adapter).build().unwrap();
             handles.push(std::thread::spawn(move || {
-                let mut tr = Trainer::new(core, 1).unwrap();
+                let mut tr = tr;
                 let tokens: Vec<i32> =
                     (0..32).map(|k| ((c + k * 3) % 256) as i32).collect();
                 let labels: Vec<i32> =

@@ -34,6 +34,16 @@ impl DedicatedJob {
                        -> crate::coordinator::ClientCore {
         self.deployment.client_core(adapter)
     }
+
+    /// Session builder against this job's private executor.
+    pub fn session(&self) -> crate::coordinator::SessionBuilder<'_> {
+        self.deployment.session()
+    }
+
+    /// Trainer builder against this job's private executor.
+    pub fn trainer(&self) -> crate::coordinator::TrainerBuilder<'_> {
+        self.deployment.trainer()
+    }
 }
 
 /// Allocator overhead on measured GPU memory: the PyTorch caching

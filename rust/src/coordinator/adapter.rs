@@ -1,4 +1,5 @@
-//! PEFT adapters — client-owned trainable state.
+//! PEFT adapters — client-owned trainable state, exposed to the layer
+//! walker through the [`AdapterHooks`] trait.
 //!
 //! Symbiosis supports *different* PEFT methods per client against the
 //! same shared base (design goal 6).  Implemented: **LoRA** (the paper's
@@ -7,12 +8,22 @@
 //! Adapter math runs client-side: LoRA through the fused Pallas artifact
 //! when available, IA3/Prefix natively (they are elementwise/concat
 //! work, not matmuls).
+//!
+//! The client's transformer walk never inspects the adapter kind: it
+//! calls the hook at each interception point and each adapter object
+//! ([`LoraAdapter`], [`Ia3Adapter`], [`PrefixAdapter`]) overrides the
+//! hooks it needs.  Adding a new PEFT family (see LLM-Adapters, arXiv
+//! 2304.01933) means implementing this trait and wrapping the new
+//! object in an [`Adapter`] variant *in this file* (hooks dispatch,
+//! parameter count, flatten/unflatten) — the walker, sessions, and
+//! trainers in `client.rs` need no edits.
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::config::ModelConfig;
+use crate::config::{bucket_for, ModelConfig, TOKEN_BUCKETS};
+use crate::runtime::Engine;
 use crate::tensor::{container, ops, Tensor};
 
 /// Which projections a LoRA adapter applies to (paper Table 2: LoRA1 =
@@ -43,6 +54,16 @@ impl LoraTargets {
         if self.o { v.push("o"); }
         v
     }
+
+    fn on(&self, target: &str) -> bool {
+        match target {
+            "q" => self.q,
+            "k" => self.k,
+            "v" => self.v,
+            "o" => self.o,
+            _ => false,
+        }
+    }
 }
 
 /// The paper's Table 2 adapter configurations.
@@ -63,33 +84,421 @@ pub struct LoraPair {
     pub b: Tensor, // (r, D)
 }
 
-/// A client's adapter state.
+// ---------------------------------------------------------------------------
+// The hook trait
+// ---------------------------------------------------------------------------
+
+/// Read-only client context handed to every hook: the engine (for fused
+/// adapter artifacts) and the model dims.
+pub struct HookCtx<'a> {
+    pub engine: &'a Engine,
+    pub cfg: &'a ModelConfig,
+}
+
+/// Adapter interception points of one transformer block.
+///
+/// The layer walker calls every hook unconditionally; the default
+/// implementation of each is the identity, so an adapter only overrides
+/// the points where its math lives.  Forward hooks *mutate* the
+/// activation in place (the walker owns the tensors); backward hooks
+/// accumulate parameter gradients into [`AdapterGrads`] and return the
+/// extra input-gradient contribution, if any.
+pub trait AdapterHooks: Send + Sync {
+    /// Add deltas to q/k/v after the fused base QKV projection
+    /// (`a_in` is the rmsnorm-1 output the projection consumed).
+    fn qkv_delta(&self, _cx: &HookCtx, _layer: usize, _a_in: &Tensor,
+                 _q: &mut Tensor, _k: &mut Tensor, _v: &mut Tensor)
+                 -> Result<()> {
+        Ok(())
+    }
+
+    /// Rescale k/v before they are split into heads / appended to the
+    /// KV cache (IA3).
+    fn kv_scale(&self, _layer: usize, _k: &mut Tensor, _v: &mut Tensor) {}
+
+    /// Add a delta to the attention output projection (`attn_merged` is
+    /// the head-merged attention result the projection consumed).
+    fn attn_out_delta(&self, _cx: &HookCtx, _layer: usize,
+                      _attn_merged: &Tensor, _o: &mut Tensor)
+                      -> Result<()> {
+        Ok(())
+    }
+
+    /// Rescale the MLP intermediate pre-activation (IA3 ff).
+    fn ffn_scale(&self, _layer: usize, _u_pre: &mut Tensor) {}
+
+    /// Learned KV rows to seed the cache with before any token is
+    /// processed (prefix tuning).  Returns `(k, v)`, each `(BH, P, H)`.
+    fn seed_kv(&self, _layer: usize) -> Option<(&Tensor, &Tensor)> {
+        None
+    }
+
+    /// Backward of [`Self::qkv_delta`]: `dq`/`dk`/`dv` are gradients at
+    /// the (pre-`kv_scale`) projection outputs.  Accumulates parameter
+    /// gradients and returns the adapter's extra contribution to
+    /// `d(a_in)`.
+    #[allow(clippy::too_many_arguments)]
+    fn qkv_delta_bwd(&self, _cx: &HookCtx, _layer: usize, _a_in: &Tensor,
+                     _dq: &Tensor, _dk: &Tensor, _dv: &Tensor,
+                     _grads: &mut AdapterGrads) -> Result<Option<Tensor>> {
+        Ok(None)
+    }
+
+    /// Backward of [`Self::kv_scale`]: map gradients at the scaled k/v
+    /// back to the pre-scale projection outputs.
+    fn kv_scale_bwd(&self, _layer: usize, dk: &Tensor, dv: &Tensor)
+                    -> (Tensor, Tensor) {
+        (dk.clone(), dv.clone())
+    }
+
+    /// Backward of [`Self::attn_out_delta`]: returns the adapter's extra
+    /// contribution to `d(attn_merged)`.
+    fn attn_out_delta_bwd(&self, _cx: &HookCtx, _layer: usize,
+                          _attn_merged: &Tensor, _do: &Tensor,
+                          _grads: &mut AdapterGrads)
+                          -> Result<Option<Tensor>> {
+        Ok(None)
+    }
+
+    /// Backward of [`Self::ffn_scale`]: map the gradient at the scaled
+    /// pre-activation back through the scale.
+    fn ffn_scale_bwd(&self, _layer: usize, _u_pre: &Tensor, dy: &Tensor)
+                     -> Tensor {
+        dy.clone() // refcount bump, not a copy
+    }
+
+    /// Whether this adapter's parameter gradients are wired into the
+    /// flattened optimizer layout (i.e. a [`crate::coordinator::Trainer`]
+    /// can fine-tune it).
+    fn trainable(&self) -> bool {
+        false
+    }
+}
+
+/// Hooks of the bare base model: every hook is the identity.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoAdapter;
+
+impl AdapterHooks for NoAdapter {}
+
+/// The identity hook set, usable wherever a `&dyn AdapterHooks` is
+/// needed and the client has no adapter.
+pub static NO_ADAPTER: NoAdapter = NoAdapter;
+
+// ---------------------------------------------------------------------------
+// LoRA
+// ---------------------------------------------------------------------------
+
+/// Low-rank adaptation of the attention projections: `y += s · (x A) B`.
+#[derive(Debug, Clone)]
+pub struct LoraAdapter {
+    pub rank: usize,
+    pub targets: LoraTargets,
+    /// alpha / rank.
+    pub scale: f32,
+    /// `pairs[layer]["q"|"k"|"v"|"o"]`.
+    pub pairs: Vec<HashMap<&'static str, LoraPair>>,
+}
+
+impl LoraAdapter {
+    /// Forward delta for one target via the fused Pallas artifact
+    /// (bucketed tokens), with a native fallback when the activation is
+    /// tiny or no bucket/artifact fits.
+    pub fn delta(&self, cx: &HookCtx, layer: usize, target: &'static str,
+                 x: &Tensor) -> Result<Option<Tensor>> {
+        if !self.targets.on(target) {
+            return Ok(None);
+        }
+        let pair = &self.pairs[layer][target];
+        let t = x.shape[0];
+        // For tiny activations (decode steps) the PJRT dispatch costs
+        // ~100x the math: run the adapter natively on the client — the
+        // paper's observation that client-side compute is light enough
+        // for weak devices applies to the host CPU here (perf log in
+        // EXPERIMENTS.md §Perf).
+        if t < 8 {
+            return Ok(Some(apply_lora_native(x, pair, self.scale)));
+        }
+        let d = cx.cfg.d_model;
+        let Some(tb) = bucket_for(t, TOKEN_BUCKETS) else {
+            return Ok(Some(apply_lora_native(x, pair, self.scale)));
+        };
+        let name = format!("lora_fwd_t{tb}_{d}x{r}x{d}", r = self.rank);
+        if !cx.engine.has_artifact(&name) {
+            return Ok(Some(apply_lora_native(x, pair, self.scale)));
+        }
+        let xp = x.pad_rows(tb);
+        let out = cx.engine.execute(&name, &[&xp, &pair.a, &pair.b])?;
+        Ok(Some(ops::scale(&out[0].slice_rows(0, t), self.scale)))
+    }
+
+    /// Backward for one target through the fused artifact:
+    /// `(dA, dB, dX)`, all already multiplied by the adapter scale.
+    pub fn delta_bwd(&self, cx: &HookCtx, layer: usize,
+                     target: &'static str, x: &Tensor, dy: &Tensor)
+                     -> Result<Option<(Tensor, Tensor, Tensor)>> {
+        if !self.targets.on(target) {
+            return Ok(None);
+        }
+        let pair = &self.pairs[layer][target];
+        let t = x.shape[0];
+        let d = cx.cfg.d_model;
+        let tb = bucket_for(t, TOKEN_BUCKETS)
+            .context("token count exceeds lora bwd buckets")?;
+        let name = format!("lora_bwd_t{tb}_{d}x{r}x{d}", r = self.rank);
+        let xp = x.pad_rows(tb);
+        let dyp = dy.pad_rows(tb);
+        let out =
+            cx.engine.execute(&name, &[&xp, &dyp, &pair.a, &pair.b])?;
+        Ok(Some((
+            ops::scale(&out[0], self.scale),
+            ops::scale(&out[1], self.scale),
+            ops::scale(&out[2].slice_rows(0, t), self.scale),
+        )))
+    }
+
+    /// Offset of `(layer, target)`'s A block in the flattened parameter
+    /// layout (layer-major, target order q,k,v,o, A then B).
+    fn flat_offset(&self, layer: usize, target: &str) -> Option<usize> {
+        let list = self.targets.list();
+        let mut off = 0;
+        for (l, m) in self.pairs.iter().enumerate() {
+            for t in &list {
+                let p = &m[t];
+                if l == layer && *t == target {
+                    return Some(off);
+                }
+                off += p.a.len() + p.b.len();
+            }
+        }
+        None
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.pairs
+            .iter()
+            .flat_map(|m| m.values())
+            .map(|p| p.a.len() + p.b.len())
+            .sum()
+    }
+
+    fn flatten_into(&self, out: &mut Vec<f32>) {
+        for m in &self.pairs {
+            for t in self.targets.list() {
+                let p = &m[t];
+                out.extend_from_slice(p.a.as_f32());
+                out.extend_from_slice(p.b.as_f32());
+            }
+        }
+    }
+
+    fn unflatten_from(&mut self, take: &mut impl FnMut(&mut Tensor)) {
+        let list = self.targets.list();
+        for m in &mut self.pairs {
+            for t in &list {
+                let p = m.get_mut(t).unwrap();
+                take(&mut p.a);
+                take(&mut p.b);
+            }
+        }
+    }
+}
+
+impl AdapterHooks for LoraAdapter {
+    fn qkv_delta(&self, cx: &HookCtx, layer: usize, a_in: &Tensor,
+                 q: &mut Tensor, k: &mut Tensor, v: &mut Tensor)
+                 -> Result<()> {
+        if let Some(dq) = self.delta(cx, layer, "q", a_in)? {
+            ops::add_assign(q, &dq);
+        }
+        if let Some(dk) = self.delta(cx, layer, "k", a_in)? {
+            ops::add_assign(k, &dk);
+        }
+        if let Some(dv) = self.delta(cx, layer, "v", a_in)? {
+            ops::add_assign(v, &dv);
+        }
+        Ok(())
+    }
+
+    fn attn_out_delta(&self, cx: &HookCtx, layer: usize,
+                      attn_merged: &Tensor, o: &mut Tensor) -> Result<()> {
+        if let Some(d) = self.delta(cx, layer, "o", attn_merged)? {
+            ops::add_assign(o, &d);
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn qkv_delta_bwd(&self, cx: &HookCtx, layer: usize, a_in: &Tensor,
+                     dq: &Tensor, dk: &Tensor, dv: &Tensor,
+                     grads: &mut AdapterGrads) -> Result<Option<Tensor>> {
+        let mut extra: Option<Tensor> = None;
+        for (target, dt) in [("q", dq), ("k", dk), ("v", dv)] {
+            if let Some((da, db, dx)) =
+                self.delta_bwd(cx, layer, target, a_in, dt)?
+            {
+                let off = self.flat_offset(layer, target).unwrap();
+                grads.accumulate(off, da.len(), &da, &db);
+                match &mut extra {
+                    Some(e) => ops::add_assign(e, &dx),
+                    None => extra = Some(dx),
+                }
+            }
+        }
+        Ok(extra)
+    }
+
+    fn attn_out_delta_bwd(&self, cx: &HookCtx, layer: usize,
+                          attn_merged: &Tensor, do_: &Tensor,
+                          grads: &mut AdapterGrads)
+                          -> Result<Option<Tensor>> {
+        let Some((da, db, dx)) =
+            self.delta_bwd(cx, layer, "o", attn_merged, do_)?
+        else {
+            return Ok(None);
+        };
+        let off = self.flat_offset(layer, "o").unwrap();
+        grads.accumulate(off, da.len(), &da, &db);
+        Ok(Some(dx))
+    }
+
+    fn trainable(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// IA3
+// ---------------------------------------------------------------------------
+
+/// IA3: learned elementwise rescaling of k, v and the MLP intermediate.
+#[derive(Debug, Clone)]
+pub struct Ia3Adapter {
+    /// Per layer: elementwise scales for k, v (each (D,)) and the mlp
+    /// intermediate (D_ff,).
+    pub k_scale: Vec<Tensor>,
+    pub v_scale: Vec<Tensor>,
+    pub ff_scale: Vec<Tensor>,
+}
+
+impl Ia3Adapter {
+    pub fn n_params(&self) -> usize {
+        self.k_scale.iter().map(|t| t.len()).sum::<usize>()
+            + self.v_scale.iter().map(|t| t.len()).sum::<usize>()
+            + self.ff_scale.iter().map(|t| t.len()).sum::<usize>()
+    }
+
+    fn flatten_into(&self, out: &mut Vec<f32>) {
+        for t in self.k_scale.iter()
+            .chain(&self.v_scale)
+            .chain(&self.ff_scale)
+        {
+            out.extend_from_slice(t.as_f32());
+        }
+    }
+
+    fn unflatten_from(&mut self, take: &mut impl FnMut(&mut Tensor)) {
+        for t in self.k_scale.iter_mut()
+            .chain(self.v_scale.iter_mut())
+            .chain(self.ff_scale.iter_mut())
+        {
+            take(t);
+        }
+    }
+}
+
+impl AdapterHooks for Ia3Adapter {
+    fn kv_scale(&self, layer: usize, k: &mut Tensor, v: &mut Tensor) {
+        *k = ia3_apply(k, &self.k_scale[layer]);
+        *v = ia3_apply(v, &self.v_scale[layer]);
+    }
+
+    fn kv_scale_bwd(&self, layer: usize, dk: &Tensor, dv: &Tensor)
+                    -> (Tensor, Tensor) {
+        // dx = dy * scale (dscale is dropped: IA3 is inference-only in
+        // this implementation — its gradients are not in the flat layout)
+        (
+            ia3_apply(dk, &self.k_scale[layer]),
+            ia3_apply(dv, &self.v_scale[layer]),
+        )
+    }
+
+    fn ffn_scale(&self, layer: usize, u_pre: &mut Tensor) {
+        *u_pre = ia3_apply(u_pre, &self.ff_scale[layer]);
+    }
+
+    fn ffn_scale_bwd(&self, layer: usize, u_pre: &Tensor, dy: &Tensor)
+                     -> Tensor {
+        let (_dscale, dx) = ia3_bwd(u_pre, &self.ff_scale[layer], dy);
+        dx
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prefix tuning
+// ---------------------------------------------------------------------------
+
+/// Prefix tuning: a learned per-layer KV prefix occupying cache rows
+/// (but not token positions) ahead of the real sequence.
+#[derive(Debug, Clone)]
+pub struct PrefixAdapter {
+    pub prefix_len: usize,
+    /// Learned per-layer KV prefix, each (BH, P, H).
+    pub k_prefix: Vec<Tensor>,
+    pub v_prefix: Vec<Tensor>,
+}
+
+impl PrefixAdapter {
+    pub fn n_params(&self) -> usize {
+        self.k_prefix.iter().map(|t| t.len()).sum::<usize>()
+            + self.v_prefix.iter().map(|t| t.len()).sum::<usize>()
+    }
+
+    fn flatten_into(&self, out: &mut Vec<f32>) {
+        for t in self.k_prefix.iter().chain(&self.v_prefix) {
+            out.extend_from_slice(t.as_f32());
+        }
+    }
+
+    fn unflatten_from(&mut self, take: &mut impl FnMut(&mut Tensor)) {
+        for t in self.k_prefix.iter_mut()
+            .chain(self.v_prefix.iter_mut())
+        {
+            take(t);
+        }
+    }
+}
+
+impl AdapterHooks for PrefixAdapter {
+    fn seed_kv(&self, layer: usize) -> Option<(&Tensor, &Tensor)> {
+        Some((&self.k_prefix[layer], &self.v_prefix[layer]))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The adapter sum type (storage / construction / optimizer layout)
+// ---------------------------------------------------------------------------
+
+/// A client's adapter state.  Behavior flows through
+/// [`Adapter::hooks`]; this enum only owns the parameters and the
+/// flattened optimizer layout.
 #[derive(Debug, Clone)]
 pub enum Adapter {
-    Lora {
-        rank: usize,
-        targets: LoraTargets,
-        /// alpha / rank.
-        scale: f32,
-        /// `pairs[layer]["q"|"k"|"v"|"o"]`.
-        pairs: Vec<HashMap<&'static str, LoraPair>>,
-    },
-    Ia3 {
-        /// Per layer: elementwise scales for k, v (each (D,)) and mlp
-        /// intermediate (D_ff,).
-        k_scale: Vec<Tensor>,
-        v_scale: Vec<Tensor>,
-        ff_scale: Vec<Tensor>,
-    },
-    Prefix {
-        /// Learned per-layer KV prefix, each (BH, P, H).
-        prefix_len: usize,
-        k_prefix: Vec<Tensor>,
-        v_prefix: Vec<Tensor>,
-    },
+    Lora(LoraAdapter),
+    Ia3(Ia3Adapter),
+    Prefix(PrefixAdapter),
 }
 
 impl Adapter {
+    /// The behavior object the layer walker calls into.
+    pub fn hooks(&self) -> &dyn AdapterHooks {
+        match self {
+            Adapter::Lora(a) => a,
+            Adapter::Ia3(a) => a,
+            Adapter::Prefix(a) => a,
+        }
+    }
+
     /// Load the deterministic LoRA init exported by aot.py
     /// (`adapters_<model>.bin`, keys `r{rank}.l{l}.{t}.{a|b}`).
     pub fn lora_from_artifacts(cfg: &ModelConfig, dir: &std::path::Path,
@@ -115,17 +524,17 @@ impl Adapter {
             }
             pairs.push(m);
         }
-        Ok(Adapter::Lora { rank, targets, scale, pairs })
+        Ok(Adapter::Lora(LoraAdapter { rank, targets, scale, pairs }))
     }
 
     /// Fresh IA3 adapter (scales initialized to 1 = identity).
     pub fn ia3(cfg: &ModelConfig) -> Adapter {
         let ones = |n: usize| Tensor::from_f32(vec![1.0; n], &[n]);
-        Adapter::Ia3 {
+        Adapter::Ia3(Ia3Adapter {
             k_scale: (0..cfg.n_layers).map(|_| ones(cfg.d_model)).collect(),
             v_scale: (0..cfg.n_layers).map(|_| ones(cfg.d_model)).collect(),
             ff_scale: (0..cfg.n_layers).map(|_| ones(cfg.d_ff)).collect(),
-        }
+        })
     }
 
     /// Fresh prefix adapter with a small deterministic init.
@@ -137,30 +546,19 @@ impl Adapter {
         let mk = |g: &mut crate::coordinator::privacy::NoiseGen| {
             g.tensor(&[bh, prefix_len, h])
         };
-        Adapter::Prefix {
+        Adapter::Prefix(PrefixAdapter {
             prefix_len,
             k_prefix: (0..cfg.n_layers).map(|_| mk(&mut gen)).collect(),
             v_prefix: (0..cfg.n_layers).map(|_| mk(&mut gen)).collect(),
-        }
+        })
     }
 
     /// Trainable parameter count.
     pub fn n_params(&self) -> usize {
         match self {
-            Adapter::Lora { pairs, .. } => pairs
-                .iter()
-                .flat_map(|m| m.values())
-                .map(|p| p.a.len() + p.b.len())
-                .sum(),
-            Adapter::Ia3 { k_scale, v_scale, ff_scale } => {
-                k_scale.iter().map(|t| t.len()).sum::<usize>()
-                    + v_scale.iter().map(|t| t.len()).sum::<usize>()
-                    + ff_scale.iter().map(|t| t.len()).sum::<usize>()
-            }
-            Adapter::Prefix { k_prefix, v_prefix, .. } => {
-                k_prefix.iter().map(|t| t.len()).sum::<usize>()
-                    + v_prefix.iter().map(|t| t.len()).sum::<usize>()
-            }
+            Adapter::Lora(a) => a.n_params(),
+            Adapter::Ia3(a) => a.n_params(),
+            Adapter::Prefix(a) => a.n_params(),
         }
     }
 
@@ -169,25 +567,9 @@ impl Adapter {
     pub fn flatten(&self) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.n_params());
         match self {
-            Adapter::Lora { pairs, targets, .. } => {
-                for m in pairs {
-                    for t in targets.list() {
-                        let p = &m[t];
-                        out.extend_from_slice(p.a.as_f32());
-                        out.extend_from_slice(p.b.as_f32());
-                    }
-                }
-            }
-            Adapter::Ia3 { k_scale, v_scale, ff_scale } => {
-                for t in k_scale.iter().chain(v_scale).chain(ff_scale) {
-                    out.extend_from_slice(t.as_f32());
-                }
-            }
-            Adapter::Prefix { k_prefix, v_prefix, .. } => {
-                for t in k_prefix.iter().chain(v_prefix) {
-                    out.extend_from_slice(t.as_f32());
-                }
-            }
+            Adapter::Lora(a) => a.flatten_into(&mut out),
+            Adapter::Ia3(a) => a.flatten_into(&mut out),
+            Adapter::Prefix(a) => a.flatten_into(&mut out),
         }
         out
     }
@@ -204,59 +586,42 @@ impl Adapter {
             off += n;
         };
         match self {
-            Adapter::Lora { pairs, targets, .. } => {
-                let list = targets.list();
-                for m in pairs {
-                    for t in &list {
-                        let p = m.get_mut(t).unwrap();
-                        take(&mut p.a);
-                        take(&mut p.b);
-                    }
-                }
-            }
-            Adapter::Ia3 { k_scale, v_scale, ff_scale } => {
-                for t in k_scale.iter_mut().chain(v_scale).chain(ff_scale) {
-                    take(t);
-                }
-            }
-            Adapter::Prefix { k_prefix, v_prefix, .. } => {
-                for t in k_prefix.iter_mut().chain(v_prefix) {
-                    take(t);
-                }
-            }
+            Adapter::Lora(a) => a.unflatten_from(&mut take),
+            Adapter::Ia3(a) => a.unflatten_from(&mut take),
+            Adapter::Prefix(a) => a.unflatten_from(&mut take),
         }
         Ok(())
     }
+}
 
-    /// IA3 application: y = x * scale (broadcast last dim).
-    pub fn ia3_apply(x: &Tensor, scale: &Tensor) -> Tensor {
-        let (t, d) = (x.shape[0], x.shape[1]);
-        assert_eq!(scale.len(), d);
-        let (xs, ss) = (x.as_f32(), scale.as_f32());
-        let mut out = vec![0.0f32; t * d];
-        for r in 0..t {
-            for c in 0..d {
-                out[r * d + c] = xs[r * d + c] * ss[c];
-            }
+/// IA3 application: y = x * scale (broadcast last dim).
+pub fn ia3_apply(x: &Tensor, scale: &Tensor) -> Tensor {
+    let (t, d) = (x.shape[0], x.shape[1]);
+    assert_eq!(scale.len(), d);
+    let (xs, ss) = (x.as_f32(), scale.as_f32());
+    let mut out = vec![0.0f32; t * d];
+    for r in 0..t {
+        for c in 0..d {
+            out[r * d + c] = xs[r * d + c] * ss[c];
         }
-        Tensor::from_f32(out, &[t, d])
     }
+    Tensor::from_f32(out, &[t, d])
+}
 
-    /// IA3 gradients: (d_scale = sum_t x*dy, dx = dy*scale).
-    pub fn ia3_bwd(x: &Tensor, scale: &Tensor, dy: &Tensor)
-                   -> (Tensor, Tensor) {
-        let (t, d) = (x.shape[0], x.shape[1]);
-        let (xs, ss, dys) = (x.as_f32(), scale.as_f32(), dy.as_f32());
-        let mut dscale = vec![0.0f32; d];
-        let mut dx = vec![0.0f32; t * d];
-        for r in 0..t {
-            for c in 0..d {
-                dscale[c] += xs[r * d + c] * dys[r * d + c];
-                dx[r * d + c] = dys[r * d + c] * ss[c];
-            }
+/// IA3 gradients: (d_scale = sum_t x*dy, dx = dy*scale).
+pub fn ia3_bwd(x: &Tensor, scale: &Tensor, dy: &Tensor)
+               -> (Tensor, Tensor) {
+    let (t, d) = (x.shape[0], x.shape[1]);
+    let (xs, ss, dys) = (x.as_f32(), scale.as_f32(), dy.as_f32());
+    let mut dscale = vec![0.0f32; d];
+    let mut dx = vec![0.0f32; t * d];
+    for r in 0..t {
+        for c in 0..d {
+            dscale[c] += xs[r * d + c] * dys[r * d + c];
+            dx[r * d + c] = dys[r * d + c] * ss[c];
         }
-        (Tensor::from_f32(dscale, &[d]), Tensor::from_f32(dx, &[t, d]))
     }
+    (Tensor::from_f32(dscale, &[d]), Tensor::from_f32(dx, &[t, d]))
 }
 
 /// Gradient accumulator with the same flattened layout as the adapter.
@@ -270,31 +635,31 @@ impl AdapterGrads {
         AdapterGrads { flat: vec![0.0; a.n_params()] }
     }
 
+    /// Accumulate an `(dA, dB)` pair at flat offset `off` (`a_len` =
+    /// length of the A block, so dB lands at `off + a_len`).
+    pub fn accumulate(&mut self, off: usize, a_len: usize, da: &Tensor,
+                      db: &Tensor) {
+        for (i, g) in da.as_f32().iter().enumerate() {
+            self.flat[off + i] += g;
+        }
+        let boff = off + a_len;
+        for (i, g) in db.as_f32().iter().enumerate() {
+            self.flat[boff + i] += g;
+        }
+    }
+
     /// Accumulate a LoRA (dA, dB) pair at its flattened offset.
     pub fn add_lora(&mut self, adapter: &Adapter, layer: usize,
                     target: &str, da: &Tensor, db: &Tensor) {
-        let Adapter::Lora { pairs, targets, .. } = adapter else {
+        let Adapter::Lora(lora) = adapter else {
             panic!("add_lora on non-LoRA adapter");
         };
-        let list = targets.list();
-        let mut off = 0;
-        for (l, m) in pairs.iter().enumerate() {
-            for t in &list {
-                let p = &m[t];
-                if l == layer && *t == target {
-                    for (i, g) in da.as_f32().iter().enumerate() {
-                        self.flat[off + i] += g;
-                    }
-                    let boff = off + p.a.len();
-                    for (i, g) in db.as_f32().iter().enumerate() {
-                        self.flat[boff + i] += g;
-                    }
-                    return;
-                }
-                off += p.a.len() + p.b.len();
-            }
-        }
-        panic!("lora target l{layer}.{target} not found");
+        let off = lora
+            .flat_offset(layer, target)
+            .unwrap_or_else(|| {
+                panic!("lora target l{layer}.{target} not found")
+            });
+        self.accumulate(off, da.len(), da, db);
     }
 
     pub fn scale(&mut self, s: f32) {
@@ -308,9 +673,9 @@ impl AdapterGrads {
     }
 }
 
-/// Convenience: LoRA delta application used by the clients' forward —
-/// y += scale * (x A) B via the provided apply function (PJRT artifact or
-/// native fallback).
+/// LoRA delta application used by the clients' forward when the fused
+/// PJRT artifact is unavailable or not worth the dispatch:
+/// `y = scale * (x A) B` natively.
 pub fn apply_lora_native(x: &Tensor, pair: &LoraPair, scale: f32)
                          -> Tensor {
     let xa = ops::matmul(x, &pair.a);
@@ -340,8 +705,12 @@ mod tests {
             }
             pairs.push(m);
         }
-        Adapter::Lora { rank: r, targets: LoraTargets::QKVO, scale: 2.0,
-                        pairs }
+        Adapter::Lora(LoraAdapter {
+            rank: r,
+            targets: LoraTargets::QKVO,
+            scale: 2.0,
+            pairs,
+        })
     }
 
     #[test]
@@ -381,7 +750,7 @@ mod tests {
     fn ia3_identity_at_ones() {
         let x = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
         let s = Tensor::from_f32(vec![1.0, 1.0], &[2]);
-        assert_eq!(Adapter::ia3_apply(&x, &s), x);
+        assert_eq!(ia3_apply(&x, &s), x);
     }
 
     #[test]
@@ -389,9 +758,63 @@ mod tests {
         let x = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
         let s = Tensor::from_f32(vec![0.5, 2.0], &[2]);
         let dy = Tensor::from_f32(vec![1.0, 1.0, 1.0, 1.0], &[2, 2]);
-        let (ds, dx) = Adapter::ia3_bwd(&x, &s, &dy);
+        let (ds, dx) = ia3_bwd(&x, &s, &dy);
         assert_eq!(ds.as_f32(), &[4.0, 6.0]); // sum of x per column
         assert_eq!(dx.as_f32(), &[0.5, 2.0, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn ia3_hooks_scale_and_unscale() {
+        let Adapter::Ia3(mut ia3) = Adapter::ia3(&SYM_TINY) else {
+            unreachable!()
+        };
+        // identity scales: hooks must be exact no-ops
+        let x = Tensor::from_f32(
+            (0..2 * SYM_TINY.d_model).map(|i| i as f32).collect(),
+            &[2, SYM_TINY.d_model]);
+        let (mut k, mut v) = (x.clone(), x.clone());
+        ia3.kv_scale(0, &mut k, &mut v);
+        assert_eq!(k, x);
+        // non-identity scale roundtrips through the backward map
+        for s in ia3.ff_scale[1].as_f32_mut() {
+            *s = 2.0;
+        }
+        let mut u = Tensor::from_f32(
+            vec![1.0; SYM_TINY.d_ff], &[1, SYM_TINY.d_ff]);
+        let u_pre = u.clone();
+        ia3.ffn_scale(1, &mut u);
+        assert_eq!(u.as_f32()[0], 2.0);
+        let dy = Tensor::from_f32(
+            vec![1.0; SYM_TINY.d_ff], &[1, SYM_TINY.d_ff]);
+        let dx = ia3.ffn_scale_bwd(1, &u_pre, &dy);
+        assert_eq!(dx.as_f32()[0], 2.0);
+    }
+
+    #[test]
+    fn prefix_hook_seeds_every_layer() {
+        let Adapter::Prefix(p) = Adapter::prefix(&SYM_TINY, 1, 4, 7)
+        else {
+            unreachable!()
+        };
+        for l in 0..SYM_TINY.n_layers {
+            let (k, v) = p.seed_kv(l).unwrap();
+            assert_eq!(k.shape, vec![SYM_TINY.n_heads, 4,
+                                     SYM_TINY.d_head()]);
+            assert_eq!(v.shape, k.shape);
+        }
+        // other hooks stay identity
+        assert!(!p.trainable());
+    }
+
+    #[test]
+    fn no_adapter_hooks_are_identity() {
+        let x = Tensor::from_f32(vec![1.0, 2.0], &[1, 2]);
+        let (mut k, mut v) = (x.clone(), x.clone());
+        NO_ADAPTER.kv_scale(0, &mut k, &mut v);
+        assert_eq!(k, x);
+        assert_eq!(v, x);
+        assert!(NO_ADAPTER.seed_kv(0).is_none());
+        assert!(!NO_ADAPTER.trainable());
     }
 
     #[test]

@@ -7,47 +7,61 @@
 //! only opportunistically share executor batches (paper section 3.2,
 //! design goal 5).
 //!
-//! * [`InferenceSession`] — prefill + token-by-token decode with a
-//!   bucketed KV cache (optionally host-offloaded).
+//! The transformer block is implemented **once**, in [`LayerWalker`]:
+//! batch prefill, incremental prefill, token decode, and the training
+//! forward are all the same walk, parameterized by how attention reads
+//! K/V ([`AttnPath`]) and whether activations are saved for backward.
+//! Adapter math enters only through the [`AdapterHooks`] interception
+//! points — the walker never inspects the adapter kind.
+//!
+//! * [`InferenceSession`] — prefill + decode against a bucketed KV cache
+//!   (optionally host-offloaded), built via
+//!   [`SessionBuilder`](crate::coordinator::SessionBuilder), driven
+//!   either by [`InferenceSession::generate`] or by the low-level
+//!   `prefill`/`decode_step` calls.
 //! * [`Trainer`] — full forward/backward/Adam iteration.  The backward
 //!   composes the executor's memory-optimized `dX = dY . W^T` with
-//!   client-side attention/LoRA/norm gradients, reproducing jax autodiff
-//!   (pinned by the golden integration tests).
+//!   client-side attention/adapter/norm gradients, reproducing jax
+//!   autodiff (pinned by the golden integration tests).
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
 use crate::config::{bucket_for, ModelConfig, ATTN_BATCHES, SEQ_BUCKETS,
                     TOKEN_BUCKETS};
-use crate::coordinator::adapter::{Adapter, AdapterGrads};
+use crate::coordinator::adapter::{Adapter, AdapterGrads, AdapterHooks,
+                                  HookCtx, NO_ADAPTER};
 use crate::coordinator::kv_cache::{KvCache, KvPlacement};
 use crate::coordinator::model_state::ClientWeights;
 use crate::coordinator::optimizer::Adam;
+use crate::coordinator::privacy::PrivacyCtx;
 use crate::coordinator::proto::{LayerId, Urgency};
 use crate::coordinator::virt_layer::VirtLayerCtx;
+use crate::coordinator::Deployment;
+use crate::error::{SymResult, SymbiosisError};
 use crate::runtime::Engine;
 use crate::tensor::{ops, Tensor};
+use crate::transport::LinkKind;
 
 /// Shared per-client context: model dims, client-side weights, executor
-/// proxy, and the engine used for client-side artifacts (attention, LoRA,
-/// loss) — in a local placement this is the same engine as the
+/// proxy, and the engine used for client-side artifacts (attention,
+/// adapters, loss) — in a local placement this is the same engine as the
 /// executor's.
+#[derive(Clone)]
 pub struct ClientCore {
     pub cfg: ModelConfig,
     pub engine: Arc<Engine>,
     pub virt: Arc<VirtLayerCtx>,
     pub weights: ClientWeights,
     pub adapter: Option<Adapter>,
-    /// LoRA alpha/rank scale (ignored for other adapters).
-    pub lora_scale: f32,
 }
 
 /// Per-layer activations saved *by the client* for its backward pass.
 /// The executor saves nothing (paper section 3.6).
 struct SavedLayer {
     h_in: Tensor,        // (T, D) input to the block
-    a_in: Tensor,        // (T, D) rmsnorm1 output (LoRA bwd input)
+    a_in: Tensor,        // (T, D) rmsnorm1 output (adapter bwd input)
     qh: Tensor,          // (BH, S, H)
     kh: Tensor,
     vh: Tensor,
@@ -62,23 +76,22 @@ struct SavedActs {
 }
 
 impl ClientCore {
-    fn check_batch(&self, batch: usize) -> Result<()> {
+    fn check_batch(&self, batch: usize) -> Result<(), SymbiosisError> {
         if !ATTN_BATCHES.contains(&batch) {
-            bail!("batch {batch} has no attention artifact \
-                   (exported: {ATTN_BATCHES:?})");
+            return Err(SymbiosisError::UnsupportedBatch {
+                batch,
+                supported: ATTN_BATCHES,
+            });
         }
         Ok(())
     }
 
-    /// `(T = B*S, D) -> (B*NH, S, H)`: per-sequence head split for the
-    /// attention artifacts (sequences are concatenated token-major).
-    fn to_heads(&self, x: &Tensor, batch: usize) -> Tensor {
-        to_heads_batched(x, batch, self.cfg.n_heads)
-    }
-
-    /// Inverse of [`Self::to_heads`].
-    fn from_heads(&self, x: &Tensor, batch: usize) -> Tensor {
-        from_heads_batched(x, batch)
+    /// The adapter's hook set, or the identity hooks for a bare client.
+    fn hooks(&self) -> &dyn AdapterHooks {
+        self.adapter
+            .as_ref()
+            .map(|a| a.hooks())
+            .unwrap_or(&NO_ADAPTER)
     }
 
     /// Zero-pad `(BH, S, H)` to `(BH, Sb, H)` along the sequence axis.
@@ -128,171 +141,180 @@ impl ClientCore {
         Tensor::from_f32(out, &[t, 3 * d])
     }
 
-    /// LoRA delta via the fused Pallas artifact (bucketed tokens), with a
-    /// native fallback when no bucket fits.
-    fn lora_delta(&self, x: &Tensor, layer: usize, target: &str)
-                  -> Result<Option<Tensor>> {
-        let Some(Adapter::Lora { rank, targets, scale, pairs }) =
-            self.adapter.as_ref()
-        else {
-            return Ok(None);
-        };
-        let on = match target {
-            "q" => targets.q,
-            "k" => targets.k,
-            "v" => targets.v,
-            "o" => targets.o,
-            _ => false,
-        };
-        if !on {
-            return Ok(None);
-        }
-        let pair = &pairs[layer][target];
-        let t = x.shape[0];
-        let d = self.cfg.d_model;
-        // For tiny activations (decode steps) the PJRT dispatch costs
-        // ~100x the math: run the adapter natively on the client — the
-        // paper's observation that client-side compute is light enough
-        // for weak devices applies to the host CPU here (perf log in
-        // EXPERIMENTS.md §Perf).
-        if t < 8 {
-            return Ok(Some(crate::coordinator::adapter::apply_lora_native(
-                x, pair, *scale)));
-        }
-        let name = match bucket_for(t, TOKEN_BUCKETS) {
-            Some(tb) => format!("lora_fwd_t{tb}_{d}x{rank}x{d}"),
-            None => {
-                return Ok(Some(
-                    crate::coordinator::adapter::apply_lora_native(
-                        x, pair, *scale)));
-            }
-        };
-        if !self.engine.has_artifact(&name) {
-            return Ok(Some(crate::coordinator::adapter::apply_lora_native(
-                x, pair, *scale)));
-        }
-        let tb = bucket_for(t, TOKEN_BUCKETS).unwrap();
-        let xp = x.pad_rows(tb);
-        let out = self.engine.execute(&name, &[&xp, &pair.a, &pair.b])?;
-        Ok(Some(ops::scale(&out[0].slice_rows(0, t), *scale)))
-    }
-
-    /// LoRA backward through the fused artifact: (dA, dB, dX), all
-    /// already multiplied by the adapter scale.
-    fn lora_bwd(&self, x: &Tensor, dy: &Tensor, layer: usize, target: &str)
-                -> Result<Option<(Tensor, Tensor, Tensor)>> {
-        let Some(Adapter::Lora { rank, targets, scale, pairs }) =
-            self.adapter.as_ref()
-        else {
-            return Ok(None);
-        };
-        let on = match target {
-            "q" => targets.q,
-            "k" => targets.k,
-            "v" => targets.v,
-            "o" => targets.o,
-            _ => false,
-        };
-        if !on {
-            return Ok(None);
-        }
-        let pair = &pairs[layer][target];
-        let t = x.shape[0];
-        let d = self.cfg.d_model;
-        let tb = bucket_for(t, TOKEN_BUCKETS)
-            .context("token count exceeds lora bwd buckets")?;
-        let name = format!("lora_bwd_t{tb}_{d}x{rank}x{d}");
-        let xp = x.pad_rows(tb);
-        let dyp = dy.pad_rows(tb);
-        let out =
-            self.engine.execute(&name, &[&xp, &dyp, &pair.a, &pair.b])?;
-        Ok(Some((
-            ops::scale(&out[0], *scale),
-            ops::scale(&out[1], *scale),
-            ops::scale(&out[2].slice_rows(0, t), *scale),
-        )))
-    }
-
     /// Full forward over `batch` sequences of length `s` (token-major
-    /// concat).  Saves activations when `save` is set (training) and
-    /// appends K/V when `kv` is set (inference prefill).
+    /// concat) through the shared layer walker.  Saves activations when
+    /// `save` is set (training) and appends K/V when `kv` is set
+    /// (inference prefill).
     fn forward_full(&self, tokens: &[i32], batch: usize, urgency: Urgency,
-                    mut save: Option<&mut SavedActs>,
-                    mut kv: Option<&mut KvCache>) -> Result<Tensor> {
+                    save: Option<&mut SavedActs>,
+                    kv: Option<&mut KvCache>) -> Result<Tensor> {
         self.check_batch(batch)?;
         let t = tokens.len();
         let s = t / batch;
-        let nh = self.cfg.n_heads;
         let sb = bucket_for(s, SEQ_BUCKETS)
-            .with_context(|| format!("seq len {s} exceeds buckets"))?;
-        let d = self.cfg.d_model;
+            .ok_or(SymbiosisError::ContextExceeded {
+                len: s,
+                limit: *SEQ_BUCKETS.last().unwrap(),
+            })?;
 
         // positions restart per sequence
         let positions: Vec<i32> =
             (0..t).map(|i| (i % s) as i32).collect();
-        let mut h = self.virt.embed(
+        let h = self.virt.embed(
             Tensor::from_i32(tokens.to_vec(), &[t]),
             Tensor::from_i32(positions, &[t]),
             urgency,
         )?;
+        LayerWalker::full(self, batch, s, sb, urgency, save, kv).walk(h)
+    }
+}
 
-        for l in 0..self.cfg.n_layers {
+// ---------------------------------------------------------------------------
+// The layer walker — the one transformer-block implementation
+// ---------------------------------------------------------------------------
+
+/// How the walk computes attention.
+enum AttnPath<'a> {
+    /// Full-sequence causal attention over freshly-projected K/V
+    /// (batch prefill and the training forward).  Optionally appends
+    /// each layer's K/V to the session cache.
+    Full {
+        batch: usize,
+        seq: usize,
+        seq_bucket: usize,
+        kv: Option<&'a mut KvCache>,
+    },
+    /// One token column attended against the session's KV cache
+    /// (decode and incremental prefill); `len` is the per-layer cache
+    /// length *after* this step's append, `seq_bucket` its bucket.
+    Cached {
+        batch: usize,
+        kv: &'a mut KvCache,
+        len: usize,
+        seq_bucket: usize,
+    },
+}
+
+/// One pass over all transformer blocks.  Every execution mode of the
+/// system — training forward, batch prefill, incremental prefill, token
+/// decode — is this walk; they differ only in the [`AttnPath`] and in
+/// whether activations are retained.
+struct LayerWalker<'a> {
+    core: &'a ClientCore,
+    urgency: Urgency,
+    path: AttnPath<'a>,
+    save: Option<&'a mut SavedActs>,
+    /// Attention artifact name — constant across layers, formatted once
+    /// per walk (not twice per layer per token).
+    attn_artifact: String,
+}
+
+impl<'a> LayerWalker<'a> {
+    fn full(core: &'a ClientCore, batch: usize, seq: usize,
+            seq_bucket: usize, urgency: Urgency,
+            save: Option<&'a mut SavedActs>, kv: Option<&'a mut KvCache>)
+            -> Self {
+        let attn_artifact = format!("attn_prefill_bh{}_s{seq_bucket}_h{}",
+                                    batch * core.cfg.n_heads,
+                                    core.cfg.d_head());
+        LayerWalker {
+            core,
+            urgency,
+            path: AttnPath::Full { batch, seq, seq_bucket, kv },
+            save,
+            attn_artifact,
+        }
+    }
+
+    fn cached(core: &'a ClientCore, batch: usize, kv: &'a mut KvCache,
+              len: usize, seq_bucket: usize, urgency: Urgency) -> Self {
+        let attn_artifact = format!("attn_decode_bh{}_s{seq_bucket}_h{}",
+                                    batch * core.cfg.n_heads,
+                                    core.cfg.d_head());
+        LayerWalker {
+            core,
+            urgency,
+            path: AttnPath::Cached { batch, kv, len, seq_bucket },
+            save: None,
+            attn_artifact,
+        }
+    }
+
+    /// Attention for layer `l` over the adapter-adjusted projections.
+    /// Returns `(attn_merged, qh, kh, vh)` — the head tensors are
+    /// retained for the training backward.
+    fn attention(&mut self, l: usize, q: &Tensor, k: &Tensor, v: &Tensor)
+                 -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+        let core = self.core;
+        let nh = core.cfg.n_heads;
+        match &mut self.path {
+            AttnPath::Full { batch, seq, seq_bucket, kv } => {
+                let qh = to_heads_batched(q, *batch, nh);
+                let kh = to_heads_batched(k, *batch, nh);
+                let vh = to_heads_batched(v, *batch, nh);
+                if let Some(cache) = kv.as_deref_mut() {
+                    cache.append(l, &kh, &vh);
+                }
+                let qp = ClientCore::pad_seq(&qh, *seq_bucket);
+                let kp = ClientCore::pad_seq(&kh, *seq_bucket);
+                let vp = ClientCore::pad_seq(&vh, *seq_bucket);
+                let attn_p = core.engine
+                    .execute(&self.attn_artifact, &[&qp, &kp, &vp])?;
+                let attn = ClientCore::unpad_seq(&attn_p[0], *seq);
+                let merged = from_heads_batched(&attn, *batch);
+                Ok((merged, qh, kh, vh))
+            }
+            AttnPath::Cached { batch, kv, len, seq_bucket } => {
+                // single-token head split: (B, D) -> (B*NH, 1, H)
+                let qh = q.split_heads_rows(*batch, nh);
+                let kh = k.split_heads_rows(*batch, nh);
+                let vh = v.split_heads_rows(*batch, nh);
+                let layer_len = kv.append(l, &kh, &vh);
+                debug_assert_eq!(layer_len, *len);
+                let (kc, vc) = kv.padded(l, *seq_bucket);
+                let kv_len = Tensor::scalar_i32(*len as i32);
+                // interactive decode rides the high-priority device lane
+                let prio = self.urgency == Urgency::Interactive;
+                let out = core.engine.execute_prio(
+                    &self.attn_artifact, &[&qh, &kc, &vc, &kv_len],
+                    prio)?;
+                let merged = out[0].merge_heads_rows(*batch);
+                Ok((merged, qh, kh, vh))
+            }
+        }
+    }
+
+    /// Run every block, final norm, and the LM head; returns logits.
+    fn walk(mut self, mut h: Tensor) -> Result<Tensor> {
+        let core = self.core;
+        let d = core.cfg.d_model;
+        let hooks = core.hooks();
+        let cx = HookCtx { engine: core.engine.as_ref(), cfg: &core.cfg };
+        for l in 0..core.cfg.n_layers {
             let h_in = h.clone();
-            let a_in = ops::rmsnorm(&h, &self.weights.norm1[l]);
-            let qkv = self.virt.forward(LayerId::Qkv(l), a_in.clone(),
-                                        urgency)?;
+            let a_in = ops::rmsnorm(&h, &core.weights.norm1[l]);
+            let qkv = core.virt.forward(LayerId::Qkv(l), a_in.clone(),
+                                        self.urgency)?;
             let mut q = qkv.slice_cols(0, d);
             let mut k = qkv.slice_cols(d, 2 * d);
             let mut v = qkv.slice_cols(2 * d, 3 * d);
-            if let Some(dq) = self.lora_delta(&a_in, l, "q")? {
-                ops::add_assign(&mut q, &dq);
-            }
-            if let Some(dk) = self.lora_delta(&a_in, l, "k")? {
-                ops::add_assign(&mut k, &dk);
-            }
-            if let Some(dv) = self.lora_delta(&a_in, l, "v")? {
-                ops::add_assign(&mut v, &dv);
-            }
-            if let Some(Adapter::Ia3 { k_scale, v_scale, .. }) =
-                self.adapter.as_ref()
-            {
-                k = Adapter::ia3_apply(&k, &k_scale[l]);
-                v = Adapter::ia3_apply(&v, &v_scale[l]);
-            }
-            let qh = self.to_heads(&q, batch);
-            let kh = self.to_heads(&k, batch);
-            let vh = self.to_heads(&v, batch);
-            if let Some(cache) = kv.as_deref_mut() {
-                cache.append(l, &kh, &vh);
-            }
-            // Client-side attention through the Pallas prefill artifact.
-            let name = format!("attn_prefill_bh{}_s{sb}_h{}", batch * nh,
-                               self.cfg.d_head());
-            let qp = Self::pad_seq(&qh, sb);
-            let kp = Self::pad_seq(&kh, sb);
-            let vp = Self::pad_seq(&vh, sb);
-            let attn_p = self.engine.execute(&name, &[&qp, &kp, &vp])?;
-            let attn = Self::unpad_seq(&attn_p[0], s);
-            let attn_merged = self.from_heads(&attn, batch);
-            let mut o = self.virt.forward(LayerId::AttnOut(l),
-                                          attn_merged.clone(), urgency)?;
-            if let Some(do_) = self.lora_delta(&attn_merged, l, "o")? {
-                ops::add_assign(&mut o, &do_);
-            }
+            hooks.qkv_delta(&cx, l, &a_in, &mut q, &mut k, &mut v)?;
+            hooks.kv_scale(l, &mut k, &mut v);
+            let (attn_merged, qh, kh, vh) = self.attention(l, &q, &k, &v)?;
+            let mut o = core.virt.forward(LayerId::AttnOut(l),
+                                          attn_merged.clone(),
+                                          self.urgency)?;
+            hooks.attn_out_delta(&cx, l, &attn_merged, &mut o)?;
             let h_mid = ops::add(&h, &o);
-            let m_in = ops::rmsnorm(&h_mid, &self.weights.norm2[l]);
-            let mut u_pre = self.virt.forward(LayerId::MlpUp(l), m_in,
-                                              urgency)?;
-            if let Some(Adapter::Ia3 { ff_scale, .. }) =
-                self.adapter.as_ref()
-            {
-                u_pre = Adapter::ia3_apply(&u_pre, &ff_scale[l]);
-            }
+            let m_in = ops::rmsnorm(&h_mid, &core.weights.norm2[l]);
+            let mut u_pre = core.virt.forward(LayerId::MlpUp(l), m_in,
+                                              self.urgency)?;
+            hooks.ffn_scale(l, &mut u_pre);
             let u = ops::gelu(&u_pre);
-            let down =
-                self.virt.forward(LayerId::MlpDown(l), u, urgency)?;
+            let down = core.virt.forward(LayerId::MlpDown(l), u,
+                                         self.urgency)?;
             let h_out = ops::add(&h_mid, &down);
-            if let Some(sv) = save.as_deref_mut() {
+            if let Some(sv) = self.save.as_deref_mut() {
                 sv.layers.push(SavedLayer {
                     h_in,
                     a_in,
@@ -306,11 +328,145 @@ impl ClientCore {
             }
             h = h_out;
         }
-        if let Some(sv) = save.as_deref_mut() {
+        if let Some(sv) = self.save.as_deref_mut() {
             sv.h_last = h.clone();
         }
-        let hf = ops::rmsnorm(&h, &self.weights.norm_f);
-        self.virt.forward(LayerId::LmHead, hf, urgency)
+        let hf = ops::rmsnorm(&h, &core.weights.norm_f);
+        core.virt.forward(LayerId::LmHead, hf, self.urgency)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generation configuration
+// ---------------------------------------------------------------------------
+
+/// When layer invocations are scheduled relative to other clients'
+/// (paper section 3.7: the wait budget is based on request size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UrgencyPolicy {
+    /// Batch prefill invocations.
+    pub prefill: Urgency,
+    /// Decode / incremental-prefill invocations.  `Interactive` also
+    /// routes client-side decode attention onto the engine's
+    /// high-priority lane.
+    pub decode: Urgency,
+}
+
+impl Default for UrgencyPolicy {
+    fn default() -> Self {
+        UrgencyPolicy {
+            prefill: Urgency::Bulk,
+            decode: Urgency::Interactive,
+        }
+    }
+}
+
+/// Token selection strategy for [`InferenceSession::generate`].
+#[derive(Debug, Clone)]
+pub enum Sampling {
+    /// Deterministic argmax (byte-identical to the low-level
+    /// `prefill` + `decode_step` loop).
+    Greedy,
+    /// Softmax over the top-k logits at the given temperature, driven
+    /// by a deterministic xorshift stream seeded with `seed`.
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct GenerationConfig {
+    /// Tokens to emit per sequence, *including* the one produced by
+    /// prefill.
+    pub max_tokens: usize,
+    /// A sequence stops (individually) right after emitting any of
+    /// these.
+    pub stop_tokens: Vec<i32>,
+    pub sampling: Sampling,
+}
+
+impl GenerationConfig {
+    /// Greedy decoding, no stop tokens.
+    pub fn greedy(max_tokens: usize) -> Self {
+        GenerationConfig {
+            max_tokens,
+            stop_tokens: Vec::new(),
+            sampling: Sampling::Greedy,
+        }
+    }
+
+    /// Temperature + top-k sampling with a deterministic seed.
+    pub fn sampled(max_tokens: usize, temperature: f32, top_k: usize,
+                   seed: u64) -> Self {
+        GenerationConfig {
+            max_tokens,
+            stop_tokens: Vec::new(),
+            sampling: Sampling::TopK { k: top_k, temperature, seed },
+        }
+    }
+
+    pub fn with_stop(mut self, token: i32) -> Self {
+        self.stop_tokens.push(token);
+        self
+    }
+}
+
+/// Stateful token selector (sampling carries an RNG stream).
+enum Sampler {
+    Greedy,
+    TopK { k: usize, temperature: f32, state: u64 },
+}
+
+impl Sampler {
+    fn new(s: &Sampling) -> Self {
+        match s {
+            Sampling::Greedy => Sampler::Greedy,
+            Sampling::TopK { k, temperature, seed } => Sampler::TopK {
+                k: (*k).max(1),
+                temperature: *temperature,
+                // xorshift must not start at 0; every other seed keeps
+                // its own distinct stream
+                state: if *seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { *seed },
+            },
+        }
+    }
+
+    fn pick(&mut self, logits: &Tensor, row: usize) -> i32 {
+        match self {
+            Sampler::Greedy => ops::argmax_row(logits, row),
+            Sampler::TopK { k, temperature, state } => {
+                let v = logits.shape[logits.shape.len() - 1];
+                let r = &logits.as_f32()[row * v..(row + 1) * v];
+                let take = (*k).min(v);
+                // partition the top-k first — O(V + k log k), not a
+                // full O(V log V) vocab sort per token
+                let mut idx: Vec<usize> = (0..v).collect();
+                if take < v {
+                    idx.select_nth_unstable_by(
+                        take - 1, |&a, &b| r[b].total_cmp(&r[a]));
+                    idx.truncate(take);
+                }
+                idx.sort_unstable_by(|&a, &b| r[b].total_cmp(&r[a]));
+                let t = temperature.max(1e-6);
+                let m = r[idx[0]];
+                let probs: Vec<f32> =
+                    idx.iter().map(|&i| ((r[i] - m) / t).exp()).collect();
+                let sum: f32 = probs.iter().sum();
+                // xorshift64* uniform in [0, 1)
+                *state ^= *state << 13;
+                *state ^= *state >> 7;
+                *state ^= *state << 17;
+                let u = (*state >> 11) as f32 / (1u64 << 53) as f32;
+                let target = u * sum;
+                let mut acc = 0.0f32;
+                for (j, p) in probs.iter().enumerate() {
+                    acc += p;
+                    if acc >= target {
+                        return idx[j] as i32;
+                    }
+                }
+                *idx.last().unwrap() as i32
+            }
+        }
     }
 }
 
@@ -319,7 +475,10 @@ impl ClientCore {
 // ---------------------------------------------------------------------------
 
 /// An inference job: prefill once, then decode token-by-token against the
-/// client-owned KV cache.
+/// client-owned KV cache.  Build one with
+/// [`Deployment::session`](crate::coordinator::Deployment::session) and
+/// drive it with [`Self::generate`]; the low-level
+/// `prefill`/`decode_step` calls remain for step-at-a-time control.
 pub struct InferenceSession {
     pub core: ClientCore,
     pub batch: usize,
@@ -329,11 +488,13 @@ pub struct InferenceSession {
     /// Tokens generated so far (per sequence, column-major appended).
     pub generated: Vec<Vec<i32>>,
     pos: usize,
+    prefix_seeded: bool,
+    urgency: UrgencyPolicy,
 }
 
 impl InferenceSession {
     pub fn new(core: ClientCore, batch: usize,
-               kv_placement: KvPlacement) -> Result<Self> {
+               kv_placement: KvPlacement) -> SymResult<Self> {
         core.check_batch(batch)?;
         let kv = KvCache::new(core.cfg.n_layers, batch * core.cfg.n_heads,
                               core.cfg.d_head(), kv_placement);
@@ -344,161 +505,259 @@ impl InferenceSession {
             last: Vec::new(),
             generated: vec![Vec::new(); batch],
             pos: 0,
+            prefix_seeded: false,
+            urgency: UrgencyPolicy::default(),
         })
     }
 
-    /// If the adapter is Prefix, seed the cache with the learned prefix.
-    pub fn seed_prefix(&mut self) {
-        if let Some(Adapter::Prefix { k_prefix, v_prefix, .. }) =
-            self.core.adapter.clone()
-        {
-            for l in 0..self.core.cfg.n_layers {
-                self.kv.append(l, &k_prefix[l], &v_prefix[l]);
+    pub(crate) fn set_urgency(&mut self, u: UrgencyPolicy) {
+        self.urgency = u;
+    }
+
+    /// Reset per-request state (KV cache, emitted tokens, positions) so
+    /// the session can serve a new independent request without
+    /// re-wiring — the client stays registered with the executor, which
+    /// keeps the batching policies' client accounting accurate, and the
+    /// cache keeps its grown buffers.  Re-seeds the adapter's KV prefix
+    /// if it has one.
+    pub fn reset(&mut self) -> SymResult<()> {
+        self.kv.clear();
+        self.last.clear();
+        self.generated = vec![Vec::new(); self.batch];
+        self.pos = 0;
+        self.prefix_seeded = false;
+        self.seed_prefix()
+    }
+
+    /// Seed the cache with the adapter's learned KV prefix, if it has
+    /// one ([`AdapterHooks::seed_kv`]).  Idempotent; called
+    /// automatically by [`SessionBuilder::build`](
+    /// crate::coordinator::SessionBuilder::build), [`Self::generate`],
+    /// and [`Self::prefill_auto`].  Errors if the prefix was built for
+    /// a different batch size than this session's.
+    pub fn seed_prefix(&mut self) -> SymResult<()> {
+        if self.prefix_seeded {
+            return Ok(());
+        }
+        let bh = self.batch * self.core.cfg.n_heads;
+        let hooks = self.core.hooks();
+        let mut seeded = false;
+        for l in 0..self.core.cfg.n_layers {
+            if let Some((k, v)) = hooks.seed_kv(l) {
+                if k.shape[0] != bh {
+                    return Err(SymbiosisError::PrefixBatchMismatch {
+                        prefix_bh: k.shape[0],
+                        cache_bh: bh,
+                    });
+                }
+                debug_assert_eq!(v.shape[0], bh);
+                // prefix occupies cache rows but not token positions
+                self.kv.append(l, k, v);
+                seeded = true;
             }
-            // prefix occupies cache but not token positions
+        }
+        self.prefix_seeded = seeded;
+        Ok(())
+    }
+
+    fn record(&mut self, next: &[i32]) {
+        self.last = next.to_vec();
+        for (b, t) in next.iter().enumerate() {
+            self.generated[b].push(*t);
         }
     }
 
-    /// Process the prompt (`batch` sequences x `s` tokens, token-major).
-    /// Returns the first generated token per sequence.
-    pub fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<i32>> {
+    /// Process the prompt (`batch` sequences x `s` tokens, token-major)
+    /// through the bucketed prefill artifact.  Returns the first
+    /// generated token per sequence.
+    ///
+    /// Hard error when the KV cache already holds rows (e.g. a prefix
+    /// adapter seeded it): the prefill artifact has no notion of
+    /// pre-existing cache contents and would silently attend over the
+    /// wrong keys.  [`Self::generate`] and [`Self::prefill_auto`] route
+    /// such sessions to [`Self::prefill_incremental`] automatically.
+    pub fn prefill(&mut self, tokens: &[i32]) -> SymResult<Vec<i32>> {
+        self.prefill_with(tokens, &mut Sampler::Greedy)
+    }
+
+    fn check_prompt(&self, tokens: &[i32]) -> SymResult<()> {
+        if tokens.len() < self.batch || tokens.len() % self.batch != 0 {
+            return Err(SymbiosisError::InvalidGenerationConfig(format!(
+                "prompt length {} is not a positive multiple of batch {}",
+                tokens.len(), self.batch)));
+        }
+        Ok(())
+    }
+
+    fn prefill_with(&mut self, tokens: &[i32], sampler: &mut Sampler)
+                    -> SymResult<Vec<i32>> {
+        self.check_prompt(tokens)?;
+        if !self.kv.is_empty() {
+            return Err(SymbiosisError::PrefilledCacheNeedsIncremental {
+                cached_rows: self.kv.len(),
+            });
+        }
         let s = tokens.len() / self.batch;
-        let logits = self.core.forward_full(tokens, self.batch,
-                                            Urgency::Bulk, None,
-                                            Some(&mut self.kv))?;
+        let logits = self.core
+            .forward_full(tokens, self.batch, self.urgency.prefill, None,
+                          Some(&mut self.kv))
+            .map_err(SymbiosisError::from)?;
         self.pos = s;
-        let v = self.core.cfg.vocab;
         let mut first = Vec::with_capacity(self.batch);
         for b in 0..self.batch {
             let row = (b + 1) * s - 1; // last token of sequence b
-            let _ = v;
-            first.push(ops::argmax_row(&logits, row));
+            first.push(sampler.pick(&logits, row));
         }
-        self.last = first.clone();
-        for (b, t) in first.iter().enumerate() {
-            self.generated[b].push(*t);
-        }
+        self.record(&first);
         Ok(first)
     }
 
     /// Incremental prefill: push the prompt through the *decode* path
     /// one token column at a time.  Slower than [`Self::prefill`] but
-    /// required when the KV cache holds a learned prefix (the bucketed
-    /// prefill artifact has no notion of pre-existing cache rows) — and
-    /// numerically identical to batch prefill otherwise (covered by an
-    /// integration test).  Returns the first generated token per
+    /// required when the KV cache holds a learned prefix — and
+    /// numerically identical to batch prefill otherwise (covered by the
+    /// golden equivalence tests).  Returns the first generated token per
     /// sequence.
     pub fn prefill_incremental(&mut self, tokens: &[i32])
-                               -> Result<Vec<i32>> {
+                               -> SymResult<Vec<i32>> {
+        self.prefill_incremental_with(tokens, &mut Sampler::Greedy)
+    }
+
+    fn prefill_incremental_with(&mut self, tokens: &[i32],
+                                sampler: &mut Sampler)
+                                -> SymResult<Vec<i32>> {
+        self.check_prompt(tokens)?;
         let s = tokens.len() / self.batch;
-        let mut next = Vec::new();
+        let mut logits = None;
         for col in 0..s {
             let column: Vec<i32> = (0..self.batch)
                 .map(|b| tokens[b * s + col])
                 .collect();
-            next = self.step_with_tokens(&column)?;
+            logits = Some(self.step_logits(&column)
+                .map_err(SymbiosisError::from)?);
         }
-        self.last = next.clone();
-        for (b, t) in next.iter().enumerate() {
-            self.generated[b].push(*t);
+        let logits = logits.expect("check_prompt guarantees s >= 1");
+        let mut next = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            next.push(sampler.pick(&logits, b));
         }
+        self.record(&next);
         Ok(next)
     }
 
-    /// One decode step: feed the last tokens, emit the next per sequence.
-    pub fn decode_step(&mut self) -> Result<Vec<i32>> {
+    /// Prefill, routed: a seeded cache (prefix adapter) takes the
+    /// incremental path, everything else the fast batch path.  Seeds
+    /// the adapter's KV prefix first if that has not happened yet.
+    pub fn prefill_auto(&mut self, tokens: &[i32]) -> SymResult<Vec<i32>> {
+        self.seed_prefix()?;
+        if self.kv.is_empty() {
+            self.prefill(tokens)
+        } else {
+            self.prefill_incremental(tokens)
+        }
+    }
+
+    /// One greedy decode step: feed the last tokens, emit the next per
+    /// sequence.
+    pub fn decode_step(&mut self) -> SymResult<Vec<i32>> {
         if self.last.is_empty() {
-            bail!("decode before prefill");
+            return Err(SymbiosisError::DecodeBeforePrefill);
         }
         let last = self.last.clone();
-        let next = self.step_with_tokens(&last)?;
-        self.last = next.clone();
-        for (i, t) in next.iter().enumerate() {
-            self.generated[i].push(*t);
+        let logits =
+            self.step_logits(&last).map_err(SymbiosisError::from)?;
+        let mut next = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            next.push(ops::argmax_row(&logits, b));
         }
+        self.record(&next);
         Ok(next)
+    }
+
+    /// Run a whole request: prefill (auto-routed), then decode until
+    /// every sequence hit a stop token or `max_tokens` were emitted.
+    /// Returns the tokens emitted *by this call* per sequence (on a
+    /// continued session, `self.generated` additionally retains earlier
+    /// requests' tokens).
+    pub fn generate(&mut self, prompt: &[i32], cfg: &GenerationConfig)
+                    -> SymResult<Vec<Vec<i32>>> {
+        if cfg.max_tokens == 0 {
+            return Err(SymbiosisError::InvalidGenerationConfig(
+                "max_tokens must be >= 1".to_string()));
+        }
+        let already: Vec<usize> =
+            self.generated.iter().map(|g| g.len()).collect();
+        let mut sampler = Sampler::new(&cfg.sampling);
+        // a prefix adapter on a hand-constructed session may not have
+        // seeded yet — do it here so routing below stays correct
+        self.seed_prefix()?;
+        let first = if self.kv.is_empty() {
+            self.prefill_with(prompt, &mut sampler)?
+        } else {
+            self.prefill_incremental_with(prompt, &mut sampler)?
+        };
+        let mut done: Vec<bool> = first
+            .iter()
+            .map(|t| cfg.stop_tokens.contains(t))
+            .collect();
+        let mut emitted = 1usize;
+        while emitted < cfg.max_tokens && !done.iter().all(|&d| d) {
+            let last = self.last.clone();
+            let logits =
+                self.step_logits(&last).map_err(SymbiosisError::from)?;
+            let mut next = Vec::with_capacity(self.batch);
+            for b in 0..self.batch {
+                if done[b] {
+                    // finished sequences keep feeding their last token
+                    // (cache stays aligned) but record nothing
+                    next.push(last[b]);
+                } else {
+                    next.push(sampler.pick(&logits, b));
+                }
+            }
+            for (b, t) in next.iter().enumerate() {
+                if !done[b] {
+                    self.generated[b].push(*t);
+                    if cfg.stop_tokens.contains(t) {
+                        done[b] = true;
+                    }
+                }
+            }
+            self.last = next;
+            emitted += 1;
+        }
+        Ok(self
+            .generated
+            .iter()
+            .zip(&already)
+            .map(|(g, &from)| g[from..].to_vec())
+            .collect())
     }
 
     /// Core single-column step: embed `tokens` at the current position,
-    /// run all layers against the cache, return per-sequence argmax.
-    fn step_with_tokens(&mut self, step_tokens: &[i32])
-                        -> Result<Vec<i32>> {
+    /// walk all layers against the cache, return the logits row per
+    /// sequence.
+    fn step_logits(&mut self, step_tokens: &[i32]) -> Result<Tensor> {
         let b = self.batch;
-        let nh = self.core.cfg.n_heads;
-        let d = self.core.cfg.d_model;
-        let urgency = Urgency::Interactive;
+        let urgency = self.urgency.decode;
         let tokens = Tensor::from_i32(step_tokens.to_vec(), &[b]);
         let positions =
             Tensor::from_i32(vec![self.pos as i32; b], &[b]);
-        let mut h = self.core.virt.embed(tokens, positions, urgency)?;
-        for l in 0..self.core.cfg.n_layers {
-            let a_in = ops::rmsnorm(&h, &self.core.weights.norm1[l]);
-            let qkv = self.core.virt.forward(LayerId::Qkv(l),
-                                             a_in.clone(), urgency)?;
-            let mut q = qkv.slice_cols(0, d);
-            let mut k = qkv.slice_cols(d, 2 * d);
-            let mut v = qkv.slice_cols(2 * d, 3 * d);
-            if let Some(dq) = self.core.lora_delta(&a_in, l, "q")? {
-                ops::add_assign(&mut q, &dq);
-            }
-            if let Some(dk) = self.core.lora_delta(&a_in, l, "k")? {
-                ops::add_assign(&mut k, &dk);
-            }
-            if let Some(dv) = self.core.lora_delta(&a_in, l, "v")? {
-                ops::add_assign(&mut v, &dv);
-            }
-            if let Some(Adapter::Ia3 { k_scale, v_scale, .. }) =
-                self.core.adapter.as_ref()
-            {
-                k = Adapter::ia3_apply(&k, &k_scale[l]);
-                v = Adapter::ia3_apply(&v, &v_scale[l]);
-            }
-            // single-token head split: (B, D) -> (B*NH, 1, H)
-            let qh = q.split_heads_rows(b, nh);
-            let kh = k.split_heads_rows(b, nh);
-            let vh = v.split_heads_rows(b, nh);
-            // Per-layer length: during this step, earlier layers already
-            // hold the new token while later ones don't yet.
-            let len = self.kv.append(l, &kh, &vh);
-            let sb = bucket_for(len, SEQ_BUCKETS)
-                .context("KV cache exceeds seq buckets")?;
-            let (kc, vc) = self.kv.padded(l, sb);
-            let name = format!("attn_decode_bh{}_s{sb}_h{}", b * nh,
-                               self.core.cfg.d_head());
-            let kv_len = Tensor::scalar_i32(len as i32);
-            // decode attention rides the high-priority device lane
-            let out = self.core.engine.execute_prio(
-                &name, &[&qh, &kc, &vc, &kv_len], true)?;
-            let attn = out[0].clone(); // (BH, 1, H)
-            let attn_merged = attn.merge_heads_rows(b);
-            let mut o = self.core.virt.forward(
-                LayerId::AttnOut(l), attn_merged.clone(), urgency)?;
-            if let Some(dl) = self.core.lora_delta(&attn_merged, l, "o")? {
-                ops::add_assign(&mut o, &dl);
-            }
-            let h_mid = ops::add(&h, &o);
-            let m_in = ops::rmsnorm(&h_mid, &self.core.weights.norm2[l]);
-            let mut u_pre = self.core.virt.forward(
-                LayerId::MlpUp(l), m_in, urgency)?;
-            if let Some(Adapter::Ia3 { ff_scale, .. }) =
-                self.core.adapter.as_ref()
-            {
-                u_pre = Adapter::ia3_apply(&u_pre, &ff_scale[l]);
-            }
-            let u = ops::gelu(&u_pre);
-            let down = self.core.virt.forward(
-                LayerId::MlpDown(l), u, urgency)?;
-            h = ops::add(&h_mid, &down);
-        }
-        let hf = ops::rmsnorm(&h, &self.core.weights.norm_f);
+        let h = self.core.virt.embed(tokens, positions, urgency)?;
+        // Per-layer cache length after this step's append: layers fill
+        // front-to-back within a step, all reaching `len`.
+        let len = self.kv.len() + 1;
+        let sb = bucket_for(len, SEQ_BUCKETS)
+            .ok_or(SymbiosisError::ContextExceeded {
+                len,
+                limit: *SEQ_BUCKETS.last().unwrap(),
+            })?;
         let logits =
-            self.core.virt.forward(LayerId::LmHead, hf, urgency)?;
-        let mut next = Vec::with_capacity(b);
-        for row in 0..b {
-            next.push(ops::argmax_row(&logits, row));
-        }
+            LayerWalker::cached(&self.core, b, &mut self.kv, len, sb,
+                                urgency)
+                .walk(h)?;
         self.pos += 1;
-        Ok(next)
+        Ok(logits)
     }
 
     pub fn kv_bytes(&self) -> u64 {
@@ -526,7 +785,9 @@ pub struct TrainOutcome {
     pub tokens: usize,
 }
 
-/// A fine-tuning job: forward, hand-rolled backward, Adam on the adapter.
+/// A fine-tuning job: forward, hand-rolled backward, Adam on the
+/// adapter.  Build one with
+/// [`Deployment::trainer`](crate::coordinator::Deployment::trainer).
 pub struct Trainer {
     pub core: ClientCore,
     pub batch: usize,
@@ -534,38 +795,50 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(core: ClientCore, batch: usize) -> Result<Self> {
+    pub fn new(core: ClientCore, batch: usize) -> SymResult<Self> {
         core.check_batch(batch)?;
-        // The hand-rolled backward accumulates LoRA gradients; IA3 and
-        // Prefix adapters are inference-only in this implementation
-        // (their gradient plumbing exists in `adapter::ia3_bwd` but is
-        // not wired into the flattened optimizer layout).
+        // Only adapters whose gradients are wired into the flattened
+        // optimizer layout can be fine-tuned (currently LoRA; IA3 and
+        // Prefix are inference-only — see `AdapterHooks::trainable`).
         let n = match core.adapter.as_ref() {
-            Some(a @ Adapter::Lora { .. }) => a.n_params(),
-            Some(_) => bail!(
-                "trainer currently supports LoRA adapters only \
-                 (IA3/Prefix are inference-only)"),
-            None => bail!("trainer requires a trainable adapter"),
+            Some(a) if a.hooks().trainable() => a.n_params(),
+            Some(_) => {
+                return Err(SymbiosisError::NotTrainable {
+                    adapter: "an inference-only adapter (IA3/Prefix)",
+                })
+            }
+            None => {
+                return Err(SymbiosisError::NotTrainable {
+                    adapter: "no adapter",
+                })
+            }
         };
         Ok(Trainer { core, batch, optimizer: Adam::new(n) })
     }
 
     /// One full iteration: forward, loss, backward, optimizer step.
     pub fn train_step(&mut self, tokens: &[i32], labels: &[i32])
-                      -> Result<TrainOutcome> {
+                      -> SymResult<TrainOutcome> {
         let (loss, grads) = self.loss_and_grads(tokens, labels)?;
         let grad_norm = grads.l2_norm();
         let adapter = self.core.adapter.as_mut().unwrap();
         let mut flat = adapter.flatten();
         self.optimizer
-            .step_artifact(&self.core.engine, &mut flat, &grads.flat)?;
-        adapter.unflatten(&flat)?;
+            .step_artifact(&self.core.engine, &mut flat, &grads.flat)
+            .map_err(SymbiosisError::from)?;
+        adapter.unflatten(&flat).map_err(SymbiosisError::from)?;
         Ok(TrainOutcome { loss, grad_norm, tokens: tokens.len() })
     }
 
     /// Forward + backward only (used by the golden gradient tests).
     pub fn loss_and_grads(&mut self, tokens: &[i32], labels: &[i32])
-                          -> Result<(f32, AdapterGrads)> {
+                          -> SymResult<(f32, AdapterGrads)> {
+        self.loss_and_grads_inner(tokens, labels)
+            .map_err(SymbiosisError::from)
+    }
+
+    fn loss_and_grads_inner(&mut self, tokens: &[i32], labels: &[i32])
+                            -> Result<(f32, AdapterGrads)> {
         let t = tokens.len();
         let urgency = Urgency::Training;
         let mut saved = SavedActs {
@@ -576,7 +849,11 @@ impl Trainer {
                                             Some(&mut saved), None)?;
         // loss + dlogits through the bucketed xent artifact
         let v = self.core.cfg.vocab;
-        let tb = bucket_for(t, TOKEN_BUCKETS).context("xent bucket")?;
+        let tb = bucket_for(t, TOKEN_BUCKETS)
+            .ok_or(SymbiosisError::ContextExceeded {
+                len: t,
+                limit: *TOKEN_BUCKETS.last().unwrap(),
+            })?;
         let mut lab = labels.to_vec();
         lab.resize(tb, 0);
         let mut w = vec![1.0f32; t];
@@ -591,8 +868,13 @@ impl Trainer {
         let loss = out[0].as_f32()[0];
         let dlogits = out[1].slice_rows(0, t);
 
-        let adapter_ref = self.core.adapter.as_ref().unwrap().clone();
-        let mut grads = AdapterGrads::zeros_like(&adapter_ref);
+        let hooks = self.core.hooks();
+        let cx = HookCtx {
+            engine: self.core.engine.as_ref(),
+            cfg: &self.core.cfg,
+        };
+        let mut grads =
+            AdapterGrads::zeros_like(self.core.adapter.as_ref().unwrap());
 
         // ---- backward ----
         let dhf = self.core.virt.backward(LayerId::LmHead, dlogits,
@@ -602,21 +884,14 @@ impl Trainer {
         let s = t / self.batch;
         let sb = bucket_for(s, SEQ_BUCKETS).unwrap();
         let nh = self.core.cfg.n_heads;
+        let attn_bwd = format!("attn_bwd_bh{}_s{sb}_h{}",
+                               self.batch * nh, self.core.cfg.d_head());
         for l in (0..self.core.cfg.n_layers).rev() {
             let sv = &saved.layers[l];
             // MLP path
             let dd = self.core.virt.backward(LayerId::MlpDown(l),
                                              dh.clone(), urgency)?;
-            let mut dg = dd;
-            if let Some(Adapter::Ia3 { ff_scale, .. }) =
-                self.core.adapter.as_ref()
-            {
-                // u_pre was scaled: d(scale)/d and dx through the scale
-                let (_ds, dx) =
-                    Adapter::ia3_bwd(&sv.u_pre, &ff_scale[l], &dg);
-                dg = dx; // IA3 grads for ff handled via dscale (omitted
-                          // from flat layout for LoRA-focused trainer)
-            }
+            let dg = hooks.ffn_scale_bwd(l, &sv.u_pre, &dd);
             let dgelu = ops::gelu_bwd(&sv.u_pre, &dg);
             let dm = self.core.virt.backward(LayerId::MlpUp(l), dgelu,
                                              urgency)?;
@@ -630,43 +905,38 @@ impl Trainer {
             let mut dattn = self.core.virt.backward(LayerId::AttnOut(l),
                                                     do_.clone(),
                                                     urgency)?;
-            if let Some((da, db, dx)) =
-                self.core.lora_bwd(&sv.attn_merged, &do_, l, "o")?
+            if let Some(dx) = hooks.attn_out_delta_bwd(
+                &cx, l, &sv.attn_merged, &do_, &mut grads)?
             {
-                grads.add_lora(&adapter_ref, l, "o", &da, &db);
                 ops::add_assign(&mut dattn, &dx);
             }
             // attention backward (client-side artifact)
-            let dattn_h = self.core.to_heads(&dattn, self.batch);
-            let name = format!("attn_bwd_bh{}_s{sb}_h{}",
-                               self.batch * nh, self.core.cfg.d_head());
+            let dattn_h = to_heads_batched(&dattn, self.batch, nh);
             let qp = ClientCore::pad_seq(&sv.qh, sb);
             let kp = ClientCore::pad_seq(&sv.kh, sb);
             let vp = ClientCore::pad_seq(&sv.vh, sb);
             let dop = ClientCore::pad_seq(&dattn_h, sb);
             let out = self.core.engine.execute(
-                &name, &[&qp, &kp, &vp, &dop])?;
-            let dq = self.core.from_heads(
+                &attn_bwd, &[&qp, &kp, &vp, &dop])?;
+            let dq = from_heads_batched(
                 &ClientCore::unpad_seq(&out[0], s), self.batch);
-            let dk = self.core.from_heads(
+            let dk = from_heads_batched(
                 &ClientCore::unpad_seq(&out[1], s), self.batch);
-            let dv = self.core.from_heads(
+            let dv = from_heads_batched(
                 &ClientCore::unpad_seq(&out[2], s), self.batch);
+            // back through the adapter's k/v rescale to the projection
+            // outputs …
+            let (dk, dv) = hooks.kv_scale_bwd(l, &dk, &dv);
 
-            // LoRA backward on q/k/v + assemble fused-QKV gradient
-            let mut da_in_extra = Tensor::zeros(&[t, self.core.cfg.d_model]);
-            for (target, dt) in [("q", &dq), ("k", &dk), ("v", &dv)] {
-                if let Some((da, db, dx)) =
-                    self.core.lora_bwd(&sv.a_in, dt, l, target)?
-                {
-                    grads.add_lora(&adapter_ref, l, target, &da, &db);
-                    ops::add_assign(&mut da_in_extra, &dx);
-                }
-            }
+            // … then adapter deltas on q/k/v + the fused-QKV gradient
             let dqkv = ClientCore::concat_cols3(&dq, &dk, &dv);
             let mut da_in = self.core.virt.backward(LayerId::Qkv(l), dqkv,
                                                     urgency)?;
-            ops::add_assign(&mut da_in, &da_in_extra);
+            if let Some(extra) = hooks.qkv_delta_bwd(
+                &cx, l, &sv.a_in, &dq, &dk, &dv, &mut grads)?
+            {
+                ops::add_assign(&mut da_in, &extra);
+            }
             let dnorm1 = ops::rmsnorm_bwd(&sv.h_in,
                                           &self.core.weights.norm1[l],
                                           &da_in);
@@ -692,6 +962,163 @@ impl Trainer {
         let saved =
             self.core.cfg.n_layers as u64 * t * (8 * d + f) * 4;
         adapter + opt + saved
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builders — the session-first public surface
+// ---------------------------------------------------------------------------
+
+/// Builder for an [`InferenceSession`], obtained from
+/// [`Deployment::session`].  Owns every per-tenant choice: adapter,
+/// request batch, KV placement, link kind, urgency policy, privacy.
+/// `build()` wires the client to the executor, seeds the adapter's KV
+/// prefix if it has one, and the resulting session auto-routes prefill
+/// accordingly.
+pub struct SessionBuilder<'d> {
+    dep: &'d Deployment,
+    adapter: Option<Adapter>,
+    batch: usize,
+    kv_placement: KvPlacement,
+    link: Option<LinkKind>,
+    realize_delays: bool,
+    urgency: UrgencyPolicy,
+    privacy: Option<PrivacyCtx>,
+}
+
+impl<'d> SessionBuilder<'d> {
+    pub(crate) fn new(dep: &'d Deployment) -> Self {
+        SessionBuilder {
+            dep,
+            adapter: None,
+            batch: 1,
+            kv_placement: KvPlacement::Device,
+            link: None,
+            realize_delays: false,
+            urgency: UrgencyPolicy::default(),
+            privacy: None,
+        }
+    }
+
+    /// This tenant's PEFT adapter (default: bare base model).
+    pub fn adapter(mut self, a: Adapter) -> Self {
+        self.adapter = Some(a);
+        self
+    }
+
+    /// Sequences per request (default 1; must have an attention
+    /// artifact — checked at `build`).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Where the KV cache lives (default: client device).
+    pub fn kv(mut self, placement: KvPlacement) -> Self {
+        self.kv_placement = placement;
+        self
+    }
+
+    /// Client↔executor link kind (default: the deployment placement's).
+    pub fn link(mut self, link: LinkKind) -> Self {
+        self.link = Some(link);
+        self
+    }
+
+    /// Realize simulated link delays as actual sleeps (placement
+    /// benches).
+    pub fn realize_delays(mut self, yes: bool) -> Self {
+        self.realize_delays = yes;
+        self
+    }
+
+    /// Scheduling class of this session's layer invocations.
+    pub fn urgency(mut self, policy: UrgencyPolicy) -> Self {
+        self.urgency = policy;
+        self
+    }
+
+    /// Attach a pre-registered activation-privacy context (paper
+    /// section 3.8); the executor then only ever sees noised
+    /// activations from this client.
+    pub fn privacy(mut self, privacy: PrivacyCtx) -> Self {
+        self.privacy = Some(privacy);
+        self
+    }
+
+    pub fn build(self) -> SymResult<InferenceSession> {
+        let link = self.link.unwrap_or_else(|| self.dep.placement.link());
+        let core = self.dep.build_core(self.adapter, link,
+                                       self.realize_delays, self.privacy);
+        let mut sess =
+            InferenceSession::new(core, self.batch, self.kv_placement)?;
+        sess.set_urgency(self.urgency);
+        // Prefix adapters seed the cache here, which flips the session
+        // into incremental-prefill routing (`generate`/`prefill_auto`).
+        sess.seed_prefix()?;
+        Ok(sess)
+    }
+}
+
+/// Builder for a [`Trainer`], obtained from [`Deployment::trainer`].
+pub struct TrainerBuilder<'d> {
+    dep: &'d Deployment,
+    adapter: Option<Adapter>,
+    batch: usize,
+    link: Option<LinkKind>,
+    realize_delays: bool,
+    lr: Option<f32>,
+}
+
+impl<'d> TrainerBuilder<'d> {
+    pub(crate) fn new(dep: &'d Deployment) -> Self {
+        TrainerBuilder {
+            dep,
+            adapter: None,
+            batch: 1,
+            link: None,
+            realize_delays: false,
+            lr: None,
+        }
+    }
+
+    /// The adapter to fine-tune (required; must be trainable).
+    pub fn adapter(mut self, a: Adapter) -> Self {
+        self.adapter = Some(a);
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn link(mut self, link: LinkKind) -> Self {
+        self.link = Some(link);
+        self
+    }
+
+    pub fn realize_delays(mut self, yes: bool) -> Self {
+        self.realize_delays = yes;
+        self
+    }
+
+    /// Adam learning rate (default: the optimizer's).
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    pub fn build(self) -> SymResult<Trainer> {
+        let link = self.link.unwrap_or_else(|| self.dep.placement.link());
+        let core =
+            self.dep.build_core(self.adapter, link, self.realize_delays,
+                                None);
+        let mut trainer = Trainer::new(core, self.batch)?;
+        if let Some(lr) = self.lr {
+            trainer.optimizer.lr = lr;
+        }
+        Ok(trainer)
     }
 }
 
@@ -808,7 +1235,7 @@ mod tests {
         assert_eq!(p.shape, vec![4, 8, 2]);
         assert_eq!(ClientCore::unpad_seq(&p, 3), x);
         // padding region is zero
-        assert_eq!(p.as_f32()[(0 * 8 + 3) * 2], 0.0);
+        assert_eq!(p.as_f32()[3 * 2], 0.0);
     }
 
     #[test]
@@ -819,5 +1246,52 @@ mod tests {
         let out = ClientCore::concat_cols3(&a, &b, &c);
         assert_eq!(out.shape, vec![1, 6]);
         assert_eq!(out.as_f32(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn greedy_sampler_is_argmax() {
+        let logits = Tensor::from_f32(
+            vec![0.1, 0.9, 0.0, 2.0, -1.0, 0.5], &[2, 3]);
+        let mut s = Sampler::Greedy;
+        assert_eq!(s.pick(&logits, 0), 1);
+        assert_eq!(s.pick(&logits, 1), 0);
+    }
+
+    #[test]
+    fn topk_sampler_stays_in_top_k_and_is_deterministic() {
+        let logits = Tensor::from_f32(
+            vec![5.0, 4.0, -100.0, -100.0, -100.0, -100.0], &[1, 6]);
+        let cfg = Sampling::TopK { k: 2, temperature: 1.0, seed: 42 };
+        let mut a = Sampler::new(&cfg);
+        let mut b = Sampler::new(&cfg);
+        for _ in 0..32 {
+            let ta = a.pick(&logits, 0);
+            assert!(ta == 0 || ta == 1, "sampled outside top-k: {ta}");
+            assert_eq!(ta, b.pick(&logits, 0), "same seed, same stream");
+        }
+    }
+
+    #[test]
+    fn topk_low_temperature_approaches_greedy() {
+        let logits = Tensor::from_f32(vec![1.0, 10.0, 0.0], &[1, 3]);
+        let mut s = Sampler::new(&Sampling::TopK {
+            k: 3,
+            temperature: 1e-4,
+            seed: 7,
+        });
+        for _ in 0..16 {
+            assert_eq!(s.pick(&logits, 0), 1);
+        }
+    }
+
+    #[test]
+    fn generation_config_builders() {
+        let g = GenerationConfig::greedy(8).with_stop(0);
+        assert_eq!(g.max_tokens, 8);
+        assert_eq!(g.stop_tokens, vec![0]);
+        assert!(matches!(g.sampling, Sampling::Greedy));
+        let s = GenerationConfig::sampled(4, 0.8, 50, 1);
+        assert!(matches!(s.sampling,
+                         Sampling::TopK { k: 50, seed: 1, .. }));
     }
 }

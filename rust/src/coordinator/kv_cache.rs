@@ -98,6 +98,16 @@ impl KvCache {
         self.cap = new_cap;
     }
 
+    /// Forget all cached rows (per-layer lengths to zero) while keeping
+    /// the grown buffers, so a reused session does not re-pay the
+    /// doubling growth.  `append`/`padded` never read past the lengths,
+    /// so stale bytes in the retained capacity are unreachable.
+    pub fn clear(&mut self) {
+        for l in &mut self.lens {
+            *l = 0;
+        }
+    }
+
     /// Append `t_new` tokens of K/V for `layer` (`k`/`v` are
     /// `(BH, t_new, H)`); returns the layer's new token length.  During a
     /// decode step earlier layers lead later ones by one token — the
@@ -184,6 +194,26 @@ mod tests {
         assert_eq!(&k.as_f32()[0..4], &[100.0, 101.0, 102.0, 103.0]);
         // padding is zero
         assert_eq!(k.as_f32()[(0 * 16 + 3) * 4], 0.0);
+    }
+
+    #[test]
+    fn clear_keeps_capacity_and_resets_lengths() {
+        let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
+        for layer in 0..2 {
+            c.append(layer, &kv(3, 2, 4, 100.0), &kv(3, 2, 4, 200.0));
+        }
+        let cap = c.capacity();
+        assert!(cap >= 3);
+        c.clear();
+        assert_eq!(c.len(), 0);
+        assert!(c.is_empty());
+        assert_eq!(c.capacity(), cap);
+        // refill after clear reads back fresh rows, not stale ones
+        c.append(0, &kv(2, 2, 4, 500.0), &kv(2, 2, 4, 600.0));
+        let (k, _) = c.padded(0, 16);
+        assert_eq!(&k.as_f32()[0..4], &[500.0, 501.0, 502.0, 503.0]);
+        // beyond the new length is zero padding, not stale pre-clear data
+        assert_eq!(k.as_f32()[2 * 4], 0.0);
     }
 
     #[test]

@@ -1,12 +1,48 @@
 //! The Symbiosis coordinator — the paper's system contribution.
 //!
+//! One shared, frozen base model serves many tenants; each tenant picks
+//! its own PEFT method, resources, and placement.  The public surface is
+//! **session-first**: start a [`Deployment`], then spawn per-tenant jobs
+//! from it with the two builders —
+//!
+//! ```no_run
+//! # use symbiosis::config::SYM_TINY;
+//! # use symbiosis::coordinator::*;
+//! # fn main() -> anyhow::Result<()> {
+//! # let dir = std::path::PathBuf::from("artifacts");
+//! let dep = Deployment::start(&SYM_TINY, &dir,
+//!                             BatchPolicy::opportunistic_default(),
+//!                             Placement::Local)?;
+//!
+//! // an inference tenant: LoRA adapter, one request at a time
+//! let adapter = Adapter::lora_from_artifacts(&SYM_TINY, &dir, 8,
+//!                                            LoraTargets::QKVO, 2.0)?;
+//! let mut session = dep.session().adapter(adapter).build()?;
+//! let tokens = session.generate(&[1, 2, 3, 4],
+//!                               &GenerationConfig::greedy(16))?;
+//!
+//! // a fine-tuning tenant sharing the same frozen base
+//! let lora = Adapter::lora_from_artifacts(&SYM_TINY, &dir, 64,
+//!                                         LoraTargets::QKVO, 0.25)?;
+//! let mut trainer = dep.trainer().adapter(lora).lr(5e-3).build()?;
+//! # Ok(()) }
+//! ```
+//!
+//! Builders own every per-tenant choice (adapter, batch,
+//! [`KvPlacement`], link kind, urgency policy, privacy) and do the
+//! error-prone wiring — e.g. a prefix adapter's KV seed and the switch
+//! to incremental prefill happen automatically.  Failures surface as
+//! typed [`SymbiosisError`]s.
+//!
+//! Module map:
 //! * [`base_executor`] — shared frozen-layer service with per-layer
 //!   opportunistic batching (sections 3.2, 3.6, 3.7).
 //! * [`virt_layer`] — the client-side proxy replacing frozen layers
 //!   (Fig. 4).
-//! * [`client`] — inference sessions and trainers; each client drives its
-//!   own execution (design goal 5).
-//! * [`adapter`] / [`optimizer`] / [`kv_cache`] — client-owned state.
+//! * [`client`] — the layer walker, sessions/trainers, and their
+//!   builders; each client drives its own execution (design goal 5).
+//! * [`adapter`] — the [`AdapterHooks`] trait and the LoRA/IA3/Prefix
+//!   implementations; [`optimizer`] / [`kv_cache`] — client-owned state.
 //! * [`privacy`] — the additive-noise activation protocol (section 3.8).
 //! * [`placement`] / [`sharding`] — Fig. 5 topologies + analytic models.
 
@@ -29,21 +65,26 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::ModelConfig;
+use crate::coordinator::privacy::PrivacyCtx;
 use crate::runtime::Engine;
 use crate::transport::{Link, LinkKind};
 
-pub use adapter::{Adapter, LoraTargets};
+pub use crate::error::{SymResult, SymbiosisError};
+pub use adapter::{Adapter, AdapterHooks, HookCtx, Ia3Adapter,
+                  LoraAdapter, LoraTargets, NoAdapter, PrefixAdapter};
 pub use base_executor::{BaseExecutor, ExecutorStats};
 pub use batching::BatchPolicy;
-pub use client::{ClientCore, InferenceSession, Trainer};
+pub use client::{ClientCore, GenerationConfig, InferenceSession,
+                 Sampling, SessionBuilder, Trainer, TrainerBuilder,
+                 TrainOutcome, UrgencyPolicy};
 pub use kv_cache::KvPlacement;
 pub use placement::Placement;
 pub use proto::{LayerId, OpKind, Urgency};
 pub use virt_layer::VirtLayerCtx;
 
 /// A running deployment: one base executor + the pieces needed to attach
-/// clients. This is the top-level public API the examples and benches
-/// use.
+/// clients.  This is the top-level public API — tenants are spawned from
+/// it via [`Deployment::session`] and [`Deployment::trainer`].
 pub struct Deployment {
     pub cfg: ModelConfig,
     pub engine: Arc<Engine>,
@@ -89,8 +130,19 @@ impl Deployment {
         })
     }
 
+    /// Begin configuring an inference session against this deployment.
+    pub fn session(&self) -> SessionBuilder<'_> {
+        SessionBuilder::new(self)
+    }
+
+    /// Begin configuring a fine-tuning job against this deployment.
+    pub fn trainer(&self) -> TrainerBuilder<'_> {
+        TrainerBuilder::new(self)
+    }
+
     /// Allocate a client context wired to this deployment's executor
-    /// over the placement's link.
+    /// over the placement's link.  Lower-level than the builders; most
+    /// callers want [`Deployment::session`] / [`Deployment::trainer`].
     pub fn client_core(&self, adapter: Option<Adapter>) -> ClientCore {
         self.client_core_with_link(adapter, self.placement.link())
     }
@@ -98,7 +150,7 @@ impl Deployment {
     /// Same, with an explicit link kind (heterogeneous topologies).
     pub fn client_core_with_link(&self, adapter: Option<Adapter>,
                                  link: LinkKind) -> ClientCore {
-        self.client_core_opts(adapter, link, false)
+        self.build_core(adapter, link, false, None)
     }
 
     /// Full control: link kind + whether simulated link delays are
@@ -106,12 +158,22 @@ impl Deployment {
     pub fn client_core_opts(&self, adapter: Option<Adapter>,
                             link: LinkKind, realize_delays: bool)
                             -> ClientCore {
+        self.build_core(adapter, link, realize_delays, None)
+    }
+
+    /// The one place client contexts are wired: allocates a client id,
+    /// builds the layer proxy (with optional privacy), registers it with
+    /// the executor.
+    pub(crate) fn build_core(&self, adapter: Option<Adapter>,
+                             link: LinkKind, realize_delays: bool,
+                             privacy: Option<PrivacyCtx>) -> ClientCore {
         let id = self
             .next_client_id
             .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         let mut ctx =
             VirtLayerCtx::new(id, self.executor.sender(), Link::new(link));
         ctx.realize_delays = realize_delays;
+        ctx.privacy = privacy;
         let virt = Arc::new(ctx);
         virt.register();
         ClientCore {
@@ -120,7 +182,6 @@ impl Deployment {
             virt,
             weights: self.client_weights.clone(),
             adapter,
-            lora_scale: 2.0,
         }
     }
 

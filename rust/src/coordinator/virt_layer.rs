@@ -12,6 +12,14 @@
 //! output slice back) moves no activation bytes in-process.  The [`Link`]
 //! still charges the *modeled* transfer for the placement being
 //! simulated — accounting is unchanged, only real host copies went away.
+//!
+//! Contexts are built by [`Deployment::build_core`] (one per client id);
+//! sessions configure the link, realized delays, and the privacy
+//! protocol through the
+//! [`SessionBuilder`](crate::coordinator::SessionBuilder) rather than
+//! mutating this struct after the fact.
+//!
+//! [`Deployment::build_core`]: crate::coordinator::Deployment
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;

@@ -1,0 +1,139 @@
+//! Typed errors of the public client API.
+//!
+//! Everything a caller of [`crate::coordinator::Deployment`] builders,
+//! sessions, or trainers can hit is a [`SymbiosisError`] variant —
+//! misuse (wrong batch, decode before prefill, prefix-seeded batch
+//! prefill) is distinguishable from capacity limits (bucket overflow)
+//! and from runtime faults bubbling up from the engine/executor, so
+//! serving layers can map each class to a different response (reject vs
+//! retry vs 500).  Internal layers keep `anyhow`; the `From` impl wraps
+//! whatever crosses the public boundary.
+
+use std::fmt;
+
+/// Public-surface result alias.
+pub type SymResult<T> = std::result::Result<T, SymbiosisError>;
+
+/// Every error the session/trainer API surfaces.
+#[derive(Debug)]
+pub enum SymbiosisError {
+    /// Request batch size has no compiled attention artifact.
+    UnsupportedBatch { batch: usize, supported: &'static [usize] },
+    /// Sequence/context length exceeds the largest compiled bucket.
+    ContextExceeded { len: usize, limit: usize },
+    /// Batch prefill was called on a session whose KV cache already
+    /// holds rows (e.g. a learned prefix).  The bucketed prefill
+    /// artifact ignores pre-existing cache rows and would silently
+    /// compute wrong attention — use incremental prefill (the
+    /// [`crate::coordinator::SessionBuilder`] path routes automatically).
+    PrefilledCacheNeedsIncremental { cached_rows: usize },
+    /// `decode_step` before any prefill.
+    DecodeBeforePrefill,
+    /// The adapter's learned KV prefix was built for a different batch
+    /// size than the session's (prefix tensors are `(batch*heads, P, H)`).
+    PrefixBatchMismatch { prefix_bh: usize, cache_bh: usize },
+    /// The trainer was given an adapter whose gradients are not wired
+    /// into the flattened optimizer layout (IA3/Prefix), or none at all.
+    NotTrainable { adapter: &'static str },
+    /// A malformed generation request (e.g. `max_tokens == 0`).
+    InvalidGenerationConfig(String),
+    /// Anything below the API surface: engine execution, executor
+    /// channel loss, artifact I/O.
+    Runtime(anyhow::Error),
+}
+
+impl fmt::Display for SymbiosisError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SymbiosisError::UnsupportedBatch { batch, supported } => {
+                write!(f, "batch {batch} has no attention artifact \
+                           (exported: {supported:?})")
+            }
+            SymbiosisError::ContextExceeded { len, limit } => {
+                write!(f, "sequence/context length {len} exceeds the \
+                           largest compiled bucket ({limit})")
+            }
+            SymbiosisError::PrefilledCacheNeedsIncremental {
+                cached_rows,
+            } => {
+                write!(f, "batch prefill on a KV cache holding \
+                           {cached_rows} pre-existing rows would compute \
+                           wrong attention (the bucketed prefill \
+                           artifact ignores cache contents); use \
+                           prefill_incremental / the SessionBuilder \
+                           auto-routing path")
+            }
+            SymbiosisError::DecodeBeforePrefill => {
+                write!(f, "decode before prefill")
+            }
+            SymbiosisError::PrefixBatchMismatch {
+                prefix_bh,
+                cache_bh,
+            } => {
+                write!(f, "the adapter's KV prefix holds {prefix_bh} \
+                           batch-head rows but the session's cache \
+                           expects {cache_bh} — the prefix was built \
+                           for a different batch size")
+            }
+            SymbiosisError::NotTrainable { adapter } => {
+                write!(f, "trainer requires a trainable adapter \
+                           (got {adapter}; LoRA gradients are the only \
+                           ones wired into the flat optimizer layout)")
+            }
+            SymbiosisError::InvalidGenerationConfig(msg) => {
+                write!(f, "invalid generation config: {msg}")
+            }
+            SymbiosisError::Runtime(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for SymbiosisError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SymbiosisError::Runtime(e) => Some(e.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+impl From<anyhow::Error> for SymbiosisError {
+    fn from(e: anyhow::Error) -> Self {
+        // Preserve typed errors that crossed an anyhow boundary inside
+        // the coordinator instead of double-wrapping them.
+        match e.downcast::<SymbiosisError>() {
+            Ok(typed) => typed,
+            Err(e) => SymbiosisError::Runtime(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_misuse() {
+        let e = SymbiosisError::PrefilledCacheNeedsIncremental {
+            cached_rows: 4,
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("4 pre-existing rows"));
+        assert!(msg.contains("prefill_incremental"));
+    }
+
+    #[test]
+    fn anyhow_roundtrip_preserves_type() {
+        let typed: anyhow::Error =
+            SymbiosisError::DecodeBeforePrefill.into();
+        let back: SymbiosisError = typed.into();
+        assert!(matches!(back, SymbiosisError::DecodeBeforePrefill));
+    }
+
+    #[test]
+    fn runtime_wraps_foreign_errors() {
+        let e: SymbiosisError = anyhow::anyhow!("engine died").into();
+        assert!(matches!(e, SymbiosisError::Runtime(_)));
+        assert!(format!("{e}").contains("engine died"));
+    }
+}

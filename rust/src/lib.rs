@@ -11,6 +11,9 @@
 //! * [`runtime`] — PJRT engine executing AOT-compiled JAX/Pallas HLO.
 //! * [`coordinator`] — the paper's contribution: split execution,
 //!   per-layer opportunistic batching, flexible placement, privacy.
+//!   Its session-first API ([`coordinator::Deployment::session`] /
+//!   [`coordinator::Deployment::trainer`]) is the public surface;
+//!   failures are typed [`error::SymbiosisError`]s.
 //! * [`device`] / [`transport`] — simulated heterogeneous fleet (memory
 //!   ledger + cost model) standing in for the paper's 8xA100 testbed.
 //! * [`baselines`] — dedicated-instance, lockstep (vLLM/mLoRA-like) and
@@ -21,7 +24,10 @@ pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
 pub mod device;
+pub mod error;
 pub mod metrics;
 pub mod runtime;
 pub mod tensor;
 pub mod transport;
+
+pub use error::{SymResult, SymbiosisError};

@@ -17,8 +17,7 @@ use anyhow::{bail, Result};
 use symbiosis::config::{self, SYM_TINY};
 use symbiosis::coordinator::adapter::LoraTargets;
 use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
-                             InferenceSession, KvPlacement, Placement,
-                             Trainer};
+                             InferenceSession, KvPlacement, Placement};
 use symbiosis::metrics::{gib, LatencyStats, Throughput};
 use symbiosis::runtime::Manifest;
 
@@ -89,18 +88,6 @@ fn policy(args: &[String]) -> Result<BatchPolicy> {
     })
 }
 
-fn clone_core(core: &symbiosis::coordinator::ClientCore)
-              -> symbiosis::coordinator::ClientCore {
-    symbiosis::coordinator::ClientCore {
-        cfg: core.cfg.clone(),
-        engine: core.engine.clone(),
-        virt: core.virt.clone(),
-        weights: core.weights.clone(),
-        adapter: core.adapter.clone(),
-        lora_scale: core.lora_scale,
-    }
-}
-
 fn serve(args: &[String]) -> Result<()> {
     let n_clients: usize = opt(args, "--clients", 4);
     let n_requests: usize = opt(args, "--requests", 4);
@@ -122,8 +109,10 @@ fn serve(args: &[String]) -> Result<()> {
             let mut lat = LatencyStats::new();
             let mut tput = Throughput::start();
             for r in 0..n_requests {
+                // fresh session per request; the core (and its executor
+                // registration) is shared across them
                 let mut sess = InferenceSession::new(
-                    clone_core(&core), 1, KvPlacement::Device)?;
+                    core.clone(), 1, KvPlacement::Device)?;
                 let prompt: Vec<i32> = (0..16)
                     .map(|k| ((c * 71 + r * 13 + k) % 256) as i32)
                     .collect();
@@ -163,9 +152,9 @@ fn finetune(args: &[String]) -> Result<()> {
         let adapter = Adapter::lora_from_artifacts(
             &SYM_TINY, &dir, if c % 2 == 0 { 8 } else { 64 },
             LoraTargets::QKVO, 2.0)?;
-        let core = dep.client_core(Some(adapter));
+        let tr = dep.trainer().adapter(adapter).build()?;
         handles.push(std::thread::spawn(move || -> Result<_> {
-            let mut tr = Trainer::new(core, 1)?;
+            let mut tr = tr;
             let mut first = 0.0;
             let mut last = 0.0;
             for s in 0..steps {

@@ -372,7 +372,7 @@ fn prefix_adapter_changes_output_and_decodes() {
     let core = dep.client_core(Some(prefix));
     let mut tuned = InferenceSession::new(core, 1, KvPlacement::Device)
         .unwrap();
-    tuned.seed_prefix();
+    tuned.seed_prefix().unwrap();
     tuned.prefill_incremental(&prompt).unwrap();
     for _ in 1..6 {
         tuned.decode_step().unwrap();
@@ -407,8 +407,8 @@ fn ia3_adapter_serves_and_differs_from_base() {
 
     // perturbed IA3 (v and ff rescaled) changes the decoded sequence
     let mut ia3 = Adapter::ia3(&SYM_TINY);
-    if let Adapter::Ia3 { v_scale, ff_scale, .. } = &mut ia3 {
-        for t in v_scale.iter_mut().chain(ff_scale.iter_mut()) {
+    if let Adapter::Ia3(a) = &mut ia3 {
+        for t in a.v_scale.iter_mut().chain(a.ff_scale.iter_mut()) {
             for (i, v) in t.as_f32_mut().iter_mut().enumerate() {
                 *v = if i % 2 == 0 { 1.6 } else { 0.5 };
             }
