@@ -1,12 +1,22 @@
-//! The base executor: serves frozen base-model layers to many clients.
+//! The shard executor: one thread serving a contiguous slice of frozen
+//! base-model layers to many clients.
 //!
-//! One thread owns the base weights and a PJRT engine.  Incoming
-//! [`LayerRequest`]s are queued per (layer, direction); a
+//! Each thread owns a [`ShardWeights`] slice (a contiguous `LayerId`
+//! block range plus the boundary layers), a PJRT engine handle, its own
+//! [`BatchPolicy`] queues, and a simulated [`Device`] whose memory
+//! ledger is charged with the shard's real resident bytes.  A fleet of
+//! these (see [`crate::coordinator::fleet`]) is the executable form of
+//! the paper's FSDP-style sharded base (section 3.3); the single-shard
+//! fleet is exactly the old `BaseExecutor`.
+//!
+//! Incoming [`LayerRequest`]s are queued per (layer, direction); the
 //! [`BatchPolicy`] decides how long to wait for co-batchable requests.
 //! At flush time the queued activations are **token-flattened** into a
 //! single `(sum T_i, Din)` batch (no per-request padding — only the tail
 //! pad up to the artifact's token bucket), executed once, and scattered
 //! back to the per-request response channels (paper sections 3.2, 3.7).
+//! A failed flush answers every request with a typed error instead of
+//! dropping the senders.
 //!
 //! The flush path is zero-copy end to end: batch assembly is a single
 //! pass into a reusable per-`(layer, op)` scratch buffer (reclaimed
@@ -25,13 +35,14 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::{bucket_for, TOKEN_BUCKETS};
 use crate::coordinator::batching::BatchPolicy;
-use crate::coordinator::model_state::BaseWeights;
+use crate::coordinator::model_state::ShardWeights;
 use crate::coordinator::proto::{ExecMsg, LayerId, LayerRequest,
                                 LayerResponse, OpKind};
+use crate::device::Device;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 
@@ -47,13 +58,13 @@ pub struct FlushRecord {
     pub mean_wait_secs: f64,
 }
 
-/// How many recent [`FlushRecord`]s the executor retains.  Aggregates
+/// How many recent [`FlushRecord`]s each shard retains.  Aggregates
 /// (`mean_batch_clients`, `padding_overhead`, …) are running sums over
 /// *all* flushes and stay exact; only the per-record detail is bounded,
-/// so executor memory no longer grows with traffic.
+/// so executor memory does not grow with traffic.
 pub const FLUSH_RECORD_CAP: usize = 1024;
 
-/// Accumulating statistics held by the executor thread: bounded ring of
+/// Accumulating statistics held by a shard thread: bounded ring of
 /// recent records + exact running aggregates.
 #[derive(Debug, Default)]
 struct StatsInner {
@@ -94,9 +105,14 @@ impl StatsInner {
     }
 }
 
-/// Snapshot of executor statistics.  `flushes` holds at most
+/// Snapshot of one shard's statistics.  `flushes` holds at most
 /// [`FLUSH_RECORD_CAP`] *recent* records; the aggregate accessors are
-/// exact over the executor's whole lifetime.
+/// exact over the shard's whole lifetime.  Fleet-level aggregation
+/// lives in [`crate::coordinator::fleet::FleetStats`], which merges one
+/// of these per shard — note the *merged* view's `flushes` concatenates
+/// the per-shard rings in shard order (up to `shards x CAP` records,
+/// not globally time-ordered); use `FleetStats::per_shard` when ring
+/// recency matters.
 #[derive(Debug, Default, Clone)]
 pub struct ExecutorStats {
     /// Most recent flush records (bounded ring).
@@ -186,38 +202,70 @@ impl Pending {
 /// Reusable per-(layer, op) batch-assembly buffers.
 type ScratchMap = HashMap<(LayerId, OpKind), Vec<f32>>;
 
-/// Handle to a running base-executor thread.
-pub struct BaseExecutor {
+/// Handle to one running shard-executor thread.  Owned by the
+/// [`crate::coordinator::fleet::ExecutorFleet`]; a fleet of one is the
+/// old single `BaseExecutor`.
+pub struct ShardExecutor {
+    shard: usize,
     tx: Sender<ExecMsg>,
     handle: Option<JoinHandle<()>>,
     stats: Arc<Mutex<StatsInner>>,
+    /// Simulated device hosting this shard; its ledger was charged with
+    /// the resident slice before spawn (see `fleet::charge_shard`) and
+    /// is only read afterwards.
+    device: Device,
 }
 
-impl BaseExecutor {
-    /// Spawn the executor thread.
-    pub fn spawn(engine: Arc<Engine>, base: BaseWeights,
-                 policy: BatchPolicy) -> BaseExecutor {
+impl ShardExecutor {
+    /// Spawn one shard thread over its weight slice.  `device` must
+    /// already carry the resident-slice charge (the fleet performs the
+    /// OOM-enforced charge so planning failures surface before any
+    /// thread starts).
+    pub fn spawn(engine: Arc<Engine>, weights: ShardWeights,
+                 policy: BatchPolicy, device: Device) -> ShardExecutor {
+        let shard = weights.shard;
         let (tx, rx) = channel();
         let stats = Arc::new(Mutex::new(StatsInner::default()));
         let stats2 = stats.clone();
         let handle = std::thread::Builder::new()
-            .name("base-executor".into())
-            .spawn(move || run_loop(engine, base, policy, rx, stats2))
-            .expect("spawn base executor");
-        BaseExecutor { tx, handle: Some(handle), stats }
+            .name(format!("shard-exec-{shard}"))
+            .spawn(move || run_loop(engine, weights, policy, rx, stats2))
+            .expect("spawn shard executor");
+        ShardExecutor {
+            shard,
+            tx,
+            handle: Some(handle),
+            stats,
+            device,
+        }
     }
 
-    /// Channel used by clients' `VirtLayer` proxies.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Channel used by clients' routed `VirtLayer` proxies.
     pub fn sender(&self) -> Sender<ExecMsg> {
         self.tx.clone()
     }
 
-    /// Snapshot of accumulated statistics.
+    /// Snapshot of this shard's accumulated statistics.
     pub fn stats(&self) -> ExecutorStats {
         self.stats.lock().unwrap().snapshot()
     }
 
-    /// Stop the executor and join its thread.
+    /// Bytes currently charged to this shard's device ledger (the
+    /// resident base slice).
+    pub fn resident_bytes(&self) -> u64 {
+        self.device.ledger.used()
+    }
+
+    /// Capacity of the simulated device hosting this shard.
+    pub fn device_capacity(&self) -> u64 {
+        self.device.ledger.capacity()
+    }
+
+    /// Stop the shard and join its thread, draining pending batches.
     pub fn shutdown(mut self) -> ExecutorStats {
         let _ = self.tx.send(ExecMsg::Shutdown);
         if let Some(h) = self.handle.take() {
@@ -227,7 +275,7 @@ impl BaseExecutor {
     }
 }
 
-impl Drop for BaseExecutor {
+impl Drop for ShardExecutor {
     fn drop(&mut self) {
         let _ = self.tx.send(ExecMsg::Shutdown);
         if let Some(h) = self.handle.take() {
@@ -236,7 +284,7 @@ impl Drop for BaseExecutor {
     }
 }
 
-fn run_loop(engine: Arc<Engine>, base: BaseWeights, policy: BatchPolicy,
+fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
             rx: Receiver<ExecMsg>, stats: Arc<Mutex<StatsInner>>) {
     let mut pending: HashMap<(LayerId, OpKind), Pending> = HashMap::new();
     let mut scratch: ScratchMap = HashMap::new();
@@ -280,7 +328,7 @@ fn run_loop(engine: Arc<Engine>, base: BaseWeights, policy: BatchPolicy,
                     let out = noise_effect(&engine, &base, layer, &noise);
                     stats.lock().unwrap().noise_registrations += 1;
                     let _ = resp.send(LayerResponse {
-                        y: out.unwrap_or_else(|_| Tensor::zeros(&[0])),
+                        y: out.map_err(|e| format!("{e:#}")),
                         queue_wait_secs: 0.0,
                         batch_clients: 1,
                     });
@@ -324,7 +372,7 @@ fn run_loop(engine: Arc<Engine>, base: BaseWeights, policy: BatchPolicy,
 
 /// Queue one request, flushing early if the batch would overflow the
 /// largest token bucket.
-fn enqueue(engine: &Engine, base: &BaseWeights, policy: &BatchPolicy,
+fn enqueue(engine: &Engine, base: &ShardWeights, policy: &BatchPolicy,
            stats: &Arc<Mutex<StatsInner>>,
            pending: &mut HashMap<(LayerId, OpKind), Pending>,
            scratch: &mut ScratchMap, req: LayerRequest) {
@@ -355,8 +403,11 @@ fn enqueue(engine: &Engine, base: &BaseWeights, policy: &BatchPolicy,
     }
 }
 
-/// Execute one batched flush and scatter the outputs.
-fn flush(engine: &Engine, base: &BaseWeights, p: Pending,
+/// Execute one batched flush and scatter the outputs — or, on failure,
+/// answer every co-batched request with the typed error message so
+/// clients surface `SymbiosisError::ExecutorFailed` instead of a
+/// channel disconnect.
+fn flush(engine: &Engine, base: &ShardWeights, p: Pending,
          key: (LayerId, OpKind), stats: &Arc<Mutex<StatsInner>>,
          scratch: &mut ScratchMap) {
     if p.reqs.is_empty() {
@@ -372,21 +423,15 @@ fn flush(engine: &Engine, base: &BaseWeights, p: Pending,
     let n_requests = p.reqs.len();
     let high = p.has_interactive; // decode batches jump the device queue
     let (layer, op) = key;
-    let result =
-        execute_batch(engine, base, layer, op, &p.reqs, high, scratch);
-    let (real_tokens, bucket_tokens) = match &result {
-        Ok((_, real, bucket)) => (*real, *bucket),
-        Err(_) => (0, 0),
-    };
-    match result {
-        Ok((outputs, _, _)) => {
+    match execute_batch(engine, base, layer, op, &p.reqs, high, scratch) {
+        Ok((outputs, real_tokens, bucket_tokens)) => {
             let mean_wait =
                 waits.iter().sum::<f64>() / waits.len() as f64;
             for (((req, _), out), wait) in
                 p.reqs.into_iter().zip(outputs).zip(waits)
             {
                 let _ = req.resp.send(LayerResponse {
-                    y: out,
+                    y: Ok(out),
                     queue_wait_secs: wait,
                     batch_clients: n_clients,
                 });
@@ -404,15 +449,23 @@ fn flush(engine: &Engine, base: &BaseWeights, p: Pending,
             });
         }
         Err(e) => {
-            eprintln!("base-executor: flush {layer:?}/{op:?} failed: {e:#}");
-            // drop response senders: clients observe a disconnect error
+            let msg = format!("{e:#}");
+            eprintln!("shard-executor {}: flush {layer:?}/{op:?} \
+                       failed: {msg}", base.shard);
+            for ((req, _), wait) in p.reqs.into_iter().zip(waits) {
+                let _ = req.resp.send(LayerResponse {
+                    y: Err(msg.clone()),
+                    queue_wait_secs: wait,
+                    batch_clients: n_clients,
+                });
+            }
         }
     }
 }
 
 /// Token-flatten + pad in one pass, execute the right artifact, scatter
 /// zero-copy views.  The assembly buffer is recycled through `scratch`.
-fn execute_batch(engine: &Engine, base: &BaseWeights, layer: LayerId,
+fn execute_batch(engine: &Engine, base: &ShardWeights, layer: LayerId,
                  op: OpKind, reqs: &[(LayerRequest, Instant)], high: bool,
                  scratch: &mut ScratchMap)
                  -> Result<(Vec<Tensor>, usize, usize)> {
@@ -427,6 +480,7 @@ fn execute_batch(engine: &Engine, base: &BaseWeights, layer: LayerId,
             if op == OpKind::Backward {
                 bail!("embedding has no backward (frozen, below adapters)");
             }
+            let (embed, pos_tab) = base.embed_tables()?;
             // 1-D i32 concat of token ids and positions.
             let mut toks = Vec::with_capacity(bucket);
             let mut poss = Vec::with_capacity(bucket);
@@ -445,12 +499,13 @@ fn execute_batch(engine: &Engine, base: &BaseWeights, layer: LayerId,
             let toks = Tensor::from_i32(toks, &[bucket]);
             let poss = Tensor::from_i32(poss, &[bucket]);
             let out = engine.execute_prio(
-                &name, &[&toks, &poss, &base.embed, &base.pos], high)?;
+                &name, &[&toks, &poss, embed, pos_tab], high)?;
             split_rows(&out[0], reqs)
         }
         _ => {
-            let (w, b) = base.linear(layer);
-            let (din, dout) = base.linear_dims(layer);
+            let (w, b) = base.linear(layer)
+                .context("shard routing mismatch")?;
+            let (din, dout) = (w.shape[0], w.shape[1]);
             // Token-flattened concat — the paper's no-padding batching:
             // requests of different lengths stack directly.  Assembly +
             // bucket pad happen in one pass into the recycled scratch
@@ -495,13 +550,13 @@ fn split_rows(batched: &Tensor, reqs: &[(LayerRequest, Instant)])
 }
 
 /// Privacy support: `n_eff = W . n` via the bias-free execution flow.
-fn noise_effect(engine: &Engine, base: &BaseWeights, layer: LayerId,
+fn noise_effect(engine: &Engine, base: &ShardWeights, layer: LayerId,
                 noise: &Tensor) -> Result<Tensor> {
     if layer == LayerId::Embed {
         bail!("noise protocol applies to linear layers only");
     }
-    let (w, _) = base.linear(layer);
-    let (din, dout) = base.linear_dims(layer);
+    let (w, _) = base.linear(layer)?;
+    let (din, dout) = (w.shape[0], w.shape[1]);
     let t = noise.shape[0];
     let bucket = bucket_for(t, TOKEN_BUCKETS)
         .ok_or_else(|| anyhow::anyhow!("noise too large"))?;

@@ -1019,7 +1019,9 @@ impl<'d> SessionBuilder<'d> {
         self
     }
 
-    /// Client↔executor link kind (default: the deployment placement's).
+    /// Client↔executor link kind, applied to every shard hop
+    /// (default: the placement's per-shard kinds — co-located shard
+    /// `SharedLocal`, cross-shard `NvLink`).
     pub fn link(mut self, link: LinkKind) -> Self {
         self.link = Some(link);
         self
@@ -1047,8 +1049,7 @@ impl<'d> SessionBuilder<'d> {
     }
 
     pub fn build(self) -> SymResult<InferenceSession> {
-        let link = self.link.unwrap_or_else(|| self.dep.placement.link());
-        let core = self.dep.build_core(self.adapter, link,
+        let core = self.dep.build_core(self.adapter, self.link,
                                        self.realize_delays, self.privacy);
         let mut sess =
             InferenceSession::new(core, self.batch, self.kv_placement)?;
@@ -1110,10 +1111,9 @@ impl<'d> TrainerBuilder<'d> {
     }
 
     pub fn build(self) -> SymResult<Trainer> {
-        let link = self.link.unwrap_or_else(|| self.dep.placement.link());
         let core =
-            self.dep.build_core(self.adapter, link, self.realize_delays,
-                                None);
+            self.dep.build_core(self.adapter, self.link,
+                                self.realize_delays, None);
         let mut trainer = Trainer::new(core, self.batch)?;
         if let Some(lr) = self.lr {
             trainer.optimizer.lr = lr;

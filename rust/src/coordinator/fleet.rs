@@ -1,0 +1,321 @@
+//! The executor fleet: one [`ShardExecutor`] per contiguous layer range
+//! of the frozen base (paper section 3.3, executable form).
+//!
+//! [`ExecutorFleet::start`] derives a [`LayerAssignment`] from the
+//! deployment's `Placement::shards()`, splits the loaded
+//! [`BaseWeights`] into per-shard slices (`model_state::split_shards`,
+//! zero-copy), charges each shard's simulated [`Device`] ledger with
+//! its real resident bytes — failing with a typed
+//! [`SymbiosisError::ShardOom`] before any thread starts when a slice
+//! does not fit — and spawns one executor thread per shard, each with
+//! its own [`BatchPolicy`] queues.
+//!
+//! Clients never see the fleet directly: `Deployment::build_core` hands
+//! every client a [`RoutingTable`] that maps each `LayerId` to the
+//! owning shard's channel, with a per-shard [`Link`] charged per hop
+//! (co-located shard: `SharedLocal`; cross-shard: `NvLink` — see
+//! `Placement::shard_links`).  A fleet of one shard is exactly the old
+//! single `BaseExecutor`, with the same hot path.
+//!
+//! [`FleetStats`] merges the per-shard [`ExecutorStats`] snapshots so
+//! Table-5 style metrics still come out of one call; it `Deref`s to the
+//! merged view, keeping existing consumers (`stats.n_flushes`,
+//! `stats.mean_batch_clients()`, …) source-compatible.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::base_executor::{ExecutorStats, ShardExecutor};
+use crate::coordinator::batching::BatchPolicy;
+use crate::coordinator::model_state::{self, BaseWeights};
+use crate::coordinator::placement::Placement;
+use crate::coordinator::proto::{ExecMsg, LayerId};
+use crate::coordinator::sharding::LayerAssignment;
+use crate::coordinator::virt_layer::{RoutingTable, ShardRoute};
+use crate::device::Device;
+use crate::error::SymbiosisError;
+use crate::runtime::Engine;
+use crate::transport::LinkKind;
+
+/// Fleet-level aggregation of per-shard [`ExecutorStats`].  Derefs to
+/// the merged snapshot (sums are exact; `flushes` concatenates the
+/// shards' bounded recent rings in shard order), with the per-shard
+/// detail kept alongside for placement-style breakdowns.
+#[derive(Debug, Default, Clone)]
+pub struct FleetStats {
+    merged: ExecutorStats,
+    pub per_shard: Vec<ExecutorStats>,
+}
+
+impl FleetStats {
+    /// Merge per-shard snapshots (shard order preserved).
+    pub fn merge(per_shard: Vec<ExecutorStats>) -> Self {
+        let mut merged = ExecutorStats::default();
+        for s in &per_shard {
+            merged.flushes.extend(s.flushes.iter().cloned());
+            merged.n_flushes += s.n_flushes;
+            merged.sum_batch_clients += s.sum_batch_clients;
+            merged.sum_wait_secs += s.sum_wait_secs;
+            merged.real_tokens += s.real_tokens;
+            merged.bucket_tokens += s.bucket_tokens;
+            merged.requests_served += s.requests_served;
+            merged.noise_registrations += s.noise_registrations;
+        }
+        FleetStats { merged, per_shard }
+    }
+
+    /// The fleet-wide merged snapshot (also reachable via `Deref`).
+    pub fn merged(&self) -> &ExecutorStats {
+        &self.merged
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.per_shard.len()
+    }
+}
+
+impl std::ops::Deref for FleetStats {
+    type Target = ExecutorStats;
+
+    fn deref(&self) -> &ExecutorStats {
+        &self.merged
+    }
+}
+
+/// Charge a shard's resident slice to its device ledger; a slice that
+/// does not fit fails with a typed [`SymbiosisError::ShardOom`] — this
+/// is what makes an undeployable `ShardPlan` fail `Deployment::start`
+/// instead of succeeding silently.
+pub fn charge_shard(device: &mut Device, shard: usize, resident: u64)
+                    -> Result<()> {
+    let capacity = device.ledger.capacity();
+    device.ledger.set("base-shard", resident).map_err(|_| {
+        anyhow::Error::new(SymbiosisError::ShardOom {
+            shard,
+            need_bytes: resident,
+            capacity_bytes: capacity,
+        })
+    })
+}
+
+/// A running pool of shard executors covering the whole base model.
+pub struct ExecutorFleet {
+    shards: Vec<ShardExecutor>,
+    assign: LayerAssignment,
+}
+
+impl ExecutorFleet {
+    /// Split the base along `placement.shards()` and spawn the fleet on
+    /// the placement's executor device class.  A placement asking for
+    /// more shards than the model has blocks is an error (every shard
+    /// must own at least one block), not a silent clamp — analytic
+    /// models keyed off `Placement::shards()` must match the executable
+    /// topology.
+    pub fn start(engine: Arc<Engine>, base: BaseWeights,
+                 policy: BatchPolicy, placement: Placement)
+                 -> Result<ExecutorFleet> {
+        let devices = (0..placement.shards().max(1))
+            .map(|s| Device::new(&format!("exec-shard{s}"),
+                                 placement.executor_device()))
+            .collect();
+        Self::start_with_devices(engine, base, policy, devices)
+    }
+
+    /// Spawn one shard per supplied device (devices are taken in layer
+    /// order).  Exposed so tests and heterogeneous deployments can
+    /// inject device classes/capacities; `start` is the common path.
+    pub fn start_with_devices(engine: Arc<Engine>, base: BaseWeights,
+                              policy: BatchPolicy,
+                              mut devices: Vec<Device>)
+                              -> Result<ExecutorFleet> {
+        let assign =
+            LayerAssignment::contiguous(base.cfg.n_layers, devices.len());
+        anyhow::ensure!(
+            assign.shards() == devices.len(),
+            "{} devices for {} assignable shards (each shard needs at \
+             least one block)",
+            devices.len(), assign.shards()
+        );
+        let slices = model_state::split_shards(base, &assign);
+        // Two passes: charge every ledger first so an undeployable plan
+        // fails before ANY shard thread spawns, then spawn the fleet.
+        for (slice, device) in slices.iter().zip(&mut devices) {
+            charge_shard(device, slice.shard, slice.param_bytes())?;
+        }
+        let shards = slices
+            .into_iter()
+            .zip(devices)
+            .map(|(slice, device)| {
+                ShardExecutor::spawn(engine.clone(), slice, policy, device)
+            })
+            .collect();
+        Ok(ExecutorFleet { shards, assign })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The layer partition this fleet serves.
+    pub fn assignment(&self) -> &LayerAssignment {
+        &self.assign
+    }
+
+    /// Channel of the first shard — the whole fleet for single-shard
+    /// deployments (every pre-fleet caller), e.g. privacy-noise
+    /// registration against a local executor.
+    pub fn sender(&self) -> Sender<ExecMsg> {
+        self.shards[0].sender()
+    }
+
+    /// Channel of the shard owning `layer` (what sharded privacy
+    /// registration must use).
+    pub fn sender_for(&self, layer: LayerId) -> Sender<ExecMsg> {
+        self.shards[self.assign.shard_of(layer)].sender()
+    }
+
+    /// Build one client's routing table: the owning-shard channel per
+    /// layer plus a per-shard [`Link`](crate::transport::Link).  Link
+    /// kinds come from the placement (co-located shard `SharedLocal`,
+    /// cross-shard hops `NvLink`) unless overridden by the session
+    /// builder.
+    pub(crate) fn routing_for(&self, client_id: usize,
+                              placement: &Placement,
+                              link_override: Option<LinkKind>)
+                              -> RoutingTable {
+        let kinds: Vec<LinkKind> = match link_override {
+            Some(k) => vec![k; self.shards.len()],
+            None => placement.shard_links(client_id, self.shards.len()),
+        };
+        let routes = self
+            .shards
+            .iter()
+            .zip(kinds)
+            .map(|(s, k)| ShardRoute::new(s.sender(), k))
+            .collect();
+        RoutingTable::new(self.assign.clone(), routes)
+    }
+
+    /// Merged + per-shard statistics snapshot.
+    pub fn stats(&self) -> FleetStats {
+        FleetStats::merge(self.shards.iter().map(|s| s.stats()).collect())
+    }
+
+    /// Bytes resident on each shard's device ledger (the real weight
+    /// slice — ~1/N of the base each).
+    pub fn shard_resident_bytes(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.resident_bytes()).collect()
+    }
+
+    /// Stop every shard, draining in layer order (shard 0 first), and
+    /// return the final statistics.
+    pub fn shutdown(self) -> FleetStats {
+        let mut per_shard = Vec::with_capacity(self.shards.len());
+        for shard in self.shards {
+            per_shard.push(shard.shutdown());
+        }
+        FleetStats::merge(per_shard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SYM_TINY;
+    use crate::coordinator::model_state::{scan, split_shards};
+    use crate::device::{DeviceKind, MemoryLedger};
+    use crate::tensor::Tensor;
+    use std::collections::HashMap;
+
+    fn fake_base() -> BaseWeights {
+        let cfg = &SYM_TINY;
+        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        let mut m = HashMap::new();
+        m.insert("embed".into(), Tensor::zeros(&[v, d]));
+        m.insert("pos".into(), Tensor::zeros(&[cfg.max_seq, d]));
+        m.insert("norm_f".into(), Tensor::zeros(&[d]));
+        m.insert("lm_head_w".into(), Tensor::zeros(&[d, v]));
+        m.insert("lm_head_b".into(), Tensor::zeros(&[v]));
+        for l in 0..cfg.n_layers {
+            m.insert(format!("l{l}.norm1"), Tensor::zeros(&[d]));
+            m.insert(format!("l{l}.norm2"), Tensor::zeros(&[d]));
+            m.insert(format!("l{l}.wqkv"), Tensor::zeros(&[d, 3 * d]));
+            m.insert(format!("l{l}.bqkv"), Tensor::zeros(&[3 * d]));
+            m.insert(format!("l{l}.wo"), Tensor::zeros(&[d, d]));
+            m.insert(format!("l{l}.bo"), Tensor::zeros(&[d]));
+            m.insert(format!("l{l}.wup"), Tensor::zeros(&[d, f]));
+            m.insert(format!("l{l}.bup"), Tensor::zeros(&[f]));
+            m.insert(format!("l{l}.wdown"), Tensor::zeros(&[f, d]));
+            m.insert(format!("l{l}.bdown"), Tensor::zeros(&[d]));
+        }
+        scan(cfg, &m).unwrap().0
+    }
+
+    #[test]
+    fn charge_shard_oom_is_typed() {
+        let base = fake_base();
+        let assign = LayerAssignment::contiguous(SYM_TINY.n_layers, 2);
+        let slices = split_shards(base, &assign);
+        let mut dev = Device::new("tiny", DeviceKind::GpuFast40);
+        dev.ledger = MemoryLedger::new(1024); // 1 KiB: cannot fit
+        let err = charge_shard(&mut dev, 1, slices[1].param_bytes())
+            .unwrap_err();
+        let typed: SymbiosisError = err.into();
+        match typed {
+            SymbiosisError::ShardOom { shard, need_bytes,
+                                       capacity_bytes } => {
+                assert_eq!(shard, 1);
+                assert_eq!(capacity_bytes, 1024);
+                assert!(need_bytes > capacity_bytes);
+            }
+            other => panic!("expected ShardOom, got {other}"),
+        }
+    }
+
+    #[test]
+    fn charge_shard_fits_and_ledgers_split_the_base() {
+        let base = fake_base();
+        let total = base.param_bytes();
+        let assign = LayerAssignment::contiguous(SYM_TINY.n_layers, 4);
+        let slices = split_shards(base, &assign);
+        let mut charged = 0u64;
+        for s in &slices {
+            let mut dev = Device::new("g", DeviceKind::GpuA100_80);
+            charge_shard(&mut dev, s.shard, s.param_bytes()).unwrap();
+            assert_eq!(dev.ledger.used(), s.param_bytes());
+            charged += dev.ledger.used();
+        }
+        assert_eq!(charged, total);
+    }
+
+    #[test]
+    fn merged_stats_sum_over_shards() {
+        let a = ExecutorStats {
+            n_flushes: 3,
+            sum_batch_clients: 6.0,
+            sum_wait_secs: 0.3,
+            real_tokens: 100,
+            bucket_tokens: 128,
+            requests_served: 9,
+            ..Default::default()
+        };
+        let b = ExecutorStats {
+            n_flushes: 1,
+            sum_batch_clients: 2.0,
+            sum_wait_secs: 0.1,
+            real_tokens: 28,
+            bucket_tokens: 32,
+            requests_served: 2,
+            ..Default::default()
+        };
+        let f = FleetStats::merge(vec![a, b]);
+        assert_eq!(f.n_shards(), 2);
+        assert_eq!(f.n_flushes, 4); // via Deref
+        assert_eq!(f.requests_served, 11);
+        assert!((f.mean_batch_clients() - 2.0).abs() < 1e-9);
+        assert!((f.padding_overhead() - (1.0 - 128.0 / 160.0)).abs()
+                < 1e-9);
+    }
+}

@@ -10,6 +10,8 @@
 //! # use symbiosis::coordinator::*;
 //! # fn main() -> anyhow::Result<()> {
 //! # let dir = std::path::PathBuf::from("artifacts");
+//! // shards come from the placement: `ShardedLocal { shards: 2 }`
+//! // spawns a two-shard executor fleet, `Local` a fleet of one.
 //! let dep = Deployment::start(&SYM_TINY, &dir,
 //!                             BatchPolicy::opportunistic_default(),
 //!                             Placement::Local)?;
@@ -34,22 +36,33 @@
 //! to incremental prefill happen automatically.  Failures surface as
 //! typed [`SymbiosisError`]s.
 //!
-//! Module map:
-//! * [`base_executor`] — shared frozen-layer service with per-layer
-//!   opportunistic batching (sections 3.2, 3.6, 3.7).
-//! * [`virt_layer`] — the client-side proxy replacing frozen layers
-//!   (Fig. 4).
+//! Module map — the request path from client to device:
 //! * [`client`] — the layer walker, sessions/trainers, and their
 //!   builders; each client drives its own execution (design goal 5).
+//! * [`virt_layer`] — the client-side proxy replacing frozen layers
+//!   (Fig. 4).  Holds the per-client `RoutingTable`: each `LayerId`
+//!   resolves to the shard executor owning it, over a per-shard link
+//!   (co-located `SharedLocal`, cross-shard `NvLink`).
+//! * [`fleet`] — the executor fleet: one shard thread per contiguous
+//!   layer range, each with its own batching queues and an OOM-enforced
+//!   `Device` memory ledger; `FleetStats` merges per-shard snapshots.
+//! * [`base_executor`] — one shard: frozen-layer service with per-layer
+//!   opportunistic batching (sections 3.2, 3.6, 3.7); failures answer
+//!   typed errors over the wire.
+//! * [`sharding`] / [`placement`] — the `ShardPlan` cost model **and**
+//!   its executable `LayerAssignment` (section 3.3); placements map
+//!   shard topology to link kinds and device classes (Fig. 5).
 //! * [`adapter`] — the [`AdapterHooks`] trait and the LoRA/IA3/Prefix
 //!   implementations; [`optimizer`] / [`kv_cache`] — client-owned state.
 //! * [`privacy`] — the additive-noise activation protocol (section 3.8).
-//! * [`placement`] / [`sharding`] — Fig. 5 topologies + analytic models.
+//!   Sharded deployments register noise via
+//!   [`ExecutorFleet::sender_for`] (the layer's owning shard).
 
 pub mod adapter;
 pub mod base_executor;
 pub mod batching;
 pub mod client;
+pub mod fleet;
 pub mod kv_cache;
 pub mod model_state;
 pub mod optimizer;
@@ -67,35 +80,41 @@ use anyhow::Result;
 use crate::config::ModelConfig;
 use crate::coordinator::privacy::PrivacyCtx;
 use crate::runtime::Engine;
-use crate::transport::{Link, LinkKind};
+use crate::transport::LinkKind;
 
 pub use crate::error::{SymResult, SymbiosisError};
 pub use adapter::{Adapter, AdapterHooks, HookCtx, Ia3Adapter,
                   LoraAdapter, LoraTargets, NoAdapter, PrefixAdapter};
-pub use base_executor::{BaseExecutor, ExecutorStats};
+pub use base_executor::{ExecutorStats, FlushRecord, ShardExecutor};
 pub use batching::BatchPolicy;
 pub use client::{ClientCore, GenerationConfig, InferenceSession,
                  Sampling, SessionBuilder, Trainer, TrainerBuilder,
                  TrainOutcome, UrgencyPolicy};
+pub use fleet::{ExecutorFleet, FleetStats};
 pub use kv_cache::KvPlacement;
 pub use placement::Placement;
 pub use proto::{LayerId, OpKind, Urgency};
-pub use virt_layer::VirtLayerCtx;
+pub use sharding::{LayerAssignment, ShardPlan};
+pub use virt_layer::{RoutingTable, ShardRoute, VirtLayerCtx};
 
-/// A running deployment: one base executor + the pieces needed to attach
+/// A running deployment: an executor fleet + the pieces needed to attach
 /// clients.  This is the top-level public API — tenants are spawned from
-/// it via [`Deployment::session`] and [`Deployment::trainer`].
+/// it via [`Deployment::session`] and [`Deployment::trainer`].  The
+/// number of shards is the placement's (`Placement::shards()`).
 pub struct Deployment {
     pub cfg: ModelConfig,
     pub engine: Arc<Engine>,
-    pub executor: BaseExecutor,
+    pub executor: ExecutorFleet,
     pub client_weights: model_state::ClientWeights,
     pub placement: Placement,
     next_client_id: std::sync::atomic::AtomicUsize,
 }
 
 impl Deployment {
-    /// Load artifacts + weights and spawn the base executor.
+    /// Load artifacts + weights and spawn the executor fleet
+    /// (`placement.shards()` shard threads; fails with a typed
+    /// [`SymbiosisError::ShardOom`] when a shard's resident slice does
+    /// not fit its device ledger).
     pub fn start(cfg: &ModelConfig, artifact_dir: &Path,
                  policy: BatchPolicy, placement: Placement)
                  -> Result<Deployment> {
@@ -119,7 +138,8 @@ impl Deployment {
         );
         let (base, client_weights) =
             model_state::load_split(cfg, artifact_dir)?;
-        let executor = BaseExecutor::spawn(engine.clone(), base, policy);
+        let executor =
+            ExecutorFleet::start(engine.clone(), base, policy, placement)?;
         Ok(Deployment {
             cfg: cfg.clone(),
             engine,
@@ -140,17 +160,18 @@ impl Deployment {
         TrainerBuilder::new(self)
     }
 
-    /// Allocate a client context wired to this deployment's executor
-    /// over the placement's link.  Lower-level than the builders; most
+    /// Allocate a client context routed over this deployment's fleet on
+    /// the placement's links.  Lower-level than the builders; most
     /// callers want [`Deployment::session`] / [`Deployment::trainer`].
     pub fn client_core(&self, adapter: Option<Adapter>) -> ClientCore {
-        self.client_core_with_link(adapter, self.placement.link())
+        self.build_core(adapter, None, false, None)
     }
 
-    /// Same, with an explicit link kind (heterogeneous topologies).
+    /// Same, with an explicit link kind applied to every shard hop
+    /// (heterogeneous topologies).
     pub fn client_core_with_link(&self, adapter: Option<Adapter>,
                                  link: LinkKind) -> ClientCore {
-        self.build_core(adapter, link, false, None)
+        self.build_core(adapter, Some(link), false, None)
     }
 
     /// Full control: link kind + whether simulated link delays are
@@ -158,20 +179,23 @@ impl Deployment {
     pub fn client_core_opts(&self, adapter: Option<Adapter>,
                             link: LinkKind, realize_delays: bool)
                             -> ClientCore {
-        self.build_core(adapter, link, realize_delays, None)
+        self.build_core(adapter, Some(link), realize_delays, None)
     }
 
     /// The one place client contexts are wired: allocates a client id,
-    /// builds the layer proxy (with optional privacy), registers it with
-    /// the executor.
+    /// builds the routed layer proxy (with optional privacy), registers
+    /// it with every shard.  `link_override` replaces the
+    /// placement-derived per-shard link kinds when set.
     pub(crate) fn build_core(&self, adapter: Option<Adapter>,
-                             link: LinkKind, realize_delays: bool,
+                             link_override: Option<LinkKind>,
+                             realize_delays: bool,
                              privacy: Option<PrivacyCtx>) -> ClientCore {
         let id = self
             .next_client_id
             .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-        let mut ctx =
-            VirtLayerCtx::new(id, self.executor.sender(), Link::new(link));
+        let routing =
+            self.executor.routing_for(id, &self.placement, link_override);
+        let mut ctx = VirtLayerCtx::new(id, routing);
         ctx.realize_delays = realize_delays;
         ctx.privacy = privacy;
         let virt = Arc::new(ctx);
@@ -185,8 +209,9 @@ impl Deployment {
         }
     }
 
-    /// Stop the executor and return its statistics.
-    pub fn shutdown(self) -> ExecutorStats {
+    /// Stop the fleet (draining shards in layer order) and return its
+    /// statistics — the merged view plus per-shard detail.
+    pub fn shutdown(self) -> FleetStats {
         self.executor.shutdown()
     }
 }

@@ -1,19 +1,23 @@
-//! Split loading of model weights along the Symbiosis line.
+//! Split loading of model weights along the Symbiosis lines.
 //!
-//! `scan` mirrors the paper's model-structure scan (section 3.2): given
-//! the full weight container, it partitions parameters into the
-//! **base-executor share** (the big frozen linears + embeddings) and the
-//! **client share** (norm gains — the tenant loads these next to its
-//! adapters).  This is the Rust analogue of replacing frozen layers with
-//! `VirtLayer` without touching model code.
+//! Two splits happen here.  `scan` mirrors the paper's model-structure
+//! scan (section 3.2): given the full weight container, it partitions
+//! parameters into the **base-executor share** (the big frozen linears +
+//! embeddings) and the **client share** (norm gains — the tenant loads
+//! these next to its adapters).  `split_shards` then cuts the executor
+//! share along a [`LayerAssignment`] (section 3.3): each shard executor
+//! receives only the contiguous block range it owns — `Arc`-backed
+//! tensor views, so the cut moves no bytes — and its `Device` ledger is
+//! charged with exactly that resident slice.
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::ModelConfig;
 use crate::coordinator::proto::LayerId;
+use crate::coordinator::sharding::LayerAssignment;
 use crate::tensor::{container, Tensor};
 
 /// Frozen base-model parameters held by the base executor.
@@ -38,6 +42,17 @@ pub struct BlockWeights {
     pub bup: Tensor,
     pub wdown: Tensor,
     pub bdown: Tensor,
+}
+
+impl BlockWeights {
+    /// Parameter bytes of one block — the unit both the full-base and
+    /// per-shard ledger sums are built from.
+    pub fn param_bytes(&self) -> u64 {
+        (self.wqkv.size_bytes() + self.bqkv.size_bytes()
+            + self.wo.size_bytes() + self.bo.size_bytes()
+            + self.wup.size_bytes() + self.bup.size_bytes()
+            + self.wdown.size_bytes() + self.bdown.size_bytes()) as u64
+    }
 }
 
 /// Client-side non-base parameters (norm gains). Adapters live in
@@ -93,16 +108,129 @@ impl BaseWeights {
 
     /// Total parameter bytes held by the executor (memory accounting).
     pub fn param_bytes(&self) -> u64 {
-        let mut total = self.embed.size_bytes() + self.pos.size_bytes()
-            + self.lm_head_w.size_bytes() + self.lm_head_b.size_bytes();
-        for b in &self.blocks {
-            total += b.wqkv.size_bytes() + b.bqkv.size_bytes()
-                + b.wo.size_bytes() + b.bo.size_bytes()
-                + b.wup.size_bytes() + b.bup.size_bytes()
-                + b.wdown.size_bytes() + b.bdown.size_bytes();
-        }
-        total as u64
+        (self.embed.size_bytes() + self.pos.size_bytes()
+            + self.lm_head_w.size_bytes()
+            + self.lm_head_b.size_bytes()) as u64
+            + self.blocks.iter().map(|b| b.param_bytes()).sum::<u64>()
     }
+}
+
+/// One executor shard's slice of the frozen base: a contiguous block
+/// range plus the boundary layers (embedding on the first shard, LM
+/// head on the last).  Built by [`split_shards`]; owned by one
+/// `ShardExecutor` thread.
+#[derive(Debug)]
+pub struct ShardWeights {
+    pub cfg: ModelConfig,
+    pub shard: usize,
+    /// Absolute index of `blocks[0]`.
+    pub block_start: usize,
+    pub blocks: Vec<BlockWeights>,
+    /// `(embed, pos)` — present on the shard owning block 0 only.
+    pub embed: Option<(Tensor, Tensor)>,
+    /// `(w, b)` — present on the shard owning the last block only.
+    pub lm_head: Option<(Tensor, Tensor)>,
+}
+
+impl ShardWeights {
+    fn block(&self, l: usize) -> Result<&BlockWeights> {
+        if l < self.block_start
+            || l >= self.block_start + self.blocks.len()
+        {
+            bail!("shard {} does not own block {l} (owns {}..{})",
+                  self.shard, self.block_start,
+                  self.block_start + self.blocks.len());
+        }
+        Ok(&self.blocks[l - self.block_start])
+    }
+
+    /// Whether this shard serves `layer`.
+    pub fn owns(&self, layer: LayerId) -> bool {
+        match layer {
+            LayerId::Embed => self.embed.is_some(),
+            LayerId::LmHead => self.lm_head.is_some(),
+            _ => layer
+                .block()
+                .map(|l| self.block(l).is_ok())
+                .unwrap_or(false),
+        }
+    }
+
+    /// Weight matrix + bias for a linear base layer; errors when the
+    /// request was mis-routed to a shard that does not own the layer.
+    pub fn linear(&self, layer: LayerId) -> Result<(&Tensor, &Tensor)> {
+        match layer {
+            LayerId::Qkv(l) => {
+                self.block(l).map(|b| (&b.wqkv, &b.bqkv))
+            }
+            LayerId::AttnOut(l) => {
+                self.block(l).map(|b| (&b.wo, &b.bo))
+            }
+            LayerId::MlpUp(l) => {
+                self.block(l).map(|b| (&b.wup, &b.bup))
+            }
+            LayerId::MlpDown(l) => {
+                self.block(l).map(|b| (&b.wdown, &b.bdown))
+            }
+            LayerId::LmHead => self
+                .lm_head
+                .as_ref()
+                .map(|(w, b)| (w, b))
+                .ok_or_else(|| anyhow::anyhow!(
+                    "shard {} does not own the LM head", self.shard)),
+            LayerId::Embed => bail!("embed is not a linear layer"),
+        }
+    }
+
+    /// Embedding + position tables (first shard only).
+    pub fn embed_tables(&self) -> Result<(&Tensor, &Tensor)> {
+        self.embed
+            .as_ref()
+            .map(|(e, p)| (e, p))
+            .ok_or_else(|| anyhow::anyhow!(
+                "shard {} does not own the embedding", self.shard))
+    }
+
+    /// Resident parameter bytes of this slice — what the shard's device
+    /// ledger is charged with (~1/shards of the base).
+    pub fn param_bytes(&self) -> u64 {
+        let mut total = 0u64;
+        if let Some((e, p)) = &self.embed {
+            total += (e.size_bytes() + p.size_bytes()) as u64;
+        }
+        if let Some((w, b)) = &self.lm_head {
+            total += (w.size_bytes() + b.size_bytes()) as u64;
+        }
+        total + self.blocks.iter().map(|b| b.param_bytes()).sum::<u64>()
+    }
+}
+
+/// Cut the executor share into per-shard slices along `assign`.  The
+/// blocks move (each tensor keeps exactly one owner); the boundary
+/// layers are refcount-bumped views into their shards.
+pub fn split_shards(base: BaseWeights, assign: &LayerAssignment)
+                    -> Vec<ShardWeights> {
+    let BaseWeights { cfg, embed, pos, lm_head_w, lm_head_b, blocks } =
+        base;
+    debug_assert_eq!(blocks.len(), assign.n_layers());
+    let n = assign.shards();
+    let mut blocks_iter = blocks.into_iter();
+    let mut out = Vec::with_capacity(n);
+    for s in 0..n {
+        let range = assign.block_range(s);
+        let slice: Vec<BlockWeights> =
+            blocks_iter.by_ref().take(range.len()).collect();
+        out.push(ShardWeights {
+            cfg: cfg.clone(),
+            shard: s,
+            block_start: range.start,
+            blocks: slice,
+            embed: (s == 0).then(|| (embed.clone(), pos.clone())),
+            lm_head: (s == n - 1)
+                .then(|| (lm_head_w.clone(), lm_head_b.clone())),
+        });
+    }
+    out
 }
 
 /// Scan a full weight container and split it into base / client shares.
@@ -194,6 +322,35 @@ mod tests {
         let mut w = fake_weights(&SYM_TINY);
         w.remove("l2.wo");
         assert!(scan(&SYM_TINY, &w).is_err());
+    }
+
+    #[test]
+    fn split_shards_partitions_blocks_and_bytes() {
+        let w = fake_weights(&SYM_TINY);
+        let (base, _) = scan(&SYM_TINY, &w).unwrap();
+        let total = base.param_bytes();
+        let assign = LayerAssignment::contiguous(SYM_TINY.n_layers, 2);
+        let shards = split_shards(base, &assign);
+        assert_eq!(shards.len(), 2);
+        // boundary layers sit on the boundary shards
+        assert!(shards[0].embed.is_some());
+        assert!(shards[0].lm_head.is_none());
+        assert!(shards[1].lm_head.is_some());
+        assert!(shards[1].embed.is_none());
+        // every block is owned exactly once; bytes are conserved
+        assert_eq!(shards.iter().map(|s| s.blocks.len()).sum::<usize>(),
+                   SYM_TINY.n_layers);
+        assert_eq!(shards.iter().map(|s| s.param_bytes()).sum::<u64>(),
+                   total);
+        // routing-side lookups agree with ownership
+        assert!(shards[0].linear(LayerId::Qkv(0)).is_ok());
+        assert!(shards[0].linear(LayerId::Qkv(3)).is_err());
+        assert!(shards[1].linear(LayerId::MlpDown(3)).is_ok());
+        assert!(shards[1].linear(LayerId::LmHead).is_ok());
+        assert!(shards[0].embed_tables().is_ok());
+        assert!(shards[1].embed_tables().is_err());
+        assert!(shards[0].owns(LayerId::Embed));
+        assert!(!shards[1].owns(LayerId::Embed));
     }
 
     #[test]

@@ -68,6 +68,32 @@ impl Placement {
             _ => 1,
         }
     }
+
+    /// Link kind from one client to each of `shards` executor shards —
+    /// what the fleet's client-side routing table charges per hop.
+    /// Sharded-local clients are co-located with one shard (round-robin
+    /// by client id): that hop is `SharedLocal`, cross-shard hops cross
+    /// `NvLink`.  Sharded-remote clients reach every shard over
+    /// `NvLink`; unsharded placements keep their single link kind.
+    pub fn shard_links(&self, client_id: usize, shards: usize)
+                       -> Vec<LinkKind> {
+        let shards = shards.max(1);
+        match self {
+            Placement::ShardedLocal { .. } => (0..shards)
+                .map(|s| {
+                    if s == client_id % shards {
+                        LinkKind::SharedLocal
+                    } else {
+                        LinkKind::NvLink
+                    }
+                })
+                .collect(),
+            Placement::ShardedRemote { .. } => {
+                vec![LinkKind::NvLink; shards]
+            }
+            _ => vec![self.link(); shards],
+        }
+    }
 }
 
 /// Analytic per-iteration model of one fine-tuning client under a
@@ -222,6 +248,23 @@ mod tests {
         let hom = model(Placement::Remote).iteration_secs(4, 8, 4, true);
         let het = model(Placement::HeteroGpu).iteration_secs(4, 8, 4, true);
         assert!(het < hom * 1.35, "het {het} hom {hom}");
+    }
+
+    #[test]
+    fn shard_links_follow_colocation() {
+        let p = Placement::ShardedLocal { shards: 4 };
+        let links = p.shard_links(2, 4);
+        assert_eq!(links.len(), 4);
+        assert_eq!(links[2], LinkKind::SharedLocal);
+        assert!(links.iter().enumerate().all(|(s, l)| {
+            (s == 2) == (*l == LinkKind::SharedLocal)
+        }));
+        let r = Placement::ShardedRemote { shards: 2 };
+        assert_eq!(r.shard_links(0, 2),
+                   vec![LinkKind::NvLink, LinkKind::NvLink]);
+        // unsharded placements keep their one link kind
+        assert_eq!(Placement::CpuClient.shard_links(0, 1),
+                   vec![LinkKind::Pcie]);
     }
 
     #[test]

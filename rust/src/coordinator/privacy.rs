@@ -99,10 +99,9 @@ impl PrivacyCtx {
                 .ok()
                 .context("executor gone")?;
             let resp = rx.recv().context("noise registration dropped")?;
-            if resp.y.shape.is_empty() || resp.y.len() == 0 {
-                bail!("noise registration failed for {layer:?}");
-            }
-            pool.push((n, resp.y));
+            let n_eff = resp.y.map_err(|m| anyhow::anyhow!(
+                "noise registration failed for {layer:?}: {m}"))?;
+            pool.push((n, n_eff));
         }
         self.noise
             .lock()

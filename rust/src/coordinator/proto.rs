@@ -1,10 +1,12 @@
-//! Wire protocol between clients and the base executor.
+//! Wire protocol between clients and the executor fleet.
 //!
 //! A client's `VirtLayer` proxy packages each base-layer invocation as an
-//! [`ExecMsg::Request`]; the executor batches compatible requests
-//! (same layer + direction), executes the AOT artifact, splits the result
-//! and answers over the per-request response channel — the paper's
-//! split-execution handshake (section 3.2).
+//! [`ExecMsg::Request`] and routes it to the shard executor owning that
+//! layer (see [`LayerId::block`], the shard-routing key); the shard
+//! batches compatible requests (same layer + direction), executes the
+//! AOT artifact, splits the result and answers over the per-request
+//! response channel — the paper's split-execution handshake
+//! (section 3.2) over the sharded base of section 3.3.
 
 use std::sync::mpsc::Sender;
 
@@ -43,6 +45,20 @@ impl LayerId {
     /// Total number of distinct base layers for a block count.
     pub fn count(n_layers: usize) -> usize {
         2 + n_layers * 4
+    }
+
+    /// The transformer block this layer belongs to — the shard-routing
+    /// key.  `None` for the boundary layers: the embedding rides with
+    /// the shard owning block 0, the LM head with the shard owning the
+    /// last block (see `sharding::LayerAssignment`).
+    pub fn block(&self) -> Option<usize> {
+        match *self {
+            LayerId::Qkv(l)
+            | LayerId::AttnOut(l)
+            | LayerId::MlpUp(l)
+            | LayerId::MlpDown(l) => Some(l),
+            LayerId::Embed | LayerId::LmHead => None,
+        }
     }
 
     pub fn label(&self) -> String {
@@ -94,10 +110,14 @@ pub struct LayerRequest {
     pub resp: Sender<LayerResponse>,
 }
 
-/// Executor's answer: the per-client slice of the batched output.
+/// Executor's answer: the per-client slice of the batched output, or a
+/// typed failure.  A failed flush answers every co-batched request with
+/// `Err(message)` instead of dropping the senders, so clients surface a
+/// `SymbiosisError::ExecutorFailed` rather than a bare channel
+/// disconnect.
 #[derive(Debug)]
 pub struct LayerResponse {
-    pub y: Tensor,
+    pub y: Result<Tensor, String>,
     /// How long the request waited in the batching queue (for Fig 7 /
     /// Table 5 reproductions).
     pub queue_wait_secs: f64,
@@ -106,7 +126,7 @@ pub struct LayerResponse {
     pub batch_clients: usize,
 }
 
-/// Messages accepted by the base-executor thread.
+/// Messages accepted by a shard-executor thread.
 #[derive(Debug)]
 pub enum ExecMsg {
     /// A client joins (lockstep policies count registered clients).

@@ -7,13 +7,17 @@
 //! to that layer are fetched ... after the layer's execution, the fetched
 //! parameters are released").
 //!
-//! This module provides the per-GPU memory accounting and the per-layer
-//! fetch schedule the sharded benches consume; real numerics continue to
-//! run unsharded on the CPU substrate.
+//! This module provides both the analytic accounting (per-GPU memory,
+//! per-layer fetch schedule) the sharded benches consume **and** the
+//! executable [`LayerAssignment`] the executor fleet deploys: a
+//! `ShardPlan` is no longer just a cost model — `layer_assignment()`
+//! yields the contiguous block partition that `coordinator::fleet`
+//! spawns one shard executor per range for.
 
 use anyhow::Result;
 
 use crate::config::ModelConfig;
+use crate::coordinator::proto::LayerId;
 use crate::device::Device;
 use crate::transport::LinkKind;
 
@@ -83,6 +87,83 @@ impl ShardPlan {
     }
 }
 
+/// The executable layer partition a [`ShardPlan`] induces: each shard
+/// owns a contiguous range of transformer blocks; the embedding rides
+/// with the first shard and the LM head with the last, so a full layer
+/// walk visits shards in index order (which is also the fleet's
+/// shutdown-drain order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerAssignment {
+    n_layers: usize,
+    /// First absolute block of each shard, strictly increasing.
+    starts: Vec<usize>,
+}
+
+impl LayerAssignment {
+    /// Split `n_layers` blocks contiguously over `shards` executors
+    /// (earlier shards take the remainder).  Clamped so every shard
+    /// owns at least one block.
+    pub fn contiguous(n_layers: usize, shards: usize) -> Self {
+        let shards = shards.max(1).min(n_layers.max(1));
+        let base = n_layers / shards;
+        let extra = n_layers % shards;
+        let mut starts = Vec::with_capacity(shards);
+        let mut at = 0;
+        for s in 0..shards {
+            starts.push(at);
+            at += base + usize::from(s < extra);
+        }
+        LayerAssignment { n_layers, starts }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.starts.len()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Absolute block range owned by `shard`.
+    pub fn block_range(&self, shard: usize) -> std::ops::Range<usize> {
+        let end = self
+            .starts
+            .get(shard + 1)
+            .copied()
+            .unwrap_or(self.n_layers);
+        self.starts[shard]..end
+    }
+
+    /// Shard owning an absolute block index.
+    pub fn shard_of_block(&self, block: usize) -> usize {
+        match self.starts.binary_search(&block) {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        }
+    }
+
+    /// Shard owning a layer — the client-side routing function.
+    pub fn shard_of(&self, layer: LayerId) -> usize {
+        match layer.block() {
+            Some(l) => {
+                self.shard_of_block(l.min(self.n_layers.saturating_sub(1)))
+            }
+            None => match layer {
+                LayerId::Embed => 0,
+                _ => self.shards() - 1, // LmHead
+            },
+        }
+    }
+}
+
+impl ShardPlan {
+    /// The executable partition this plan induces (what
+    /// `coordinator::fleet` deploys).
+    pub fn layer_assignment(&self) -> LayerAssignment {
+        LayerAssignment::contiguous(self.cfg.n_layers, self.shards)
+    }
+}
+
 /// Check whether a model fits a set of identical GPUs under a plan.
 pub fn fits(plan: &ShardPlan, gpu_capacity: u64) -> bool {
     plan.resident_bytes_per_gpu() + plan.block_working_set()
@@ -147,5 +228,40 @@ mod tests {
         let plan = ShardPlan::new(LLAMA2_13B, 4);
         assert!(plan.fetch_secs_per_pass(0.8)
                 < plan.fetch_secs_per_pass(0.0));
+    }
+
+    #[test]
+    fn assignment_is_contiguous_and_total() {
+        for (n_layers, shards) in [(4usize, 1usize), (4, 2), (4, 3),
+                                   (4, 4), (7, 3), (46, 8)] {
+            let a = LayerAssignment::contiguous(n_layers, shards);
+            assert_eq!(a.shards(), shards.min(n_layers));
+            let mut covered = 0;
+            for s in 0..a.shards() {
+                let r = a.block_range(s);
+                assert_eq!(r.start, covered, "gap before shard {s}");
+                assert!(!r.is_empty(), "empty shard {s}");
+                for l in r.clone() {
+                    assert_eq!(a.shard_of_block(l), s);
+                    assert_eq!(a.shard_of(LayerId::Qkv(l)), s);
+                    assert_eq!(a.shard_of(LayerId::MlpDown(l)), s);
+                }
+                covered = r.end;
+            }
+            assert_eq!(covered, n_layers);
+            assert_eq!(a.shard_of(LayerId::Embed), 0);
+            assert_eq!(a.shard_of(LayerId::LmHead), a.shards() - 1);
+        }
+    }
+
+    #[test]
+    fn plan_yields_its_assignment() {
+        let plan = ShardPlan::new(GEMMA2_27B, 4);
+        let a = plan.layer_assignment();
+        assert_eq!(a.shards(), 4);
+        assert_eq!(a.n_layers(), GEMMA2_27B.n_layers);
+        // boundary layers ride with the boundary shards
+        assert_eq!(a.shard_of(LayerId::Embed), 0);
+        assert_eq!(a.shard_of(LayerId::LmHead), 3);
     }
 }

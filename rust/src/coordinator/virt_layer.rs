@@ -1,20 +1,29 @@
-//! `VirtLayer` — the client-side proxy for a base-model layer.
+//! `VirtLayer` — the client-side proxy for a base-model layer, routed
+//! over the shard fleet.
 //!
 //! The paper replaces every frozen layer in the client's model definition
 //! with a `torch.nn.Module` whose forward/backward ship activations to
 //! the base executor (section 3.2, Fig. 4).  Here the proxy is a handle
-//! that packages the request, charges the client<->executor link, applies
-//! the privacy protocol when configured, and blocks on the response —
-//! keeping the *client* the driver of its own execution.
+//! that packages the request, looks the layer up in its [`RoutingTable`]
+//! (section 3.3: the base may be sharded over several executors),
+//! charges that shard's [`Link`], applies the privacy protocol when
+//! configured, and blocks on the response — keeping the *client* the
+//! driver of its own execution.
 //!
 //! With Arc-backed tensors the request/response payloads are shared
 //! views: shipping `x` to the executor (and receiving the scattered
-//! output slice back) moves no activation bytes in-process.  The [`Link`]
-//! still charges the *modeled* transfer for the placement being
-//! simulated — accounting is unchanged, only real host copies went away.
+//! output slice back) moves no activation bytes in-process.  Each shard
+//! route still charges the *modeled* transfer for the placement being
+//! simulated — a co-located shard costs `SharedLocal`, a cross-shard hop
+//! `NvLink` — so accounting matches the topology while real host copies
+//! stay zero.
+//!
+//! A shard that fails a flush answers with a typed error message; the
+//! proxy surfaces it as [`SymbiosisError::ExecutorFailed`] instead of a
+//! bare channel disconnect.
 //!
 //! Contexts are built by [`Deployment::build_core`] (one per client id);
-//! sessions configure the link, realized delays, and the privacy
+//! sessions configure the links, realized delays, and the privacy
 //! protocol through the
 //! [`SessionBuilder`](crate::coordinator::SessionBuilder) rather than
 //! mutating this struct after the fact.
@@ -29,15 +38,63 @@ use anyhow::{Context, Result};
 use crate::coordinator::privacy::PrivacyCtx;
 use crate::coordinator::proto::{ExecMsg, LayerId, LayerRequest,
                                 LayerResponse, OpKind, Urgency};
+use crate::coordinator::sharding::LayerAssignment;
+use crate::error::SymbiosisError;
 use crate::tensor::Tensor;
-use crate::transport::Link;
+use crate::transport::{Link, LinkKind};
 
-/// Per-client view of the executor: layer proxies share this context.
+/// One shard's endpoint as a client sees it: the executor channel plus
+/// the simulated link the client's traffic to that shard crosses.
+pub struct ShardRoute {
+    pub tx: Sender<ExecMsg>,
+    pub link: Mutex<Link>,
+}
+
+impl ShardRoute {
+    pub fn new(tx: Sender<ExecMsg>, kind: LinkKind) -> Self {
+        ShardRoute { tx, link: Mutex::new(Link::new(kind)) }
+    }
+}
+
+/// Client-side routing over the executor fleet: which shard owns each
+/// layer, and over which link it is reached.
+pub struct RoutingTable {
+    assign: LayerAssignment,
+    routes: Vec<ShardRoute>,
+}
+
+impl RoutingTable {
+    pub fn new(assign: LayerAssignment, routes: Vec<ShardRoute>) -> Self {
+        assert_eq!(assign.shards(), routes.len(),
+                   "assignment/route count mismatch");
+        RoutingTable { assign, routes }
+    }
+
+    /// Single-shard table — the pre-fleet topology (tests, tools).
+    pub fn single(tx: Sender<ExecMsg>, kind: LinkKind) -> Self {
+        RoutingTable::new(LayerAssignment::contiguous(1, 1),
+                          vec![ShardRoute::new(tx, kind)])
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.routes.len()
+    }
+
+    /// The route serving `layer`.
+    pub fn route(&self, layer: LayerId) -> &ShardRoute {
+        &self.routes[self.assign.shard_of(layer)]
+    }
+
+    pub fn routes(&self) -> &[ShardRoute] {
+        &self.routes
+    }
+}
+
+/// Per-client view of the executor fleet: layer proxies share this
+/// context.
 pub struct VirtLayerCtx {
     pub client_id: usize,
-    pub exec_tx: Sender<ExecMsg>,
-    /// Simulated link to the executor (charged per message).
-    pub link: Mutex<Link>,
+    routing: RoutingTable,
     /// Optional activation-privacy protocol state.
     pub privacy: Option<PrivacyCtx>,
     /// When set, simulated link delays are *realized* as actual sleeps,
@@ -46,17 +103,15 @@ pub struct VirtLayerCtx {
     pub realize_delays: bool,
     /// Accumulated queue-wait observed by this client (Fig 7).
     pub wait_secs: Mutex<f64>,
-    /// Accumulated simulated link time.
+    /// Accumulated simulated link time (all shard links).
     pub link_secs: Mutex<f64>,
 }
 
 impl VirtLayerCtx {
-    pub fn new(client_id: usize, exec_tx: Sender<ExecMsg>,
-               link: Link) -> Self {
+    pub fn new(client_id: usize, routing: RoutingTable) -> Self {
         VirtLayerCtx {
             client_id,
-            exec_tx,
-            link: Mutex::new(link),
+            routing,
             privacy: None,
             realize_delays: false,
             wait_secs: Mutex::new(0.0),
@@ -64,22 +119,22 @@ impl VirtLayerCtx {
         }
     }
 
-    pub fn with_privacy(mut self, p: PrivacyCtx) -> Self {
-        self.privacy = Some(p);
-        self
-    }
-
-    /// Register with the executor (lockstep policies count clients).
+    /// Register with every shard (lockstep policies count clients at
+    /// each shard independently).
     pub fn register(&self) {
-        let _ = self.exec_tx.send(ExecMsg::Register {
-            client_id: self.client_id,
-        });
+        for r in self.routing.routes() {
+            let _ = r.tx.send(ExecMsg::Register {
+                client_id: self.client_id,
+            });
+        }
     }
 
     pub fn deregister(&self) {
-        let _ = self.exec_tx.send(ExecMsg::Deregister {
-            client_id: self.client_id,
-        });
+        for r in self.routing.routes() {
+            let _ = r.tx.send(ExecMsg::Deregister {
+                client_id: self.client_id,
+            });
+        }
     }
 
     /// Invoke the forward pass of a base linear layer with activations
@@ -110,20 +165,25 @@ impl VirtLayerCtx {
                         Some(positions), urgency)
     }
 
+    /// Charge one payload to a shard's link, realizing the delay when
+    /// configured.
+    fn charge(&self, route: &ShardRoute, t: &Tensor) {
+        let dt = route.link.lock().unwrap().send(t);
+        *self.link_secs.lock().unwrap() += dt;
+        if self.realize_delays && dt > 20e-6 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+        }
+    }
+
     fn round_trip(&self, layer: LayerId, op: OpKind, x: Tensor,
                   positions: Option<Tensor>, urgency: Urgency)
                   -> Result<Tensor> {
-        // Charge the simulated link for the request payload.
-        {
-            let mut link = self.link.lock().unwrap();
-            let dt = link.send(&x);
-            *self.link_secs.lock().unwrap() += dt;
-            if self.realize_delays && dt > 20e-6 {
-                std::thread::sleep(std::time::Duration::from_secs_f64(dt));
-            }
-        }
+        let route = self.routing.route(layer);
+        // Charge the shard's link for the request payload.
+        self.charge(route, &x);
         let (tx, rx) = channel::<LayerResponse>();
-        self.exec_tx
+        route
+            .tx
             .send(ExecMsg::Request(LayerRequest {
                 client_id: self.client_id,
                 layer,
@@ -134,24 +194,37 @@ impl VirtLayerCtx {
                 resp: tx,
             }))
             .ok()
-            .context("base executor is gone")?;
-        let resp = rx.recv().context("base executor dropped request")?;
-        // Charge the link for the response payload.
-        {
-            let mut link = self.link.lock().unwrap();
-            let dt = link.send(&resp.y);
-            *self.link_secs.lock().unwrap() += dt;
-            if self.realize_delays && dt > 20e-6 {
-                std::thread::sleep(std::time::Duration::from_secs_f64(dt));
-            }
-        }
+            .context("shard executor is gone")?;
+        let resp = rx.recv().context("shard executor dropped request")?;
         *self.wait_secs.lock().unwrap() += resp.queue_wait_secs;
-        Ok(resp.y)
+        let y = resp.y.map_err(|message| {
+            anyhow::Error::new(SymbiosisError::ExecutorFailed {
+                layer: layer.label(),
+                message,
+            })
+        })?;
+        // Charge the link for the response payload.
+        self.charge(route, &y);
+        Ok(y)
     }
 
-    /// Total simulated link time charged so far.
+    /// Total simulated link time charged so far (all shards).
     pub fn link_time(&self) -> f64 {
         *self.link_secs.lock().unwrap()
+    }
+
+    /// Per-shard link traffic: `(messages, bytes_moved)` in shard
+    /// order — shows where the routed topology sends this client's
+    /// activations.
+    pub fn link_traffic(&self) -> Vec<(u64, u64)> {
+        self.routing
+            .routes()
+            .iter()
+            .map(|r| {
+                let l = r.link.lock().unwrap();
+                (l.messages, l.bytes_moved)
+            })
+            .collect()
     }
 
     /// Total executor queue wait observed so far.
@@ -161,9 +234,70 @@ impl VirtLayerCtx {
 }
 
 impl Drop for VirtLayerCtx {
-    /// Leaving clients must deregister, or lockstep barriers would wait
-    /// for them forever (bounded only by the safety cap).
+    /// Leaving clients must deregister from every shard, or lockstep
+    /// barriers would wait for them forever (bounded only by the safety
+    /// cap).
     fn drop(&mut self) {
         self.deregister();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn routing_sends_each_layer_to_its_owner() {
+        let assign = LayerAssignment::contiguous(4, 2);
+        let (tx0, rx0) = channel();
+        let (tx1, rx1) = channel();
+        let table = RoutingTable::new(assign, vec![
+            ShardRoute::new(tx0, LinkKind::SharedLocal),
+            ShardRoute::new(tx1, LinkKind::NvLink),
+        ]);
+        let ctx = VirtLayerCtx::new(7, table);
+        ctx.register();
+        // one Register at each shard
+        assert!(matches!(rx0.try_recv().unwrap(),
+                         ExecMsg::Register { client_id: 7 }));
+        assert!(matches!(rx1.try_recv().unwrap(),
+                         ExecMsg::Register { client_id: 7 }));
+        // a block-0 request lands on shard 0, a block-3 one on shard 1
+        for (layer, want0) in [(LayerId::Qkv(0), true),
+                               (LayerId::Embed, true),
+                               (LayerId::MlpUp(3), false),
+                               (LayerId::LmHead, false)] {
+            let route = ctx_route(&ctx, layer);
+            assert_eq!(route, if want0 { 0 } else { 1 },
+                       "layer {layer:?} routed to shard {route}");
+        }
+        drop(ctx); // deregisters everywhere
+        assert!(matches!(rx0.try_recv().unwrap(),
+                         ExecMsg::Deregister { client_id: 7 }));
+        assert!(matches!(rx1.try_recv().unwrap(),
+                         ExecMsg::Deregister { client_id: 7 }));
+    }
+
+    /// Which shard index a layer routes to (test helper: compares the
+    /// route's channel against the table's endpoints by identity).
+    fn ctx_route(ctx: &VirtLayerCtx, layer: LayerId) -> usize {
+        let target = ctx.routing.route(layer) as *const ShardRoute;
+        ctx.routing
+            .routes()
+            .iter()
+            .position(|r| std::ptr::eq(r, target))
+            .unwrap()
+    }
+
+    #[test]
+    fn single_table_routes_everything_to_shard_zero() {
+        let (tx, _rx) = channel();
+        let t = RoutingTable::single(tx, LinkKind::SharedLocal);
+        assert_eq!(t.n_shards(), 1);
+        for layer in [LayerId::Embed, LayerId::Qkv(3), LayerId::LmHead] {
+            // must not panic: every layer resolves to the one route
+            let _ = t.route(layer);
+        }
     }
 }

@@ -37,6 +37,14 @@ pub enum SymbiosisError {
     NotTrainable { adapter: &'static str },
     /// A malformed generation request (e.g. `max_tokens == 0`).
     InvalidGenerationConfig(String),
+    /// A shard executor failed while serving a layer batch (engine /
+    /// artifact fault).  Reported over the wire per request — clients
+    /// see the executor's actual error instead of a dropped channel.
+    ExecutorFailed { layer: String, message: String },
+    /// A shard's resident slice of the base weights does not fit its
+    /// device ledger: the `ShardPlan` cannot be deployed on this fleet
+    /// (paper Fig. 17's "model too large for N GPUs" lines).
+    ShardOom { shard: usize, need_bytes: u64, capacity_bytes: u64 },
     /// Anything below the API surface: engine execution, executor
     /// channel loss, artifact I/O.
     Runtime(anyhow::Error),
@@ -83,6 +91,20 @@ impl fmt::Display for SymbiosisError {
             SymbiosisError::InvalidGenerationConfig(msg) => {
                 write!(f, "invalid generation config: {msg}")
             }
+            SymbiosisError::ExecutorFailed { layer, message } => {
+                write!(f, "shard executor failed serving layer {layer}: \
+                           {message}")
+            }
+            SymbiosisError::ShardOom {
+                shard,
+                need_bytes,
+                capacity_bytes,
+            } => {
+                write!(f, "shard {shard} cannot hold its base slice: \
+                           {need_bytes} B resident vs {capacity_bytes} B \
+                           device capacity — use more shards or a larger \
+                           device")
+            }
             SymbiosisError::Runtime(e) => write!(f, "{e:#}"),
         }
     }
@@ -128,6 +150,23 @@ mod tests {
             SymbiosisError::DecodeBeforePrefill.into();
         let back: SymbiosisError = typed.into();
         assert!(matches!(back, SymbiosisError::DecodeBeforePrefill));
+    }
+
+    #[test]
+    fn executor_and_oom_errors_name_the_fault() {
+        let e = SymbiosisError::ExecutorFailed {
+            layer: "l2.qkv".into(),
+            message: "artifact missing".into(),
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("l2.qkv"));
+        assert!(msg.contains("artifact missing"));
+        let e = SymbiosisError::ShardOom {
+            shard: 3,
+            need_bytes: 1 << 30,
+            capacity_bytes: 1 << 20,
+        };
+        assert!(format!("{e}").contains("shard 3"));
     }
 
     #[test]

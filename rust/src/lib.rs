@@ -1,11 +1,13 @@
 //! # Symbiosis — multi-adapter inference and fine-tuning
 //!
 //! Reproduction of *"Symbiosis: Multi-Adapter Inference and Fine-Tuning"*
-//! (Gupta et al., 2025). A shared, frozen **base model** is served by a
-//! *base executor*; independent **clients** (inference or fine-tuning)
-//! own their adapters, attention, KV cache, and optimizer state, and
-//! invoke the executor per layer through a [`coordinator::virt_layer`]
-//! proxy. See DESIGN.md for the architecture and the experiment index.
+//! (Gupta et al., 2025). A shared, frozen **base model** is served by an
+//! *executor fleet* — one shard thread per contiguous layer range
+//! ([`coordinator::fleet`]); independent **clients** (inference or
+//! fine-tuning) own their adapters, attention, KV cache, and optimizer
+//! state, and invoke the owning shard per layer through a routed
+//! [`coordinator::virt_layer`] proxy. See DESIGN.md for the
+//! architecture and the experiment index.
 //!
 //! Layering:
 //! * [`runtime`] — PJRT engine executing AOT-compiled JAX/Pallas HLO.

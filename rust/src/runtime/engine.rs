@@ -56,7 +56,9 @@ pub struct EngineStats {
 }
 
 struct ExecuteReq {
-    name: String,
+    /// The manifest's interned artifact name — threading it through the
+    /// request is a refcount bump, not a per-call allocation.
+    name: Arc<str>,
     /// Arc-backed views — cloning into the request is a refcount bump.
     inputs: Vec<Tensor>,
     resp: Sender<Result<Vec<Tensor>>>,
@@ -273,7 +275,7 @@ impl Engine {
         self.queues
             .submit(
                 ExecuteReq {
-                    name: name.to_string(),
+                    name: spec.name.clone(),
                     inputs: inputs.iter().map(|t| (*t).clone()).collect(),
                     resp: tx,
                 },
@@ -366,7 +368,7 @@ fn service_loop(manifest: Arc<Manifest>, stats: Arc<Mutex<EngineStats>>,
             return;
         }
     };
-    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> =
+    let mut cache: HashMap<Arc<str>, xla::PjRtLoadedExecutable> =
         HashMap::new();
     let mut weights = WeightLiteralCache::new();
     while let Some(req) = queues.next() {
@@ -382,9 +384,9 @@ fn service_loop(manifest: Arc<Manifest>, stats: Arc<Mutex<EngineStats>>,
 }
 
 fn serve_one(client: &xla::PjRtClient, manifest: &Manifest,
-             cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+             cache: &mut HashMap<Arc<str>, xla::PjRtLoadedExecutable>,
              weights: &mut WeightLiteralCache,
-             stats: &Arc<Mutex<EngineStats>>, name: &str,
+             stats: &Arc<Mutex<EngineStats>>, name: &Arc<str>,
              inputs: &[Tensor]) -> Result<Vec<Tensor>> {
     let spec = manifest.artifact(name)?;
     if !cache.contains_key(name) {
@@ -394,7 +396,7 @@ fn serve_one(client: &xla::PjRtClient, manifest: &Manifest,
         s.compiles += 1;
         s.compile_secs += t0.elapsed().as_secs_f64();
         drop(s);
-        cache.insert(name.to_string(), exe);
+        cache.insert(name.clone(), exe);
     }
     let exe = cache.get(name).unwrap();
     // Convert inputs: pinned weights come from (or enter) the worker's

@@ -10,6 +10,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -37,10 +38,13 @@ impl TensorSpec {
     }
 }
 
-/// One AOT-compiled HLO module.
+/// One AOT-compiled HLO module.  `name` is the manifest's interned copy
+/// (`Arc<str>`): the engine threads it through `ExecuteReq` and its
+/// compile-cache keys by refcount bump, so the per-call dispatch path
+/// never re-allocates the artifact name.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
-    pub name: String,
+    pub name: Arc<str>,
     pub file: PathBuf,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
@@ -59,12 +63,15 @@ pub struct ManifestModel {
     pub max_seq: usize,
 }
 
-/// Parsed manifest: models + artifact table.
+/// Parsed manifest: models + artifact table.  Artifact names are
+/// interned once at parse time; `Arc<str>` keys let both lookups (via
+/// `Borrow<str>`) and handle-outs (via clone = refcount bump) avoid
+/// allocation.
 #[derive(Debug, Default)]
 pub struct Manifest {
     pub dir: PathBuf,
     pub models: Vec<ManifestModel>,
-    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub artifacts: HashMap<Arc<str>, ArtifactSpec>,
 }
 
 impl Manifest {
@@ -128,10 +135,11 @@ impl Manifest {
                             }
                         }
                     }
+                    let name: Arc<str> = Arc::from(name);
                     m.artifacts.insert(
-                        name.to_string(),
+                        name.clone(),
                         ArtifactSpec {
-                            name: name.to_string(),
+                            name,
                             file: dir.join(file),
                             inputs,
                             outputs,

@@ -1,0 +1,246 @@
+//! Fleet equivalence: sharding the executor must change *where* layers
+//! run, never *what* they compute.
+//!
+//! The acceptance bar for the sharded fleet (ISSUE 4): generation is
+//! bit-identical across shard counts for every adapter kind, a trainer's
+//! loss trajectory matches across shard counts, each shard's device
+//! ledger carries its real slice of the base (~1/N plus boundary
+//! tables), an undeployable plan fails with a typed OOM before any
+//! thread spawns, and a client dropping mid-run under lockstep neither
+//! wedges the survivors nor the fleet shutdown.
+//!
+//! Tests skip when artifacts are absent (same convention as
+//! `integration.rs`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use symbiosis::config::SYM_TINY;
+use symbiosis::coordinator::adapter::LoraTargets;
+use symbiosis::coordinator::fleet::ExecutorFleet;
+use symbiosis::coordinator::model_state;
+use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
+                             GenerationConfig, Placement, SymbiosisError};
+use symbiosis::device::{Device, DeviceKind, MemoryLedger};
+use symbiosis::runtime::Engine;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("manifest.txt").exists()
+}
+
+/// One engine (compile cache) shared by every deployment in this file.
+fn engine() -> Arc<Engine> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| Arc::new(Engine::new(&artifact_dir()).unwrap()))
+        .clone()
+}
+
+/// Deploy over `shards` executor shards (1 = the pre-fleet topology).
+fn deploy(shards: usize, policy: BatchPolicy) -> Deployment {
+    let placement = if shards == 1 {
+        Placement::Local
+    } else {
+        Placement::ShardedLocal { shards }
+    };
+    Deployment::start_with_engine(engine(), &SYM_TINY, &artifact_dir(),
+                                  policy, placement)
+        .unwrap()
+}
+
+fn lora8() -> Adapter {
+    Adapter::lora_from_artifacts(&SYM_TINY, &artifact_dir(), 8,
+                                 LoraTargets::QKVO, 2.0)
+        .unwrap()
+}
+
+fn prompt() -> Vec<i32> {
+    (0..16).map(|i| (i * 7 + 3) as i32 % 256).collect()
+}
+
+/// Greedy generation for one adapter kind on an n-shard fleet.
+fn generate_on(shards: usize, adapter: Option<Adapter>) -> Vec<Vec<i32>> {
+    let dep = deploy(shards, BatchPolicy::NoLockstep);
+    let mut b = dep.session();
+    if let Some(a) = adapter {
+        b = b.adapter(a);
+    }
+    let mut sess = b.build().unwrap();
+    let out = sess
+        .generate(&prompt(), &GenerationConfig::greedy(12))
+        .unwrap();
+    drop(sess);
+    dep.shutdown();
+    out
+}
+
+#[test]
+fn generation_is_bit_identical_across_shard_counts() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // SYM_TINY has 4 blocks: shards=2 and shards=4 exercise both the
+    // multi-block and one-block-per-shard partitions.
+    let adapters: Vec<(&str, fn() -> Option<Adapter>)> = vec![
+        ("base", || None),
+        ("lora", || Some(lora8())),
+        ("ia3", || Some(Adapter::ia3(&SYM_TINY))),
+        ("prefix", || Some(Adapter::prefix(&SYM_TINY, 1, 4, 11))),
+    ];
+    for (label, mk) in adapters {
+        let golden = generate_on(1, mk());
+        for shards in [2usize, 4] {
+            let got = generate_on(shards, mk());
+            assert_eq!(got, golden,
+                       "{label}: shards={shards} diverged from shards=1");
+        }
+    }
+}
+
+#[test]
+fn trainer_loss_trajectory_matches_across_shard_counts() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let run = |shards: usize| -> Vec<f32> {
+        let dep = deploy(shards, BatchPolicy::NoLockstep);
+        let mut tr = dep
+            .trainer()
+            .adapter(lora8())
+            .lr(5e-3)
+            .build()
+            .unwrap();
+        let tokens: Vec<i32> =
+            (0..16).map(|i| (i * 5 + 1) as i32 % 256).collect();
+        let labels: Vec<i32> =
+            (0..16).map(|i| (i * 5 + 2) as i32 % 256).collect();
+        let losses: Vec<f32> = (0..4)
+            .map(|_| tr.train_step(&tokens, &labels).unwrap().loss)
+            .collect();
+        drop(tr);
+        dep.shutdown();
+        losses
+    };
+    let golden = run(1);
+    assert!(golden.windows(2).any(|w| w[1] != w[0]),
+            "degenerate trajectory: {golden:?}");
+    for shards in [2usize, 4] {
+        assert_eq!(run(shards), golden,
+                   "loss trajectory diverged at shards={shards}");
+    }
+}
+
+#[test]
+fn shard_ledgers_carry_real_base_slices() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (base, _) =
+        model_state::load_split(&SYM_TINY, &artifact_dir()).unwrap();
+    let total = base.param_bytes();
+    // Boundary tables (embed + pos on shard 0, LM head on the last
+    // shard) ride outside the even 1/N block split.
+    let boundary = (base.embed.size_bytes() + base.pos.size_bytes()
+        + base.lm_head_w.size_bytes()
+        + base.lm_head_b.size_bytes()) as u64;
+    drop(base);
+    for shards in [2usize, 4] {
+        let dep = deploy(shards, BatchPolicy::NoLockstep);
+        let resident = dep.executor.shard_resident_bytes();
+        assert_eq!(resident.len(), shards);
+        // conservation: the slices are the base, nothing more or less
+        assert_eq!(resident.iter().sum::<u64>(), total);
+        for (s, r) in resident.iter().enumerate() {
+            assert!(*r > 0, "shard {s} holds nothing");
+            assert!(*r <= total / shards as u64 + boundary,
+                    "shard {s} resident {r} exceeds 1/{shards} of \
+                     {total} plus boundary tables {boundary}");
+        }
+        dep.shutdown();
+    }
+}
+
+#[test]
+fn undeployable_plan_fails_with_typed_oom() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (base, _) =
+        model_state::load_split(&SYM_TINY, &artifact_dir()).unwrap();
+    // Two devices whose ledgers cannot hold half the base each: the
+    // fleet must refuse to start (same charge path `Deployment::start`
+    // runs), with the failing shard in the error.
+    let devices: Vec<Device> = (0..2)
+        .map(|s| {
+            let mut d =
+                Device::new(&format!("tiny{s}"), DeviceKind::GpuFast40);
+            d.ledger = MemoryLedger::new(16 * 1024);
+            d
+        })
+        .collect();
+    let err = ExecutorFleet::start_with_devices(
+        engine(), base, BatchPolicy::NoLockstep, devices)
+        .unwrap_err();
+    match SymbiosisError::from(err) {
+        SymbiosisError::ShardOom { shard, need_bytes,
+                                   capacity_bytes } => {
+            assert_eq!(shard, 0);
+            assert_eq!(capacity_bytes, 16 * 1024);
+            assert!(need_bytes > capacity_bytes);
+        }
+        other => panic!("expected ShardOom, got {other}"),
+    }
+}
+
+/// Satellite: a client dropping mid-run while a lockstep barrier is
+/// pending must not wedge the remaining clients (the Drop-deregister
+/// reaches every shard; the safety cap bounds the stall) nor the fleet
+/// shutdown drain.
+#[test]
+fn client_churn_under_lockstep_makes_progress() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(2, BatchPolicy::Lockstep);
+    let mut survivor = dep.session().build().unwrap();
+    let mut leaver = dep.session().build().unwrap();
+
+    // Both clients prefill: the lockstep barrier sees 2 registered
+    // clients at each shard and batches them together.
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let out = survivor
+            .generate(&prompt(), &GenerationConfig::greedy(6))
+            .map(|g| g[0].len());
+        let _ = done_tx.send(());
+        out
+    });
+    // The leaver joins one layer round, then drops mid-run with the
+    // survivor's barrier pending.
+    leaver.prefill(&prompt()).unwrap();
+    drop(leaver);
+
+    // The survivor must finish well within the lockstep safety cap
+    // (50 ms per layer worst case, ~18 layer calls per step).
+    done_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("survivor wedged after client churn under lockstep");
+    let generated = handle.join().unwrap().unwrap();
+    assert_eq!(generated, 6, "survivor truncated its generation");
+
+    // Fleet shutdown drains both shards cleanly after the churn.
+    let stats = dep.shutdown();
+    assert_eq!(stats.n_shards(), 2);
+    assert!(stats.n_flushes > 0);
+    assert!(stats.requests_served > 0);
+}
