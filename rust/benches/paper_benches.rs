@@ -67,6 +67,9 @@ fn main() {
         .find(|a| !a.starts_with("--"))
         .cloned()
         .unwrap_or_default();
+    // `--bench-quick`: CI check mode — small prompt, one timed
+    // iteration; every equality assertion still executes.
+    let quick = args.iter().any(|a| a == "--bench-quick");
     let run = |name: &str| filter.is_empty() || name.contains(&filter);
 
     if run("fig01") { fig01_runtime_state(); }
@@ -88,6 +91,7 @@ fn main() {
     if run("ablation") { ablation_wait_budget(); }
     if run("dispatch") { dispatch_overhead(); }
     if run("fleet") { fleet_overhead(); }
+    if run("pipeline") { pipeline_prefill(quick); }
     println!("\nall requested bench sections complete.");
 }
 
@@ -1140,4 +1144,175 @@ fn fleet_overhead() {
               bytes split ~1/N; the shards=1 row is the pre-fleet hot \
               path (acceptance: no regression vs the dispatch bench \
               baseline).");
+}
+
+// =========================================================================
+// Pipelined prefill — long-prompt prefill latency across shards x
+// chunks (real run, sym-tiny).  chunks=1 is the sequential walk; every
+// cell's generated tokens are asserted equal to the shards=1/chunks=1
+// golden before timing, and the first prefill token of every timed run
+// is re-checked.  Emits BENCH_pipeline.json (CI uploads it) with the
+// measured wall-clock, the shards' busy/idle occupancy, and the
+// GPipe-style modeled speedup M*S/(M+S-1) next to each cell —
+// wall-clock overlap needs real cores; the modeled column is the
+// paper-scale expectation.
+// =========================================================================
+fn pipeline_prefill(quick: bool) {
+    use symbiosis::bench_harness::JsonValue;
+
+    println!("\n== Pipelined prefill: long-prompt latency across \
+              shards x chunks (real run, sym-tiny{}) ==",
+             if quick { ", quick/check mode" } else { "" });
+    if !have_artifacts() {
+        println!("skipped: artifacts not built");
+        return;
+    }
+    let plen: usize = if quick { 64 } else { 256 };
+    let iters = if quick { 1 } else { 3 };
+    let prompt: Vec<i32> =
+        (0..plen).map(|i| (i * 5 + 1) as i32 % 256).collect();
+    let mut golden: Option<Vec<i32>> = None;
+    let mut rows = Vec::new();
+    // (shards, chunks) -> mean secs, for the speedup columns
+    let mut means: Vec<(usize, usize, f64)> = Vec::new();
+    println!("{:>7} {:>7} {:>11} {:>11} {:>11} {:>10} {:>9}", "shards",
+             "chunks", "mean (ms)", "min (ms)", "speedup", "modeled",
+             "occup");
+    for shards in [1usize, 2, 4] {
+        for chunks in [1usize, 2, 4, 8] {
+            let chunk_cols = (plen + chunks - 1) / chunks;
+            let placement = if shards == 1 {
+                Placement::Local
+            } else {
+                Placement::ShardedLocal { shards }
+            };
+            let dep = Deployment::start_with_engine(
+                engine(), &SYM_TINY, &artifact_dir(),
+                BatchPolicy::NoLockstep, placement)
+                .unwrap();
+            let mut builder = dep.session();
+            if chunks > 1 {
+                builder = builder.prefill_chunk(chunk_cols);
+            }
+            let mut sess = builder.build().unwrap();
+            // warm the compile cache AND check output equality: the
+            // pipelined walk must be token-identical to the golden
+            // sequential one at every grid point.
+            let out = sess
+                .generate(&prompt, &GenerationConfig::greedy(4))
+                .unwrap();
+            match &golden {
+                None => golden = Some(out[0].clone()),
+                Some(g) => assert_eq!(
+                    &out[0], g,
+                    "pipeline output diverged at shards={shards} \
+                     chunks={chunks}"),
+            }
+            // Occupancy must cover ONLY the timed prefills — snapshot
+            // the lifetime busy/idle counters around the loop and diff
+            // (the warm-up generate and inter-iteration gaps would
+            // otherwise dilute the number).
+            let occ_before = dep.executor.stats();
+            let mut times = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                sess.reset().unwrap();
+                let t0 = Instant::now();
+                let first = if chunks > 1 {
+                    sess.prefill_pipelined(&prompt, chunk_cols).unwrap()
+                } else {
+                    sess.prefill(&prompt).unwrap()
+                };
+                times.push(t0.elapsed().as_secs_f64());
+                assert_eq!(first[0], golden.as_ref().unwrap()[0],
+                           "first prefill token diverged at \
+                            shards={shards} chunks={chunks}");
+            }
+            let occ_after = dep.executor.stats();
+            let mean = times.iter().sum::<f64>() / times.len() as f64;
+            let min =
+                times.iter().copied().fold(f64::INFINITY, f64::min);
+            let occ: Vec<f64> = occ_after
+                .per_shard
+                .iter()
+                .zip(&occ_before.per_shard)
+                .map(|(a, b)| {
+                    let busy = a.busy_secs - b.busy_secs;
+                    let total = busy + (a.idle_secs - b.idle_secs);
+                    if total <= 0.0 { 0.0 } else { busy / total }
+                })
+                .collect();
+            let mean_occ =
+                occ.iter().sum::<f64>() / occ.len().max(1) as f64;
+            drop(sess);
+            dep.shutdown();
+            let sequential = means
+                .iter()
+                .find(|(s, c, _)| *s == shards && *c == 1)
+                .map(|(_, _, m)| *m)
+                .unwrap_or(mean);
+            let speedup = sequential / mean;
+            let model = IterationModel {
+                cfg: LLAMA2_13B,
+                placement: Placement::ShardedLocal {
+                    shards: shards.max(1),
+                },
+                batch: 1,
+                seq: 2048,
+            };
+            let modeled = model.pipeline_speedup(chunks);
+            means.push((shards, chunks, mean));
+            println!("{shards:>7} {chunks:>7} {:>11.1} {:>11.1} \
+                      {:>10.2}x {:>9.2}x {:>8.0}%",
+                     mean * 1e3, min * 1e3, speedup, modeled,
+                     mean_occ * 100.0);
+            rows.push(JsonValue::obj(vec![
+                ("shards", JsonValue::Int(shards as i64)),
+                ("chunks", JsonValue::Int(chunks as i64)),
+                ("chunk_cols", JsonValue::Int(chunk_cols as i64)),
+                ("mean_ms", JsonValue::Num(mean * 1e3)),
+                ("min_ms", JsonValue::Num(min * 1e3)),
+                ("speedup_vs_sequential", JsonValue::Num(speedup)),
+                ("modeled_speedup", JsonValue::Num(modeled)),
+                ("occupancy", JsonValue::Num(mean_occ)),
+                // asserted above — a diverging cell panics the bench
+                ("outputs_equal", JsonValue::Bool(true)),
+            ]));
+        }
+    }
+    let cell = |s: usize, c: usize| {
+        means
+            .iter()
+            .find(|(ms, mc, _)| *ms == s && *mc == c)
+            .map(|(_, _, m)| *m)
+            .unwrap_or(f64::NAN)
+    };
+    let s2_speedup = cell(2, 1) / cell(2, 4);
+    let doc = JsonValue::obj(vec![
+        ("name", JsonValue::Str("pipeline".into())),
+        ("model", JsonValue::Str("sym-tiny".into())),
+        ("prompt_tokens", JsonValue::Int(plen as i64)),
+        ("quick", JsonValue::Bool(quick)),
+        ("rows", JsonValue::Arr(rows)),
+        ("acceptance", JsonValue::obj(vec![
+            ("shards", JsonValue::Int(2)),
+            ("chunks", JsonValue::Int(4)),
+            ("speedup_vs_sequential", JsonValue::Num(s2_speedup)),
+            ("modeled_speedup", JsonValue::Num(1.6)),
+            ("outputs_equal_all_cells", JsonValue::Bool(true)),
+        ])),
+    ]);
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("BENCH_pipeline.json");
+    match std::fs::write(&path, doc.render()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
+    println!("shards=2 chunks=4 speedup: measured {s2_speedup:.2}x, \
+              modeled 1.60x (M*S/(M+S-1)); outputs token-identical at \
+              every shards x chunks point ✓.  Wall-clock overlap needs \
+              spare cores — on a single-core substrate the measured \
+              column shows the pipeline's bookkeeping cost instead, \
+              while the occupancy column still shows every shard \
+              staying busy.");
 }

@@ -7,6 +7,11 @@
 //! b.row("clients=2", || iteration());
 //! b.report();
 //! ```
+//!
+//! Sections that feed CI artifacts (e.g. `BENCH_pipeline.json`)
+//! serialize through the hand-rolled [`JsonValue`] builder — the
+//! vendored registry carries no serde, and the emitted documents are
+//! small, flat tables.
 
 use std::time::Instant;
 
@@ -85,6 +90,101 @@ impl Bench {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Dependency-free JSON emission (bench artifacts for CI)
+// ---------------------------------------------------------------------------
+
+/// A minimal JSON document builder: enough for the flat tables the
+/// bench sections emit as CI artifacts — no serde in the vendored
+/// registry, and nothing here needs parsing back.
+#[derive(Debug, Clone)]
+pub enum JsonValue {
+    Bool(bool),
+    Int(i64),
+    /// Serialized with enough precision to round-trip an f64; NaN and
+    /// infinities become `null` (JSON has no spelling for them).
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    /// Insertion-ordered object.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Convenience: build an object from key/value pairs.
+    pub fn obj(pairs: Vec<(&str, JsonValue)>) -> JsonValue {
+        JsonValue::Obj(
+            pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Int(i) => out.push_str(&i.to_string()),
+            JsonValue::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            JsonValue::Str(s) => {
+                out.push('"');
+                out.push_str(&json_escape(s));
+                out.push('"');
+            }
+            JsonValue::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&json_escape(k));
+                    out.push_str("\":");
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Escape a string for a JSON literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Human duration formatting: ns/us/ms/s.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {
@@ -116,5 +216,26 @@ mod tests {
         assert!(fmt_secs(2.5e-5).ends_with("us"));
         assert!(fmt_secs(2.5e-3).ends_with("ms"));
         assert!(fmt_secs(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn json_renders_flat_tables() {
+        let doc = JsonValue::obj(vec![
+            ("name", JsonValue::Str("pipeline".into())),
+            ("ok", JsonValue::Bool(true)),
+            ("shards", JsonValue::Int(2)),
+            ("mean_ms", JsonValue::Num(1.5)),
+            ("rows", JsonValue::Arr(vec![JsonValue::Int(1),
+                                         JsonValue::Int(2)])),
+        ]);
+        assert_eq!(doc.render(),
+                   r#"{"name":"pipeline","ok":true,"shards":2,"mean_ms":1.5,"rows":[1,2]}"#);
+    }
+
+    #[test]
+    fn json_escapes_and_non_finite() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(JsonValue::Num(f64::NAN).render(), "null");
+        assert_eq!(JsonValue::Str("x\t".into()).render(), "\"x\\t\"");
     }
 }

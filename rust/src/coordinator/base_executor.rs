@@ -39,6 +39,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{bucket_for, TOKEN_BUCKETS};
 use crate::coordinator::batching::BatchPolicy;
+use crate::coordinator::fleet::FleetBarrier;
 use crate::coordinator::model_state::ShardWeights;
 use crate::coordinator::proto::{ExecMsg, LayerId, LayerRequest,
                                 LayerResponse, OpKind};
@@ -76,6 +77,8 @@ struct StatsInner {
     bucket_tokens: u64,
     requests_served: u64,
     noise_registrations: u64,
+    busy_secs: f64,
+    idle_secs: f64,
 }
 
 impl StatsInner {
@@ -101,6 +104,8 @@ impl StatsInner {
             bucket_tokens: self.bucket_tokens,
             requests_served: self.requests_served,
             noise_registrations: self.noise_registrations,
+            busy_secs: self.busy_secs,
+            idle_secs: self.idle_secs,
         }
     }
 }
@@ -125,6 +130,13 @@ pub struct ExecutorStats {
     pub bucket_tokens: u64,
     pub requests_served: u64,
     pub noise_registrations: u64,
+    /// Wall seconds this shard spent executing flushes.
+    pub busy_secs: f64,
+    /// Wall seconds this shard spent parked on its channel with nothing
+    /// to do.  `busy / (busy + idle)` is the shard's occupancy — the
+    /// pipeline bench reports it to show micro-batching keeping every
+    /// stage fed.
+    pub idle_secs: f64,
 }
 
 impl ExecutorStats {
@@ -152,6 +164,17 @@ impl ExecutorStats {
             0.0
         } else {
             1.0 - self.real_tokens as f64 / self.bucket_tokens as f64
+        }
+    }
+
+    /// Fraction of observed wall time this shard spent executing rather
+    /// than idling on its channel (pipeline occupancy).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.busy_secs + self.idle_secs;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.busy_secs / total
         }
     }
 }
@@ -220,16 +243,23 @@ impl ShardExecutor {
     /// Spawn one shard thread over its weight slice.  `device` must
     /// already carry the resident-slice charge (the fleet performs the
     /// OOM-enforced charge so planning failures surface before any
-    /// thread starts).
+    /// thread starts).  `barrier` is the fleet-shared registration
+    /// count, maintained synchronously by the *clients*
+    /// (`VirtLayerCtx::register`/`deregister`);
+    /// `BatchPolicy::LockstepFleet` barriers read it instead of the
+    /// shard-local count.
     pub fn spawn(engine: Arc<Engine>, weights: ShardWeights,
-                 policy: BatchPolicy, device: Device) -> ShardExecutor {
+                 policy: BatchPolicy, device: Device,
+                 barrier: Arc<FleetBarrier>) -> ShardExecutor {
         let shard = weights.shard;
         let (tx, rx) = channel();
         let stats = Arc::new(Mutex::new(StatsInner::default()));
         let stats2 = stats.clone();
         let handle = std::thread::Builder::new()
             .name(format!("shard-exec-{shard}"))
-            .spawn(move || run_loop(engine, weights, policy, rx, stats2))
+            .spawn(move || {
+                run_loop(engine, weights, policy, rx, stats2, barrier)
+            })
             .expect("spawn shard executor");
         ShardExecutor {
             shard,
@@ -285,7 +315,8 @@ impl Drop for ShardExecutor {
 }
 
 fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
-            rx: Receiver<ExecMsg>, stats: Arc<Mutex<StatsInner>>) {
+            rx: Receiver<ExecMsg>, stats: Arc<Mutex<StatsInner>>,
+            barrier: Arc<FleetBarrier>) {
     let mut pending: HashMap<(LayerId, OpKind), Pending> = HashMap::new();
     let mut scratch: ScratchMap = HashMap::new();
     let mut registered: usize = 0;
@@ -298,7 +329,14 @@ fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
             Some(d) => d - now,
             None => Duration::from_millis(20),
         };
-        let first = match rx.recv_timeout(timeout) {
+        // Channel wait is the shard's idle time (a queued message makes
+        // this ~zero); flush time below is its busy time — the ratio is
+        // the occupancy the pipeline bench reports.
+        let wait_t0 = Instant::now();
+        let recv = rx.recv_timeout(timeout);
+        stats.lock().unwrap().idle_secs +=
+            wait_t0.elapsed().as_secs_f64();
+        let first = match recv {
             Ok(m) => Some(m),
             Err(RecvTimeoutError::Timeout) => None,
             Err(RecvTimeoutError::Disconnected) => {
@@ -319,6 +357,12 @@ fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
         }
         for msg in msgs {
             match msg {
+                // The fleet-global barrier is NOT maintained here: the
+                // client bumps it synchronously in
+                // `VirtLayerCtx::register`/`deregister`, so no shard
+                // can read a count that lags a client whose requests
+                // are already queued.  Shards only maintain their
+                // local count (per-shard `Lockstep`).
                 ExecMsg::Register { .. } => registered += 1,
                 ExecMsg::Deregister { .. } => {
                     registered = registered.saturating_sub(1);
@@ -347,13 +391,19 @@ fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
         // device was busy, never from waiting on an idle device
         // (EXPERIMENTS.md §Perf iterations 1 and 4).
         let idle = true; // channel fully drained above
+        // Fleet-wide lockstep counts against the shared global
+        // registration count, per-shard lockstep against the local one.
+        let barrier_count = match policy {
+            BatchPolicy::LockstepFleet => barrier.registered(),
+            _ => registered,
+        };
         let now = Instant::now();
         let due: Vec<(LayerId, OpKind)> = pending
             .iter()
             .filter(|(_, p)| {
-                policy.ready(p.distinct_clients(), registered)
+                policy.ready(p.distinct_clients(), barrier_count)
                     || p.deadline <= now
-                    || (idle && !matches!(policy, BatchPolicy::Lockstep))
+                    || (idle && !policy.is_lockstep())
             })
             .map(|(k, _)| *k)
             .collect();
@@ -438,6 +488,7 @@ fn flush(engine: &Engine, base: &ShardWeights, p: Pending,
             }
             let mut s = stats.lock().unwrap();
             s.requests_served += n_requests as u64;
+            s.busy_secs += flush_start.elapsed().as_secs_f64();
             s.record(FlushRecord {
                 layer,
                 op,
@@ -459,6 +510,8 @@ fn flush(engine: &Engine, base: &ShardWeights, p: Pending,
                     batch_clients: n_clients,
                 });
             }
+            stats.lock().unwrap().busy_secs +=
+                flush_start.elapsed().as_secs_f64();
         }
     }
 }

@@ -18,7 +18,20 @@ use crate::coordinator::proto::Urgency;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum BatchPolicy {
     NoLockstep,
+    /// Per-shard lockstep: each shard's barrier counts the
+    /// registrations *it* received.  Registration and deregistration
+    /// messages reach shards independently, so the counts can drift
+    /// apart transiently under client churn.
     Lockstep,
+    /// Fleet-wide lockstep: every shard's barrier counts against one
+    /// shared fleet-global client count (an `Arc`'d registration
+    /// counter the *clients* update synchronously — see
+    /// [`crate::coordinator::fleet::FleetBarrier`]).  This reproduces
+    /// mLoRA's *global* lockstep at shards > 1 for the Table 4/5
+    /// comparisons: a layer flushes only when every client of the
+    /// deployment has arrived, not every client the local shard happens
+    /// to have counted.
+    LockstepFleet,
     /// `base_wait` is the budget for `Urgency::Training`; other classes
     /// scale down from it.
     Opportunistic { base_wait: Duration },
@@ -40,7 +53,9 @@ impl BatchPolicy {
             BatchPolicy::NoLockstep => Duration::ZERO,
             // lockstep has no deadline: it waits for the client barrier;
             // the cap bounds the damage when a client leaves mid-layer.
-            BatchPolicy::Lockstep => Duration::from_millis(50),
+            BatchPolicy::Lockstep | BatchPolicy::LockstepFleet => {
+                Duration::from_millis(50)
+            }
             BatchPolicy::Opportunistic { base_wait } => match urgency {
                 Urgency::Interactive => *base_wait / 50,
                 Urgency::Bulk => *base_wait / 4,
@@ -50,11 +65,13 @@ impl BatchPolicy {
     }
 
     /// Whether a pending batch should flush given the number of distinct
-    /// clients queued and the number registered.
+    /// clients queued and the number registered.  For `LockstepFleet`
+    /// the executor passes the fleet-global registration count as
+    /// `registered`; for `Lockstep` the shard-local one.
     pub fn ready(&self, queued_clients: usize, registered: usize) -> bool {
         match self {
             BatchPolicy::NoLockstep => true,
-            BatchPolicy::Lockstep => {
+            BatchPolicy::Lockstep | BatchPolicy::LockstepFleet => {
                 registered > 0 && queued_clients >= registered
             }
             // Opportunistic flushes on deadline (handled by the executor
@@ -63,6 +80,12 @@ impl BatchPolicy {
                 registered > 0 && queued_clients >= registered
             }
         }
+    }
+
+    /// Whether this policy holds a barrier (no flush-on-idle).
+    pub fn is_lockstep(&self) -> bool {
+        matches!(self,
+                 BatchPolicy::Lockstep | BatchPolicy::LockstepFleet)
     }
 }
 
@@ -79,9 +102,15 @@ mod tests {
 
     #[test]
     fn lockstep_waits_for_everyone() {
-        let p = BatchPolicy::Lockstep;
-        assert!(!p.ready(3, 4));
-        assert!(p.ready(4, 4));
+        for p in [BatchPolicy::Lockstep, BatchPolicy::LockstepFleet] {
+            assert!(!p.ready(3, 4));
+            assert!(p.ready(4, 4));
+            assert!(p.is_lockstep());
+            assert_eq!(p.wait_budget(Urgency::Interactive),
+                       Duration::from_millis(50));
+        }
+        assert!(!BatchPolicy::NoLockstep.is_lockstep());
+        assert!(!BatchPolicy::opportunistic_default().is_lockstep());
     }
 
     #[test]

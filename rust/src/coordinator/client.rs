@@ -14,6 +14,28 @@
 //! Adapter math enters only through the [`AdapterHooks`] interception
 //! points — the walker never inspects the adapter kind.
 //!
+//! # Pipelined prefill
+//!
+//! A sequential walk visits the fleet's shards strictly in order: shard
+//! s+1 idles while shard s computes.  With
+//! [`SessionBuilder::prefill_chunk`] (or
+//! [`GenerationConfig::with_prefill_chunk`]) the prompt is split into
+//! micro-batches along the token axis and driven as a wavefront via the
+//! split-phase [`VirtLayerCtx::dispatch`] API: micro-batch k runs on
+//! shard s+1 while micro-batch k+1 occupies shard s, each micro-batch
+//! keeping one request in flight.  Causality is the only cross-chunk
+//! dependency — micro-batch k's attention reads the K/V of micro-batches
+//! 0..k — so a reorder gate makes K/V enter the session cache in token
+//! order, and a reorder buffer recombines per-chunk logits into the
+//! sequential token-major layout.  Every client-side op is row-wise and
+//! attention is causal, so the pipelined walk is output-identical to the
+//! sequential one (asserted by `tests/pipeline_equivalence.rs` and the
+//! `pipeline` bench section); unlike batch prefill it also accepts a
+//! prefix-seeded cache, because each chunk attends over the real cache
+//! prefix.  What is charged where follows the split-phase contract: the
+//! request link at dispatch, the response link + executor queue-wait at
+//! collect.
+//!
 //! * [`InferenceSession`] — prefill + decode against a bucketed KV cache
 //!   (optionally host-offloaded), built via
 //!   [`SessionBuilder`](crate::coordinator::SessionBuilder), driven
@@ -24,7 +46,7 @@
 //!   client-side attention/adapter/norm gradients, reproducing jax
 //!   autodiff (pinned by the golden integration tests).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -37,8 +59,9 @@ use crate::coordinator::model_state::ClientWeights;
 use crate::coordinator::optimizer::Adam;
 use crate::coordinator::privacy::PrivacyCtx;
 use crate::coordinator::proto::{LayerId, Urgency};
-use crate::coordinator::virt_layer::VirtLayerCtx;
+use crate::coordinator::virt_layer::{PendingLayer, VirtLayerCtx};
 use crate::coordinator::Deployment;
+use crate::device::Device;
 use crate::error::{SymResult, SymbiosisError};
 use crate::runtime::Engine;
 use crate::tensor::{ops, Tensor};
@@ -94,36 +117,59 @@ impl ClientCore {
             .unwrap_or(&NO_ADAPTER)
     }
 
+    /// Place a `(BH, T, H)` chunk at sequence offset `start` of a
+    /// zeroed `(BH, bucket, H)` tensor.  Pipelined prefill uses this to
+    /// put a micro-batch's queries at their *absolute* causal rows so
+    /// the prefill attention artifact's mask attends exactly the cache
+    /// prefix each query may see.
+    fn place_seq(x: &Tensor, start: usize, bucket: usize) -> Tensor {
+        let (bh, t, h) = (x.shape[0], x.shape[1], x.shape[2]);
+        debug_assert!(start + t <= bucket,
+                      "window {start}+{t} exceeds bucket {bucket}");
+        let src = x.as_f32();
+        let mut out = vec![0.0f32; bh * bucket * h];
+        for b in 0..bh {
+            let srow = b * t * h;
+            let drow = (b * bucket + start) * h;
+            out[drow..drow + t * h]
+                .copy_from_slice(&src[srow..srow + t * h]);
+        }
+        Tensor::from_f32(out, &[bh, bucket, h])
+    }
+
+    /// Cut the `[start, start + len)` sequence window out of a
+    /// `(BH, Sb, H)` tensor (the rows outside a micro-batch's window are
+    /// discarded — causal masking makes them garbage-in/garbage-out for
+    /// zero-placed queries).
+    fn slice_seq(x: &Tensor, start: usize, len: usize) -> Tensor {
+        let (bh, sb, h) = (x.shape[0], x.shape[1], x.shape[2]);
+        debug_assert!(start + len <= sb,
+                      "window {start}+{len} exceeds seq {sb}");
+        let src = x.as_f32();
+        let mut out = vec![0.0f32; bh * len * h];
+        for b in 0..bh {
+            let srow = (b * sb + start) * h;
+            let drow = b * len * h;
+            out[drow..drow + len * h]
+                .copy_from_slice(&src[srow..srow + len * h]);
+        }
+        Tensor::from_f32(out, &[bh, len, h])
+    }
+
     /// Zero-pad `(BH, S, H)` to `(BH, Sb, H)` along the sequence axis.
     fn pad_seq(x: &Tensor, sb: usize) -> Tensor {
-        let (bh, s, h) = (x.shape[0], x.shape[1], x.shape[2]);
-        if s == sb {
+        if x.shape[1] == sb {
             return x.clone(); // refcount bump, not a copy
         }
-        let src = x.as_f32();
-        let mut out = vec![0.0f32; bh * sb * h];
-        for b in 0..bh {
-            let srow = b * s * h;
-            let drow = b * sb * h;
-            out[drow..drow + s * h]
-                .copy_from_slice(&src[srow..srow + s * h]);
-        }
-        Tensor::from_f32(out, &[bh, sb, h])
+        Self::place_seq(x, 0, sb)
     }
 
     /// Drop sequence padding: `(BH, Sb, H) -> (BH, S, H)`.
     fn unpad_seq(x: &Tensor, s: usize) -> Tensor {
-        let (bh, sb, h) = (x.shape[0], x.shape[1], x.shape[2]);
-        if sb == s {
+        if x.shape[1] == s {
             return x.clone();
         }
-        let src = x.as_f32();
-        let mut out = vec![0.0f32; bh * s * h];
-        for b in 0..bh {
-            out[b * s * h..(b + 1) * s * h]
-                .copy_from_slice(&src[b * sb * h..b * sb * h + s * h]);
-        }
-        Tensor::from_f32(out, &[bh, s, h])
+        Self::slice_seq(x, 0, s)
     }
 
     /// `(T, D) x3 -> (T, 3D)` — reassemble the fused-QKV gradient.
@@ -195,10 +241,18 @@ enum AttnPath<'a> {
     },
 }
 
-/// One pass over all transformer blocks.  Every execution mode of the
-/// system — training forward, batch prefill, incremental prefill, token
-/// decode — is this walk; they differ only in the [`AttnPath`] and in
-/// whether activations are retained.
+/// One pass over all transformer blocks.  Every *blocking* execution
+/// mode of the system — training forward, batch prefill, incremental
+/// prefill, token decode — is this walk; they differ only in the
+/// [`AttnPath`] and in whether activations are retained.
+///
+/// KEEP IN SYNC: the pipelined prefill driver ([`PipelineDriver`])
+/// encodes the same block math as a split-phase state machine (one
+/// `Stage` per base-layer hop).  Any change to the block structure or
+/// hook order here must be mirrored there — the equivalence tests
+/// (`tests/pipeline_equivalence.rs`) and the `pipeline` bench assert
+/// the two walks stay output-identical, but only on hosts with AOT
+/// artifacts.
 struct LayerWalker<'a> {
     core: &'a ClientCore,
     urgency: Urgency,
@@ -253,7 +307,7 @@ impl<'a> LayerWalker<'a> {
                 let kh = to_heads_batched(k, *batch, nh);
                 let vh = to_heads_batched(v, *batch, nh);
                 if let Some(cache) = kv.as_deref_mut() {
-                    cache.append(l, &kh, &vh);
+                    cache.append(l, &kh, &vh)?;
                 }
                 let qp = ClientCore::pad_seq(&qh, *seq_bucket);
                 let kp = ClientCore::pad_seq(&kh, *seq_bucket);
@@ -269,7 +323,7 @@ impl<'a> LayerWalker<'a> {
                 let qh = q.split_heads_rows(*batch, nh);
                 let kh = k.split_heads_rows(*batch, nh);
                 let vh = v.split_heads_rows(*batch, nh);
-                let layer_len = kv.append(l, &kh, &vh);
+                let layer_len = kv.append(l, &kh, &vh)?;
                 debug_assert_eq!(layer_len, *len);
                 let (kc, vc) = kv.padded(l, *seq_bucket);
                 let kv_len = Tensor::scalar_i32(*len as i32);
@@ -337,6 +391,301 @@ impl<'a> LayerWalker<'a> {
 }
 
 // ---------------------------------------------------------------------------
+// Pipelined prefill — micro-batched wavefront over the shard fleet
+// ---------------------------------------------------------------------------
+
+/// One micro-batch's position in the walk: either an in-flight
+/// base-layer request (split-phase dispatch, one per micro-batch) or
+/// client-side tensors waiting for the next dispatch.
+enum Stage<'a> {
+    /// Not yet embedded.
+    Start,
+    PendEmbed(PendingLayer<'a>),
+    PendQkv { h: Tensor, a_in: Tensor, pend: PendingLayer<'a> },
+    /// Adapter-adjusted projections, gated on the predecessor
+    /// micro-batch having appended its K/V at this layer (the reorder
+    /// gate: cache rows must enter in token order).
+    HaveQkv { h: Tensor, q: Tensor, k: Tensor, v: Tensor },
+    PendAttnOut { h: Tensor, attn_merged: Tensor, pend: PendingLayer<'a> },
+    PendMlpUp { h_mid: Tensor, pend: PendingLayer<'a> },
+    PendMlpDown { h_mid: Tensor, pend: PendingLayer<'a> },
+    PendHead(PendingLayer<'a>),
+    Done(Tensor),
+    /// Transient placeholder while a transition executes.
+    Taken,
+}
+
+/// One micro-batch: the column window `[c0, c1)` of every sequence,
+/// the block it is currently in, and its stage.
+struct ChunkState<'a> {
+    c0: usize,
+    c1: usize,
+    layer: usize,
+    stage: Stage<'a>,
+}
+
+/// Drives all micro-batches round-robin, one stage per turn: while one
+/// chunk blocks collecting its response, every other chunk's request is
+/// already queued at some shard — micro-batch k occupies shard s+1
+/// while micro-batch k+1 occupies shard s.
+///
+/// KEEP IN SYNC: the stage transitions in [`Self::advance`] are the
+/// split-phase form of [`LayerWalker::walk`]'s block math (same hooks,
+/// same order); change both together or the equivalence tests diverge.
+struct PipelineDriver<'a> {
+    core: &'a ClientCore,
+    virt: &'a VirtLayerCtx,
+    batch: usize,
+    seq: usize,
+    /// Token position of column 0 (non-zero on continued sessions).
+    pos0: usize,
+    urgency: Urgency,
+    tokens: &'a [i32],
+    /// Reorder-gate cursor per layer: how many micro-batches have
+    /// appended their K/V.  Chunk k may append at layer l only when
+    /// `appended[l] == k`.
+    appended: Vec<usize>,
+}
+
+impl<'a> PipelineDriver<'a> {
+    /// This micro-batch's token ids and positions, token-major within
+    /// the chunk (row `b*tc + i` is column `c0 + i` of sequence `b`).
+    fn chunk_tokens(&self, c0: usize, c1: usize) -> (Tensor, Tensor) {
+        let tc = c1 - c0;
+        let mut toks = Vec::with_capacity(self.batch * tc);
+        let mut poss = Vec::with_capacity(self.batch * tc);
+        for b in 0..self.batch {
+            for col in c0..c1 {
+                toks.push(self.tokens[b * self.seq + col]);
+                poss.push((self.pos0 + col) as i32);
+            }
+        }
+        (
+            Tensor::from_i32(toks, &[self.batch * tc]),
+            Tensor::from_i32(poss, &[self.batch * tc]),
+        )
+    }
+
+    /// rmsnorm-1 + QKV dispatch for block `l` over hidden `h`.
+    fn begin_block(&self, h: Tensor, l: usize) -> Result<Stage<'a>> {
+        let virt = self.virt;
+        let a_in = ops::rmsnorm(&h, &self.core.weights.norm1[l]);
+        let pend = virt.dispatch_forward(LayerId::Qkv(l), a_in.clone(),
+                                         self.urgency)?;
+        Ok(Stage::PendQkv { h, a_in, pend })
+    }
+
+    /// Chunk attention at block `l`: append this micro-batch's K/V to
+    /// the session cache (token order guaranteed by the reorder gate),
+    /// then run the *prefill* attention artifact over the whole cache
+    /// prefix with the chunk's queries placed at their absolute rows.
+    /// The causal mask gives each query exactly the keys `[0, row]` —
+    /// prefix-adapter rows included — so the windowed output rows equal
+    /// the sequential walk's.
+    #[allow(clippy::too_many_arguments)]
+    fn attention(&self, kv: &mut KvCache, c0: usize, c1: usize, l: usize,
+                 q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Tensor> {
+        let core = self.core;
+        let nh = core.cfg.n_heads;
+        let tc = c1 - c0;
+        let qh = to_heads_batched(q, self.batch, nh);
+        let kh = to_heads_batched(k, self.batch, nh);
+        let vh = to_heads_batched(v, self.batch, nh);
+        let ctx_len = kv.append(l, &kh, &vh)?;
+        let bucket = bucket_for(ctx_len, SEQ_BUCKETS)
+            .ok_or(SymbiosisError::ContextExceeded {
+                len: ctx_len,
+                limit: *SEQ_BUCKETS.last().unwrap(),
+            })?;
+        let (kc, vc) = kv.padded(l, bucket);
+        let qp = ClientCore::place_seq(&qh, ctx_len - tc, bucket);
+        let name = format!("attn_prefill_bh{}_s{bucket}_h{}",
+                           self.batch * nh, core.cfg.d_head());
+        let out = core.engine.execute(&name, &[&qp, &kc, &vc])?;
+        let attn = ClientCore::slice_seq(&out[0], ctx_len - tc, tc);
+        Ok(from_heads_batched(&attn, self.batch))
+    }
+
+    /// Attention + AttnOut dispatch once the reorder gate opens;
+    /// returns the `HaveQkv` stage unchanged (no progress) while the
+    /// predecessor micro-batch has not appended at this layer yet.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_or_wait(&mut self, kv: &mut KvCache, k_idx: usize,
+                      c0: usize, c1: usize, l: usize, h: Tensor,
+                      q: Tensor, k: Tensor, v: Tensor)
+                      -> Result<(Stage<'a>, bool)> {
+        if self.appended[l] != k_idx {
+            return Ok((Stage::HaveQkv { h, q, k, v }, false));
+        }
+        let merged = self.attention(kv, c0, c1, l, &q, &k, &v)?;
+        self.appended[l] = k_idx + 1;
+        let virt = self.virt;
+        let pend = virt.dispatch_forward(LayerId::AttnOut(l),
+                                         merged.clone(), self.urgency)?;
+        Ok((Stage::PendAttnOut { h, attn_merged: merged, pend }, true))
+    }
+
+    /// Advance micro-batch `k_idx` by one stage.  Returns whether it
+    /// made progress (`false`: done, or parked at the reorder gate).
+    fn advance(&mut self, kv: &mut KvCache, k_idx: usize,
+               ch: &mut ChunkState<'a>) -> Result<bool> {
+        let core = self.core;
+        let virt = self.virt;
+        let d = core.cfg.d_model;
+        let hooks = core.hooks();
+        let cx = HookCtx { engine: core.engine.as_ref(), cfg: &core.cfg };
+        let stage = std::mem::replace(&mut ch.stage, Stage::Taken);
+        let (next, progressed) = match stage {
+            Stage::Start => {
+                let (toks, poss) = self.chunk_tokens(ch.c0, ch.c1);
+                let pend =
+                    virt.dispatch_embed(toks, poss, self.urgency)?;
+                (Stage::PendEmbed(pend), true)
+            }
+            Stage::PendEmbed(pend) => {
+                let h = pend.collect()?;
+                (self.begin_block(h, ch.layer)?, true)
+            }
+            Stage::PendQkv { h, a_in, pend } => {
+                let l = ch.layer;
+                let qkv = pend.collect()?;
+                let mut q = qkv.slice_cols(0, d);
+                let mut k = qkv.slice_cols(d, 2 * d);
+                let mut v = qkv.slice_cols(2 * d, 3 * d);
+                hooks.qkv_delta(&cx, l, &a_in, &mut q, &mut k, &mut v)?;
+                hooks.kv_scale(l, &mut k, &mut v);
+                // collecting the projection is progress even if the
+                // reorder gate then parks the chunk
+                let (st, _) = self.attend_or_wait(kv, k_idx, ch.c0,
+                                                  ch.c1, l, h, q, k, v)?;
+                (st, true)
+            }
+            Stage::HaveQkv { h, q, k, v } => {
+                self.attend_or_wait(kv, k_idx, ch.c0, ch.c1, ch.layer,
+                                    h, q, k, v)?
+            }
+            Stage::PendAttnOut { h, attn_merged, pend } => {
+                let l = ch.layer;
+                let mut o = pend.collect()?;
+                hooks.attn_out_delta(&cx, l, &attn_merged, &mut o)?;
+                let h_mid = ops::add(&h, &o);
+                let m_in = ops::rmsnorm(&h_mid, &core.weights.norm2[l]);
+                let pend = virt.dispatch_forward(LayerId::MlpUp(l), m_in,
+                                                 self.urgency)?;
+                (Stage::PendMlpUp { h_mid, pend }, true)
+            }
+            Stage::PendMlpUp { h_mid, pend } => {
+                let l = ch.layer;
+                let mut u_pre = pend.collect()?;
+                hooks.ffn_scale(l, &mut u_pre);
+                let u = ops::gelu(&u_pre);
+                let pend = virt.dispatch_forward(LayerId::MlpDown(l), u,
+                                                 self.urgency)?;
+                (Stage::PendMlpDown { h_mid, pend }, true)
+            }
+            Stage::PendMlpDown { h_mid, pend } => {
+                let down = pend.collect()?;
+                let h = ops::add(&h_mid, &down);
+                ch.layer += 1;
+                if ch.layer < core.cfg.n_layers {
+                    (self.begin_block(h, ch.layer)?, true)
+                } else {
+                    let hf = ops::rmsnorm(&h, &core.weights.norm_f);
+                    let pend = virt.dispatch_forward(LayerId::LmHead, hf,
+                                                     self.urgency)?;
+                    (Stage::PendHead(pend), true)
+                }
+            }
+            Stage::PendHead(pend) => (Stage::Done(pend.collect()?), true),
+            done @ Stage::Done(_) => (done, false),
+            Stage::Taken => unreachable!("stage advanced re-entrantly"),
+        };
+        ch.stage = next;
+        Ok(progressed)
+    }
+}
+
+impl ClientCore {
+    /// Pipelined prefill over `batch` sequences of `seq` columns:
+    /// micro-batches of `chunk` columns walk the layers as a wavefront,
+    /// overlapping shard compute across chunks.  Appends K/V to `kv` in
+    /// token order and returns the full-prompt logits `(batch*seq,
+    /// vocab)` in the sequential token-major layout — output-identical
+    /// to [`Self::forward_full`] on an empty cache, and to the
+    /// incremental walk on a prefix-seeded one.
+    fn forward_pipelined(&self, tokens: &[i32], batch: usize,
+                         chunk: usize, pos0: usize, urgency: Urgency,
+                         kv: &mut KvCache) -> Result<Tensor> {
+        self.check_batch(batch)?;
+        let s = tokens.len() / batch;
+        let chunk = chunk.clamp(1, s);
+        let n_chunks = (s + chunk - 1) / chunk;
+        // The final per-layer context must fit an attention bucket.
+        let final_len = kv.len() + s;
+        bucket_for(final_len, SEQ_BUCKETS)
+            .ok_or(SymbiosisError::ContextExceeded {
+                len: final_len,
+                limit: *SEQ_BUCKETS.last().unwrap(),
+            })?;
+        let virt: &VirtLayerCtx = self.virt.as_ref();
+        let mut driver = PipelineDriver {
+            core: self,
+            virt,
+            batch,
+            seq: s,
+            pos0,
+            urgency,
+            tokens,
+            appended: vec![0; self.cfg.n_layers],
+        };
+        let mut chunks: Vec<ChunkState> = (0..n_chunks)
+            .map(|k| ChunkState {
+                c0: k * chunk,
+                c1: ((k + 1) * chunk).min(s),
+                layer: 0,
+                stage: Stage::Start,
+            })
+            .collect();
+        loop {
+            let mut any_progress = false;
+            let mut all_done = true;
+            for (k_idx, ch) in chunks.iter_mut().enumerate() {
+                if !matches!(ch.stage, Stage::Done(_)) {
+                    all_done = false;
+                    any_progress |= driver.advance(kv, k_idx, ch)?;
+                }
+            }
+            if all_done {
+                break;
+            }
+            // The least-index unfinished chunk is never gated, so a
+            // full round without progress means a logic error — fail
+            // loudly rather than spin (and an executor failure above
+            // already unwound every in-flight receiver).
+            anyhow::ensure!(any_progress, "pipelined prefill stalled");
+        }
+        // Reorder-buffer tail: recombine per-chunk logits into the
+        // sequential token-major (batch*seq, vocab) layout.
+        let vocab = self.cfg.vocab;
+        let mut flat = vec![0.0f32; batch * s * vocab];
+        for ch in &chunks {
+            let Stage::Done(logits) = &ch.stage else {
+                unreachable!("all chunks done")
+            };
+            let src = logits.as_f32();
+            let tc = ch.c1 - ch.c0;
+            for b in 0..batch {
+                let drow = (b * s + ch.c0) * vocab;
+                let srow = b * tc * vocab;
+                flat[drow..drow + tc * vocab]
+                    .copy_from_slice(&src[srow..srow + tc * vocab]);
+            }
+        }
+        Ok(Tensor::from_f32(flat, &[batch * s, vocab]))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Generation configuration
 // ---------------------------------------------------------------------------
 
@@ -382,6 +731,11 @@ pub struct GenerationConfig {
     /// these.
     pub stop_tokens: Vec<i32>,
     pub sampling: Sampling,
+    /// Pipelined-prefill micro-batch size in token columns for this
+    /// request; `None` falls back to the session's
+    /// [`SessionBuilder::prefill_chunk`] default (itself off unless
+    /// configured).
+    pub prefill_chunk: Option<usize>,
 }
 
 impl GenerationConfig {
@@ -391,6 +745,7 @@ impl GenerationConfig {
             max_tokens,
             stop_tokens: Vec::new(),
             sampling: Sampling::Greedy,
+            prefill_chunk: None,
         }
     }
 
@@ -401,11 +756,18 @@ impl GenerationConfig {
             max_tokens,
             stop_tokens: Vec::new(),
             sampling: Sampling::TopK { k: top_k, temperature, seed },
+            prefill_chunk: None,
         }
     }
 
     pub fn with_stop(mut self, token: i32) -> Self {
         self.stop_tokens.push(token);
+        self
+    }
+
+    /// Pipeline the prefill in micro-batches of `tokens` columns.
+    pub fn with_prefill_chunk(mut self, tokens: usize) -> Self {
+        self.prefill_chunk = Some(tokens);
         self
     }
 }
@@ -490,6 +852,9 @@ pub struct InferenceSession {
     pos: usize,
     prefix_seeded: bool,
     urgency: UrgencyPolicy,
+    /// Session-default pipelined-prefill micro-batch size (columns);
+    /// `None` = sequential prefill.
+    prefill_chunk: Option<usize>,
 }
 
 impl InferenceSession {
@@ -507,11 +872,28 @@ impl InferenceSession {
             pos: 0,
             prefix_seeded: false,
             urgency: UrgencyPolicy::default(),
+            prefill_chunk: None,
         })
     }
 
     pub(crate) fn set_urgency(&mut self, u: UrgencyPolicy) {
         self.urgency = u;
+    }
+
+    pub(crate) fn set_prefill_chunk(&mut self, chunk: Option<usize>) {
+        self.prefill_chunk = chunk;
+    }
+
+    /// Charge this session's KV cache to a simulated device ledger
+    /// (done by [`SessionBuilder::build`]: `KvPlacement::Device` caches
+    /// charge the deployment's shared client device, `Host` ones the
+    /// host DRAM device) — cache growth beyond the device's capacity
+    /// then fails with a typed [`SymbiosisError::KvCacheOom`].
+    pub fn attach_kv_ledger(&mut self, device: Arc<Mutex<Device>>,
+                            tag: String) -> SymResult<()> {
+        self.kv
+            .attach_ledger(device, tag)
+            .map_err(SymbiosisError::from)
     }
 
     /// Reset per-request state (KV cache, emitted tokens, positions) so
@@ -552,7 +934,9 @@ impl InferenceSession {
                 }
                 debug_assert_eq!(v.shape[0], bh);
                 // prefix occupies cache rows but not token positions
-                self.kv.append(l, k, v);
+                self.kv
+                    .append(l, k, v)
+                    .map_err(SymbiosisError::from)?;
                 seeded = true;
             }
         }
@@ -645,11 +1029,56 @@ impl InferenceSession {
         Ok(next)
     }
 
-    /// Prefill, routed: a seeded cache (prefix adapter) takes the
-    /// incremental path, everything else the fast batch path.  Seeds
-    /// the adapter's KV prefix first if that has not happened yet.
+    /// Pipelined prefill: process the prompt in micro-batches of
+    /// `chunk` token columns driven as a wavefront over the shard fleet
+    /// (micro-batch k on shard s+1 while micro-batch k+1 occupies shard
+    /// s).  Output-identical to [`Self::prefill`] on an empty cache and
+    /// to [`Self::prefill_incremental`] on a prefix-seeded one — unlike
+    /// batch prefill it accepts pre-existing cache rows, since every
+    /// chunk attends over the real cache prefix.  Returns the first
+    /// generated token per sequence.
+    pub fn prefill_pipelined(&mut self, tokens: &[i32], chunk: usize)
+                             -> SymResult<Vec<i32>> {
+        self.prefill_pipelined_with(tokens, chunk, &mut Sampler::Greedy)
+    }
+
+    fn prefill_pipelined_with(&mut self, tokens: &[i32], chunk: usize,
+                              sampler: &mut Sampler)
+                              -> SymResult<Vec<i32>> {
+        self.check_prompt(tokens)?;
+        let s = tokens.len() / self.batch;
+        if chunk == 0 || chunk >= s {
+            // one micro-batch degenerates to the unpipelined routing
+            return if self.kv.is_empty() {
+                self.prefill_with(tokens, sampler)
+            } else {
+                self.prefill_incremental_with(tokens, sampler)
+            };
+        }
+        let logits = self
+            .core
+            .forward_pipelined(tokens, self.batch, chunk, self.pos,
+                               self.urgency.prefill, &mut self.kv)
+            .map_err(SymbiosisError::from)?;
+        self.pos += s;
+        let mut first = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            first.push(sampler.pick(&logits, (b + 1) * s - 1));
+        }
+        self.record(&first);
+        Ok(first)
+    }
+
+    /// Prefill, routed: a configured `prefill_chunk` takes the
+    /// pipelined path (which handles seeded caches), a seeded cache
+    /// (prefix adapter) the incremental path, everything else the fast
+    /// batch path.  Seeds the adapter's KV prefix first if that has not
+    /// happened yet.
     pub fn prefill_auto(&mut self, tokens: &[i32]) -> SymResult<Vec<i32>> {
         self.seed_prefix()?;
+        if let Some(chunk) = self.prefill_chunk {
+            return self.prefill_pipelined(tokens, chunk);
+        }
         if self.kv.is_empty() {
             self.prefill(tokens)
         } else {
@@ -691,7 +1120,11 @@ impl InferenceSession {
         // a prefix adapter on a hand-constructed session may not have
         // seeded yet — do it here so routing below stays correct
         self.seed_prefix()?;
-        let first = if self.kv.is_empty() {
+        // per-request chunk overrides the session default
+        let chunk = cfg.prefill_chunk.or(self.prefill_chunk);
+        let first = if let Some(c) = chunk {
+            self.prefill_pipelined_with(prompt, c, &mut sampler)?
+        } else if self.kv.is_empty() {
             self.prefill_with(prompt, &mut sampler)?
         } else {
             self.prefill_incremental_with(prompt, &mut sampler)?
@@ -984,6 +1417,7 @@ pub struct SessionBuilder<'d> {
     realize_delays: bool,
     urgency: UrgencyPolicy,
     privacy: Option<PrivacyCtx>,
+    prefill_chunk: Option<usize>,
 }
 
 impl<'d> SessionBuilder<'d> {
@@ -997,6 +1431,7 @@ impl<'d> SessionBuilder<'d> {
             realize_delays: false,
             urgency: UrgencyPolicy::default(),
             privacy: None,
+            prefill_chunk: None,
         }
     }
 
@@ -1048,12 +1483,34 @@ impl<'d> SessionBuilder<'d> {
         self
     }
 
+    /// Pipeline prefill in micro-batches of `tokens` columns (default
+    /// off = sequential prefill): prompts split into
+    /// `ceil(seq/tokens)` micro-batches driven as a wavefront across
+    /// the shard fleet, so shard s+1 works on micro-batch k while
+    /// shard s runs micro-batch k+1.  Outputs are identical to the
+    /// sequential walk; per-request
+    /// [`GenerationConfig::with_prefill_chunk`] overrides this default.
+    pub fn prefill_chunk(mut self, tokens: usize) -> Self {
+        self.prefill_chunk = Some(tokens);
+        self
+    }
+
     pub fn build(self) -> SymResult<InferenceSession> {
         let core = self.dep.build_core(self.adapter, self.link,
                                        self.realize_delays, self.privacy);
         let mut sess =
             InferenceSession::new(core, self.batch, self.kv_placement)?;
         sess.set_urgency(self.urgency);
+        sess.set_prefill_chunk(self.prefill_chunk);
+        // Charge the session's KV cache to the hosting device's shared
+        // ledger: growth past the device capacity fails with a typed
+        // KvCacheOom (the executable form of Figs 9/10).
+        let device = match self.kv_placement {
+            KvPlacement::Device => self.dep.client_device.clone(),
+            KvPlacement::Host => self.dep.host_device.clone(),
+        };
+        let tag = format!("kv:client{}", sess.core.virt.client_id);
+        sess.attach_kv_ledger(device, tag)?;
         // Prefix adapters seed the cache here, which flips the session
         // into incremental-prefill routing (`generate`/`prefill_auto`).
         sess.seed_prefix()?;
@@ -1228,6 +1685,22 @@ mod tests {
     }
 
     #[test]
+    fn place_and_slice_seq_window() {
+        let x = Tensor::from_f32(
+            (0..2 * 3 * 2).map(|i| 1.0 + i as f32).collect(), &[2, 3, 2]);
+        let placed = ClientCore::place_seq(&x, 4, 8);
+        assert_eq!(placed.shape, vec![2, 8, 2]);
+        // window rows carry the chunk at its absolute offset …
+        assert_eq!(placed.as_f32()[(4) * 2], 1.0);
+        assert_eq!(placed.as_f32()[(8 + 6) * 2 + 1], 12.0);
+        // … and everything outside the window is zero
+        assert_eq!(placed.as_f32()[0], 0.0);
+        assert_eq!(placed.as_f32()[7 * 2], 0.0);
+        // slicing the window back recovers the chunk exactly
+        assert_eq!(ClientCore::slice_seq(&placed, 4, 3), x);
+    }
+
+    #[test]
     fn pad_unpad_seq_roundtrip() {
         let x = Tensor::from_f32(
             (0..4 * 3 * 2).map(|i| i as f32).collect(), &[4, 3, 2]);
@@ -1293,5 +1766,8 @@ mod tests {
         let s = GenerationConfig::sampled(4, 0.8, 50, 1);
         assert!(matches!(s.sampling,
                          Sampling::TopK { k: 50, seed: 1, .. }));
+        assert_eq!(s.prefill_chunk, None, "pipelining defaults off");
+        let p = GenerationConfig::greedy(4).with_prefill_chunk(32);
+        assert_eq!(p.prefill_chunk, Some(32));
     }
 }

@@ -22,6 +22,7 @@
 //! merged view, keeping existing consumers (`stats.n_flushes`,
 //! `stats.mean_batch_clients()`, …) source-compatible.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
@@ -38,6 +39,39 @@ use crate::device::Device;
 use crate::error::SymbiosisError;
 use crate::runtime::Engine;
 use crate::transport::LinkKind;
+
+/// Fleet-global lockstep barrier state: the one registration count all
+/// shards of a fleet share (`Arc`'d into every shard thread).  Clients
+/// maintain it *synchronously* in
+/// `VirtLayerCtx::register`/`deregister` — before their per-shard
+/// Register/Deregister messages — so no shard can observe a client's
+/// requests while the global count still excludes that client;
+/// `BatchPolicy::LockstepFleet` barriers read it instead of the
+/// shard-local count, reproducing mLoRA's global lockstep at
+/// shards > 1 (paper Tables 4/5).
+#[derive(Debug, Default)]
+pub struct FleetBarrier {
+    registered: AtomicUsize,
+}
+
+impl FleetBarrier {
+    pub fn register(&self) {
+        self.registered.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn deregister(&self) {
+        // Saturating: a stray Deregister (client built against a dead
+        // fleet) must not wrap the barrier count.
+        let _ = self.registered.fetch_update(
+            Ordering::SeqCst, Ordering::SeqCst,
+            |n| Some(n.saturating_sub(1)));
+    }
+
+    /// Fleet-wide registered-client count.
+    pub fn registered(&self) -> usize {
+        self.registered.load(Ordering::SeqCst)
+    }
+}
 
 /// Fleet-level aggregation of per-shard [`ExecutorStats`].  Derefs to
 /// the merged snapshot (sums are exact; `flushes` concatenates the
@@ -62,8 +96,16 @@ impl FleetStats {
             merged.bucket_tokens += s.bucket_tokens;
             merged.requests_served += s.requests_served;
             merged.noise_registrations += s.noise_registrations;
+            merged.busy_secs += s.busy_secs;
+            merged.idle_secs += s.idle_secs;
         }
         FleetStats { merged, per_shard }
+    }
+
+    /// Per-shard occupancy (busy / (busy + idle)) in shard order — what
+    /// the pipeline bench reports as pipeline occupancy.
+    pub fn shard_occupancy(&self) -> Vec<f64> {
+        self.per_shard.iter().map(|s| s.occupancy()).collect()
     }
 
     /// The fleet-wide merged snapshot (also reachable via `Deref`).
@@ -104,6 +146,7 @@ pub fn charge_shard(device: &mut Device, shard: usize, resident: u64)
 pub struct ExecutorFleet {
     shards: Vec<ShardExecutor>,
     assign: LayerAssignment,
+    barrier: Arc<FleetBarrier>,
 }
 
 impl ExecutorFleet {
@@ -144,14 +187,18 @@ impl ExecutorFleet {
         for (slice, device) in slices.iter().zip(&mut devices) {
             charge_shard(device, slice.shard, slice.param_bytes())?;
         }
+        // One fleet-global lockstep barrier shared by every shard
+        // (consulted only under `BatchPolicy::LockstepFleet`).
+        let barrier = Arc::new(FleetBarrier::default());
         let shards = slices
             .into_iter()
             .zip(devices)
             .map(|(slice, device)| {
-                ShardExecutor::spawn(engine.clone(), slice, policy, device)
+                ShardExecutor::spawn(engine.clone(), slice, policy,
+                                     device, barrier.clone())
             })
             .collect();
-        Ok(ExecutorFleet { shards, assign })
+        Ok(ExecutorFleet { shards, assign, barrier })
     }
 
     pub fn n_shards(&self) -> usize {
@@ -161,6 +208,17 @@ impl ExecutorFleet {
     /// The layer partition this fleet serves.
     pub fn assignment(&self) -> &LayerAssignment {
         &self.assign
+    }
+
+    /// The fleet-global lockstep barrier state (observability/tests).
+    pub fn barrier(&self) -> &FleetBarrier {
+        &self.barrier
+    }
+
+    /// Shared handle to the fleet-global barrier, given to every
+    /// client context so registration updates it synchronously.
+    pub(crate) fn barrier_arc(&self) -> Arc<FleetBarrier> {
+        self.barrier.clone()
     }
 
     /// Channel of the first shard — the whole fleet for single-shard
@@ -291,6 +349,19 @@ mod tests {
     }
 
     #[test]
+    fn fleet_barrier_counts_and_saturates() {
+        let b = FleetBarrier::default();
+        assert_eq!(b.registered(), 0);
+        b.register();
+        b.register();
+        assert_eq!(b.registered(), 2);
+        b.deregister();
+        b.deregister();
+        b.deregister(); // stray deregister must not wrap
+        assert_eq!(b.registered(), 0);
+    }
+
+    #[test]
     fn merged_stats_sum_over_shards() {
         let a = ExecutorStats {
             n_flushes: 3,
@@ -299,6 +370,8 @@ mod tests {
             real_tokens: 100,
             bucket_tokens: 128,
             requests_served: 9,
+            busy_secs: 0.75,
+            idle_secs: 0.25,
             ..Default::default()
         };
         let b = ExecutorStats {
@@ -314,6 +387,9 @@ mod tests {
         assert_eq!(f.n_shards(), 2);
         assert_eq!(f.n_flushes, 4); // via Deref
         assert_eq!(f.requests_served, 11);
+        assert!((f.busy_secs - 0.75).abs() < 1e-12);
+        assert!((f.per_shard[0].occupancy() - 0.75).abs() < 1e-12);
+        assert_eq!(f.shard_occupancy().len(), 2);
         assert!((f.mean_batch_clients() - 2.0).abs() < 1e-9);
         assert!((f.padding_overhead() - (1.0 - 128.0 / 160.0)).abs()
                 < 1e-9);

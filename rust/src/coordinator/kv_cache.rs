@@ -1,4 +1,5 @@
-//! Per-client KV cache with host-offload accounting.
+//! Per-client KV cache with host-offload accounting and real ledger
+//! charging.
 //!
 //! The client owns its KV cache (it is request runtime state — the whole
 //! point of the split is that it never burdens the executor).  Layout per
@@ -8,7 +9,24 @@
 //! host ledger and each decode step charges a PCIe transfer for the
 //! layer's K/V working set — unless the client itself runs on the CPU,
 //! in which case the transfer is free (that asymmetry is Fig. 19).
+//!
+//! A cache built by the session builder
+//! ([`crate::coordinator::SessionBuilder`]) carries a [`KvLedger`]:
+//! every capacity growth is charged to the hosting device's
+//! [`crate::device::MemoryLedger`] *before* the buffers grow, so an
+//! over-committed session fails its `append` with a typed
+//! [`SymbiosisError::KvCacheOom`] instead of only showing up in the
+//! analytic memory model — the executable form of the paper's
+//! mixed-tenant OOM lines (Figs 9/10).  `clear()` keeps the grown
+//! buffers and therefore keeps the charge; the charge is released when
+//! the cache drops.
 
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::device::Device;
+use crate::error::SymbiosisError;
 use crate::tensor::Tensor;
 
 /// Where the cache bytes live.
@@ -18,6 +36,39 @@ pub enum KvPlacement {
     Device,
     /// Offloaded to host DRAM (OffloadedCache).
     Host,
+}
+
+/// A handle charging this cache's bytes to a (shared) simulated device:
+/// sessions on the same device contend for the same capacity, which is
+/// what makes multi-tenant OOM executable.
+#[derive(Debug, Clone)]
+pub struct KvLedger {
+    pub device: Arc<Mutex<Device>>,
+    /// Ledger tag, e.g. `kv:client3`.
+    pub tag: String,
+}
+
+impl KvLedger {
+    /// Charge the tag to `bytes` total; typed
+    /// [`SymbiosisError::KvCacheOom`] when the device cannot hold it.
+    fn charge(&self, bytes: u64) -> Result<()> {
+        let mut dev = self.device.lock().unwrap();
+        let capacity = dev.ledger.capacity();
+        // what *other* allocations hold — the informative number in
+        // the multi-tenant case, where this cache alone would fit
+        let others = dev.ledger.used() - dev.ledger.tag_bytes(&self.tag);
+        dev.ledger.set(&self.tag, bytes).map_err(|_| {
+            anyhow::Error::new(SymbiosisError::KvCacheOom {
+                need_bytes: bytes,
+                used_bytes: others,
+                capacity_bytes: capacity,
+            })
+        })
+    }
+
+    fn release(&self) {
+        self.device.lock().unwrap().ledger.free(&self.tag);
+    }
 }
 
 /// KV cache for one client: per layer, K and V `(BH, cap, H)`.
@@ -32,6 +83,7 @@ pub struct KvCache {
     cap: usize,
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
+    ledger: Option<KvLedger>,
 }
 
 impl KvCache {
@@ -45,7 +97,19 @@ impl KvCache {
             cap: 0,
             k: vec![Vec::new(); n_layers],
             v: vec![Vec::new(); n_layers],
+            ledger: None,
         }
+    }
+
+    /// Attach a device ledger: from now on every capacity growth is
+    /// charged (and the current footprint is charged immediately).
+    /// The charge is released when the cache drops.
+    pub fn attach_ledger(&mut self, device: Arc<Mutex<Device>>,
+                         tag: String) -> Result<()> {
+        let ledger = KvLedger { device, tag };
+        ledger.charge(self.bytes())?;
+        self.ledger = Some(ledger);
+        Ok(())
     }
 
     /// Completed token length (the minimum across layers).
@@ -68,14 +132,26 @@ impl KvCache {
 
     /// Bytes currently held (all layers, K+V).
     pub fn bytes(&self) -> u64 {
-        (2 * self.k.len() * self.bh * self.cap * self.head_dim * 4) as u64
+        self.bytes_at_cap(self.cap)
     }
 
-    fn ensure_cap(&mut self, want: usize) {
+    /// Footprint at a hypothetical capacity — the single source of the
+    /// layout formula, used both for the current footprint and for the
+    /// ledger pre-charge in `ensure_cap`.
+    fn bytes_at_cap(&self, cap: usize) -> u64 {
+        (2 * self.k.len() * self.bh * cap * self.head_dim * 4) as u64
+    }
+
+    fn ensure_cap(&mut self, want: usize) -> Result<()> {
         if want <= self.cap {
-            return;
+            return Ok(());
         }
         let new_cap = want.next_power_of_two().max(16);
+        // Charge the ledger *before* growing: a rejected growth leaves
+        // both the cache and the ledger exactly as they were.
+        if let Some(ledger) = &self.ledger {
+            ledger.charge(self.bytes_at_cap(new_cap))?;
+        }
         for layer in 0..self.k.len() {
             let mut nk = vec![0.0f32; self.bh * new_cap * self.head_dim];
             let mut nv = vec![0.0f32; self.bh * new_cap * self.head_dim];
@@ -96,12 +172,14 @@ impl KvCache {
             self.v[layer] = nv;
         }
         self.cap = new_cap;
+        Ok(())
     }
 
     /// Forget all cached rows (per-layer lengths to zero) while keeping
     /// the grown buffers, so a reused session does not re-pay the
     /// doubling growth.  `append`/`padded` never read past the lengths,
-    /// so stale bytes in the retained capacity are unreachable.
+    /// so stale bytes in the retained capacity are unreachable.  The
+    /// ledger charge is retained with the buffers.
     pub fn clear(&mut self) {
         for l in &mut self.lens {
             *l = 0;
@@ -112,13 +190,15 @@ impl KvCache {
     /// `(BH, t_new, H)`); returns the layer's new token length.  During a
     /// decode step earlier layers lead later ones by one token — the
     /// caller must use the returned per-layer length for attention, not
-    /// the global `len()`.
+    /// the global `len()`.  Fails with a typed
+    /// [`SymbiosisError::KvCacheOom`] when a ledger is attached and the
+    /// required capacity growth does not fit the device.
     pub fn append(&mut self, layer: usize, k: &Tensor, v: &Tensor)
-                  -> usize {
+                  -> Result<usize> {
         let t_new = k.shape[1];
         let h = self.head_dim;
         let old = self.lens[layer];
-        self.ensure_cap(old + t_new);
+        self.ensure_cap(old + t_new)?;
         let (ks, vs) = (k.as_f32(), v.as_f32());
         for b in 0..self.bh {
             for t in 0..t_new {
@@ -131,7 +211,7 @@ impl KvCache {
             }
         }
         self.lens[layer] = old + t_new;
-        self.lens[layer]
+        Ok(self.lens[layer])
     }
 
     /// K and V for `layer`, padded to `bucket` along the sequence axis:
@@ -170,9 +250,19 @@ impl KvCache {
     }
 }
 
+impl Drop for KvCache {
+    /// Release the device charge with the buffers.
+    fn drop(&mut self) {
+        if let Some(ledger) = &self.ledger {
+            ledger.release();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::{DeviceKind, MemoryLedger};
 
     fn kv(t: usize, bh: usize, h: usize, base: f32) -> Tensor {
         Tensor::from_f32(
@@ -185,7 +275,8 @@ mod tests {
     fn append_and_read_back() {
         let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
         for layer in 0..2 {
-            c.append(layer, &kv(3, 2, 4, 100.0), &kv(3, 2, 4, 200.0));
+            c.append(layer, &kv(3, 2, 4, 100.0), &kv(3, 2, 4, 200.0))
+                .unwrap();
         }
         assert_eq!(c.len(), 3);
         let (k, _v) = c.padded(0, 16);
@@ -200,7 +291,8 @@ mod tests {
     fn clear_keeps_capacity_and_resets_lengths() {
         let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
         for layer in 0..2 {
-            c.append(layer, &kv(3, 2, 4, 100.0), &kv(3, 2, 4, 200.0));
+            c.append(layer, &kv(3, 2, 4, 100.0), &kv(3, 2, 4, 200.0))
+                .unwrap();
         }
         let cap = c.capacity();
         assert!(cap >= 3);
@@ -209,7 +301,7 @@ mod tests {
         assert!(c.is_empty());
         assert_eq!(c.capacity(), cap);
         // refill after clear reads back fresh rows, not stale ones
-        c.append(0, &kv(2, 2, 4, 500.0), &kv(2, 2, 4, 600.0));
+        c.append(0, &kv(2, 2, 4, 500.0), &kv(2, 2, 4, 600.0)).unwrap();
         let (k, _) = c.padded(0, 16);
         assert_eq!(&k.as_f32()[0..4], &[500.0, 501.0, 502.0, 503.0]);
         // beyond the new length is zero padding, not stale pre-clear data
@@ -221,7 +313,7 @@ mod tests {
         let mut c = KvCache::new(1, 1, 2, KvPlacement::Device);
         for step in 0..20 {
             let t = kv(1, 1, 2, step as f32 * 10.0);
-            c.append(0, &t, &t);
+            c.append(0, &t, &t).unwrap();
         }
         assert_eq!(c.len(), 20);
         let (k, _) = c.padded(0, 32);
@@ -234,11 +326,57 @@ mod tests {
         let mut dev = KvCache::new(4, 4, 16, KvPlacement::Device);
         let mut host = KvCache::new(4, 4, 16, KvPlacement::Host);
         for layer in 0..4 {
-            dev.append(layer, &kv(8, 4, 16, 0.0), &kv(8, 4, 16, 0.0));
-            host.append(layer, &kv(8, 4, 16, 0.0), &kv(8, 4, 16, 0.0));
+            dev.append(layer, &kv(8, 4, 16, 0.0), &kv(8, 4, 16, 0.0))
+                .unwrap();
+            host.append(layer, &kv(8, 4, 16, 0.0), &kv(8, 4, 16, 0.0))
+                .unwrap();
         }
         assert_eq!(dev.transfer_bytes_per_step(), 0);
         assert_eq!(host.transfer_bytes_per_step(),
                    (2 * 4 * 4 * 8 * 16 * 4) as u64);
+    }
+
+    #[test]
+    fn ledger_charges_growth_and_releases_on_drop() {
+        let dev = Arc::new(Mutex::new(Device::new("cli",
+                                                  DeviceKind::GpuFast40)));
+        let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
+        c.attach_ledger(dev.clone(), "kv:test".into()).unwrap();
+        assert_eq!(dev.lock().unwrap().ledger.tag_bytes("kv:test"), 0);
+        c.append(0, &kv(3, 2, 4, 0.0), &kv(3, 2, 4, 0.0)).unwrap();
+        let charged = dev.lock().unwrap().ledger.tag_bytes("kv:test");
+        assert_eq!(charged, c.bytes());
+        assert!(charged > 0);
+        // clear keeps the buffers and therefore the charge
+        c.clear();
+        assert_eq!(dev.lock().unwrap().ledger.tag_bytes("kv:test"),
+                   charged);
+        drop(c);
+        assert_eq!(dev.lock().unwrap().ledger.tag_bytes("kv:test"), 0);
+    }
+
+    #[test]
+    fn over_committed_append_fails_typed_and_leaves_state_intact() {
+        let mut small = Device::new("tiny", DeviceKind::GpuFast40);
+        small.ledger = MemoryLedger::new(256); // far below one growth
+        let dev = Arc::new(Mutex::new(small));
+        let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
+        c.attach_ledger(dev.clone(), "kv:tiny".into()).unwrap();
+        let err = c
+            .append(0, &kv(3, 2, 4, 0.0), &kv(3, 2, 4, 0.0))
+            .unwrap_err();
+        match SymbiosisError::from(err) {
+            SymbiosisError::KvCacheOom { need_bytes, used_bytes,
+                                         capacity_bytes } => {
+                assert_eq!(capacity_bytes, 256);
+                assert_eq!(used_bytes, 0, "no co-tenants in this test");
+                assert!(need_bytes > capacity_bytes);
+            }
+            other => panic!("expected KvCacheOom, got {other}"),
+        }
+        // the failed growth left cache and ledger untouched
+        assert_eq!(c.capacity(), 0);
+        assert_eq!(c.layer_len(0), 0);
+        assert_eq!(dev.lock().unwrap().ledger.used(), 0);
     }
 }

@@ -39,10 +39,16 @@
 //! Module map — the request path from client to device:
 //! * [`client`] — the layer walker, sessions/trainers, and their
 //!   builders; each client drives its own execution (design goal 5).
+//!   Long prompts on a sharded fleet can pipeline:
+//!   `SessionBuilder::prefill_chunk` splits the prompt into
+//!   micro-batches driven as a wavefront so every shard stays busy.
 //! * [`virt_layer`] — the client-side proxy replacing frozen layers
 //!   (Fig. 4).  Holds the per-client `RoutingTable`: each `LayerId`
 //!   resolves to the shard executor owning it, over a per-shard link
-//!   (co-located `SharedLocal`, cross-shard `NvLink`).
+//!   (co-located `SharedLocal`, cross-shard `NvLink`).  The API is
+//!   split-phase — `dispatch()` sends without blocking,
+//!   `PendingLayer::collect()` waits — with the blocking calls as the
+//!   composition of the two.
 //! * [`fleet`] — the executor fleet: one shard thread per contiguous
 //!   layer range, each with its own batching queues and an OOM-enforced
 //!   `Device` memory ledger; `FleetStats` merges per-shard snapshots.
@@ -73,12 +79,13 @@ pub mod sharding;
 pub mod virt_layer;
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::config::ModelConfig;
 use crate::coordinator::privacy::PrivacyCtx;
+use crate::device::{Device, DeviceKind};
 use crate::runtime::Engine;
 use crate::transport::LinkKind;
 
@@ -90,12 +97,13 @@ pub use batching::BatchPolicy;
 pub use client::{ClientCore, GenerationConfig, InferenceSession,
                  Sampling, SessionBuilder, Trainer, TrainerBuilder,
                  TrainOutcome, UrgencyPolicy};
-pub use fleet::{ExecutorFleet, FleetStats};
-pub use kv_cache::KvPlacement;
+pub use fleet::{ExecutorFleet, FleetBarrier, FleetStats};
+pub use kv_cache::{KvLedger, KvPlacement};
 pub use placement::Placement;
 pub use proto::{LayerId, OpKind, Urgency};
 pub use sharding::{LayerAssignment, ShardPlan};
-pub use virt_layer::{RoutingTable, ShardRoute, VirtLayerCtx};
+pub use virt_layer::{PendingLayer, RoutingTable, ShardRoute,
+                     VirtLayerCtx};
 
 /// A running deployment: an executor fleet + the pieces needed to attach
 /// clients.  This is the top-level public API — tenants are spawned from
@@ -107,6 +115,14 @@ pub struct Deployment {
     pub executor: ExecutorFleet,
     pub client_weights: model_state::ClientWeights,
     pub placement: Placement,
+    /// Simulated device hosting the clients: every session's KV cache
+    /// (when `KvPlacement::Device`) charges this shared ledger, so
+    /// mixed-tenant OOM is executable — over-committing fails a
+    /// session's append with a typed
+    /// [`SymbiosisError::KvCacheOom`], not just the analytic model.
+    pub client_device: Arc<Mutex<Device>>,
+    /// Host DRAM device: `KvPlacement::Host` caches charge here.
+    pub host_device: Arc<Mutex<Device>>,
     next_client_id: std::sync::atomic::AtomicUsize,
 }
 
@@ -140,12 +156,18 @@ impl Deployment {
             model_state::load_split(cfg, artifact_dir)?;
         let executor =
             ExecutorFleet::start(engine.clone(), base, policy, placement)?;
+        let client_device = Arc::new(Mutex::new(Device::new(
+            "clients", placement.client_device())));
+        let host_device = Arc::new(Mutex::new(Device::new(
+            "host", DeviceKind::Cpu)));
         Ok(Deployment {
             cfg: cfg.clone(),
             engine,
             executor,
             client_weights,
             placement,
+            client_device,
+            host_device,
             next_client_id: std::sync::atomic::AtomicUsize::new(0),
         })
     }
@@ -198,6 +220,9 @@ impl Deployment {
         let mut ctx = VirtLayerCtx::new(id, routing);
         ctx.realize_delays = realize_delays;
         ctx.privacy = privacy;
+        // Clients keep the fleet-global lockstep count exact: they
+        // bump it synchronously on register/deregister.
+        ctx.fleet_barrier = Some(self.executor.barrier_arc());
         let virt = Arc::new(ctx);
         virt.register();
         ClientCore {

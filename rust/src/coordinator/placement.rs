@@ -209,6 +209,37 @@ impl IterationModel {
                                        training);
         (self.batch * self.seq * n_clients) as f64 / iter
     }
+
+    /// GPipe-style pipelined-prefill latency model: the prompt split
+    /// into `chunks` micro-batches over `shards` stages fills and
+    /// drains a wavefront, so the M*S chunk-stage tiles execute in
+    /// M + S - 1 steps instead of M*S — latency scales by
+    /// `(M + S - 1) / (M * S)` relative to the sequential walk of the
+    /// same fleet (Huang et al.; mLoRA's pipelined scheduling).
+    pub fn pipelined_prefill_secs(&self, chunks: usize) -> f64 {
+        let s = self.placement.shards().max(1) as f64;
+        let m = chunks.max(1) as f64;
+        let sequential = self.iteration_secs(1, 0, 0, false);
+        sequential * (m + s - 1.0) / (m * s)
+    }
+
+    /// Modeled speedup of pipelined over sequential prefill:
+    /// `M*S / (M + S - 1)` — what the `pipeline` bench prints next to
+    /// the measured wall-clock column.
+    pub fn pipeline_speedup(&self, chunks: usize) -> f64 {
+        let s = self.placement.shards().max(1) as f64;
+        let m = chunks.max(1) as f64;
+        m * s / (m + s - 1.0)
+    }
+
+    /// Modeled steady-state shard occupancy of the pipelined prefill:
+    /// `M / (M + S - 1)` (each shard works M of the M+S-1 wavefront
+    /// steps).
+    pub fn pipeline_occupancy(&self, chunks: usize) -> f64 {
+        let s = self.placement.shards().max(1) as f64;
+        let m = chunks.max(1) as f64;
+        m / (m + s - 1.0)
+    }
 }
 
 #[cfg(test)]
@@ -265,6 +296,32 @@ mod tests {
         // unsharded placements keep their one link kind
         assert_eq!(Placement::CpuClient.shard_links(0, 1),
                    vec![LinkKind::Pcie]);
+    }
+
+    #[test]
+    fn pipelining_recovers_sharded_overlap() {
+        let m = IterationModel {
+            cfg: LLAMA2_13B,
+            placement: Placement::ShardedLocal { shards: 2 },
+            batch: 1,
+            seq: 2048,
+        };
+        // chunks=1 is the sequential walk …
+        assert!((m.pipeline_speedup(1) - 1.0).abs() < 1e-12);
+        assert!((m.pipelined_prefill_secs(1)
+                 - m.iteration_secs(1, 0, 0, false))
+                    .abs()
+                < 1e-9);
+        // … the acceptance point (shards=2, chunks=4) models 1.6x …
+        assert!((m.pipeline_speedup(4) - 1.6).abs() < 1e-12);
+        assert!(m.pipeline_speedup(4) >= 1.3);
+        // … and more chunks asymptote to the shard count with rising
+        // occupancy.
+        assert!(m.pipeline_speedup(8) > m.pipeline_speedup(4));
+        assert!(m.pipeline_speedup(64) < 2.0);
+        assert!(m.pipeline_occupancy(8) > m.pipeline_occupancy(2));
+        assert!(m.pipelined_prefill_secs(8)
+                < m.pipelined_prefill_secs(2));
     }
 
     #[test]

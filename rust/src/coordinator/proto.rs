@@ -7,6 +7,13 @@
 //! AOT artifact, splits the result and answers over the per-request
 //! response channel — the paper's split-execution handshake
 //! (section 3.2) over the sharded base of section 3.3.
+//!
+//! The protocol is inherently split-phase: a request carries its own
+//! response channel, so a client may hold several requests in flight
+//! (one per pipelined prefill micro-batch — see
+//! `VirtLayerCtx::dispatch`) and collect them in any order.  Requests
+//! sent over one channel arrive in send order; responses come whenever
+//! the owning shard flushes the batch that served them.
 
 use std::sync::mpsc::Sender;
 

@@ -7,8 +7,34 @@
 //! that packages the request, looks the layer up in its [`RoutingTable`]
 //! (section 3.3: the base may be sharded over several executors),
 //! charges that shard's [`Link`], applies the privacy protocol when
-//! configured, and blocks on the response — keeping the *client* the
+//! configured, and collects the response — keeping the *client* the
 //! driver of its own execution.
+//!
+//! # Split-phase dispatch
+//!
+//! Every base-layer invocation has two halves:
+//!
+//! * [`VirtLayerCtx::dispatch`] sends the request and returns a
+//!   [`PendingLayer`] **without blocking**.  The *request* link is
+//!   charged here — the payload crosses to the shard the moment the
+//!   message is sent, whether or not the client waits.
+//! * [`PendingLayer::collect`] blocks on the response, accumulates the
+//!   executor queue-wait, surfaces a shard failure as
+//!   [`SymbiosisError::ExecutorFailed`], and charges the *response*
+//!   link for the returned payload.
+//!
+//! The blocking convenience calls ([`VirtLayerCtx::forward`] /
+//! [`VirtLayerCtx::backward`] / [`VirtLayerCtx::embed`]) are exactly
+//! `dispatch(..)?.collect()`, so the sequential path is unchanged.  The
+//! split-phase half is what lets the pipelined prefill walker keep one
+//! in-flight request per micro-batch: micro-batch k's request occupies
+//! shard s+1 while micro-batch k+1's occupies shard s.
+//!
+//! Ordering guarantees: requests dispatched over one context to the
+//! *same* shard arrive in dispatch order (the channel is FIFO); requests
+//! to different shards are unordered relative to each other.  Dropping a
+//! `PendingLayer` without collecting is safe — the shard's response to a
+//! closed receiver is discarded, nothing blocks.
 //!
 //! With Arc-backed tensors the request/response payloads are shared
 //! views: shipping `x` to the executor (and receiving the scattered
@@ -16,11 +42,9 @@
 //! route still charges the *modeled* transfer for the placement being
 //! simulated — a co-located shard costs `SharedLocal`, a cross-shard hop
 //! `NvLink` — so accounting matches the topology while real host copies
-//! stay zero.
-//!
-//! A shard that fails a flush answers with a typed error message; the
-//! proxy surfaces it as [`SymbiosisError::ExecutorFailed`] instead of a
-//! bare channel disconnect.
+//! stay zero.  The wait/link accumulators are bit-cast `AtomicU64`s, not
+//! mutexes: with pipelined prefill they are touched once per layer per
+//! micro-batch, and an uncontended atomic add stays off the lock path.
 //!
 //! Contexts are built by [`Deployment::build_core`] (one per client id);
 //! sessions configure the links, realized delays, and the privacy
@@ -30,11 +54,13 @@
 //!
 //! [`Deployment::build_core`]: crate::coordinator::Deployment
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::fleet::FleetBarrier;
 use crate::coordinator::privacy::PrivacyCtx;
 use crate::coordinator::proto::{ExecMsg, LayerId, LayerRequest,
                                 LayerResponse, OpKind, Urgency};
@@ -90,6 +116,25 @@ impl RoutingTable {
     }
 }
 
+/// Add a delta to an `f64` stored bit-cast in an `AtomicU64`.
+/// Uncontended CAS loop — the counters are per client, so contention
+/// only occurs if one session is driven from several threads.
+fn atomic_f64_add(cell: &AtomicU64, delta: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + delta).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed,
+                                         Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn atomic_f64_get(cell: &AtomicU64) -> f64 {
+    f64::from_bits(cell.load(Ordering::Relaxed))
+}
+
 /// Per-client view of the executor fleet: layer proxies share this
 /// context.
 pub struct VirtLayerCtx {
@@ -101,10 +146,63 @@ pub struct VirtLayerCtx {
     /// so remote/network placements behave (not just account) slower —
     /// used by the placement benches (Figs 7/13/21).
     pub realize_delays: bool,
-    /// Accumulated queue-wait observed by this client (Fig 7).
-    pub wait_secs: Mutex<f64>,
-    /// Accumulated simulated link time (all shard links).
-    pub link_secs: Mutex<f64>,
+    /// The fleet-global lockstep registration count, updated
+    /// *synchronously* in [`Self::register`]/[`Self::deregister`]
+    /// (before/alongside the per-shard messages) so
+    /// `BatchPolicy::LockstepFleet` barriers never read a count that
+    /// lags a client whose requests are already in flight.  `None` for
+    /// hand-built contexts (tests, tools).
+    pub fleet_barrier: Option<std::sync::Arc<FleetBarrier>>,
+    /// Accumulated queue-wait observed by this client (Fig 7);
+    /// f64 seconds bit-cast into the atomic.
+    wait_secs: AtomicU64,
+    /// Accumulated simulated link time (all shard links); f64 bit-cast.
+    link_secs: AtomicU64,
+}
+
+/// An in-flight base-layer invocation: the response receiver plus what
+/// is needed to finish the accounting at collect time.  Obtained from
+/// [`VirtLayerCtx::dispatch`] (or the privacy-aware
+/// [`VirtLayerCtx::dispatch_forward`]); the request link was already
+/// charged at dispatch.  Dropping without collecting discards the
+/// response harmlessly.
+pub struct PendingLayer<'a> {
+    ctx: &'a VirtLayerCtx,
+    route: &'a ShardRoute,
+    layer: LayerId,
+    rx: Receiver<LayerResponse>,
+    /// Privacy: the noise effect to subtract from the response
+    /// (`n_eff = W . n`), when this dispatch shipped noised activations.
+    n_eff: Option<Tensor>,
+}
+
+impl PendingLayer<'_> {
+    /// The layer this invocation targets.
+    pub fn layer(&self) -> LayerId {
+        self.layer
+    }
+
+    /// Block on the shard's response.  Accumulates the executor
+    /// queue-wait, charges the *response* link for the returned payload,
+    /// surfaces a failed flush as [`SymbiosisError::ExecutorFailed`],
+    /// and removes the privacy noise effect when one was registered at
+    /// dispatch.
+    pub fn collect(self) -> Result<Tensor> {
+        let resp =
+            self.rx.recv().context("shard executor dropped request")?;
+        atomic_f64_add(&self.ctx.wait_secs, resp.queue_wait_secs);
+        let y = resp.y.map_err(|message| {
+            anyhow::Error::new(SymbiosisError::ExecutorFailed {
+                layer: self.layer.label(),
+                message,
+            })
+        })?;
+        self.ctx.charge(self.route, &y);
+        match self.n_eff {
+            Some(n) => Ok(crate::tensor::ops::sub(&y, &n)),
+            None => Ok(y),
+        }
+    }
 }
 
 impl VirtLayerCtx {
@@ -114,14 +212,20 @@ impl VirtLayerCtx {
             routing,
             privacy: None,
             realize_delays: false,
-            wait_secs: Mutex::new(0.0),
-            link_secs: Mutex::new(0.0),
+            fleet_barrier: None,
+            wait_secs: AtomicU64::new(0.0f64.to_bits()),
+            link_secs: AtomicU64::new(0.0f64.to_bits()),
         }
     }
 
     /// Register with every shard (lockstep policies count clients at
-    /// each shard independently).
+    /// each shard independently).  The fleet-global barrier is bumped
+    /// synchronously *first*, so no shard can observe this client's
+    /// requests while the global count still excludes it.
     pub fn register(&self) {
+        if let Some(b) = &self.fleet_barrier {
+            b.register();
+        }
         for r in self.routing.routes() {
             let _ = r.tx.send(ExecMsg::Register {
                 client_id: self.client_id,
@@ -130,6 +234,11 @@ impl VirtLayerCtx {
     }
 
     pub fn deregister(&self) {
+        // Drop the global count first too: a departing client must not
+        // hold fleet-wide barriers for the message-drain latency.
+        if let Some(b) = &self.fleet_barrier {
+            b.deregister();
+        }
         for r in self.routing.routes() {
             let _ = r.tx.send(ExecMsg::Deregister {
                 client_id: self.client_id,
@@ -138,48 +247,67 @@ impl VirtLayerCtx {
     }
 
     /// Invoke the forward pass of a base linear layer with activations
-    /// `x: (T, Din)`.
+    /// `x: (T, Din)`.  Blocking: `dispatch_forward(..)?.collect()`.
     pub fn forward(&self, layer: LayerId, x: Tensor, urgency: Urgency)
                    -> Result<Tensor> {
-        // Privacy: ship x + n, receive W(x+n)+b, subtract n_eff = W.n.
-        if let Some(p) = &self.privacy {
-            let (noised, n_eff) = p.apply(layer, &x)?;
-            let y_noisy =
-                self.round_trip(layer, OpKind::Forward, noised, None,
-                                urgency)?;
-            return Ok(crate::tensor::ops::sub(&y_noisy, &n_eff));
-        }
-        self.round_trip(layer, OpKind::Forward, x, None, urgency)
+        self.dispatch_forward(layer, x, urgency)?.collect()
     }
 
     /// Invoke the memory-optimized backward: returns `dX = dY . W^T`.
     pub fn backward(&self, layer: LayerId, dy: Tensor, urgency: Urgency)
                     -> Result<Tensor> {
-        self.round_trip(layer, OpKind::Backward, dy, None, urgency)
+        self.dispatch(layer, OpKind::Backward, dy, None, urgency)?
+            .collect()
     }
 
     /// Embedding lookup: token ids + positions (both (T,) i32).
     pub fn embed(&self, tokens: Tensor, positions: Tensor,
                  urgency: Urgency) -> Result<Tensor> {
-        self.round_trip(LayerId::Embed, OpKind::Forward, tokens,
-                        Some(positions), urgency)
+        self.dispatch_embed(tokens, positions, urgency)?.collect()
+    }
+
+    /// Non-blocking forward dispatch with the privacy protocol applied:
+    /// when a [`PrivacyCtx`] is configured the shard receives `x + n`
+    /// and the returned [`PendingLayer`] subtracts `n_eff = W . n` at
+    /// collect, so pipelined walks stay private too.
+    pub fn dispatch_forward(&self, layer: LayerId, x: Tensor,
+                            urgency: Urgency)
+                            -> Result<PendingLayer<'_>> {
+        if let Some(p) = &self.privacy {
+            let (noised, n_eff) = p.apply(layer, &x)?;
+            let mut pend = self.dispatch(layer, OpKind::Forward, noised,
+                                         None, urgency)?;
+            pend.n_eff = Some(n_eff);
+            return Ok(pend);
+        }
+        self.dispatch(layer, OpKind::Forward, x, None, urgency)
+    }
+
+    /// Non-blocking embedding dispatch.
+    pub fn dispatch_embed(&self, tokens: Tensor, positions: Tensor,
+                          urgency: Urgency) -> Result<PendingLayer<'_>> {
+        self.dispatch(LayerId::Embed, OpKind::Forward, tokens,
+                      Some(positions), urgency)
     }
 
     /// Charge one payload to a shard's link, realizing the delay when
     /// configured.
     fn charge(&self, route: &ShardRoute, t: &Tensor) {
         let dt = route.link.lock().unwrap().send(t);
-        *self.link_secs.lock().unwrap() += dt;
+        atomic_f64_add(&self.link_secs, dt);
         if self.realize_delays && dt > 20e-6 {
             std::thread::sleep(std::time::Duration::from_secs_f64(dt));
         }
     }
 
-    fn round_trip(&self, layer: LayerId, op: OpKind, x: Tensor,
-                  positions: Option<Tensor>, urgency: Urgency)
-                  -> Result<Tensor> {
+    /// Send one base-layer invocation without waiting for the response.
+    /// The *request* link is charged here (the payload crosses now);
+    /// everything the response owes — queue wait, response link,
+    /// failure surfacing — happens in [`PendingLayer::collect`].
+    pub fn dispatch(&self, layer: LayerId, op: OpKind, x: Tensor,
+                    positions: Option<Tensor>, urgency: Urgency)
+                    -> Result<PendingLayer<'_>> {
         let route = self.routing.route(layer);
-        // Charge the shard's link for the request payload.
         self.charge(route, &x);
         let (tx, rx) = channel::<LayerResponse>();
         route
@@ -195,22 +323,12 @@ impl VirtLayerCtx {
             }))
             .ok()
             .context("shard executor is gone")?;
-        let resp = rx.recv().context("shard executor dropped request")?;
-        *self.wait_secs.lock().unwrap() += resp.queue_wait_secs;
-        let y = resp.y.map_err(|message| {
-            anyhow::Error::new(SymbiosisError::ExecutorFailed {
-                layer: layer.label(),
-                message,
-            })
-        })?;
-        // Charge the link for the response payload.
-        self.charge(route, &y);
-        Ok(y)
+        Ok(PendingLayer { ctx: self, route, layer, rx, n_eff: None })
     }
 
     /// Total simulated link time charged so far (all shards).
     pub fn link_time(&self) -> f64 {
-        *self.link_secs.lock().unwrap()
+        atomic_f64_get(&self.link_secs)
     }
 
     /// Per-shard link traffic: `(messages, bytes_moved)` in shard
@@ -229,7 +347,7 @@ impl VirtLayerCtx {
 
     /// Total executor queue wait observed so far.
     pub fn queue_wait(&self) -> f64 {
-        *self.wait_secs.lock().unwrap()
+        atomic_f64_get(&self.wait_secs)
     }
 }
 
@@ -299,5 +417,101 @@ mod tests {
             // must not panic: every layer resolves to the one route
             let _ = t.route(layer);
         }
+    }
+
+    #[test]
+    fn atomic_f64_counters_accumulate() {
+        let cell = AtomicU64::new(0.0f64.to_bits());
+        atomic_f64_add(&cell, 1.5);
+        atomic_f64_add(&cell, 0.25);
+        assert_eq!(atomic_f64_get(&cell), 1.75);
+    }
+
+    #[test]
+    fn dispatch_charges_request_and_collect_charges_response() {
+        let (tx, rx) = channel();
+        let table = RoutingTable::single(tx, LinkKind::NvLink);
+        let ctx = VirtLayerCtx::new(0, table);
+        let x = Tensor::zeros(&[4, 8]);
+        let pend = ctx
+            .dispatch(LayerId::Qkv(0), OpKind::Forward, x, None,
+                      Urgency::Bulk)
+            .unwrap();
+        // the request payload crossed the link at dispatch time
+        let (msgs, bytes) = ctx.link_traffic()[0];
+        assert_eq!(msgs, 1);
+        assert_eq!(bytes, 4 * 8 * 4);
+        assert_eq!(pend.layer(), LayerId::Qkv(0));
+        // fake shard: answer with a (4, 24) tensor and some queue wait
+        let req = match rx.try_recv().unwrap() {
+            ExecMsg::Request(r) => r,
+            other => panic!("expected a request, got {other:?}"),
+        };
+        req.resp
+            .send(LayerResponse {
+                y: Ok(Tensor::zeros(&[4, 24])),
+                queue_wait_secs: 0.125,
+                batch_clients: 1,
+            })
+            .unwrap();
+        let y = pend.collect().unwrap();
+        assert_eq!(y.shape, vec![4, 24]);
+        assert_eq!(ctx.queue_wait(), 0.125);
+        let (msgs, bytes) = ctx.link_traffic()[0];
+        assert_eq!(msgs, 2, "collect must charge the response hop");
+        assert_eq!(bytes, (4 * 8 + 4 * 24) * 4);
+    }
+
+    #[test]
+    fn collect_surfaces_executor_failure_typed() {
+        let (tx, rx) = channel();
+        let table = RoutingTable::single(tx, LinkKind::SharedLocal);
+        let ctx = VirtLayerCtx::new(0, table);
+        let pend = ctx
+            .dispatch(LayerId::MlpUp(1), OpKind::Forward,
+                      Tensor::zeros(&[2, 4]), None, Urgency::Bulk)
+            .unwrap();
+        let req = match rx.try_recv().unwrap() {
+            ExecMsg::Request(r) => r,
+            other => panic!("expected a request, got {other:?}"),
+        };
+        req.resp
+            .send(LayerResponse {
+                y: Err("injected fault".into()),
+                queue_wait_secs: 0.0,
+                batch_clients: 1,
+            })
+            .unwrap();
+        let err = pend.collect().unwrap_err();
+        match SymbiosisError::from(err) {
+            SymbiosisError::ExecutorFailed { layer, message } => {
+                assert_eq!(layer, "l1.mlp_up");
+                assert_eq!(message, "injected fault");
+            }
+            other => panic!("expected ExecutorFailed, got {other}"),
+        }
+    }
+
+    #[test]
+    fn dropping_a_pending_layer_is_harmless() {
+        let (tx, rx) = channel();
+        let table = RoutingTable::single(tx, LinkKind::SharedLocal);
+        let ctx = VirtLayerCtx::new(0, table);
+        let pend = ctx
+            .dispatch(LayerId::Qkv(0), OpKind::Forward,
+                      Tensor::zeros(&[1, 4]), None, Urgency::Bulk)
+            .unwrap();
+        drop(pend);
+        // the shard's answer to a dropped receiver is simply discarded
+        let req = match rx.try_recv().unwrap() {
+            ExecMsg::Request(r) => r,
+            other => panic!("expected a request, got {other:?}"),
+        };
+        let send_result = req.resp.send(LayerResponse {
+            y: Ok(Tensor::zeros(&[1, 4])),
+            queue_wait_secs: 0.0,
+            batch_clients: 1,
+        });
+        assert!(send_result.is_err(), "receiver should be gone");
     }
 }

@@ -45,6 +45,15 @@ pub enum SymbiosisError {
     /// device ledger: the `ShardPlan` cannot be deployed on this fleet
     /// (paper Fig. 17's "model too large for N GPUs" lines).
     ShardOom { shard: usize, need_bytes: u64, capacity_bytes: u64 },
+    /// A session's KV cache growth does not fit the client device's
+    /// memory ledger — the executable form of the paper's mixed-tenant
+    /// OOM lines (Figs 9/10): the request fails with this instead of an
+    /// analytic estimate predicting it would.  `need_bytes` is this
+    /// cache's requested total; `used_bytes` what the device already
+    /// holds for *other* allocations (co-tenant caches included) — in
+    /// the multi-tenant case `need_bytes` alone is typically well below
+    /// `capacity_bytes`.
+    KvCacheOom { need_bytes: u64, used_bytes: u64, capacity_bytes: u64 },
     /// Anything below the API surface: engine execution, executor
     /// channel loss, artifact I/O.
     Runtime(anyhow::Error),
@@ -104,6 +113,17 @@ impl fmt::Display for SymbiosisError {
                            {need_bytes} B resident vs {capacity_bytes} B \
                            device capacity — use more shards or a larger \
                            device")
+            }
+            SymbiosisError::KvCacheOom {
+                need_bytes,
+                used_bytes,
+                capacity_bytes,
+            } => {
+                write!(f, "KV cache growth to {need_bytes} B does not \
+                           fit the client device: co-tenants already \
+                           hold {used_bytes} B of {capacity_bytes} B — \
+                           offload the cache to the host, shorten the \
+                           context, or evict a tenant")
             }
             SymbiosisError::Runtime(e) => write!(f, "{e:#}"),
         }
@@ -167,6 +187,15 @@ mod tests {
             capacity_bytes: 1 << 20,
         };
         assert!(format!("{e}").contains("shard 3"));
+        let e = SymbiosisError::KvCacheOom {
+            need_bytes: 512,
+            used_bytes: 768,
+            capacity_bytes: 1024,
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("512"));
+        assert!(msg.contains("768"));
+        assert!(msg.contains("1024"));
     }
 
     #[test]

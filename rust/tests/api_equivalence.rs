@@ -244,6 +244,7 @@ fn sampled_generation_is_deterministic_per_seed() {
         max_tokens: 6,
         stop_tokens: Vec::new(),
         sampling: Sampling::TopK { k: 8, temperature: 0.9, seed: 1234 },
+        prefill_chunk: None,
     };
     let mut a = dep.session().build().unwrap();
     let mut b = dep.session().build().unwrap();

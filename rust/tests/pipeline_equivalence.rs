@@ -1,0 +1,385 @@
+//! Pipelined-prefill equivalence: micro-batching the prompt across the
+//! shard fleet must change *when* shards work, never *what* they
+//! compute.
+//!
+//! The acceptance bar for split-phase dispatch + pipelined prefill
+//! (ISSUE 5): generation is token-identical to the sequential walk at
+//! shards=1/2/4 x chunks=1/2/4 for every adapter kind (prefix included
+//! — its seeded cache takes the incremental path sequentially and the
+//! chunked path attends over the same cache prefix), link traffic is
+//! conserved (same total bytes, message count scaling with the chunk
+//! count), a shard failing mid-pipeline surfaces a typed
+//! `ExecutorFailed` without deadlocking the reorder buffer, the
+//! fleet-wide lockstep barrier counts clients globally, and an
+//! over-committed KV cache fails with a typed `KvCacheOom` instead of
+//! an analytic estimate.
+//!
+//! Tests skip when artifacts are absent (same convention as
+//! `integration.rs`).
+
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use symbiosis::config::SYM_TINY;
+use symbiosis::coordinator::adapter::LoraTargets;
+use symbiosis::coordinator::proto::{ExecMsg, LayerResponse};
+use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
+                             GenerationConfig, LayerAssignment, LayerId,
+                             Placement, RoutingTable, ShardRoute,
+                             SymbiosisError, VirtLayerCtx};
+use symbiosis::device::{DeviceKind, MemoryLedger};
+use symbiosis::runtime::Engine;
+use symbiosis::transport::LinkKind;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("manifest.txt").exists()
+}
+
+/// One engine (compile cache) shared by every deployment in this file.
+fn engine() -> Arc<Engine> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| Arc::new(Engine::new(&artifact_dir()).unwrap()))
+        .clone()
+}
+
+fn deploy(shards: usize, policy: BatchPolicy) -> Deployment {
+    let placement = if shards == 1 {
+        Placement::Local
+    } else {
+        Placement::ShardedLocal { shards }
+    };
+    Deployment::start_with_engine(engine(), &SYM_TINY, &artifact_dir(),
+                                  policy, placement)
+        .unwrap()
+}
+
+fn prompt(len: usize) -> Vec<i32> {
+    (0..len).map(|i| (i * 7 + 3) as i32 % 256).collect()
+}
+
+/// Greedy generation, optionally pipelined, for one adapter kind.
+fn generate_on(shards: usize, chunk: Option<usize>,
+               adapter: Option<Adapter>) -> Vec<Vec<i32>> {
+    let dep = deploy(shards, BatchPolicy::NoLockstep);
+    let mut b = dep.session();
+    if let Some(a) = adapter {
+        b = b.adapter(a);
+    }
+    if let Some(c) = chunk {
+        b = b.prefill_chunk(c);
+    }
+    let mut sess = b.build().unwrap();
+    let out = sess
+        .generate(&prompt(16), &GenerationConfig::greedy(10))
+        .unwrap();
+    drop(sess);
+    dep.shutdown();
+    out
+}
+
+fn lora8() -> Adapter {
+    Adapter::lora_from_artifacts(&SYM_TINY, &artifact_dir(), 8,
+                                 LoraTargets::QKVO, 2.0)
+        .unwrap()
+}
+
+/// Tentpole acceptance: generation (prefill through the pipelined walk,
+/// then decode against the cache it filled) is token-identical to the
+/// sequential walk at every shards x chunks point, for every adapter
+/// kind.  The prefix row also covers prefix-seeded incremental prefill:
+/// sequentially a seeded cache routes incrementally, pipelined it
+/// attends over the same seeded prefix.
+#[test]
+fn pipelined_generation_is_identical_across_shards_and_chunks() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let adapters: Vec<(&str, fn() -> Option<Adapter>)> = vec![
+        ("base", || None),
+        ("lora", || Some(lora8())),
+        ("ia3", || Some(Adapter::ia3(&SYM_TINY))),
+        ("prefix", || Some(Adapter::prefix(&SYM_TINY, 1, 4, 11))),
+    ];
+    // prompt is 16 columns: chunks=1/2/4 -> 16/8/4 columns per chunk
+    for (label, mk) in adapters {
+        let golden = generate_on(1, None, mk());
+        for shards in [1usize, 2, 4] {
+            for chunks in [1usize, 2, 4] {
+                let chunk_cols = 16 / chunks;
+                let got = generate_on(shards, Some(chunk_cols), mk());
+                assert_eq!(got, golden,
+                           "{label}: shards={shards} chunks={chunks} \
+                            diverged from the sequential walk");
+            }
+        }
+    }
+}
+
+/// Batched prompts chunk along the token axis per sequence: the
+/// pipelined walk at batch=2 must match the sequential batch prefill.
+#[test]
+fn pipelined_generation_matches_at_batch_two() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let toks = prompt(24); // 2 sequences x 12 columns, token-major
+    let run = |chunk: Option<usize>| {
+        let dep = deploy(2, BatchPolicy::NoLockstep);
+        let mut b = dep.session().batch(2);
+        if let Some(c) = chunk {
+            b = b.prefill_chunk(c);
+        }
+        let mut sess = b.build().unwrap();
+        let out =
+            sess.generate(&toks, &GenerationConfig::greedy(8)).unwrap();
+        drop(sess);
+        dep.shutdown();
+        out
+    };
+    let golden = run(None);
+    for chunk_cols in [4usize, 6] {
+        assert_eq!(run(Some(chunk_cols)), golden,
+                   "batch=2 chunk_cols={chunk_cols} diverged");
+    }
+}
+
+/// Link-traffic conservation: chunking moves the same activation rows
+/// in more, smaller messages — total bytes unchanged, message count
+/// scaling exactly with the chunk count.
+#[test]
+fn pipelined_link_traffic_is_conserved() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(2, BatchPolicy::NoLockstep);
+    let toks = prompt(32);
+    let chunks = 4usize;
+    let traffic = |chunk: Option<usize>| {
+        // NvLink everywhere so bytes are counted (SharedLocal counts
+        // messages only)
+        let mut b = dep.session().link(LinkKind::NvLink);
+        if let Some(c) = chunk {
+            b = b.prefill_chunk(c);
+        }
+        let mut sess = b.build().unwrap();
+        if let Some(c) = chunk {
+            sess.prefill_pipelined(&toks, c).unwrap();
+        } else {
+            sess.prefill(&toks).unwrap();
+        }
+        let t = sess.core.virt.link_traffic();
+        let msgs: u64 = t.iter().map(|(m, _)| m).sum();
+        let bytes: u64 = t.iter().map(|(_, b)| b).sum();
+        (msgs, bytes)
+    };
+    let (seq_msgs, seq_bytes) = traffic(None);
+    let (pipe_msgs, pipe_bytes) = traffic(Some(32 / chunks));
+    assert_eq!(pipe_bytes, seq_bytes,
+               "chunking must move the same total bytes");
+    assert_eq!(pipe_msgs, seq_msgs * chunks as u64,
+               "each micro-batch performs the full walk's messages");
+    dep.shutdown();
+}
+
+/// A shard failing mid-pipeline must surface a typed `ExecutorFailed`
+/// on collect without deadlocking the reorder buffer (the remaining
+/// in-flight receivers unwind with the driver).
+#[test]
+fn failing_shard_mid_pipeline_surfaces_typed_error() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(2, BatchPolicy::NoLockstep);
+    // Fake shard 1: answers every request with a typed failure, like a
+    // shard whose engine rejects every flush.
+    let (fake_tx, fake_rx) = channel();
+    std::thread::spawn(move || {
+        while let Ok(msg) = fake_rx.recv() {
+            if let ExecMsg::Request(req) = msg {
+                let _ = req.resp.send(LayerResponse {
+                    y: Err("injected shard fault".into()),
+                    queue_wait_secs: 0.0,
+                    batch_clients: 1,
+                });
+            }
+        }
+    });
+    let mut sess = dep.session().build().unwrap();
+    // Reroute the session: blocks 0-1 to the real shard 0, blocks 2-3
+    // (and the LM head) to the failing fake.
+    let table = RoutingTable::new(
+        LayerAssignment::contiguous(SYM_TINY.n_layers, 2),
+        vec![
+            ShardRoute::new(dep.executor.sender_for(LayerId::Qkv(0)),
+                            LinkKind::SharedLocal),
+            ShardRoute::new(fake_tx, LinkKind::SharedLocal),
+        ],
+    );
+    sess.core.virt = Arc::new(VirtLayerCtx::new(997, table));
+
+    let (done_tx, done_rx) = channel();
+    let handle = std::thread::spawn(move || {
+        let result = sess.prefill_pipelined(&prompt(16), 4);
+        let _ = done_tx.send(());
+        result
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("pipelined prefill deadlocked on a failing shard");
+    let err = handle.join().unwrap().unwrap_err();
+    match err {
+        SymbiosisError::ExecutorFailed { layer, message } => {
+            assert_eq!(message, "injected shard fault");
+            assert!(!layer.is_empty());
+        }
+        other => panic!("expected ExecutorFailed, got {other}"),
+    }
+    dep.shutdown();
+}
+
+/// Satellite: `BatchPolicy::LockstepFleet` counts registrations at the
+/// fleet, not the shard — the shared barrier sees every client once,
+/// and concurrent generation under the global barrier still matches
+/// the unbatched outputs.
+#[test]
+fn fleet_lockstep_counts_globally_and_preserves_outputs() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // golden from an uncontended run
+    let golden = generate_on(2, None, None);
+
+    let dep = deploy(2, BatchPolicy::LockstepFleet);
+    let a = dep.session().build().unwrap();
+    let b = dep.session().build().unwrap();
+    // clients bump the fleet count synchronously at registration, so
+    // the global barrier sees both the moment `build` returns
+    assert_eq!(dep.executor.barrier().registered(), 2,
+               "fleet barrier must count each client exactly once");
+    let run = |mut sess: symbiosis::coordinator::InferenceSession| {
+        std::thread::spawn(move || {
+            sess.generate(&prompt(16), &GenerationConfig::greedy(10))
+                .unwrap()
+        })
+    };
+    let (ha, hb) = (run(a), run(b));
+    let (out_a, out_b) = (ha.join().unwrap(), hb.join().unwrap());
+    assert_eq!(out_a, golden, "client A diverged under LockstepFleet");
+    assert_eq!(out_b, golden, "client B diverged under LockstepFleet");
+    // session drop deregisters synchronously (the threads dropped the
+    // sessions before join returned)
+    assert_eq!(dep.executor.barrier().registered(), 0,
+               "fleet barrier leaked registrations");
+    let stats = dep.shutdown();
+    assert!(stats.n_flushes > 0);
+}
+
+/// Satellite: session KV bytes charge the client device's ledger, so an
+/// over-committed deployment fails a request with a typed `KvCacheOom`
+/// — and freeing one tenant's cache lets the next one in.
+#[test]
+fn over_committed_kv_cache_fails_typed_then_recovers() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(1, BatchPolicy::NoLockstep);
+    // A 64-token sym-tiny cache is 2*4 layers*4 heads*64*16*4 B =
+    // 128 KiB; size the client device to hold exactly one of them.
+    let one_cache: u64 = 2 * 4 * 4 * 64 * 16 * 4;
+    dep.client_device.lock().unwrap().ledger =
+        MemoryLedger::new(one_cache + 1024);
+
+    let mut a = dep.session().build().unwrap();
+    a.prefill(&prompt(64)).unwrap(); // fits alone
+
+    let mut b = dep.session().build().unwrap();
+    let err = b.prefill(&prompt(64)).unwrap_err();
+    match err {
+        SymbiosisError::KvCacheOom { need_bytes, used_bytes,
+                                     capacity_bytes } => {
+            assert_eq!(capacity_bytes, one_cache + 1024);
+            // the blame lands on the co-tenant: B's cache alone fits
+            assert_eq!(used_bytes, one_cache);
+            assert_eq!(need_bytes, one_cache);
+            assert!(need_bytes <= capacity_bytes);
+        }
+        other => panic!("expected KvCacheOom, got {other}"),
+    }
+    // the failed growth charged nothing and left B usable: once A
+    // leaves, the same request fits
+    drop(a);
+    b.prefill(&prompt(64))
+        .expect("B must fit after A released its cache");
+    drop(b);
+    dep.shutdown();
+}
+
+/// Satellite: the host device is a separate pool — host-offloaded
+/// caches do not compete with device-resident ones.
+#[test]
+fn host_offloaded_cache_charges_the_host_ledger() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use symbiosis::coordinator::KvPlacement;
+    let dep = deploy(1, BatchPolicy::NoLockstep);
+    // client device too small for any cache; host is huge
+    dep.client_device.lock().unwrap().ledger = MemoryLedger::new(1024);
+    let mut sess = dep
+        .session()
+        .kv(KvPlacement::Host)
+        .build()
+        .unwrap();
+    sess.prefill(&prompt(64))
+        .expect("host-offloaded cache must not charge the client device");
+    let host_used = dep.host_device.lock().unwrap().ledger.used();
+    assert!(host_used > 0, "host ledger uncharged");
+    assert_eq!(dep.client_device.lock().unwrap().ledger.used(), 0);
+    drop(sess);
+    assert_eq!(dep.host_device.lock().unwrap().ledger.used(), 0,
+               "drop must release the host charge");
+    dep.shutdown();
+}
+
+/// The per-request `GenerationConfig::with_prefill_chunk` overrides the
+/// session default and still matches sequential outputs.
+#[test]
+fn per_request_prefill_chunk_override_matches() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let golden = generate_on(2, None, None);
+    let dep = deploy(2, BatchPolicy::NoLockstep);
+    let mut sess = dep.session().build().unwrap(); // no session default
+    let cfg = GenerationConfig::greedy(10).with_prefill_chunk(4);
+    let out = sess.generate(&prompt(16), &cfg).unwrap();
+    assert_eq!(out, golden, "per-request chunk override diverged");
+    drop(sess);
+    dep.shutdown();
+}
+
+/// Verify the tiny-device constant used by the OOM test stays in sync
+/// with the config (sanity that runs without artifacts).
+#[test]
+fn kv_oom_test_constant_matches_config() {
+    let bh = SYM_TINY.n_heads; // batch = 1
+    let bytes = 2 * SYM_TINY.n_layers * bh * 64 * SYM_TINY.d_head() * 4;
+    assert_eq!(bytes as u64, 2 * 4 * 4 * 64 * 16 * 4);
+    assert!(DeviceKind::GpuA100_80.capacity() > bytes as u64);
+}

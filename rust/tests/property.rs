@@ -127,7 +127,7 @@ fn prop_kv_cache_matches_naive_reference() {
             for layer in 0..n_layers {
                 let k = rng.tensor(&[bh, t_new, h]);
                 let v = rng.tensor(&[bh, t_new, h]);
-                cache.append(layer, &k, &v);
+                cache.append(layer, &k, &v).unwrap();
                 for b in 0..bh {
                     for t in 0..t_new {
                         let off = (b * t_new + t) * h;
