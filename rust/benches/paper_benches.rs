@@ -92,6 +92,7 @@ fn main() {
     if run("dispatch") { dispatch_overhead(); }
     if run("fleet") { fleet_overhead(); }
     if run("pipeline") { pipeline_prefill(quick); }
+    if run("chaos") { chaos_recovery(quick); }
     println!("\nall requested bench sections complete.");
 }
 
@@ -1315,4 +1316,156 @@ fn pipeline_prefill(quick: bool) {
               column shows the pipeline's bookkeeping cost instead, \
               while the occupancy column still shows every shard \
               staying busy.");
+}
+
+// =========================================================================
+// Chaos recovery — the fault-tolerance economics of the supervised
+// fleet: how fast does the watchdog turn a crashed shard back into a
+// routable one (kill -> epoch bump), and how long until a client
+// actually gets an answer again (kill -> first successful call, riding
+// the bounded-retry budget across the respawn)?  Output equality vs the
+// pre-crash golden is asserted every round — a recovery that changes
+// tokens is a failure, not a slow success.  Emits BENCH_chaos.json
+// (CI's chaos job uploads it); when artifacts are absent a minimal
+// skipped document is still written so the artifact upload is
+// deterministic.
+// =========================================================================
+fn chaos_recovery(quick: bool) {
+    use std::time::Duration;
+    use symbiosis::bench_harness::JsonValue;
+    use symbiosis::coordinator::fleet::WATCHDOG_INTERVAL;
+    use symbiosis::coordinator::proto::ExecMsg;
+    use symbiosis::coordinator::{LayerId, RetryPolicy};
+
+    println!("\n== Chaos recovery: kill -> respawn detection and kill -> \
+              first successful call (real run, sym-tiny{}) ==",
+             if quick { ", quick/check mode" } else { "" });
+    let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("BENCH_chaos.json");
+    if !have_artifacts() {
+        let doc = JsonValue::obj(vec![
+            ("name", JsonValue::Str("chaos".into())),
+            ("skipped", JsonValue::Bool(true)),
+            ("reason", JsonValue::Str("artifacts not built".into())),
+        ]);
+        match std::fs::write(&out_path, doc.render()) {
+            Ok(()) => println!("skipped: artifacts not built (wrote {})",
+                               out_path.display()),
+            Err(e) => println!("skipped: artifacts not built; could not \
+                                write {}: {e}", out_path.display()),
+        }
+        return;
+    }
+    let iters = if quick { 1 } else { 3 };
+    let prompt: Vec<i32> =
+        (0..24).map(|i| (i * 5 + 1) as i32 % 256).collect();
+    let mut rows = Vec::new();
+    println!("{:>7} {:>6} {:>13} {:>13}", "shards", "kills",
+             "respawn (ms)", "recover (ms)");
+    for shards in [1usize, 2, 4] {
+        let placement = if shards == 1 {
+            Placement::Local
+        } else {
+            Placement::ShardedLocal { shards }
+        };
+        let dep = Deployment::start_with_engine(
+            engine(), &SYM_TINY, &artifact_dir(),
+            BatchPolicy::NoLockstep, placement)
+            .unwrap();
+        let mut sess = dep
+            .session()
+            .request_timeout(Duration::from_millis(250))
+            .retry(RetryPolicy::retries(6)
+                .with_backoff(Duration::from_millis(10)))
+            .build()
+            .unwrap();
+        let golden = sess
+            .generate(&prompt, &GenerationConfig::greedy(4))
+            .unwrap();
+        // Kill the LM-head owner: the last shard every walk must reach.
+        let target = shards - 1;
+        let wait_respawn = |since: u64| {
+            let t0 = Instant::now();
+            while !(dep.executor.is_alive(target)
+                    && dep.executor.route_epoch(target) > since) {
+                assert!(t0.elapsed() < Duration::from_secs(10),
+                        "watchdog never recovered shard {target}");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            t0.elapsed().as_secs_f64() * 1e3
+        };
+        let mut respawn_ms = Vec::with_capacity(iters);
+        let mut recover_ms = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            // (a) kill -> epoch bump: pure supervision latency — the
+            // watchdog notices the dead join handle, rebuilds the shard
+            // on its retained seed, swaps the endpoint.
+            let epoch = dep.executor.route_epoch(target);
+            dep.executor
+                .sender_for(LayerId::LmHead)
+                .send(ExecMsg::Crash)
+                .unwrap();
+            respawn_ms.push(wait_respawn(epoch));
+            // (b) kill -> first successful call: the *client* discovers
+            // the death (disconnected response channel) and rides its
+            // retry budget across the respawn.
+            let epoch = dep.executor.route_epoch(target);
+            dep.executor
+                .sender_for(LayerId::LmHead)
+                .send(ExecMsg::Crash)
+                .unwrap();
+            let t1 = Instant::now();
+            sess.reset().unwrap();
+            let out = sess
+                .generate(&prompt, &GenerationConfig::greedy(4))
+                .unwrap();
+            recover_ms.push(t1.elapsed().as_secs_f64() * 1e3);
+            assert_eq!(out, golden,
+                       "post-recovery output diverged at \
+                        shards={shards}");
+            // let the second kill's respawn land before the next round
+            wait_respawn(epoch);
+        }
+        let kills = 2 * iters as u64;
+        assert!(dep.executor.respawns() >= kills,
+                "fleet lost track of respawns");
+        drop(sess);
+        dep.shutdown();
+        let mean =
+            |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        let (r_mean, c_mean) = (mean(&respawn_ms), mean(&recover_ms));
+        println!("{shards:>7} {kills:>6} {r_mean:>13.1} {c_mean:>13.1}");
+        rows.push(JsonValue::obj(vec![
+            ("shards", JsonValue::Int(shards as i64)),
+            ("kills", JsonValue::Int(kills as i64)),
+            ("respawn_ms_mean", JsonValue::Num(r_mean)),
+            ("recover_ms_mean", JsonValue::Num(c_mean)),
+            // asserted above — a diverging recovery panics the bench
+            ("outputs_equal", JsonValue::Bool(true)),
+        ]));
+    }
+    let doc = JsonValue::obj(vec![
+        ("name", JsonValue::Str("chaos".into())),
+        ("model", JsonValue::Str("sym-tiny".into())),
+        ("quick", JsonValue::Bool(quick)),
+        ("watchdog_interval_ms",
+         JsonValue::Num(WATCHDOG_INTERVAL.as_secs_f64() * 1e3)),
+        ("rows", JsonValue::Arr(rows)),
+        ("acceptance", JsonValue::obj(vec![
+            ("topologies", JsonValue::Int(3)),
+            ("all_recoveries_token_identical", JsonValue::Bool(true)),
+            ("respawn_bound_secs", JsonValue::Num(10.0)),
+        ])),
+    ]);
+    match std::fs::write(&out_path, doc.render()) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => println!("could not write {}: {e}",
+                           out_path.display()),
+    }
+    println!("recovery is watchdog-bound (~{} ms poll interval), not \
+              retry-bound: the client's backoff ladder only needs to \
+              outlast one respawn, and every post-kill generation is \
+              token-identical to the pre-kill golden ✓.",
+             WATCHDOG_INTERVAL.as_millis());
 }

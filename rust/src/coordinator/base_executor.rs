@@ -79,6 +79,7 @@ struct StatsInner {
     noise_registrations: u64,
     busy_secs: f64,
     idle_secs: f64,
+    heartbeats: u64,
 }
 
 impl StatsInner {
@@ -106,6 +107,7 @@ impl StatsInner {
             noise_registrations: self.noise_registrations,
             busy_secs: self.busy_secs,
             idle_secs: self.idle_secs,
+            heartbeats: self.heartbeats,
         }
     }
 }
@@ -113,11 +115,11 @@ impl StatsInner {
 /// Snapshot of one shard's statistics.  `flushes` holds at most
 /// [`FLUSH_RECORD_CAP`] *recent* records; the aggregate accessors are
 /// exact over the shard's whole lifetime.  Fleet-level aggregation
-/// lives in [`crate::coordinator::fleet::FleetStats`], which merges one
-/// of these per shard — note the *merged* view's `flushes` concatenates
-/// the per-shard rings in shard order (up to `shards x CAP` records,
-/// not globally time-ordered); use `FleetStats::per_shard` when ring
-/// recency matters.
+/// lives in [`crate::coordinator::fleet::FleetStats`], which folds one
+/// of these per shard via [`ExecutorStats::absorb`] — the merged view's
+/// `flushes` ring stays bounded at `FLUSH_RECORD_CAP` (later shards'
+/// records win; not globally time-ordered), so use
+/// `FleetStats::per_shard` when ring recency matters.
 #[derive(Debug, Default, Clone)]
 pub struct ExecutorStats {
     /// Most recent flush records (bounded ring).
@@ -137,6 +139,11 @@ pub struct ExecutorStats {
     /// pipeline bench reports it to show micro-batching keeping every
     /// stage fed.
     pub idle_secs: f64,
+    /// Run-loop iterations completed — the liveness signal the fleet
+    /// watchdog reads: a shard whose heartbeat stops advancing while
+    /// its thread is still joined is stalled, not idle (an idle shard
+    /// heartbeats every channel-timeout tick).
+    pub heartbeats: u64,
 }
 
 impl ExecutorStats {
@@ -176,6 +183,28 @@ impl ExecutorStats {
         } else {
             self.busy_secs / total
         }
+    }
+
+    /// Fold a retired executor generation's statistics into this
+    /// snapshot: aggregates sum exactly; the bounded flush ring keeps
+    /// the *most recent* [`FLUSH_RECORD_CAP`] records across both
+    /// generations (`other` is the newer one).
+    pub fn absorb(&mut self, other: &ExecutorStats) {
+        self.flushes.extend(other.flushes.iter().cloned());
+        if self.flushes.len() > FLUSH_RECORD_CAP {
+            let drop_n = self.flushes.len() - FLUSH_RECORD_CAP;
+            self.flushes.drain(..drop_n);
+        }
+        self.n_flushes += other.n_flushes;
+        self.sum_batch_clients += other.sum_batch_clients;
+        self.sum_wait_secs += other.sum_wait_secs;
+        self.real_tokens += other.real_tokens;
+        self.bucket_tokens += other.bucket_tokens;
+        self.requests_served += other.requests_served;
+        self.noise_registrations += other.noise_registrations;
+        self.busy_secs += other.busy_secs;
+        self.idle_secs += other.idle_secs;
+        self.heartbeats += other.heartbeats;
     }
 }
 
@@ -251,6 +280,21 @@ impl ShardExecutor {
     pub fn spawn(engine: Arc<Engine>, weights: ShardWeights,
                  policy: BatchPolicy, device: Device,
                  barrier: Arc<FleetBarrier>) -> ShardExecutor {
+        Self::spawn_with_registered(engine, weights, policy, device,
+                                    barrier, 0)
+    }
+
+    /// [`Self::spawn`] with a non-zero initial shard-local registration
+    /// count — the respawn path: clients registered with the *previous*
+    /// executor generation never re-send `Register`, so the replacement
+    /// seeds its local count from the fleet barrier instead of starting
+    /// at zero (which would break per-shard `Lockstep` flushing).
+    pub fn spawn_with_registered(engine: Arc<Engine>,
+                                 weights: ShardWeights,
+                                 policy: BatchPolicy, device: Device,
+                                 barrier: Arc<FleetBarrier>,
+                                 initial_registered: usize)
+                                 -> ShardExecutor {
         let shard = weights.shard;
         let (tx, rx) = channel();
         let stats = Arc::new(Mutex::new(StatsInner::default()));
@@ -258,7 +302,8 @@ impl ShardExecutor {
         let handle = std::thread::Builder::new()
             .name(format!("shard-exec-{shard}"))
             .spawn(move || {
-                run_loop(engine, weights, policy, rx, stats2, barrier)
+                run_loop(engine, weights, policy, rx, stats2, barrier,
+                         initial_registered)
             })
             .expect("spawn shard executor");
         ShardExecutor {
@@ -281,7 +326,18 @@ impl ShardExecutor {
 
     /// Snapshot of this shard's accumulated statistics.
     pub fn stats(&self) -> ExecutorStats {
-        self.stats.lock().unwrap().snapshot()
+        self.stats
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .snapshot()
+    }
+
+    /// Whether the executor thread is still running.  `false` means the
+    /// thread returned — crashed (see [`ExecMsg::Crash`]), panicked, or
+    /// shut down — and the shard needs a respawn to serve again.  The
+    /// fleet watchdog polls this.
+    pub fn is_alive(&self) -> bool {
+        self.handle.as_ref().is_some_and(|h| !h.is_finished())
     }
 
     /// Bytes currently charged to this shard's device ledger (the
@@ -301,7 +357,10 @@ impl ShardExecutor {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
-        self.stats.lock().unwrap().snapshot()
+        self.stats
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .snapshot()
     }
 }
 
@@ -316,11 +375,15 @@ impl Drop for ShardExecutor {
 
 fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
             rx: Receiver<ExecMsg>, stats: Arc<Mutex<StatsInner>>,
-            barrier: Arc<FleetBarrier>) {
+            barrier: Arc<FleetBarrier>, initial_registered: usize) {
     let mut pending: HashMap<(LayerId, OpKind), Pending> = HashMap::new();
     let mut scratch: ScratchMap = HashMap::new();
-    let mut registered: usize = 0;
+    let mut registered: usize = initial_registered;
     loop {
+        // Liveness heartbeat: advances every iteration, including pure
+        // channel-timeout ticks — a stalled shard stops heartbeating,
+        // an idle one does not.
+        stats.lock().unwrap().heartbeats += 1;
         // Earliest deadline among pending batches bounds the wait.
         let now = Instant::now();
         let next_deadline = pending.values().map(|p| p.deadline).min();
@@ -382,6 +445,11 @@ fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
                             &mut scratch, req);
                 }
                 ExecMsg::Shutdown => shutdown = true,
+                // Simulated hard crash: return *without* draining —
+                // queued requests drop their response senders exactly
+                // as a panicking thread would drop them.  The fleet
+                // watchdog sees the finished join handle and respawns.
+                ExecMsg::Crash => return,
             }
         }
         // Flush pass: barrier-ready or expired batches always go; once

@@ -59,7 +59,8 @@ use crate::coordinator::model_state::ClientWeights;
 use crate::coordinator::optimizer::Adam;
 use crate::coordinator::privacy::PrivacyCtx;
 use crate::coordinator::proto::{LayerId, Urgency};
-use crate::coordinator::virt_layer::{PendingLayer, VirtLayerCtx};
+use crate::coordinator::virt_layer::{PendingLayer, RetryPolicy,
+                                     VirtLayerCtx};
 use crate::coordinator::Deployment;
 use crate::device::Device;
 use crate::error::{SymResult, SymbiosisError};
@@ -1418,6 +1419,8 @@ pub struct SessionBuilder<'d> {
     urgency: UrgencyPolicy,
     privacy: Option<PrivacyCtx>,
     prefill_chunk: Option<usize>,
+    request_timeout: Option<std::time::Duration>,
+    retry: Option<RetryPolicy>,
 }
 
 impl<'d> SessionBuilder<'d> {
@@ -1432,7 +1435,36 @@ impl<'d> SessionBuilder<'d> {
             urgency: UrgencyPolicy::default(),
             privacy: None,
             prefill_chunk: None,
+            request_timeout: None,
+            retry: None,
         }
+    }
+
+    /// Deadline on every layer collect (default: wait forever).  A
+    /// shard that does not answer within the window fails the call with
+    /// a typed [`SymbiosisError::DeadlineExceeded`] naming the layer
+    /// and shard — frozen-base ops are pure, so the request is safe to
+    /// retry (see [`SessionBuilder::retry`]).
+    ///
+    /// [`SymbiosisError::DeadlineExceeded`]:
+    /// crate::error::SymbiosisError::DeadlineExceeded
+    pub fn request_timeout(mut self, timeout: std::time::Duration)
+                           -> Self {
+        self.request_timeout = Some(timeout);
+        self
+    }
+
+    /// Bounded retry of failed/timed-out layer calls (default: none).
+    /// Each attempt re-dispatches the retained request against the
+    /// shard's *current* endpoint — so a respawned shard serves the
+    /// retry — under linear backoff; exhaustion surfaces as a typed
+    /// [`SymbiosisError::ShardUnavailable`].
+    ///
+    /// [`SymbiosisError::ShardUnavailable`]:
+    /// crate::error::SymbiosisError::ShardUnavailable
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = Some(policy);
+        self
     }
 
     /// This tenant's PEFT adapter (default: bare base model).
@@ -1497,7 +1529,8 @@ impl<'d> SessionBuilder<'d> {
 
     pub fn build(self) -> SymResult<InferenceSession> {
         let core = self.dep.build_core(self.adapter, self.link,
-                                       self.realize_delays, self.privacy);
+                                       self.realize_delays, self.privacy,
+                                       self.request_timeout, self.retry);
         let mut sess =
             InferenceSession::new(core, self.batch, self.kv_placement)?;
         sess.set_urgency(self.urgency);
@@ -1526,6 +1559,8 @@ pub struct TrainerBuilder<'d> {
     link: Option<LinkKind>,
     realize_delays: bool,
     lr: Option<f32>,
+    request_timeout: Option<std::time::Duration>,
+    retry: Option<RetryPolicy>,
 }
 
 impl<'d> TrainerBuilder<'d> {
@@ -1537,7 +1572,25 @@ impl<'d> TrainerBuilder<'d> {
             link: None,
             realize_delays: false,
             lr: None,
+            request_timeout: None,
+            retry: None,
         }
+    }
+
+    /// Deadline on every layer collect — forward *and* backward halves
+    /// of a training step (see [`SessionBuilder::request_timeout`]).
+    pub fn request_timeout(mut self, timeout: std::time::Duration)
+                           -> Self {
+        self.request_timeout = Some(timeout);
+        self
+    }
+
+    /// Bounded retry of failed/timed-out layer calls (see
+    /// [`SessionBuilder::retry`]); safe because the frozen-base ops a
+    /// trainer offloads (including `dX = dY·Wᵀ`) are pure.
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = Some(policy);
+        self
     }
 
     /// The adapter to fine-tune (required; must be trainable).
@@ -1570,7 +1623,8 @@ impl<'d> TrainerBuilder<'d> {
     pub fn build(self) -> SymResult<Trainer> {
         let core =
             self.dep.build_core(self.adapter, self.link,
-                                self.realize_delays, None);
+                                self.realize_delays, None,
+                                self.request_timeout, self.retry);
         let mut trainer = Trainer::new(core, self.batch)?;
         if let Some(lr) = self.lr {
             trainer.optimizer.lr = lr;

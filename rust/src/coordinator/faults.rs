@@ -1,0 +1,448 @@
+//! Deterministic fault injection for the executor fleet.
+//!
+//! The fleet's failure story ([deadlines + bounded retry in
+//! `virt_layer`](crate::coordinator::virt_layer), [supervision +
+//! respawn in `fleet`](crate::coordinator::fleet)) needs faults that
+//! are *drivable*: reproducible across runs, precise about which shard
+//! fails, when, and how.  A [`FaultPlan`] is that driver — a seeded,
+//! declarative set of [`FaultRule`]s that wraps a shard's
+//! [`ShardEndpoint`] with an interposer thread sitting between the
+//! client and the executor.  The interposer can
+//!
+//! * **drop** a request on the floor (lost message),
+//! * **stall** it indefinitely (hung shard — the client's deadline is
+//!   the only way out),
+//! * answer with an **error** (failed flush),
+//! * **delay** the response (slow shard / congested link),
+//! * **kill** the executor thread ([`ExecMsg::Crash`] — the watchdog
+//!   observes the dead join handle and respawns).
+//!
+//! Determinism: probabilistic rules draw from a splitmix64 stream
+//! seeded with `seed ^ hash(shard)` (the same no-`rand` idiom as
+//! `privacy::NoiseGen`), and the interposer's step counter counts
+//! *requests through this wrapped endpoint*.  Plans injected via
+//! [`Deployment::inject_faults`](crate::coordinator::Deployment) wrap
+//! per *client* (each session/trainer's routing table gets its own
+//! interposer), so step N means "the N-th request this client sends to
+//! that shard" — reproducible regardless of cross-client interleaving.
+//!
+//! Non-request control traffic (register/deregister, noise
+//! registration, shutdown) always passes through unharmed: faults
+//! target the serving path, not the bookkeeping.  When the interposer
+//! exits (its sender side dropped), any stalled requests are released
+//! by dropping them — blocked clients observe a disconnect, not a
+//! leak.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::proto::{ExecMsg, LayerRequest};
+use crate::coordinator::virt_layer::ShardEndpoint;
+
+/// What the interposer does to a matched request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultAction {
+    /// Silently discard the request (lost message).  The client's
+    /// response receiver stays open forever — only a deadline
+    /// surfaces it.
+    Drop,
+    /// Hold the request without answering or forwarding: the shard
+    /// appears hung.  Held requests release (as disconnects) when the
+    /// interposer exits.
+    Stall,
+    /// Answer the request with this executor-error message without
+    /// involving the shard (a failed flush).
+    ErrorResponse(String),
+    /// Forward the request, then delay its response by this much.
+    Delay(Duration),
+    /// Send [`ExecMsg::Crash`] to the underlying executor and discard
+    /// the request: the shard thread dies mid-service, exactly as a
+    /// panic would kill it.
+    KillShard,
+}
+
+/// One matching rule: *which shard*, *what*, *from when*, *how often*.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    pub shard: usize,
+    pub action: FaultAction,
+    /// First request step (1-based, counted per wrapped endpoint) at
+    /// which this rule can fire.
+    pub from_step: u64,
+    /// How many times the rule fires before retiring (`None` =
+    /// unlimited — e.g. a permanent stall).
+    pub count: Option<u64>,
+    /// Probability of firing per candidate request (`1.0` = always).
+    pub probability: f64,
+}
+
+impl FaultRule {
+    /// A rule that always fires, from the first request, forever.
+    pub fn on(shard: usize, action: FaultAction) -> Self {
+        FaultRule {
+            shard,
+            action,
+            from_step: 1,
+            count: None,
+            probability: 1.0,
+        }
+    }
+
+    /// Fire no earlier than the `step`-th request (1-based).
+    pub fn from_step(mut self, step: u64) -> Self {
+        self.from_step = step.max(1);
+        self
+    }
+
+    /// Retire after firing `n` times.
+    pub fn times(mut self, n: u64) -> Self {
+        self.count = Some(n);
+        self
+    }
+
+    /// Fire with probability `p` per candidate request.
+    pub fn with_probability(mut self, p: f64) -> Self {
+        self.probability = p.clamp(0.0, 1.0);
+        self
+    }
+}
+
+/// A deterministic, seeded fault schedule over the fleet.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, rules: Vec::new() }
+    }
+
+    pub fn rule(mut self, rule: FaultRule) -> Self {
+        self.rules.push(rule);
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+
+    /// Wrap a raw executor channel (single-shard tests/tools): returns
+    /// a sender whose shard-`shard` rules interpose on the way to `tx`.
+    pub fn wrap(&self, shard: usize, tx: Sender<ExecMsg>)
+                -> Sender<ExecMsg> {
+        self.wrap_endpoint(shard, Arc::new(ShardEndpoint::new(tx)))
+            .sender()
+    }
+
+    /// Wrap a shard's endpoint: requests route through an interposer
+    /// thread applying this plan's rules for `shard`; everything else
+    /// passes through.  Returns the inner endpoint unchanged when no
+    /// rule targets the shard — fault-free shards keep the direct
+    /// (respawn-transparent) path with zero overhead.
+    ///
+    /// The interposer resolves `inner.sender()` per message, so a fleet
+    /// respawn swapping the inner endpoint redirects faulted traffic
+    /// too.  The *wrapped* endpoint mirrors no epoch; read recovery
+    /// state from the fleet's own endpoints.
+    pub fn wrap_endpoint(&self, shard: usize,
+                         inner: Arc<ShardEndpoint>)
+                         -> Arc<ShardEndpoint> {
+        let rules: Vec<RuleState> = self
+            .rules
+            .iter()
+            .filter(|r| r.shard == shard)
+            .map(|r| RuleState { rule: r.clone(), remaining: r.count })
+            .collect();
+        if rules.is_empty() {
+            return inner;
+        }
+        let (tx, rx) = channel::<ExecMsg>();
+        let seed = self
+            .seed
+            .wrapping_add((shard as u64)
+                .wrapping_mul(0x9E3779B97F4A7C15));
+        std::thread::Builder::new()
+            .name(format!("fault-interposer-{shard}"))
+            .spawn(move || interpose(rx, inner, rules, seed))
+            .expect("spawn fault interposer");
+        Arc::new(ShardEndpoint::new(tx))
+    }
+}
+
+struct RuleState {
+    rule: FaultRule,
+    remaining: Option<u64>,
+}
+
+/// splitmix64 → U(0,1) — the same deterministic idiom as
+/// `privacy::NoiseGen`.
+struct FaultRng {
+    state: u64,
+}
+
+impl FaultRng {
+    fn next_unit(&mut self) -> f64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+fn interpose(rx: std::sync::mpsc::Receiver<ExecMsg>,
+             inner: Arc<ShardEndpoint>, mut rules: Vec<RuleState>,
+             seed: u64) {
+    let mut rng = FaultRng { state: seed };
+    let mut step: u64 = 0;
+    // Held requests of `Stall` rules: dropped (→ client-side
+    // disconnect) only when the interposer exits.
+    let mut stalled: Vec<LayerRequest> = Vec::new();
+    while let Ok(msg) = rx.recv() {
+        let mut req = match msg {
+            ExecMsg::Request(r) => r,
+            other => {
+                // Control traffic is never faulted.
+                let _ = inner.sender().send(other);
+                continue;
+            }
+        };
+        step += 1;
+        let action = rules.iter_mut().find_map(|rs| {
+            if step < rs.rule.from_step
+                || rs.remaining == Some(0)
+                || (rs.rule.probability < 1.0
+                    && rng.next_unit() >= rs.rule.probability)
+            {
+                return None;
+            }
+            if let Some(n) = &mut rs.remaining {
+                *n -= 1;
+            }
+            Some(rs.rule.action.clone())
+        });
+        match action {
+            None => {
+                let _ = inner.sender().send(ExecMsg::Request(req));
+            }
+            Some(FaultAction::Drop) => drop(req),
+            Some(FaultAction::Stall) => stalled.push(req),
+            Some(FaultAction::ErrorResponse(message)) => {
+                let _ = req.resp.send(
+                    crate::coordinator::proto::LayerResponse {
+                        y: Err(message),
+                        queue_wait_secs: 0.0,
+                        batch_clients: 1,
+                    },
+                );
+            }
+            Some(FaultAction::Delay(d)) => {
+                // Forward with a relay response channel; a side thread
+                // sleeps before releasing the real answer.
+                let (tx2, rx2) = channel();
+                let client_resp =
+                    std::mem::replace(&mut req.resp, tx2);
+                let _ = inner.sender().send(ExecMsg::Request(req));
+                std::thread::spawn(move || {
+                    if let Ok(resp) = rx2.recv() {
+                        std::thread::sleep(d);
+                        let _ = client_resp.send(resp);
+                    }
+                });
+            }
+            Some(FaultAction::KillShard) => {
+                let _ = inner.sender().send(ExecMsg::Crash);
+                drop(req);
+            }
+        }
+    }
+    drop(stalled);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::proto::{LayerId, LayerResponse, OpKind,
+                                    Urgency};
+    use crate::tensor::Tensor;
+    use std::sync::mpsc::Receiver;
+
+    fn request(resp: Sender<LayerResponse>) -> ExecMsg {
+        ExecMsg::Request(LayerRequest {
+            client_id: 0,
+            layer: LayerId::Qkv(0),
+            op: OpKind::Forward,
+            x: Tensor::zeros(&[1, 4]),
+            positions: None,
+            urgency: Urgency::Bulk,
+            resp,
+        })
+    }
+
+    /// Echo executor: answers every request with its own input.
+    fn echo_shard(rx: Receiver<ExecMsg>) -> std::thread::JoinHandle<u64> {
+        std::thread::spawn(move || {
+            let mut served = 0;
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    ExecMsg::Request(req) => {
+                        served += 1;
+                        let _ = req.resp.send(LayerResponse {
+                            y: Ok(req.x.clone()),
+                            queue_wait_secs: 0.0,
+                            batch_clients: 1,
+                        });
+                    }
+                    ExecMsg::Crash => return served,
+                    _ => {}
+                }
+            }
+            served
+        })
+    }
+
+    #[test]
+    fn rules_fire_at_their_step_and_retire_by_count() {
+        let (exec_tx, exec_rx) = std::sync::mpsc::channel();
+        let shard = echo_shard(exec_rx);
+        let plan = FaultPlan::new(7).rule(
+            FaultRule::on(0, FaultAction::ErrorResponse("boom".into()))
+                .from_step(2)
+                .times(2),
+        );
+        let tx = plan.wrap(0, exec_tx);
+        // steps 1..=5: ok, boom, boom, ok, ok
+        let mut outcomes = Vec::new();
+        for _ in 0..5 {
+            let (rtx, rrx) = std::sync::mpsc::channel();
+            tx.send(request(rtx)).unwrap();
+            outcomes.push(rrx.recv().unwrap().y.is_ok());
+        }
+        assert_eq!(outcomes, vec![true, false, false, true, true]);
+        drop(tx);
+        assert_eq!(shard.join().unwrap(), 3, "faulted steps must not \
+                                              reach the executor");
+    }
+
+    #[test]
+    fn drop_loses_the_request_without_disconnecting() {
+        let (exec_tx, exec_rx) = std::sync::mpsc::channel();
+        let _shard = echo_shard(exec_rx);
+        let plan = FaultPlan::new(1)
+            .rule(FaultRule::on(0, FaultAction::Drop).times(1));
+        let tx = plan.wrap(0, exec_tx);
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(request(rtx)).unwrap();
+        // the request is gone but nothing disconnected: only a timeout
+        // can see this (the client-side deadline's raison d'etre)
+        assert!(rrx.recv_timeout(Duration::from_millis(20)).is_err());
+        // the next request flows
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(request(rtx)).unwrap();
+        assert!(rrx
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .y
+            .is_ok());
+    }
+
+    #[test]
+    fn kill_shard_crashes_the_inner_executor() {
+        let (exec_tx, exec_rx) = std::sync::mpsc::channel();
+        let shard = echo_shard(exec_rx);
+        let plan = FaultPlan::new(3)
+            .rule(FaultRule::on(0, FaultAction::KillShard).from_step(3));
+        let tx = plan.wrap(0, exec_tx);
+        for _ in 0..2 {
+            let (rtx, rrx) = std::sync::mpsc::channel();
+            tx.send(request(rtx)).unwrap();
+            assert!(rrx.recv().unwrap().y.is_ok());
+        }
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(request(rtx)).unwrap();
+        // the executor saw Crash and returned after serving 2
+        assert_eq!(shard.join().unwrap(), 2);
+        // the killed step's request never got an answer
+        assert!(rrx.recv().is_err());
+    }
+
+    #[test]
+    fn stalled_requests_release_on_interposer_exit() {
+        let (exec_tx, exec_rx) = std::sync::mpsc::channel();
+        let _shard = echo_shard(exec_rx);
+        let plan =
+            FaultPlan::new(9).rule(FaultRule::on(0, FaultAction::Stall));
+        let tx = plan.wrap(0, exec_tx);
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(request(rtx)).unwrap();
+        assert!(rrx.recv_timeout(Duration::from_millis(20)).is_err(),
+                "stalled request must not answer");
+        drop(tx); // interposer exits, releasing the held request
+        assert!(rrx.recv().is_err(), "release is a disconnect");
+    }
+
+    #[test]
+    fn delay_defers_but_preserves_the_answer() {
+        let (exec_tx, exec_rx) = std::sync::mpsc::channel();
+        let _shard = echo_shard(exec_rx);
+        let plan = FaultPlan::new(5).rule(
+            FaultRule::on(0, FaultAction::Delay(
+                Duration::from_millis(30),
+            ))
+            .times(1),
+        );
+        let tx = plan.wrap(0, exec_tx);
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let t0 = std::time::Instant::now();
+        tx.send(request(rtx)).unwrap();
+        let resp = rrx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.y.is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn probabilistic_rules_are_seed_deterministic() {
+        let fire_pattern = |seed: u64| -> Vec<bool> {
+            let (exec_tx, exec_rx) = std::sync::mpsc::channel();
+            let _shard = echo_shard(exec_rx);
+            let plan = FaultPlan::new(seed).rule(
+                FaultRule::on(0, FaultAction::ErrorResponse("p".into()))
+                    .with_probability(0.5),
+            );
+            let tx = plan.wrap(0, exec_tx);
+            (0..32)
+                .map(|_| {
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    tx.send(request(rtx)).unwrap();
+                    rrx.recv().unwrap().y.is_err()
+                })
+                .collect()
+        };
+        let a = fire_pattern(42);
+        assert_eq!(a, fire_pattern(42), "same seed, same faults");
+        assert_ne!(a, fire_pattern(43), "different seed, different \
+                                         faults");
+        let fired = a.iter().filter(|&&b| b).count();
+        assert!(fired > 4 && fired < 28,
+                "p=0.5 should fire sometimes, not always ({fired}/32)");
+    }
+
+    #[test]
+    fn unmatched_shards_keep_the_direct_endpoint() {
+        let (exec_tx, _exec_rx) = std::sync::mpsc::channel();
+        let inner = Arc::new(ShardEndpoint::new(exec_tx));
+        let plan = FaultPlan::new(1)
+            .rule(FaultRule::on(3, FaultAction::Drop));
+        let wrapped = plan.wrap_endpoint(0, inner.clone());
+        assert!(Arc::ptr_eq(&inner, &wrapped),
+                "no rule for shard 0 → no interposer");
+    }
+}

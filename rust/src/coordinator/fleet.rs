@@ -12,33 +12,66 @@
 //!
 //! Clients never see the fleet directly: `Deployment::build_core` hands
 //! every client a [`RoutingTable`] that maps each `LayerId` to the
-//! owning shard's channel, with a per-shard [`Link`] charged per hop
-//! (co-located shard: `SharedLocal`; cross-shard: `NvLink` — see
-//! `Placement::shard_links`).  A fleet of one shard is exactly the old
-//! single `BaseExecutor`, with the same hot path.
+//! owning shard's [`ShardEndpoint`], with a per-shard
+//! [`Link`](crate::transport::Link) charged per hop (co-located shard:
+//! `SharedLocal`; cross-shard: `NvLink` — see `Placement::shard_links`).
+//! A fleet of one shard is exactly the old single `BaseExecutor`, with
+//! the same hot path.
+//!
+//! # Supervision and respawn
+//!
+//! The fleet is a *supervisor*, not just a spawner.  It retains each
+//! shard's respawn seed — the weight slice (zero-copy `Arc` views), the
+//! device class/capacity, the batch policy — and every client routes
+//! through a fleet-shared [`ShardEndpoint`] rather than a raw channel.
+//! [`ExecutorFleet::respawn_shard`] rebuilds a shard on a fresh device
+//! ledger (re-charged, so a respawn cannot silently over-commit), seeds
+//! the replacement's shard-local registration count from the fleet
+//! barrier (clients never re-send `Register`), swaps the endpoint
+//! sender under a bumped epoch — in-flight sessions migrate without
+//! rebuilding their tables — and folds the dead generation's statistics
+//! into a retired ledger so fleet stats stay exact across generations.
+//! Privacy-noise state needs no re-arming: noise pools live client-side
+//! and `n_eff = W·n` only depends on the frozen weights, which the
+//! respawned shard shares.  A default-on watchdog thread polls each
+//! executor's join handle (see `ExecutorStats::heartbeats` for the
+//! stall-detection signal) and respawns dead shards automatically —
+//! detection latency is bounded by [`WATCHDOG_INTERVAL`].
 //!
 //! [`FleetStats`] merges the per-shard [`ExecutorStats`] snapshots so
 //! Table-5 style metrics still come out of one call; it `Deref`s to the
 //! merged view, keeping existing consumers (`stats.n_flushes`,
 //! `stats.mean_batch_clients()`, …) source-compatible.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+// Fault-domain hot path: see `virt_layer` — locks recover from poison
+// explicitly, failures are typed.
+#![deny(clippy::unwrap_used)]
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::coordinator::base_executor::{ExecutorStats, ShardExecutor};
 use crate::coordinator::batching::BatchPolicy;
-use crate::coordinator::model_state::{self, BaseWeights};
+use crate::coordinator::faults::FaultPlan;
+use crate::coordinator::model_state::{self, BaseWeights, ShardWeights};
 use crate::coordinator::placement::Placement;
 use crate::coordinator::proto::{ExecMsg, LayerId};
 use crate::coordinator::sharding::LayerAssignment;
-use crate::coordinator::virt_layer::{RoutingTable, ShardRoute};
-use crate::device::Device;
+use crate::coordinator::virt_layer::{RoutingTable, ShardEndpoint,
+                                     ShardRoute};
+use crate::device::{Device, DeviceKind, MemoryLedger};
 use crate::error::SymbiosisError;
 use crate::runtime::Engine;
 use crate::transport::LinkKind;
+
+/// How often the fleet watchdog polls shard liveness — the upper bound
+/// on crash-detection latency before a respawn begins.
+pub const WATCHDOG_INTERVAL: Duration = Duration::from_millis(15);
 
 /// Fleet-global lockstep barrier state: the one registration count all
 /// shards of a fleet share (`Arc`'d into every shard thread).  Clients
@@ -48,7 +81,8 @@ use crate::transport::LinkKind;
 /// requests while the global count still excludes that client;
 /// `BatchPolicy::LockstepFleet` barriers read it instead of the
 /// shard-local count, reproducing mLoRA's global lockstep at
-/// shards > 1 (paper Tables 4/5).
+/// shards > 1 (paper Tables 4/5).  It is also the respawn path's source
+/// of truth for a replacement executor's initial shard-local count.
 #[derive(Debug, Default)]
 pub struct FleetBarrier {
     registered: AtomicUsize,
@@ -74,8 +108,10 @@ impl FleetBarrier {
 }
 
 /// Fleet-level aggregation of per-shard [`ExecutorStats`].  Derefs to
-/// the merged snapshot (sums are exact; `flushes` concatenates the
-/// shards' bounded recent rings in shard order), with the per-shard
+/// the merged snapshot (sums are exact; `flushes` keeps the most recent
+/// records across the shards' bounded rings, itself capped at
+/// [`crate::coordinator::base_executor::FLUSH_RECORD_CAP`] so stats
+/// memory cannot grow with shard count or uptime), with the per-shard
 /// detail kept alongside for placement-style breakdowns.
 #[derive(Debug, Default, Clone)]
 pub struct FleetStats {
@@ -88,16 +124,9 @@ impl FleetStats {
     pub fn merge(per_shard: Vec<ExecutorStats>) -> Self {
         let mut merged = ExecutorStats::default();
         for s in &per_shard {
-            merged.flushes.extend(s.flushes.iter().cloned());
-            merged.n_flushes += s.n_flushes;
-            merged.sum_batch_clients += s.sum_batch_clients;
-            merged.sum_wait_secs += s.sum_wait_secs;
-            merged.real_tokens += s.real_tokens;
-            merged.bucket_tokens += s.bucket_tokens;
-            merged.requests_served += s.requests_served;
-            merged.noise_registrations += s.noise_registrations;
-            merged.busy_secs += s.busy_secs;
-            merged.idle_secs += s.idle_secs;
+            // `absorb` sums the exact aggregates and keeps the merged
+            // flush ring bounded at FLUSH_RECORD_CAP (newest win).
+            merged.absorb(s);
         }
         FleetStats { merged, per_shard }
     }
@@ -142,11 +171,123 @@ pub fn charge_shard(device: &mut Device, shard: usize, resident: u64)
     })
 }
 
-/// A running pool of shard executors covering the whole base model.
-pub struct ExecutorFleet {
-    shards: Vec<ShardExecutor>,
-    assign: LayerAssignment,
+/// Everything needed to rebuild one shard from scratch: the zero-copy
+/// weight slice plus the device identity its replacement must be
+/// charged against.
+struct RespawnSeed {
+    weights: ShardWeights,
+    device_name: String,
+    device_kind: DeviceKind,
+    device_capacity: u64,
+}
+
+impl RespawnSeed {
+    /// Rebuild the shard's device and re-run the OOM-enforced charge.
+    fn build_device(&self, shard: usize) -> Result<Device> {
+        let mut device = Device::new(&self.device_name, self.device_kind);
+        device.ledger = MemoryLedger::new(self.device_capacity);
+        charge_shard(&mut device, shard, self.weights.param_bytes())?;
+        Ok(device)
+    }
+}
+
+/// Shared fleet state: the supervisor (watchdog), the public handle,
+/// and every respawn all operate on this.
+struct FleetCore {
+    engine: Arc<Engine>,
+    policy: BatchPolicy,
     barrier: Arc<FleetBarrier>,
+    seeds: Vec<RespawnSeed>,
+    /// One respawn-transparent endpoint per shard — the *stable*
+    /// identity clients route through across executor generations.
+    endpoints: Vec<Arc<ShardEndpoint>>,
+    /// The current executor generation per shard.
+    shards: Mutex<Vec<ShardExecutor>>,
+    /// Folded statistics of every retired (crashed / replaced)
+    /// generation, per shard, so fleet stats stay exact across
+    /// respawns.
+    retired: Mutex<Vec<ExecutorStats>>,
+    respawns: AtomicU64,
+    stop: AtomicBool,
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl FleetCore {
+    /// Replace shard `s`'s executor with a freshly spawned generation:
+    /// rebuild + re-charge the device, seed the local registration
+    /// count from the fleet barrier, swap the endpoint (epoch bump),
+    /// retire the old generation's statistics.  Works on a live shard
+    /// too (rolling restart): the old executor drains via its `Drop`.
+    fn respawn_shard(&self, s: usize) -> Result<()> {
+        let seed = self
+            .seeds
+            .get(s)
+            .ok_or_else(|| anyhow::anyhow!("no shard {s} in this fleet"))?;
+        let device = seed.build_device(s)?;
+        let replacement = ShardExecutor::spawn_with_registered(
+            self.engine.clone(),
+            seed.weights.clone(),
+            self.policy,
+            device,
+            self.barrier.clone(),
+            self.barrier.registered(),
+        );
+        // Swap the endpoint first: from this instant every new dispatch
+        // (and every retry resolving the current sender) reaches the
+        // replacement.
+        self.endpoints[s].swap(replacement.sender());
+        let old = {
+            let mut shards = lock(&self.shards);
+            std::mem::replace(&mut shards[s], replacement)
+        };
+        lock(&self.retired)[s].absorb(&old.stats());
+        self.respawns.fetch_add(1, Ordering::AcqRel);
+        // Old generation: a dead thread joins instantly; a live one
+        // drains its queue first (rolling restart), answering stragglers
+        // that raced the endpoint swap.
+        drop(old);
+        Ok(())
+    }
+
+    fn is_alive(&self, s: usize) -> bool {
+        lock(&self.shards)
+            .get(s)
+            .map(|e| e.is_alive())
+            .unwrap_or(false)
+    }
+}
+
+/// Watchdog: poll every shard's join handle; respawn dead ones.
+fn watchdog_loop(core: Arc<FleetCore>) {
+    let n = core.seeds.len();
+    while !core.stop.load(Ordering::Acquire) {
+        std::thread::sleep(WATCHDOG_INTERVAL);
+        for s in 0..n {
+            if core.stop.load(Ordering::Acquire) {
+                return;
+            }
+            if !core.is_alive(s) {
+                if let Err(e) = core.respawn_shard(s) {
+                    // A seed that no longer charges (impossible unless
+                    // the device model changed underneath) is fatal for
+                    // this shard; keep supervising the others.
+                    eprintln!("fleet-watchdog: respawn of shard {s} \
+                               failed: {e:#}");
+                }
+            }
+        }
+    }
+}
+
+/// A running, supervised pool of shard executors covering the whole
+/// base model.
+pub struct ExecutorFleet {
+    core: Arc<FleetCore>,
+    assign: LayerAssignment,
+    watchdog: Option<JoinHandle<()>>,
 }
 
 impl ExecutorFleet {
@@ -190,7 +331,19 @@ impl ExecutorFleet {
         // One fleet-global lockstep barrier shared by every shard
         // (consulted only under `BatchPolicy::LockstepFleet`).
         let barrier = Arc::new(FleetBarrier::default());
-        let shards = slices
+        // Retain every shard's respawn seed: the weight slice is a
+        // refcount bump per tensor, not a copy.
+        let seeds: Vec<RespawnSeed> = slices
+            .iter()
+            .zip(&devices)
+            .map(|(slice, device)| RespawnSeed {
+                weights: slice.clone(),
+                device_name: device.name.clone(),
+                device_kind: device.kind,
+                device_capacity: device.ledger.capacity(),
+            })
+            .collect();
+        let shards: Vec<ShardExecutor> = slices
             .into_iter()
             .zip(devices)
             .map(|(slice, device)| {
@@ -198,11 +351,34 @@ impl ExecutorFleet {
                                      device, barrier.clone())
             })
             .collect();
-        Ok(ExecutorFleet { shards, assign, barrier })
+        let endpoints = shards
+            .iter()
+            .map(|s| Arc::new(ShardEndpoint::new(s.sender())))
+            .collect();
+        let retired = vec![ExecutorStats::default(); shards.len()];
+        let core = Arc::new(FleetCore {
+            engine,
+            policy,
+            barrier,
+            seeds,
+            endpoints,
+            shards: Mutex::new(shards),
+            retired: Mutex::new(retired),
+            respawns: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let watchdog = std::thread::Builder::new()
+            .name("fleet-watchdog".into())
+            .spawn({
+                let core = core.clone();
+                move || watchdog_loop(core)
+            })
+            .ok();
+        Ok(ExecutorFleet { core, assign, watchdog })
     }
 
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.core.seeds.len()
     }
 
     /// The layer partition this fleet serves.
@@ -212,73 +388,149 @@ impl ExecutorFleet {
 
     /// The fleet-global lockstep barrier state (observability/tests).
     pub fn barrier(&self) -> &FleetBarrier {
-        &self.barrier
+        &self.core.barrier
     }
 
     /// Shared handle to the fleet-global barrier, given to every
     /// client context so registration updates it synchronously.
     pub(crate) fn barrier_arc(&self) -> Arc<FleetBarrier> {
-        self.barrier.clone()
+        self.core.barrier.clone()
     }
 
     /// Channel of the first shard — the whole fleet for single-shard
     /// deployments (every pre-fleet caller), e.g. privacy-noise
-    /// registration against a local executor.
+    /// registration against a local executor.  Resolves the *current*
+    /// executor generation.
     pub fn sender(&self) -> Sender<ExecMsg> {
-        self.shards[0].sender()
+        self.core.endpoints[0].sender()
     }
 
     /// Channel of the shard owning `layer` (what sharded privacy
-    /// registration must use).
+    /// registration must use).  Resolves the current generation.
     pub fn sender_for(&self, layer: LayerId) -> Sender<ExecMsg> {
-        self.shards[self.assign.shard_of(layer)].sender()
+        self.core.endpoints[self.assign.shard_of(layer)].sender()
     }
 
-    /// Build one client's routing table: the owning-shard channel per
+    /// Whether shard `s`'s executor thread is currently running.
+    pub fn is_alive(&self, s: usize) -> bool {
+        self.core.is_alive(s)
+    }
+
+    /// Respawn generation of shard `s`'s endpoint (0 = the original
+    /// executor still serves).
+    pub fn route_epoch(&self, s: usize) -> u64 {
+        self.core.endpoints[s].epoch()
+    }
+
+    /// Total respawns performed over the fleet's lifetime.
+    pub fn respawns(&self) -> u64 {
+        self.core.respawns.load(Ordering::Acquire)
+    }
+
+    /// Rebuild shard `s` on its retained seed: fresh device ledger
+    /// (re-charged), registration count seeded from the fleet barrier,
+    /// endpoint swapped under a bumped epoch, old generation's stats
+    /// retired.  Safe on a live shard (rolling restart) — the watchdog
+    /// calls this automatically for dead ones.
+    pub fn respawn_shard(&self, s: usize) -> Result<()> {
+        self.core.respawn_shard(s)
+    }
+
+    /// Build one client's routing table: the owning-shard endpoint per
     /// layer plus a per-shard [`Link`](crate::transport::Link).  Link
     /// kinds come from the placement (co-located shard `SharedLocal`,
     /// cross-shard hops `NvLink`) unless overridden by the session
-    /// builder.
+    /// builder.  A [`FaultPlan`] interposes on the shards its rules
+    /// target (fault-free shards keep the direct endpoint).
     pub(crate) fn routing_for(&self, client_id: usize,
                               placement: &Placement,
-                              link_override: Option<LinkKind>)
+                              link_override: Option<LinkKind>,
+                              faults: Option<&FaultPlan>)
                               -> RoutingTable {
         let kinds: Vec<LinkKind> = match link_override {
-            Some(k) => vec![k; self.shards.len()],
-            None => placement.shard_links(client_id, self.shards.len()),
+            Some(k) => vec![k; self.n_shards()],
+            None => placement.shard_links(client_id, self.n_shards()),
         };
         let routes = self
-            .shards
+            .core
+            .endpoints
             .iter()
+            .enumerate()
             .zip(kinds)
-            .map(|(s, k)| ShardRoute::new(s.sender(), k))
+            .map(|((s, endpoint), k)| {
+                let endpoint = match faults {
+                    Some(plan) => plan.wrap_endpoint(s, endpoint.clone()),
+                    None => endpoint.clone(),
+                };
+                ShardRoute::shared(s, endpoint, k)
+            })
             .collect();
         RoutingTable::new(self.assign.clone(), routes)
+            .expect("fleet routes match its assignment by construction")
     }
 
-    /// Merged + per-shard statistics snapshot.
+    /// Merged + per-shard statistics snapshot.  Per-shard entries
+    /// include every retired generation (respawns do not lose flushes).
     pub fn stats(&self) -> FleetStats {
-        FleetStats::merge(self.shards.iter().map(|s| s.stats()).collect())
+        let live: Vec<ExecutorStats> =
+            lock(&self.core.shards).iter().map(|s| s.stats()).collect();
+        let retired = lock(&self.core.retired);
+        let per_shard = retired
+            .iter()
+            .zip(live)
+            .map(|(dead, live)| {
+                let mut s = dead.clone();
+                s.absorb(&live);
+                s
+            })
+            .collect();
+        FleetStats::merge(per_shard)
     }
 
     /// Bytes resident on each shard's device ledger (the real weight
     /// slice — ~1/N of the base each).
     pub fn shard_resident_bytes(&self) -> Vec<u64> {
-        self.shards.iter().map(|s| s.resident_bytes()).collect()
+        lock(&self.core.shards)
+            .iter()
+            .map(|s| s.resident_bytes())
+            .collect()
     }
 
-    /// Stop every shard, draining in layer order (shard 0 first), and
-    /// return the final statistics.
-    pub fn shutdown(self) -> FleetStats {
-        let mut per_shard = Vec::with_capacity(self.shards.len());
-        for shard in self.shards {
-            per_shard.push(shard.shutdown());
+    /// Stop the watchdog, then every shard — draining in layer order
+    /// (shard 0 first) — and return the final statistics (retired
+    /// generations included).
+    pub fn shutdown(mut self) -> FleetStats {
+        self.stop_watchdog();
+        let shards = std::mem::take(&mut *lock(&self.core.shards));
+        let retired = lock(&self.core.retired).clone();
+        let mut per_shard = Vec::with_capacity(shards.len());
+        for (dead, shard) in retired.into_iter().zip(shards) {
+            let mut s = dead;
+            s.absorb(&shard.shutdown());
+            per_shard.push(s);
         }
         FleetStats::merge(per_shard)
+    }
+
+    fn stop_watchdog(&mut self) {
+        self.core.stop.store(true, Ordering::Release);
+        if let Some(h) = self.watchdog.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ExecutorFleet {
+    /// A fleet dropped without `shutdown` must not leave the watchdog
+    /// respawning shards forever: stop it first, then the shards drain
+    /// via their own `Drop`s when the core's last `Arc` goes.
+    fn drop(&mut self) {
+        self.stop_watchdog();
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::config::SYM_TINY;
@@ -349,6 +601,25 @@ mod tests {
     }
 
     #[test]
+    fn shard_weight_clones_share_storage() {
+        // The respawn seed must be a refcount bump, not a weight copy.
+        let base = fake_base();
+        let assign = LayerAssignment::contiguous(SYM_TINY.n_layers, 2);
+        let slices = split_shards(base, &assign);
+        let seed = slices[0].clone();
+        assert_eq!(seed.param_bytes(), slices[0].param_bytes());
+        let (w_orig, _) =
+            slices[0].linear(crate::coordinator::proto::LayerId::Qkv(0))
+                .unwrap();
+        let (w_seed, _) =
+            seed.linear(crate::coordinator::proto::LayerId::Qkv(0))
+                .unwrap();
+        assert!(std::ptr::eq(w_orig.as_f32().as_ptr(),
+                             w_seed.as_f32().as_ptr()),
+                "clone must alias the same tensor storage");
+    }
+
+    #[test]
     fn fleet_barrier_counts_and_saturates() {
         let b = FleetBarrier::default();
         assert_eq!(b.registered(), 0);
@@ -393,5 +664,37 @@ mod tests {
         assert!((f.mean_batch_clients() - 2.0).abs() < 1e-9);
         assert!((f.padding_overhead() - (1.0 - 128.0 / 160.0)).abs()
                 < 1e-9);
+    }
+
+    #[test]
+    fn merged_flush_ring_is_bounded() {
+        use crate::coordinator::base_executor::{FlushRecord,
+                                                FLUSH_RECORD_CAP};
+        use crate::coordinator::proto::{LayerId, OpKind};
+        // 4 shards each at the per-shard cap: the merged ring must stay
+        // at the same bound (newest records win), not 4x it.
+        let rec = |l: usize| FlushRecord {
+            layer: LayerId::Qkv(0),
+            op: OpKind::Forward,
+            n_requests: l,
+            n_clients: 1,
+            real_tokens: 1,
+            bucket_tokens: 1,
+            mean_wait_secs: 0.0,
+        };
+        let per_shard: Vec<ExecutorStats> = (0..4)
+            .map(|s| ExecutorStats {
+                flushes: (0..FLUSH_RECORD_CAP).map(|_| rec(s)).collect(),
+                n_flushes: FLUSH_RECORD_CAP as u64,
+                ..Default::default()
+            })
+            .collect();
+        let f = FleetStats::merge(per_shard);
+        assert_eq!(f.flushes.len(), FLUSH_RECORD_CAP,
+                   "merged ring must stay bounded");
+        assert_eq!(f.n_flushes, 4 * FLUSH_RECORD_CAP as u64,
+                   "aggregate counters stay exact");
+        // the survivors are the newest (last shards')
+        assert!(f.flushes.iter().all(|r| r.n_requests == 3));
     }
 }

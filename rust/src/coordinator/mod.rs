@@ -63,11 +63,22 @@
 //! * [`privacy`] — the additive-noise activation protocol (section 3.8).
 //!   Sharded deployments register noise via
 //!   [`ExecutorFleet::sender_for`] (the layer's owning shard).
+//! * [`faults`] — deterministic, seeded fault injection
+//!   ([`Deployment::inject_faults`]): drop / delay / error / stall /
+//!   kill rules interpose on client→shard routes so the chaos suite and
+//!   benches can rehearse every failure the fleet claims to survive.
+//!
+//! The failure model is first-class: per-request deadlines
+//! (`SessionBuilder::request_timeout`), bounded client-side retry
+//! (`RetryPolicy`), and fleet supervision (watchdog +
+//! [`ExecutorFleet::respawn_shard`]) are wired through the same typed
+//! error surface — see the taxonomy table in [`crate::error`].
 
 pub mod adapter;
 pub mod base_executor;
 pub mod batching;
 pub mod client;
+pub mod faults;
 pub mod fleet;
 pub mod kv_cache;
 pub mod model_state;
@@ -97,13 +108,14 @@ pub use batching::BatchPolicy;
 pub use client::{ClientCore, GenerationConfig, InferenceSession,
                  Sampling, SessionBuilder, Trainer, TrainerBuilder,
                  TrainOutcome, UrgencyPolicy};
+pub use faults::{FaultAction, FaultPlan, FaultRule};
 pub use fleet::{ExecutorFleet, FleetBarrier, FleetStats};
 pub use kv_cache::{KvLedger, KvPlacement};
 pub use placement::Placement;
 pub use proto::{LayerId, OpKind, Urgency};
 pub use sharding::{LayerAssignment, ShardPlan};
-pub use virt_layer::{PendingLayer, RoutingTable, ShardRoute,
-                     VirtLayerCtx};
+pub use virt_layer::{PendingLayer, RetryPolicy, RoutingTable,
+                     ShardEndpoint, ShardRoute, VirtLayerCtx};
 
 /// A running deployment: an executor fleet + the pieces needed to attach
 /// clients.  This is the top-level public API — tenants are spawned from
@@ -124,6 +136,10 @@ pub struct Deployment {
     /// Host DRAM device: `KvPlacement::Host` caches charge here.
     pub host_device: Arc<Mutex<Device>>,
     next_client_id: std::sync::atomic::AtomicUsize,
+    /// Active fault-injection plan; applied to every client core built
+    /// *after* [`Deployment::inject_faults`].  Interior mutability so
+    /// tests can arm faults on a shared, otherwise-immutable deployment.
+    fault_plan: Mutex<Option<FaultPlan>>,
 }
 
 impl Deployment {
@@ -169,7 +185,30 @@ impl Deployment {
             client_device,
             host_device,
             next_client_id: std::sync::atomic::AtomicUsize::new(0),
+            fault_plan: Mutex::new(None),
         })
+    }
+
+    /// Arm a deterministic fault-injection plan: every client core
+    /// built from now on routes through the plan's interposers (shards
+    /// without matching rules keep their direct endpoints).  Pass-through
+    /// for production; chaos tests and benches use it to rehearse
+    /// drops, delays, stalls, error answers, and shard kills under a
+    /// fixed seed.  Replaces any previously armed plan.
+    pub fn inject_faults(&self, plan: FaultPlan) {
+        *self
+            .fault_plan
+            .lock()
+            .unwrap_or_else(|p| p.into_inner()) = Some(plan);
+    }
+
+    /// Disarm fault injection for subsequently built clients (already
+    /// built clients keep their interposed routes).
+    pub fn clear_faults(&self) {
+        *self
+            .fault_plan
+            .lock()
+            .unwrap_or_else(|p| p.into_inner()) = None;
     }
 
     /// Begin configuring an inference session against this deployment.
@@ -186,14 +225,14 @@ impl Deployment {
     /// the placement's links.  Lower-level than the builders; most
     /// callers want [`Deployment::session`] / [`Deployment::trainer`].
     pub fn client_core(&self, adapter: Option<Adapter>) -> ClientCore {
-        self.build_core(adapter, None, false, None)
+        self.build_core(adapter, None, false, None, None, None)
     }
 
     /// Same, with an explicit link kind applied to every shard hop
     /// (heterogeneous topologies).
     pub fn client_core_with_link(&self, adapter: Option<Adapter>,
                                  link: LinkKind) -> ClientCore {
-        self.build_core(adapter, Some(link), false, None)
+        self.build_core(adapter, Some(link), false, None, None, None)
     }
 
     /// Full control: link kind + whether simulated link delays are
@@ -201,25 +240,40 @@ impl Deployment {
     pub fn client_core_opts(&self, adapter: Option<Adapter>,
                             link: LinkKind, realize_delays: bool)
                             -> ClientCore {
-        self.build_core(adapter, Some(link), realize_delays, None)
+        self.build_core(adapter, Some(link), realize_delays, None, None,
+                        None)
     }
 
     /// The one place client contexts are wired: allocates a client id,
-    /// builds the routed layer proxy (with optional privacy), registers
-    /// it with every shard.  `link_override` replaces the
-    /// placement-derived per-shard link kinds when set.
+    /// builds the routed layer proxy (with optional privacy and fault
+    /// interposers), registers it with every shard.  `link_override`
+    /// replaces the placement-derived per-shard link kinds when set;
+    /// `request_timeout` puts a deadline on every collect; `retry`
+    /// bounds client-side re-dispatch of pure frozen-base ops.
     pub(crate) fn build_core(&self, adapter: Option<Adapter>,
                              link_override: Option<LinkKind>,
                              realize_delays: bool,
-                             privacy: Option<PrivacyCtx>) -> ClientCore {
+                             privacy: Option<PrivacyCtx>,
+                             request_timeout:
+                                 Option<std::time::Duration>,
+                             retry: Option<RetryPolicy>) -> ClientCore {
         let id = self
             .next_client_id
             .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-        let routing =
-            self.executor.routing_for(id, &self.placement, link_override);
+        let plan = self
+            .fault_plan
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone();
+        let routing = self.executor.routing_for(
+            id, &self.placement, link_override, plan.as_ref());
         let mut ctx = VirtLayerCtx::new(id, routing);
         ctx.realize_delays = realize_delays;
         ctx.privacy = privacy;
+        ctx.request_timeout = request_timeout;
+        if let Some(retry) = retry {
+            ctx.retry = retry;
+        }
         // Clients keep the fleet-global lockstep count exact: they
         // bump it synchronously on register/deregister.
         ctx.fleet_barrier = Some(self.executor.barrier_arc());

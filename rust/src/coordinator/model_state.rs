@@ -32,7 +32,7 @@ pub struct BaseWeights {
     pub blocks: Vec<BlockWeights>,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct BlockWeights {
     pub wqkv: Tensor,
     pub bqkv: Tensor,
@@ -118,8 +118,10 @@ impl BaseWeights {
 /// One executor shard's slice of the frozen base: a contiguous block
 /// range plus the boundary layers (embedding on the first shard, LM
 /// head on the last).  Built by [`split_shards`]; owned by one
-/// `ShardExecutor` thread.
-#[derive(Debug)]
+/// `ShardExecutor` thread.  `Clone` is a refcount bump per tensor
+/// (`Arc`-backed), which is what lets the fleet retain each shard's
+/// slice as a respawn seed at zero memory cost.
+#[derive(Debug, Clone)]
 pub struct ShardWeights {
     pub cfg: ModelConfig,
     pub shard: usize,

@@ -151,6 +151,12 @@ pub enum ExecMsg {
     },
     /// Drain and stop.
     Shutdown,
+    /// Simulated hard crash (fault injection): the executor thread
+    /// returns *immediately* without draining its queue — pending
+    /// response senders drop, exactly as if the thread had panicked.
+    /// The fleet watchdog observes the finished join handle and
+    /// respawns the shard.
+    Crash,
 }
 
 #[cfg(test)]

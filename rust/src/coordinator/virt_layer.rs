@@ -30,11 +30,30 @@
 //! in-flight request per micro-batch: micro-batch k's request occupies
 //! shard s+1 while micro-batch k+1's occupies shard s.
 //!
+//! # Deadlines and bounded retry
+//!
+//! `collect` honors the context's `request_timeout`: a shard that does
+//! not answer within the budget surfaces a typed
+//! [`SymbiosisError::DeadlineExceeded`] instead of blocking forever
+//! ([`PendingLayer::collect_deadline`] is the per-call form).  Because
+//! frozen-base layer ops are *pure* — same activations in, same output
+//! out, no executor-side state — a failed or timed-out request is safe
+//! to re-send verbatim.  When the context's [`RetryPolicy`] allows it,
+//! `collect` re-dispatches the retained request against the shard's
+//! *current* endpoint (which a fleet respawn may have swapped under a
+//! bumped epoch — see [`ShardEndpoint`]) under linear backoff, and
+//! surfaces [`SymbiosisError::ShardUnavailable`] only when the budget
+//! is exhausted.  Both the sequential walk and the pipelined wavefront
+//! go through `collect`, so they inherit deadlines and retry for free.
+//!
 //! Ordering guarantees: requests dispatched over one context to the
 //! *same* shard arrive in dispatch order (the channel is FIFO); requests
 //! to different shards are unordered relative to each other.  Dropping a
 //! `PendingLayer` without collecting is safe — the shard's response to a
-//! closed receiver is discarded, nothing blocks.
+//! closed receiver is discarded, nothing blocks.  A *retried* request
+//! may race its original (e.g. a delayed response arriving after the
+//! deadline fired): the original's receiver was replaced, so the stale
+//! answer is discarded the same way.
 //!
 //! With Arc-backed tensors the request/response payloads are shared
 //! views: shipping `x` to the executor (and receiving the scattered
@@ -47,38 +66,116 @@
 //! micro-batch, and an uncontended atomic add stays off the lock path.
 //!
 //! Contexts are built by [`Deployment::build_core`] (one per client id);
-//! sessions configure the links, realized delays, and the privacy
-//! protocol through the
+//! sessions configure the links, realized delays, timeouts/retry, and
+//! the privacy protocol through the
 //! [`SessionBuilder`](crate::coordinator::SessionBuilder) rather than
 //! mutating this struct after the fact.
 //!
 //! [`Deployment::build_core`]: crate::coordinator::Deployment
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+// Fault-domain hot path: a stray unwrap here can abort a co-tenant
+// process or wedge a client on a poisoned lock.  Locks recover from
+// poisoning explicitly; everything else is typed.
+#![deny(clippy::unwrap_used)]
 
-use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use anyhow::Result;
 
 use crate::coordinator::fleet::FleetBarrier;
 use crate::coordinator::privacy::PrivacyCtx;
 use crate::coordinator::proto::{ExecMsg, LayerId, LayerRequest,
                                 LayerResponse, OpKind, Urgency};
 use crate::coordinator::sharding::LayerAssignment;
-use crate::error::SymbiosisError;
+use crate::error::{SymResult, SymbiosisError};
 use crate::tensor::Tensor;
 use crate::transport::{Link, LinkKind};
 
-/// One shard's endpoint as a client sees it: the executor channel plus
-/// the simulated link the client's traffic to that shard crosses.
+/// One shard's *current* executor channel, shared by the fleet and by
+/// every client routing table.  When the fleet respawns a dead shard it
+/// [`swap`](Self::swap)s in the new thread's sender and bumps the
+/// epoch; clients resolve the sender *per message*, so in-flight
+/// sessions migrate to the replacement executor without rebuilding
+/// their tables — no one holds a dead channel.
+pub struct ShardEndpoint {
+    tx: RwLock<Sender<ExecMsg>>,
+    epoch: AtomicU64,
+}
+
+impl ShardEndpoint {
+    pub fn new(tx: Sender<ExecMsg>) -> Self {
+        ShardEndpoint { tx: RwLock::new(tx), epoch: AtomicU64::new(0) }
+    }
+
+    /// The current executor channel (clone of the live sender).  Poison
+    /// on the lock is recovered — a panicking writer cannot wedge every
+    /// client of the shard.
+    pub fn sender(&self) -> Sender<ExecMsg> {
+        self.tx
+            .read()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone()
+    }
+
+    /// Monotonic generation counter: bumped on every [`swap`](Self::swap).
+    /// A client comparing epochs across a failure sees whether the fleet
+    /// already replaced the executor it timed out on.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Install a replacement executor channel; returns the new epoch.
+    pub fn swap(&self, tx: Sender<ExecMsg>) -> u64 {
+        *self.tx.write().unwrap_or_else(|p| p.into_inner()) = tx;
+        self.epoch.fetch_add(1, Ordering::AcqRel) + 1
+    }
+}
+
+/// One shard's endpoint as a client sees it: the (respawn-transparent)
+/// executor channel plus the simulated link the client's traffic to
+/// that shard crosses.
 pub struct ShardRoute {
-    pub tx: Sender<ExecMsg>,
+    shard: usize,
+    endpoint: Arc<ShardEndpoint>,
     pub link: Mutex<Link>,
 }
 
 impl ShardRoute {
+    /// A private route over a fresh endpoint (tests, tools, the
+    /// single-shard topology).
     pub fn new(tx: Sender<ExecMsg>, kind: LinkKind) -> Self {
-        ShardRoute { tx, link: Mutex::new(Link::new(kind)) }
+        ShardRoute::shared(0, Arc::new(ShardEndpoint::new(tx)), kind)
+    }
+
+    /// A route over a fleet-shared endpoint: respawns swap the sender
+    /// underneath every client holding this route.
+    pub fn shared(shard: usize, endpoint: Arc<ShardEndpoint>,
+                  kind: LinkKind) -> Self {
+        ShardRoute { shard, endpoint, link: Mutex::new(Link::new(kind)) }
+    }
+
+    /// Index of the shard this route reaches.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    pub fn endpoint(&self) -> &Arc<ShardEndpoint> {
+        &self.endpoint
+    }
+
+    /// Route epoch — how many times the fleet replaced this shard's
+    /// executor since the route was built.
+    pub fn epoch(&self) -> u64 {
+        self.endpoint.epoch()
+    }
+
+    /// Send a control/request message to the shard's *current*
+    /// executor.
+    fn send(&self, msg: ExecMsg) -> Result<(), ExecMsg> {
+        self.endpoint.sender().send(msg).map_err(|e| e.0)
     }
 }
 
@@ -90,16 +187,31 @@ pub struct RoutingTable {
 }
 
 impl RoutingTable {
-    pub fn new(assign: LayerAssignment, routes: Vec<ShardRoute>) -> Self {
-        assert_eq!(assign.shards(), routes.len(),
-                   "assignment/route count mismatch");
-        RoutingTable { assign, routes }
+    /// Build a table; fails with a typed
+    /// [`SymbiosisError::MalformedRoutingTable`] when the route count
+    /// does not match the assignment's shard count (library code must
+    /// not abort a co-tenant process on a malformed table).  Route
+    /// shard indices are normalized to table order.
+    pub fn new(assign: LayerAssignment, mut routes: Vec<ShardRoute>)
+               -> SymResult<Self> {
+        if assign.shards() != routes.len() {
+            return Err(SymbiosisError::MalformedRoutingTable {
+                shards: assign.shards(),
+                routes: routes.len(),
+            });
+        }
+        for (s, r) in routes.iter_mut().enumerate() {
+            r.shard = s;
+        }
+        Ok(RoutingTable { assign, routes })
     }
 
     /// Single-shard table — the pre-fleet topology (tests, tools).
     pub fn single(tx: Sender<ExecMsg>, kind: LinkKind) -> Self {
-        RoutingTable::new(LayerAssignment::contiguous(1, 1),
-                          vec![ShardRoute::new(tx, kind)])
+        RoutingTable {
+            assign: LayerAssignment::contiguous(1, 1),
+            routes: vec![ShardRoute::new(tx, kind)],
+        }
     }
 
     pub fn n_shards(&self) -> usize {
@@ -135,6 +247,42 @@ fn atomic_f64_get(cell: &AtomicU64) -> f64 {
     f64::from_bits(cell.load(Ordering::Relaxed))
 }
 
+/// Bounded-retry budget for failed or timed-out layer requests.
+/// Frozen-base ops are pure, so a retry re-sends the retained request
+/// verbatim; backoff is linear (`backoff * attempt`) to give a fleet
+/// watchdog time to respawn the shard between attempts.  The default
+/// is *no* retry — existing callers keep fail-fast semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Re-dispatch attempts after the first failure (0 = fail fast).
+    pub max_retries: u32,
+    /// Base backoff before attempt k sleeps `backoff * k`.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 0, backoff: Duration::from_millis(25) }
+    }
+}
+
+impl RetryPolicy {
+    /// Fail-fast (the default).
+    pub fn none() -> Self {
+        RetryPolicy::default()
+    }
+
+    /// Retry up to `max_retries` times with the default backoff base.
+    pub fn retries(max_retries: u32) -> Self {
+        RetryPolicy { max_retries, ..RetryPolicy::default() }
+    }
+
+    pub fn with_backoff(mut self, backoff: Duration) -> Self {
+        self.backoff = backoff;
+        self
+    }
+}
+
 /// Per-client view of the executor fleet: layer proxies share this
 /// context.
 pub struct VirtLayerCtx {
@@ -153,6 +301,11 @@ pub struct VirtLayerCtx {
     /// lags a client whose requests are already in flight.  `None` for
     /// hand-built contexts (tests, tools).
     pub fleet_barrier: Option<std::sync::Arc<FleetBarrier>>,
+    /// Per-request response deadline applied by every `collect` on this
+    /// context (`None` = block forever, the pre-fault-domain behavior).
+    pub request_timeout: Option<Duration>,
+    /// Bounded-retry budget applied by every `collect` on this context.
+    pub retry: RetryPolicy,
     /// Accumulated queue-wait observed by this client (Fig 7);
     /// f64 seconds bit-cast into the atomic.
     wait_secs: AtomicU64,
@@ -161,7 +314,9 @@ pub struct VirtLayerCtx {
 }
 
 /// An in-flight base-layer invocation: the response receiver plus what
-/// is needed to finish the accounting at collect time.  Obtained from
+/// is needed to finish the accounting at collect time — and to
+/// *re-dispatch* the request on failure (the payload is an `Arc` view,
+/// so retaining it is a refcount, not a copy).  Obtained from
 /// [`VirtLayerCtx::dispatch`] (or the privacy-aware
 /// [`VirtLayerCtx::dispatch_forward`]); the request link was already
 /// charged at dispatch.  Dropping without collecting discards the
@@ -174,6 +329,12 @@ pub struct PendingLayer<'a> {
     /// Privacy: the noise effect to subtract from the response
     /// (`n_eff = W . n`), when this dispatch shipped noised activations.
     n_eff: Option<Tensor>,
+    /// Retained request, as sent (noised when privacy is on), for
+    /// retry re-dispatch.
+    op: OpKind,
+    x: Tensor,
+    positions: Option<Tensor>,
+    urgency: Urgency,
 }
 
 impl PendingLayer<'_> {
@@ -182,26 +343,120 @@ impl PendingLayer<'_> {
         self.layer
     }
 
-    /// Block on the shard's response.  Accumulates the executor
+    /// Block on the shard's response under the context's
+    /// `request_timeout` and `retry` policy.  Accumulates the executor
     /// queue-wait, charges the *response* link for the returned payload,
-    /// surfaces a failed flush as [`SymbiosisError::ExecutorFailed`],
-    /// and removes the privacy noise effect when one was registered at
-    /// dispatch.
+    /// surfaces a failed flush as [`SymbiosisError::ExecutorFailed`] (a
+    /// missed deadline as [`SymbiosisError::DeadlineExceeded`], an
+    /// exhausted retry budget as
+    /// [`SymbiosisError::ShardUnavailable`]), and removes the privacy
+    /// noise effect when one was registered at dispatch.
     pub fn collect(self) -> Result<Tensor> {
-        let resp =
-            self.rx.recv().context("shard executor dropped request")?;
+        let deadline = self.ctx.request_timeout;
+        self.collect_inner(deadline)
+    }
+
+    /// `collect` with an explicit per-call deadline, overriding the
+    /// context's `request_timeout`.
+    pub fn collect_deadline(self, deadline: Duration) -> Result<Tensor> {
+        self.collect_inner(Some(deadline))
+    }
+
+    fn collect_inner(mut self, deadline: Option<Duration>)
+                     -> Result<Tensor> {
+        let retry = self.ctx.retry;
+        let mut attempt: u32 = 0;
+        loop {
+            match self.wait_once(deadline) {
+                Ok(y) => {
+                    self.ctx.charge(self.route, &y);
+                    return Ok(match &self.n_eff {
+                        Some(n) => crate::tensor::ops::sub(&y, n),
+                        None => y,
+                    });
+                }
+                Err(e) if attempt < retry.max_retries => {
+                    attempt += 1;
+                    // Linear backoff: give the watchdog time to respawn
+                    // the shard before the request goes out again.
+                    std::thread::sleep(retry.backoff * attempt);
+                    self.redispatch();
+                    let _ = e; // superseded by the retry's outcome
+                }
+                Err(e) => {
+                    if retry.max_retries > 0 {
+                        // The budget is spent: surface the triage-level
+                        // error, keeping the last fault in the chain.
+                        return Err(e.context(
+                            SymbiosisError::ShardUnavailable {
+                                shard: self.route.shard(),
+                                retries: retry.max_retries,
+                            },
+                        ));
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// One wait for the current in-flight request: deadline, channel
+    /// loss, and executor-reported failure each map to their typed
+    /// error.
+    fn wait_once(&self, deadline: Option<Duration>) -> Result<Tensor> {
+        let gone = || {
+            anyhow::Error::new(SymbiosisError::ExecutorFailed {
+                layer: self.layer.label(),
+                message: "shard dropped the request (crashed or shut \
+                          down)"
+                    .into(),
+            })
+        };
+        let resp = match deadline {
+            None => self.rx.recv().map_err(|_| gone())?,
+            Some(d) => match self.rx.recv_timeout(d) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(anyhow::Error::new(
+                        SymbiosisError::DeadlineExceeded {
+                            layer: self.layer.label(),
+                            shard: self.route.shard(),
+                            waited: d,
+                        },
+                    ));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(gone());
+                }
+            },
+        };
         atomic_f64_add(&self.ctx.wait_secs, resp.queue_wait_secs);
-        let y = resp.y.map_err(|message| {
+        resp.y.map_err(|message| {
             anyhow::Error::new(SymbiosisError::ExecutorFailed {
                 layer: self.layer.label(),
                 message,
             })
-        })?;
-        self.ctx.charge(self.route, &y);
-        match self.n_eff {
-            Some(n) => Ok(crate::tensor::ops::sub(&y, &n)),
-            None => Ok(y),
-        }
+        })
+    }
+
+    /// Re-send the retained request against the shard's *current*
+    /// endpoint (a respawn may have swapped it) with a fresh response
+    /// channel.  A failed send leaves a disconnected receiver behind,
+    /// which the next `wait_once` surfaces as a failed attempt — so a
+    /// still-dead shard burns budget instead of looping.
+    fn redispatch(&mut self) {
+        self.ctx.charge(self.route, &self.x);
+        let (tx, rx) = channel::<LayerResponse>();
+        let _ = self.route.send(ExecMsg::Request(LayerRequest {
+            client_id: self.ctx.client_id,
+            layer: self.layer,
+            op: self.op,
+            x: self.x.clone(),
+            positions: self.positions.clone(),
+            urgency: self.urgency,
+            resp: tx,
+        }));
+        self.rx = rx;
     }
 }
 
@@ -213,6 +468,8 @@ impl VirtLayerCtx {
             privacy: None,
             realize_delays: false,
             fleet_barrier: None,
+            request_timeout: None,
+            retry: RetryPolicy::default(),
             wait_secs: AtomicU64::new(0.0f64.to_bits()),
             link_secs: AtomicU64::new(0.0f64.to_bits()),
         }
@@ -227,7 +484,7 @@ impl VirtLayerCtx {
             b.register();
         }
         for r in self.routing.routes() {
-            let _ = r.tx.send(ExecMsg::Register {
+            let _ = r.send(ExecMsg::Register {
                 client_id: self.client_id,
             });
         }
@@ -240,7 +497,7 @@ impl VirtLayerCtx {
             b.deregister();
         }
         for r in self.routing.routes() {
-            let _ = r.tx.send(ExecMsg::Deregister {
+            let _ = r.send(ExecMsg::Deregister {
                 client_id: self.client_id,
             });
         }
@@ -269,7 +526,10 @@ impl VirtLayerCtx {
     /// Non-blocking forward dispatch with the privacy protocol applied:
     /// when a [`PrivacyCtx`] is configured the shard receives `x + n`
     /// and the returned [`PendingLayer`] subtracts `n_eff = W . n` at
-    /// collect, so pipelined walks stay private too.
+    /// collect, so pipelined walks stay private too.  A retry re-sends
+    /// the *same* noised payload — the executor still never sees raw
+    /// activations, and `n_eff` stays valid because the respawned shard
+    /// holds the same frozen weights.
     pub fn dispatch_forward(&self, layer: LayerId, x: Tensor,
                             urgency: Urgency)
                             -> Result<PendingLayer<'_>> {
@@ -291,9 +551,15 @@ impl VirtLayerCtx {
     }
 
     /// Charge one payload to a shard's link, realizing the delay when
-    /// configured.
+    /// configured.  Poison on the link lock is recovered: the counters
+    /// stay valid (plain additions), so a panic mid-charge elsewhere
+    /// must not wedge every later layer call of this client.
     fn charge(&self, route: &ShardRoute, t: &Tensor) {
-        let dt = route.link.lock().unwrap().send(t);
+        let dt = route
+            .link
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .send(t);
         atomic_f64_add(&self.link_secs, dt);
         if self.realize_delays && dt > 20e-6 {
             std::thread::sleep(std::time::Duration::from_secs_f64(dt));
@@ -303,7 +569,8 @@ impl VirtLayerCtx {
     /// Send one base-layer invocation without waiting for the response.
     /// The *request* link is charged here (the payload crosses now);
     /// everything the response owes — queue wait, response link,
-    /// failure surfacing — happens in [`PendingLayer::collect`].
+    /// failure surfacing, deadline/retry handling — happens in
+    /// [`PendingLayer::collect`].
     pub fn dispatch(&self, layer: LayerId, op: OpKind, x: Tensor,
                     positions: Option<Tensor>, urgency: Urgency)
                     -> Result<PendingLayer<'_>> {
@@ -311,19 +578,34 @@ impl VirtLayerCtx {
         self.charge(route, &x);
         let (tx, rx) = channel::<LayerResponse>();
         route
-            .tx
             .send(ExecMsg::Request(LayerRequest {
                 client_id: self.client_id,
                 layer,
                 op,
-                x,
-                positions,
+                x: x.clone(),
+                positions: positions.clone(),
                 urgency,
                 resp: tx,
             }))
-            .ok()
-            .context("shard executor is gone")?;
-        Ok(PendingLayer { ctx: self, route, layer, rx, n_eff: None })
+            .map_err(|_| {
+                SymbiosisError::ExecutorFailed {
+                    layer: layer.label(),
+                    message: "shard executor is gone (fleet shut down \
+                              or crashed before dispatch)"
+                        .into(),
+                }
+            })?;
+        Ok(PendingLayer {
+            ctx: self,
+            route,
+            layer,
+            rx,
+            n_eff: None,
+            op,
+            x,
+            positions,
+            urgency,
+        })
     }
 
     /// Total simulated link time charged so far (all shards).
@@ -339,10 +621,16 @@ impl VirtLayerCtx {
             .routes()
             .iter()
             .map(|r| {
-                let l = r.link.lock().unwrap();
+                let l = r.link.lock().unwrap_or_else(|p| p.into_inner());
                 (l.messages, l.bytes_moved)
             })
             .collect()
+    }
+
+    /// Per-shard route epochs (respawn generations observed by this
+    /// client's table).
+    pub fn route_epochs(&self) -> Vec<u64> {
+        self.routing.routes().iter().map(|r| r.epoch()).collect()
     }
 
     /// Total executor queue wait observed so far.
@@ -361,6 +649,7 @@ impl Drop for VirtLayerCtx {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
@@ -373,7 +662,8 @@ mod tests {
         let table = RoutingTable::new(assign, vec![
             ShardRoute::new(tx0, LinkKind::SharedLocal),
             ShardRoute::new(tx1, LinkKind::NvLink),
-        ]);
+        ])
+        .unwrap();
         let ctx = VirtLayerCtx::new(7, table);
         ctx.register();
         // one Register at each shard
@@ -382,13 +672,12 @@ mod tests {
         assert!(matches!(rx1.try_recv().unwrap(),
                          ExecMsg::Register { client_id: 7 }));
         // a block-0 request lands on shard 0, a block-3 one on shard 1
-        for (layer, want0) in [(LayerId::Qkv(0), true),
-                               (LayerId::Embed, true),
-                               (LayerId::MlpUp(3), false),
-                               (LayerId::LmHead, false)] {
-            let route = ctx_route(&ctx, layer);
-            assert_eq!(route, if want0 { 0 } else { 1 },
-                       "layer {layer:?} routed to shard {route}");
+        for (layer, want) in [(LayerId::Qkv(0), 0usize),
+                              (LayerId::Embed, 0),
+                              (LayerId::MlpUp(3), 1),
+                              (LayerId::LmHead, 1)] {
+            assert_eq!(ctx.routing.route(layer).shard(), want,
+                       "layer {layer:?} misrouted");
         }
         drop(ctx); // deregisters everywhere
         assert!(matches!(rx0.try_recv().unwrap(),
@@ -397,15 +686,21 @@ mod tests {
                          ExecMsg::Deregister { client_id: 7 }));
     }
 
-    /// Which shard index a layer routes to (test helper: compares the
-    /// route's channel against the table's endpoints by identity).
-    fn ctx_route(ctx: &VirtLayerCtx, layer: LayerId) -> usize {
-        let target = ctx.routing.route(layer) as *const ShardRoute;
-        ctx.routing
-            .routes()
-            .iter()
-            .position(|r| std::ptr::eq(r, target))
-            .unwrap()
+    #[test]
+    fn malformed_table_is_a_typed_error_not_a_panic() {
+        let (tx, _rx) = channel();
+        let err = RoutingTable::new(
+            LayerAssignment::contiguous(4, 2),
+            vec![ShardRoute::new(tx, LinkKind::SharedLocal)],
+        )
+        .unwrap_err();
+        match err {
+            SymbiosisError::MalformedRoutingTable { shards, routes } => {
+                assert_eq!(shards, 2);
+                assert_eq!(routes, 1);
+            }
+            other => panic!("expected MalformedRoutingTable, got {other}"),
+        }
     }
 
     #[test]
@@ -490,6 +785,179 @@ mod tests {
             }
             other => panic!("expected ExecutorFailed, got {other}"),
         }
+    }
+
+    #[test]
+    fn collect_deadline_surfaces_a_hung_shard() {
+        // A shard that never answers: the receiver end is parked.
+        let (tx, _rx) = channel();
+        let table = RoutingTable::single(tx, LinkKind::SharedLocal);
+        let ctx = VirtLayerCtx::new(3, table);
+        let pend = ctx
+            .dispatch(LayerId::Qkv(0), OpKind::Forward,
+                      Tensor::zeros(&[2, 4]), None, Urgency::Bulk)
+            .unwrap();
+        let err = pend
+            .collect_deadline(Duration::from_millis(10))
+            .unwrap_err();
+        match SymbiosisError::from(err) {
+            SymbiosisError::DeadlineExceeded { layer, shard, waited } => {
+                assert_eq!(layer, "l0.qkv");
+                assert_eq!(shard, 0);
+                assert_eq!(waited, Duration::from_millis(10));
+            }
+            other => panic!("expected DeadlineExceeded, got {other}"),
+        }
+    }
+
+    #[test]
+    fn context_timeout_applies_to_plain_collect() {
+        let (tx, _rx) = channel();
+        let table = RoutingTable::single(tx, LinkKind::SharedLocal);
+        let mut ctx = VirtLayerCtx::new(0, table);
+        ctx.request_timeout = Some(Duration::from_millis(10));
+        let err = ctx
+            .forward(LayerId::Qkv(0), Tensor::zeros(&[1, 4]),
+                     Urgency::Bulk)
+            .unwrap_err();
+        assert!(matches!(SymbiosisError::from(err),
+                         SymbiosisError::DeadlineExceeded { .. }));
+    }
+
+    /// Fake shard: answers the first `fail` requests with an error,
+    /// then echoes a zeros tensor of the given shape.
+    fn flaky_shard(rx: std::sync::mpsc::Receiver<ExecMsg>, fail: usize,
+                   shape: Vec<usize>) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let mut failures = 0;
+            while let Ok(msg) = rx.recv() {
+                if let ExecMsg::Request(req) = msg {
+                    let y = if failures < fail {
+                        failures += 1;
+                        Err("transient fault".into())
+                    } else {
+                        Ok(Tensor::zeros(&shape))
+                    };
+                    let _ = req.resp.send(LayerResponse {
+                        y,
+                        queue_wait_secs: 0.0,
+                        batch_clients: 1,
+                    });
+                }
+            }
+        })
+    }
+
+    #[test]
+    fn retry_recovers_from_a_transient_fault() {
+        let (tx, rx) = channel();
+        let _shard = flaky_shard(rx, 2, vec![2, 8]);
+        let table = RoutingTable::single(tx, LinkKind::SharedLocal);
+        let mut ctx = VirtLayerCtx::new(0, table);
+        ctx.retry = RetryPolicy::retries(2)
+            .with_backoff(Duration::from_millis(1));
+        let y = ctx
+            .forward(LayerId::Qkv(0), Tensor::zeros(&[2, 4]),
+                     Urgency::Bulk)
+            .unwrap();
+        assert_eq!(y.shape, vec![2, 8]);
+        // 3 attempts crossed the request link, 1 response came back
+        let (msgs, _) = ctx.link_traffic()[0];
+        assert_eq!(msgs, 4);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_is_shard_unavailable() {
+        let (tx, rx) = channel();
+        let _shard = flaky_shard(rx, usize::MAX, vec![2, 8]);
+        let table = RoutingTable::single(tx, LinkKind::SharedLocal);
+        let mut ctx = VirtLayerCtx::new(0, table);
+        ctx.retry = RetryPolicy::retries(2)
+            .with_backoff(Duration::from_millis(1));
+        let err = ctx
+            .forward(LayerId::Qkv(0), Tensor::zeros(&[2, 4]),
+                     Urgency::Bulk)
+            .unwrap_err();
+        match SymbiosisError::from(err) {
+            SymbiosisError::ShardUnavailable { shard, retries } => {
+                assert_eq!(shard, 0);
+                assert_eq!(retries, 2);
+            }
+            other => panic!("expected ShardUnavailable, got {other}"),
+        }
+    }
+
+    #[test]
+    fn endpoint_swap_reroutes_the_retry() {
+        // First executor is already gone (sender dropped); the swap
+        // installs a live replacement, and the retry lands there.
+        let (dead_tx, _) = channel::<ExecMsg>();
+        let endpoint = Arc::new(ShardEndpoint::new(dead_tx));
+        let table = RoutingTable {
+            assign: LayerAssignment::contiguous(1, 1),
+            routes: vec![ShardRoute::shared(0, endpoint.clone(),
+                                            LinkKind::SharedLocal)],
+        };
+        let mut ctx = VirtLayerCtx::new(0, table);
+        ctx.retry = RetryPolicy::retries(1)
+            .with_backoff(Duration::from_millis(1));
+        assert_eq!(endpoint.epoch(), 0);
+        let (live_tx, live_rx) = channel();
+        let _shard = flaky_shard(live_rx, 0, vec![1, 8]);
+        assert_eq!(endpoint.swap(live_tx), 1);
+        // dispatch resolves the *current* sender, so this succeeds even
+        // though the route was built over the dead executor
+        let y = ctx
+            .forward(LayerId::Qkv(0), Tensor::zeros(&[1, 4]),
+                     Urgency::Bulk)
+            .unwrap();
+        assert_eq!(y.shape, vec![1, 8]);
+        assert_eq!(ctx.route_epochs(), vec![1]);
+    }
+
+    #[test]
+    fn dead_endpoint_burns_budget_without_looping() {
+        // Both the original executor and every retry target are gone:
+        // the budget must exhaust promptly with ShardUnavailable.
+        let (tx, rx) = channel::<ExecMsg>();
+        let table = RoutingTable::single(tx, LinkKind::SharedLocal);
+        let mut ctx = VirtLayerCtx::new(0, table);
+        ctx.retry = RetryPolicy::retries(2)
+            .with_backoff(Duration::from_millis(1));
+        let pend = ctx
+            .dispatch(LayerId::Qkv(0), OpKind::Forward,
+                      Tensor::zeros(&[1, 4]), None, Urgency::Bulk)
+            .unwrap();
+        drop(rx); // the shard dies with the request queued
+        let err = pend.collect().unwrap_err();
+        assert!(matches!(SymbiosisError::from(err),
+                         SymbiosisError::ShardUnavailable { .. }));
+    }
+
+    #[test]
+    fn poisoned_link_lock_recovers() {
+        let (tx, _rx) = channel();
+        let route = ShardRoute::new(tx, LinkKind::NvLink);
+        let route = Arc::new(route);
+        let r2 = route.clone();
+        // Poison the link mutex from a panicking thread.
+        let _ = std::thread::spawn(move || {
+            let _guard = r2.link.lock().unwrap();
+            panic!("poison the link");
+        })
+        .join();
+        assert!(route.link.lock().is_err(), "lock should be poisoned");
+        // charge() and link_traffic() still work on the same table.
+        let table = RoutingTable {
+            assign: LayerAssignment::contiguous(1, 1),
+            routes: vec![Arc::try_unwrap(route).ok().unwrap()],
+        };
+        let ctx = VirtLayerCtx::new(0, table);
+        let _ = ctx.dispatch(LayerId::Qkv(0), OpKind::Forward,
+                             Tensor::zeros(&[2, 4]), None, Urgency::Bulk);
+        let (msgs, bytes) = ctx.link_traffic()[0];
+        assert_eq!(msgs, 1);
+        assert_eq!(bytes, 2 * 4 * 4);
     }
 
     #[test]

@@ -8,6 +8,33 @@
 //! serving layers can map each class to a different response (reject vs
 //! retry vs 500).  Internal layers keep `anyhow`; the `From` impl wraps
 //! whatever crosses the public boundary.
+//!
+//! # Error taxonomy
+//!
+//! The triage a serving layer should apply per variant.  *Reject* means
+//! the request is malformed or misused and re-sending it verbatim will
+//! fail again (HTTP 4xx); *retry* means the fault is transient — the
+//! same request may succeed against a re-spawned shard or after
+//! backoff (HTTP 503 + Retry-After); *500* means an operator-level
+//! fault (capacity misplanning, engine/artifact corruption) that no
+//! client action fixes.
+//!
+//! | Variant | Triage | Why |
+//! |---|---|---|
+//! | `UnsupportedBatch` | reject | no compiled artifact for this batch |
+//! | `ContextExceeded` | reject | prompt longer than the largest bucket |
+//! | `PrefilledCacheNeedsIncremental` | reject | API misuse on a seeded cache |
+//! | `DecodeBeforePrefill` | reject | API misuse |
+//! | `PrefixBatchMismatch` | reject | adapter built for another batch |
+//! | `NotTrainable` | reject | adapter has no trainable layout |
+//! | `InvalidGenerationConfig` | reject | malformed request |
+//! | `MalformedRoutingTable` | reject | assignment/route count mismatch |
+//! | `DeadlineExceeded` | retry | shard hung or overloaded; frozen-base ops are pure, safe to re-send |
+//! | `ExecutorFailed` | retry | per-request shard fault; a respawned shard may serve it |
+//! | `ShardUnavailable` | retry (after respawn) | bounded-retry budget exhausted; escalate if it persists |
+//! | `KvCacheOom` | retry (after eviction) | co-tenant pressure; frees up when a tenant leaves |
+//! | `ShardOom` | 500 | fleet cannot hold the model; operator must re-plan |
+//! | `Runtime` | 500 | engine/artifact/channel fault below the API |
 
 use std::fmt;
 
@@ -41,6 +68,24 @@ pub enum SymbiosisError {
     /// artifact fault).  Reported over the wire per request — clients
     /// see the executor's actual error instead of a dropped channel.
     ExecutorFailed { layer: String, message: String },
+    /// A layer request did not come back within the configured
+    /// `request_timeout`: the shard is hung, crashed mid-flush, or
+    /// overloaded.  Frozen-base ops are pure, so the request is safe
+    /// to re-send (the client walker does this automatically under a
+    /// [`crate::coordinator::RetryPolicy`]).
+    DeadlineExceeded {
+        layer: String,
+        shard: usize,
+        waited: std::time::Duration,
+    },
+    /// The bounded-retry budget against one shard is exhausted: every
+    /// attempt (including any against a re-spawned executor) failed or
+    /// timed out.  The source chain carries the last underlying fault.
+    ShardUnavailable { shard: usize, retries: u32 },
+    /// A routing table was built with a route count that does not match
+    /// its layer assignment's shard count — a malformed deployment, not
+    /// a runtime fault.
+    MalformedRoutingTable { shards: usize, routes: usize },
     /// A shard's resident slice of the base weights does not fit its
     /// device ledger: the `ShardPlan` cannot be deployed on this fleet
     /// (paper Fig. 17's "model too large for N GPUs" lines).
@@ -103,6 +148,22 @@ impl fmt::Display for SymbiosisError {
             SymbiosisError::ExecutorFailed { layer, message } => {
                 write!(f, "shard executor failed serving layer {layer}: \
                            {message}")
+            }
+            SymbiosisError::DeadlineExceeded { layer, shard, waited } => {
+                write!(f, "layer {layer} on shard {shard} missed its \
+                           deadline after {:.1} ms — the shard is hung \
+                           or overloaded; the request is pure and safe \
+                           to retry", waited.as_secs_f64() * 1e3)
+            }
+            SymbiosisError::ShardUnavailable { shard, retries } => {
+                write!(f, "shard {shard} unavailable after {retries} \
+                           retr{} — respawn the shard or escalate",
+                       if *retries == 1 { "y" } else { "ies" })
+            }
+            SymbiosisError::MalformedRoutingTable { shards, routes } => {
+                write!(f, "routing table is malformed: the layer \
+                           assignment spans {shards} shards but \
+                           {routes} routes were supplied")
             }
             SymbiosisError::ShardOom {
                 shard,
@@ -196,6 +257,50 @@ mod tests {
         assert!(msg.contains("512"));
         assert!(msg.contains("768"));
         assert!(msg.contains("1024"));
+    }
+
+    #[test]
+    fn fault_domain_errors_name_shard_and_budget() {
+        let e = SymbiosisError::DeadlineExceeded {
+            layer: "l1.mlp_up".into(),
+            shard: 2,
+            waited: std::time::Duration::from_millis(250),
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("l1.mlp_up"));
+        assert!(msg.contains("shard 2"));
+        assert!(msg.contains("250.0 ms"));
+        let e = SymbiosisError::ShardUnavailable { shard: 1, retries: 3 };
+        assert!(format!("{e}").contains("shard 1 unavailable after \
+                                         3 retries"));
+        let e = SymbiosisError::ShardUnavailable { shard: 0, retries: 1 };
+        assert!(format!("{e}").contains("1 retry"));
+        let e = SymbiosisError::MalformedRoutingTable {
+            shards: 4,
+            routes: 2,
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains('4'));
+        assert!(msg.contains('2'));
+    }
+
+    #[test]
+    fn shard_unavailable_context_downcasts_to_outermost() {
+        // The retry loop wraps the last underlying fault in
+        // `ShardUnavailable` via anyhow context; the public boundary
+        // must surface the outermost (triage-relevant) variant.
+        let inner: anyhow::Error = SymbiosisError::ExecutorFailed {
+            layer: "l0.qkv".into(),
+            message: "flush rejected".into(),
+        }
+        .into();
+        let wrapped = inner
+            .context(SymbiosisError::ShardUnavailable { shard: 0,
+                                                        retries: 2 });
+        let back: SymbiosisError = wrapped.into();
+        assert!(matches!(back,
+                         SymbiosisError::ShardUnavailable { shard: 0,
+                                                            retries: 2 }));
     }
 
     #[test]

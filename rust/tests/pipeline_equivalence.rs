@@ -24,11 +24,10 @@ use std::time::Duration;
 
 use symbiosis::config::SYM_TINY;
 use symbiosis::coordinator::adapter::LoraTargets;
-use symbiosis::coordinator::proto::{ExecMsg, LayerResponse};
 use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
-                             GenerationConfig, LayerAssignment, LayerId,
-                             Placement, RoutingTable, ShardRoute,
-                             SymbiosisError, VirtLayerCtx};
+                             FaultAction, FaultPlan, FaultRule,
+                             GenerationConfig, Placement,
+                             SymbiosisError};
 use symbiosis::device::{DeviceKind, MemoryLedger};
 use symbiosis::runtime::Engine;
 use symbiosis::transport::LinkKind;
@@ -202,32 +201,14 @@ fn failing_shard_mid_pipeline_surfaces_typed_error() {
         return;
     }
     let dep = deploy(2, BatchPolicy::NoLockstep);
-    // Fake shard 1: answers every request with a typed failure, like a
-    // shard whose engine rejects every flush.
-    let (fake_tx, fake_rx) = channel();
-    std::thread::spawn(move || {
-        while let Ok(msg) = fake_rx.recv() {
-            if let ExecMsg::Request(req) = msg {
-                let _ = req.resp.send(LayerResponse {
-                    y: Err("injected shard fault".into()),
-                    queue_wait_secs: 0.0,
-                    batch_clients: 1,
-                });
-            }
-        }
-    });
+    // Fault-inject shard 1: every request to it answers a typed
+    // failure, like a shard whose engine rejects every flush.  Blocks
+    // 0-1 still ride the healthy shard 0.
+    dep.inject_faults(FaultPlan::new(11).rule(FaultRule::on(
+        1,
+        FaultAction::ErrorResponse("injected shard fault".into()),
+    )));
     let mut sess = dep.session().build().unwrap();
-    // Reroute the session: blocks 0-1 to the real shard 0, blocks 2-3
-    // (and the LM head) to the failing fake.
-    let table = RoutingTable::new(
-        LayerAssignment::contiguous(SYM_TINY.n_layers, 2),
-        vec![
-            ShardRoute::new(dep.executor.sender_for(LayerId::Qkv(0)),
-                            LinkKind::SharedLocal),
-            ShardRoute::new(fake_tx, LinkKind::SharedLocal),
-        ],
-    );
-    sess.core.virt = Arc::new(VirtLayerCtx::new(997, table));
 
     let (done_tx, done_rx) = channel();
     let handle = std::thread::spawn(move || {
