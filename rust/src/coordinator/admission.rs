@@ -1,0 +1,378 @@
+//! Admission control — per-tenant quotas over the shared fleet.
+//!
+//! The paper's economics are dense multi-tenancy (20 adapters sharing
+//! one Gemma2-27B base); the failure mode of dense multi-tenancy is one
+//! tenant starving the rest.  The [`AdmissionController`] (owned by
+//! `ExecutorFleet`) tracks a [`TenantState`] per named tenant and
+//! enforces three quotas, each optional and unlimited by default:
+//!
+//! * **concurrent sessions** — checked by `SessionBuilder::build` /
+//!   `TrainerBuilder::build`; a denied build fails fast with a typed
+//!   [`SymbiosisError::AdmissionDenied`] naming the tenant, before any
+//!   executor state is touched.
+//! * **in-flight layer requests** — checked by `VirtLayerCtx::dispatch`;
+//!   exceeding it is [`SymbiosisError::QuotaExceeded`].  Released when
+//!   the request is collected or abandoned (RAII [`InFlightGuard`]).
+//! * **KV-cache bytes** — charged by `KvLedger` *before* the device
+//!   ledger, so a tenant hits its own budget with `QuotaExceeded`
+//!   before it can push a co-tenant into `KvCacheOom`.
+//!
+//! Sessions that never name a tenant bypass admission entirely — the
+//! controller costs nothing until quotas are configured, and every
+//! pre-overload caller keeps its exact behavior.
+//!
+//! Counters are plain atomics updated via `fetch_update` (check and
+//! reserve in one step), so admission never takes a lock on the
+//! dispatch hot path; the controller's tenant map is only locked on
+//! session build and quota configuration.
+
+#![deny(clippy::unwrap_used)]
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{SymResult, SymbiosisError};
+
+/// Per-tenant quota configuration.  `None` = unlimited (the default):
+/// an unconfigured tenant is never denied anything.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// Max concurrently live sessions + trainers.
+    pub max_sessions: Option<usize>,
+    /// Max layer requests in flight at once (dispatched, not yet
+    /// collected) across all of the tenant's clients.
+    pub max_in_flight: Option<usize>,
+    /// Max bytes of KV cache across all of the tenant's sessions.
+    pub max_kv_bytes: Option<u64>,
+}
+
+impl TenantQuota {
+    /// No limits — the behavior of a tenant nobody configured.
+    pub fn unlimited() -> Self {
+        TenantQuota::default()
+    }
+
+    pub fn max_sessions(mut self, n: usize) -> Self {
+        self.max_sessions = Some(n);
+        self
+    }
+
+    pub fn max_in_flight(mut self, n: usize) -> Self {
+        self.max_in_flight = Some(n);
+        self
+    }
+
+    pub fn max_kv_bytes(mut self, bytes: u64) -> Self {
+        self.max_kv_bytes = Some(bytes);
+        self
+    }
+}
+
+/// Live usage + limits of one tenant.  Shared (`Arc`) between the
+/// admission controller, every `VirtLayerCtx` of the tenant's clients,
+/// and the tenant's KV ledgers.  Limits are stored as atomics
+/// (`usize::MAX`/`u64::MAX` = unlimited) so quota changes apply to live
+/// tenants without locking the dispatch path.
+pub struct TenantState {
+    name: String,
+    max_sessions: AtomicUsize,
+    max_in_flight: AtomicUsize,
+    max_kv_bytes: AtomicU64,
+    sessions: AtomicUsize,
+    in_flight: AtomicUsize,
+    kv_bytes: AtomicU64,
+}
+
+impl TenantState {
+    fn new(name: &str) -> Self {
+        TenantState {
+            name: name.to_string(),
+            max_sessions: AtomicUsize::new(usize::MAX),
+            max_in_flight: AtomicUsize::new(usize::MAX),
+            max_kv_bytes: AtomicU64::new(u64::MAX),
+            sessions: AtomicUsize::new(0),
+            in_flight: AtomicUsize::new(0),
+            kv_bytes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn set_quota(&self, q: TenantQuota) {
+        self.max_sessions
+            .store(q.max_sessions.unwrap_or(usize::MAX), Ordering::SeqCst);
+        self.max_in_flight
+            .store(q.max_in_flight.unwrap_or(usize::MAX),
+                   Ordering::SeqCst);
+        self.max_kv_bytes
+            .store(q.max_kv_bytes.unwrap_or(u64::MAX), Ordering::SeqCst);
+    }
+
+    /// Admit one new session/trainer, or fail with a typed
+    /// [`SymbiosisError::AdmissionDenied`].  The returned ticket holds
+    /// the slot; dropping it (session/trainer teardown) releases it.
+    pub fn admit_session(self: &Arc<Self>) -> SymResult<SessionTicket> {
+        let limit = self.max_sessions.load(Ordering::SeqCst);
+        match self.sessions.fetch_update(Ordering::SeqCst,
+                                         Ordering::SeqCst, |cur| {
+            if cur >= limit { None } else { Some(cur + 1) }
+        }) {
+            Ok(_) => Ok(SessionTicket { tenant: self.clone() }),
+            Err(cur) => Err(SymbiosisError::AdmissionDenied {
+                tenant: self.name.clone(),
+                resource: "concurrent sessions",
+                current: cur,
+                limit,
+            }),
+        }
+    }
+
+    /// Reserve one in-flight request slot, or fail with a typed
+    /// [`SymbiosisError::QuotaExceeded`].  Dropping the guard (collect
+    /// finished, or the pending request abandoned) releases the slot.
+    pub fn begin_request(self: &Arc<Self>) -> SymResult<InFlightGuard> {
+        let limit = self.max_in_flight.load(Ordering::SeqCst);
+        match self.in_flight.fetch_update(Ordering::SeqCst,
+                                          Ordering::SeqCst, |cur| {
+            if cur >= limit { None } else { Some(cur + 1) }
+        }) {
+            Ok(_) => Ok(InFlightGuard { tenant: self.clone() }),
+            Err(cur) => Err(SymbiosisError::QuotaExceeded {
+                tenant: self.name.clone(),
+                resource: "in-flight layer requests",
+                used: cur as u64,
+                requested: 1,
+                limit: limit as u64,
+            }),
+        }
+    }
+
+    /// Re-charge one KV allocation from `prev` to `next` bytes against
+    /// the tenant budget (the ledger charges absolute totals per tag).
+    /// Shrinking always succeeds; growth past the quota fails with a
+    /// typed [`SymbiosisError::QuotaExceeded`] *without* mutating the
+    /// count, so the caller never needs to roll this back.
+    pub fn adjust_kv(&self, prev: u64, next: u64) -> SymResult<()> {
+        let limit = self.max_kv_bytes.load(Ordering::SeqCst);
+        match self.kv_bytes.fetch_update(Ordering::SeqCst,
+                                         Ordering::SeqCst, |cur| {
+            let total = cur.saturating_sub(prev).saturating_add(next);
+            if next > prev && total > limit {
+                None
+            } else {
+                Some(total)
+            }
+        }) {
+            Ok(_) => Ok(()),
+            Err(cur) => Err(SymbiosisError::QuotaExceeded {
+                tenant: self.name.clone(),
+                resource: "KV-cache bytes",
+                used: cur.saturating_sub(prev),
+                requested: next,
+                limit,
+            }),
+        }
+    }
+
+    /// Return `bytes` of KV budget (ledger teardown).
+    pub fn release_kv(&self, bytes: u64) {
+        let _ = self.kv_bytes.fetch_update(Ordering::SeqCst,
+                                           Ordering::SeqCst, |cur| {
+            Some(cur.saturating_sub(bytes))
+        });
+    }
+
+    /// Live sessions held by this tenant right now.
+    pub fn sessions(&self) -> usize {
+        self.sessions.load(Ordering::SeqCst)
+    }
+
+    /// Layer requests in flight right now.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// KV bytes charged right now.
+    pub fn kv_bytes(&self) -> u64 {
+        self.kv_bytes.load(Ordering::SeqCst)
+    }
+}
+
+impl std::fmt::Debug for TenantState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+           -> std::fmt::Result {
+        f.debug_struct("TenantState")
+            .field("name", &self.name)
+            .field("sessions", &self.sessions())
+            .field("in_flight", &self.in_flight())
+            .field("kv_bytes", &self.kv_bytes())
+            .finish_non_exhaustive()
+    }
+}
+
+/// RAII slot in a tenant's concurrent-session quota.
+pub struct SessionTicket {
+    tenant: Arc<TenantState>,
+}
+
+impl Drop for SessionTicket {
+    fn drop(&mut self) {
+        let _ = self.tenant.sessions.fetch_update(Ordering::SeqCst,
+                                                  Ordering::SeqCst,
+                                                  |cur| {
+            Some(cur.saturating_sub(1))
+        });
+    }
+}
+
+/// RAII slot in a tenant's in-flight request quota.
+pub struct InFlightGuard {
+    tenant: Arc<TenantState>,
+}
+
+impl Drop for InFlightGuard {
+    fn drop(&mut self) {
+        let _ = self.tenant.in_flight.fetch_update(Ordering::SeqCst,
+                                                   Ordering::SeqCst,
+                                                   |cur| {
+            Some(cur.saturating_sub(1))
+        });
+    }
+}
+
+/// The fleet's tenant registry.  Quotas configure lazily: naming a
+/// tenant on a builder creates its (unlimited) state on first use;
+/// [`AdmissionController::set_quota`] installs or updates limits, live.
+#[derive(Default)]
+pub struct AdmissionController {
+    tenants: Mutex<HashMap<String, Arc<TenantState>>>,
+}
+
+impl AdmissionController {
+    pub fn new() -> Self {
+        AdmissionController::default()
+    }
+
+    /// The tenant's shared state, created unlimited on first use.
+    pub fn tenant(&self, name: &str) -> Arc<TenantState> {
+        self.tenants
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(TenantState::new(name)))
+            .clone()
+    }
+
+    /// Install or update a tenant's quota (applies to live clients —
+    /// limits are read per admission check, not captured at build).
+    pub fn set_quota(&self, name: &str, quota: TenantQuota) {
+        self.tenant(name).set_quota(quota);
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unconfigured_tenant_is_never_denied() {
+        let ctl = AdmissionController::new();
+        let t = ctl.tenant("free");
+        let _tickets: Vec<_> =
+            (0..64).map(|_| t.admit_session().unwrap()).collect();
+        let _guards: Vec<_> =
+            (0..64).map(|_| t.begin_request().unwrap()).collect();
+        t.adjust_kv(0, u64::MAX / 2).unwrap();
+    }
+
+    #[test]
+    fn session_quota_denies_then_releases() {
+        let ctl = AdmissionController::new();
+        ctl.set_quota("acme", TenantQuota::unlimited().max_sessions(2));
+        let t = ctl.tenant("acme");
+        let a = t.admit_session().unwrap();
+        let _b = t.admit_session().unwrap();
+        let err = t.admit_session().unwrap_err();
+        match err {
+            SymbiosisError::AdmissionDenied {
+                tenant,
+                resource,
+                current,
+                limit,
+            } => {
+                assert_eq!(tenant, "acme");
+                assert_eq!(resource, "concurrent sessions");
+                assert_eq!(current, 2);
+                assert_eq!(limit, 2);
+            }
+            other => panic!("expected AdmissionDenied, got {other}"),
+        }
+        drop(a); // ticket drop frees the slot
+        let _c = t.admit_session().unwrap();
+        assert_eq!(t.sessions(), 2);
+    }
+
+    #[test]
+    fn in_flight_quota_is_raii() {
+        let ctl = AdmissionController::new();
+        ctl.set_quota("acme", TenantQuota::unlimited().max_in_flight(1));
+        let t = ctl.tenant("acme");
+        let g = t.begin_request().unwrap();
+        assert!(matches!(t.begin_request().unwrap_err(),
+                         SymbiosisError::QuotaExceeded {
+                             resource: "in-flight layer requests",
+                             ..
+                         }));
+        drop(g);
+        assert_eq!(t.in_flight(), 0);
+        let _g2 = t.begin_request().unwrap();
+    }
+
+    #[test]
+    fn kv_quota_charges_absolute_and_shrinks_freely() {
+        let ctl = AdmissionController::new();
+        ctl.set_quota("acme", TenantQuota::unlimited().max_kv_bytes(1000));
+        let t = ctl.tenant("acme");
+        t.adjust_kv(0, 600).unwrap();
+        t.adjust_kv(0, 300).unwrap(); // a second cache
+        assert_eq!(t.kv_bytes(), 900);
+        // growing the first cache past the budget fails, count untouched
+        let err = t.adjust_kv(600, 800).unwrap_err();
+        match err {
+            SymbiosisError::QuotaExceeded {
+                resource,
+                used,
+                requested,
+                limit,
+                ..
+            } => {
+                assert_eq!(resource, "KV-cache bytes");
+                assert_eq!(used, 300);
+                assert_eq!(requested, 800);
+                assert_eq!(limit, 1000);
+            }
+            other => panic!("expected QuotaExceeded, got {other}"),
+        }
+        assert_eq!(t.kv_bytes(), 900);
+        // shrinking is always admitted, even at the limit
+        t.adjust_kv(600, 100).unwrap();
+        assert_eq!(t.kv_bytes(), 400);
+        t.release_kv(300);
+        assert_eq!(t.kv_bytes(), 100);
+    }
+
+    #[test]
+    fn quota_updates_apply_to_live_tenants() {
+        let ctl = AdmissionController::new();
+        let t = ctl.tenant("acme");
+        let _a = t.admit_session().unwrap();
+        ctl.set_quota("acme", TenantQuota::unlimited().max_sessions(1));
+        assert!(t.admit_session().is_err());
+        ctl.set_quota("acme", TenantQuota::unlimited());
+        assert!(t.admit_session().is_ok());
+    }
+}

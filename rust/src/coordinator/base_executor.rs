@@ -28,6 +28,23 @@
 //! backward (`dX = dY . W^T`, section 3.6) means no forward activation is
 //! ever stored here, which is what keeps its memory footprint flat in
 //! Figs. 9/10.
+//!
+//! # Overload: ingress metering and urgency-based shedding
+//!
+//! The executor decrements the shard's shared
+//! [`IngressMeter`](crate::coordinator::virt_layer::IngressMeter) for
+//! every dequeued request (dispatch incremented it), which is what makes
+//! the fleet's high-water mark a real queue bound.  When the meter
+//! stands at its mark, a flush whose every request is
+//! [`Urgency::Background`] is **shed**: each co-batched request is
+//! answered with a [`SHED_MARKER`]-prefixed error (clients surface it as
+//! the typed, non-retried `WorkShed`) and the device executes nothing —
+//! interactive decode rides out the brown-out at full speed while
+//! deferrable work yields.
+
+// Fault-domain hot path: locks recover from poison explicitly, map
+// lookups carry their invariants as expect messages.
+#![deny(clippy::unwrap_used)]
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -42,7 +59,9 @@ use crate::coordinator::batching::BatchPolicy;
 use crate::coordinator::fleet::FleetBarrier;
 use crate::coordinator::model_state::ShardWeights;
 use crate::coordinator::proto::{ExecMsg, LayerId, LayerRequest,
-                                LayerResponse, OpKind};
+                                LayerResponse, OpKind, Urgency,
+                                SHED_MARKER};
+use crate::coordinator::virt_layer::IngressMeter;
 use crate::device::Device;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
@@ -76,6 +95,7 @@ struct StatsInner {
     real_tokens: u64,
     bucket_tokens: u64,
     requests_served: u64,
+    requests_shed: u64,
     noise_registrations: u64,
     busy_secs: f64,
     idle_secs: f64,
@@ -104,6 +124,7 @@ impl StatsInner {
             real_tokens: self.real_tokens,
             bucket_tokens: self.bucket_tokens,
             requests_served: self.requests_served,
+            requests_shed: self.requests_shed,
             noise_registrations: self.noise_registrations,
             busy_secs: self.busy_secs,
             idle_secs: self.idle_secs,
@@ -131,6 +152,9 @@ pub struct ExecutorStats {
     pub real_tokens: u64,
     pub bucket_tokens: u64,
     pub requests_served: u64,
+    /// Background requests answered by the load shedder instead of the
+    /// device (saturation brown-outs).
+    pub requests_shed: u64,
     pub noise_registrations: u64,
     /// Wall seconds this shard spent executing flushes.
     pub busy_secs: f64,
@@ -201,6 +225,7 @@ impl ExecutorStats {
         self.real_tokens += other.real_tokens;
         self.bucket_tokens += other.bucket_tokens;
         self.requests_served += other.requests_served;
+        self.requests_shed += other.requests_shed;
         self.noise_registrations += other.noise_registrations;
         self.busy_secs += other.busy_secs;
         self.idle_secs += other.idle_secs;
@@ -217,6 +242,10 @@ struct Pending {
     /// Whether any queued request is latency-sensitive (decode): such
     /// batches flush as soon as the executor would otherwise idle.
     has_interactive: bool,
+    /// Whether *every* queued request is `Urgency::Background` — only
+    /// such batches are sheddable: co-batching with even one
+    /// non-background request buys the batch an execution.
+    all_background: bool,
     /// Running sum of queued token rows.
     tokens: usize,
     /// Distinct client ids in arrival order (small; linear scan).
@@ -229,6 +258,7 @@ impl Pending {
             reqs: Vec::new(),
             deadline,
             has_interactive: false,
+            all_background: true,
             tokens: 0,
             clients: Vec::new(),
         }
@@ -236,6 +266,7 @@ impl Pending {
 
     fn push(&mut self, req: LayerRequest, at: Instant) {
         self.tokens += req.x.shape[0];
+        self.all_background &= req.urgency == Urgency::Background;
         if !self.clients.contains(&req.client_id) {
             self.clients.push(req.client_id);
         }
@@ -279,9 +310,10 @@ impl ShardExecutor {
     /// shard-local count.
     pub fn spawn(engine: Arc<Engine>, weights: ShardWeights,
                  policy: BatchPolicy, device: Device,
-                 barrier: Arc<FleetBarrier>) -> ShardExecutor {
+                 barrier: Arc<FleetBarrier>,
+                 meter: Arc<IngressMeter>) -> ShardExecutor {
         Self::spawn_with_registered(engine, weights, policy, device,
-                                    barrier, 0)
+                                    barrier, 0, meter)
     }
 
     /// [`Self::spawn`] with a non-zero initial shard-local registration
@@ -289,11 +321,15 @@ impl ShardExecutor {
     /// executor generation never re-send `Register`, so the replacement
     /// seeds its local count from the fleet barrier instead of starting
     /// at zero (which would break per-shard `Lockstep` flushing).
+    /// `meter` is the shard's *stable* ingress meter (shared with the
+    /// routing endpoint): the executor decrements it per dequeued
+    /// request and consults it for the shed decision.
     pub fn spawn_with_registered(engine: Arc<Engine>,
                                  weights: ShardWeights,
                                  policy: BatchPolicy, device: Device,
                                  barrier: Arc<FleetBarrier>,
-                                 initial_registered: usize)
+                                 initial_registered: usize,
+                                 meter: Arc<IngressMeter>)
                                  -> ShardExecutor {
         let shard = weights.shard;
         let (tx, rx) = channel();
@@ -303,7 +339,7 @@ impl ShardExecutor {
             .name(format!("shard-exec-{shard}"))
             .spawn(move || {
                 run_loop(engine, weights, policy, rx, stats2, barrier,
-                         initial_registered)
+                         initial_registered, meter)
             })
             .expect("spawn shard executor");
         ShardExecutor {
@@ -373,9 +409,11 @@ impl Drop for ShardExecutor {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
             rx: Receiver<ExecMsg>, stats: Arc<Mutex<StatsInner>>,
-            barrier: Arc<FleetBarrier>, initial_registered: usize) {
+            barrier: Arc<FleetBarrier>, initial_registered: usize,
+            meter: Arc<IngressMeter>) {
     let mut pending: HashMap<(LayerId, OpKind), Pending> = HashMap::new();
     let mut scratch: ScratchMap = HashMap::new();
     let mut registered: usize = initial_registered;
@@ -383,7 +421,7 @@ fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
         // Liveness heartbeat: advances every iteration, including pure
         // channel-timeout ticks — a stalled shard stops heartbeating,
         // an idle one does not.
-        stats.lock().unwrap().heartbeats += 1;
+        stats.lock().unwrap_or_else(|p| p.into_inner()).heartbeats += 1;
         // Earliest deadline among pending batches bounds the wait.
         let now = Instant::now();
         let next_deadline = pending.values().map(|p| p.deadline).min();
@@ -397,14 +435,15 @@ fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
         // the occupancy the pipeline bench reports.
         let wait_t0 = Instant::now();
         let recv = rx.recv_timeout(timeout);
-        stats.lock().unwrap().idle_secs +=
+        stats.lock().unwrap_or_else(|p| p.into_inner()).idle_secs +=
             wait_t0.elapsed().as_secs_f64();
         let first = match recv {
             Ok(m) => Some(m),
             Err(RecvTimeoutError::Timeout) => None,
             Err(RecvTimeoutError::Disconnected) => {
                 for (key, p) in pending.drain() {
-                    flush(&engine, &base, p, key, &stats, &mut scratch);
+                    flush(&engine, &base, p, key, &stats, &mut scratch,
+                          &meter);
                 }
                 return;
             }
@@ -433,7 +472,10 @@ fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
                 ExecMsg::RegisterNoise { layer, noise, resp } => {
                     // Bias-free linear flow: n_eff = W . n (section 3.8).
                     let out = noise_effect(&engine, &base, layer, &noise);
-                    stats.lock().unwrap().noise_registrations += 1;
+                    stats
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .noise_registrations += 1;
                     let _ = resp.send(LayerResponse {
                         y: out.map_err(|e| format!("{e:#}")),
                         queue_wait_secs: 0.0,
@@ -441,8 +483,12 @@ fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
                     });
                 }
                 ExecMsg::Request(req) => {
+                    // Dequeued: the dispatch-side ingress reservation is
+                    // released here, making the high-water mark a bound
+                    // on *queued* (not in-service) requests.
+                    meter.exit();
                     enqueue(&engine, &base, &policy, &stats, &mut pending,
-                            &mut scratch, req);
+                            &mut scratch, &meter, req);
                 }
                 ExecMsg::Shutdown => shutdown = true,
                 // Simulated hard crash: return *without* draining —
@@ -476,12 +522,15 @@ fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
             .map(|(k, _)| *k)
             .collect();
         for key in due {
-            let p = pending.remove(&key).unwrap();
-            flush(&engine, &base, p, key, &stats, &mut scratch);
+            let p = pending
+                .remove(&key)
+                .expect("due keys were just drawn from pending");
+            flush(&engine, &base, p, key, &stats, &mut scratch, &meter);
         }
         if shutdown {
             for (key, p) in pending.drain() {
-                flush(&engine, &base, p, key, &stats, &mut scratch);
+                flush(&engine, &base, p, key, &stats, &mut scratch,
+                      &meter);
             }
             return;
         }
@@ -490,15 +539,19 @@ fn run_loop(engine: Arc<Engine>, base: ShardWeights, policy: BatchPolicy,
 
 /// Queue one request, flushing early if the batch would overflow the
 /// largest token bucket.
+#[allow(clippy::too_many_arguments)]
 fn enqueue(engine: &Engine, base: &ShardWeights, policy: &BatchPolicy,
            stats: &Arc<Mutex<StatsInner>>,
            pending: &mut HashMap<(LayerId, OpKind), Pending>,
-           scratch: &mut ScratchMap, req: LayerRequest) {
+           scratch: &mut ScratchMap, meter: &IngressMeter,
+           req: LayerRequest) {
     let key = (req.layer, req.op);
     let budget = policy.wait_budget(req.urgency);
     let now = Instant::now();
-    let interactive = req.urgency == crate::coordinator::proto::Urgency::Interactive;
-    let max_bucket = *TOKEN_BUCKETS.last().unwrap();
+    let interactive = req.urgency == Urgency::Interactive;
+    let max_bucket = *TOKEN_BUCKETS
+        .last()
+        .expect("TOKEN_BUCKETS is a non-empty static");
     let overflows = {
         let p = pending
             .entry(key)
@@ -510,14 +563,19 @@ fn enqueue(engine: &Engine, base: &ShardWeights, policy: &BatchPolicy,
         p.total_tokens() + req.x.shape[0] > max_bucket
     };
     if overflows {
-        let full = pending.remove(&key).unwrap();
-        flush(engine, base, full, key, stats, scratch);
+        let full = pending
+            .remove(&key)
+            .expect("entry was just inserted above");
+        flush(engine, base, full, key, stats, scratch, meter);
         let mut fresh = Pending::new(now + budget);
         fresh.has_interactive = interactive;
         fresh.push(req, now);
         pending.insert(key, fresh);
     } else {
-        pending.get_mut(&key).unwrap().push(req, now);
+        pending
+            .get_mut(&key)
+            .expect("entry was just inserted above")
+            .push(req, now);
     }
 }
 
@@ -527,8 +585,31 @@ fn enqueue(engine: &Engine, base: &ShardWeights, policy: &BatchPolicy,
 /// channel disconnect.
 fn flush(engine: &Engine, base: &ShardWeights, p: Pending,
          key: (LayerId, OpKind), stats: &Arc<Mutex<StatsInner>>,
-         scratch: &mut ScratchMap) {
+         scratch: &mut ScratchMap, meter: &IngressMeter) {
     if p.reqs.is_empty() {
+        return;
+    }
+    // Urgency-based shedding: under saturation an all-background batch
+    // yields the device instead of executing — each request is answered
+    // with the typed shed marker (clients see `WorkShed`, deferred, not
+    // retried), so interactive decode proceeds through the brown-out.
+    if p.all_background && meter.saturated() {
+        let n = p.reqs.len();
+        for (req, _) in p.reqs {
+            let _ = req.resp.send(LayerResponse {
+                y: Err(format!(
+                    "{SHED_MARKER}shard {} shed background work under \
+                     ingress saturation",
+                    base.shard
+                )),
+                queue_wait_secs: 0.0,
+                batch_clients: n,
+            });
+        }
+        stats
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .requests_shed += n as u64;
         return;
     }
     let flush_start = Instant::now();
@@ -554,7 +635,7 @@ fn flush(engine: &Engine, base: &ShardWeights, p: Pending,
                     batch_clients: n_clients,
                 });
             }
-            let mut s = stats.lock().unwrap();
+            let mut s = stats.lock().unwrap_or_else(|p| p.into_inner());
             s.requests_served += n_requests as u64;
             s.busy_secs += flush_start.elapsed().as_secs_f64();
             s.record(FlushRecord {
@@ -578,8 +659,10 @@ fn flush(engine: &Engine, base: &ShardWeights, p: Pending,
                     batch_clients: n_clients,
                 });
             }
-            stats.lock().unwrap().busy_secs +=
-                flush_start.elapsed().as_secs_f64();
+            stats
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .busy_secs += flush_start.elapsed().as_secs_f64();
         }
     }
 }

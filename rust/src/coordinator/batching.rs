@@ -59,7 +59,9 @@ impl BatchPolicy {
             BatchPolicy::Opportunistic { base_wait } => match urgency {
                 Urgency::Interactive => *base_wait / 50,
                 Urgency::Bulk => *base_wait / 4,
-                Urgency::Training => *base_wait,
+                // Background is sheddable, not slower: it gets the full
+                // training budget when admitted at all.
+                Urgency::Training | Urgency::Background => *base_wait,
             },
         }
     }
@@ -121,5 +123,8 @@ mod tests {
         let i = p.wait_budget(Urgency::Interactive);
         assert!(i < b && b < t);
         assert_eq!(t, Duration::from_millis(50));
+        assert_eq!(p.wait_budget(Urgency::Background), t,
+                   "background waits like training; shedding — not a \
+                    shorter budget — is its degraded mode");
     }
 }

@@ -46,6 +46,8 @@
 //!   client-side attention/adapter/norm gradients, reproducing jax
 //!   autodiff (pinned by the golden integration tests).
 
+#![deny(clippy::unwrap_used)]
+
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -54,6 +56,7 @@ use crate::config::{bucket_for, ModelConfig, ATTN_BATCHES, SEQ_BUCKETS,
                     TOKEN_BUCKETS};
 use crate::coordinator::adapter::{Adapter, AdapterGrads, AdapterHooks,
                                   HookCtx, NO_ADAPTER};
+use crate::coordinator::admission::{SessionTicket, TenantState};
 use crate::coordinator::kv_cache::{KvCache, KvPlacement};
 use crate::coordinator::model_state::ClientWeights;
 use crate::coordinator::optimizer::Adam;
@@ -116,6 +119,52 @@ impl ClientCore {
             .as_ref()
             .map(|a| a.hooks())
             .unwrap_or(&NO_ADAPTER)
+    }
+
+    // The four block transitions below are the single source of the
+    // transformer-block math between base-layer hops.  Both walks — the
+    // sequential [`LayerWalker::walk`] and the split-phase
+    // [`PipelineDriver::advance`] — call these, so the math cannot
+    // drift between them; only the dispatch/collect sequencing differs.
+
+    /// Split the fused-QKV projection into `(q, k, v)` and run the
+    /// adapter's projection-side hooks (`qkv_delta`, then `kv_scale`).
+    fn qkv_split_adjust(&self, cx: &HookCtx, l: usize, a_in: &Tensor,
+                        qkv: &Tensor)
+                        -> Result<(Tensor, Tensor, Tensor)> {
+        let d = self.cfg.d_model;
+        let mut q = qkv.slice_cols(0, d);
+        let mut k = qkv.slice_cols(d, 2 * d);
+        let mut v = qkv.slice_cols(2 * d, 3 * d);
+        let hooks = self.hooks();
+        hooks.qkv_delta(cx, l, a_in, &mut q, &mut k, &mut v)?;
+        hooks.kv_scale(l, &mut k, &mut v);
+        Ok((q, k, v))
+    }
+
+    /// Attention-output transition: adapter `attn_out_delta` on `o`,
+    /// residual add onto `h`, rmsnorm-2.  Returns `(h_mid, m_in)` —
+    /// the residual carried forward and the MlpUp input.
+    fn attn_out_transition(&self, cx: &HookCtx, l: usize, h: &Tensor,
+                           attn_merged: &Tensor, o: &mut Tensor)
+                           -> Result<(Tensor, Tensor)> {
+        self.hooks().attn_out_delta(cx, l, attn_merged, o)?;
+        let h_mid = ops::add(h, o);
+        let m_in = ops::rmsnorm(&h_mid, &self.weights.norm2[l]);
+        Ok((h_mid, m_in))
+    }
+
+    /// FFN activation: adapter `ffn_scale` then gelu.  Scales `u_pre`
+    /// in place — the training forward saves the *scaled*
+    /// pre-activation for its backward.
+    fn ffn_activate(&self, l: usize, u_pre: &mut Tensor) -> Tensor {
+        self.hooks().ffn_scale(l, u_pre);
+        ops::gelu(u_pre)
+    }
+
+    /// Final rmsnorm before the LM head.
+    fn final_norm(&self, h: &Tensor) -> Tensor {
+        ops::rmsnorm(h, &self.weights.norm_f)
     }
 
     /// Place a `(BH, T, H)` chunk at sequence offset `start` of a
@@ -201,7 +250,8 @@ impl ClientCore {
         let sb = bucket_for(s, SEQ_BUCKETS)
             .ok_or(SymbiosisError::ContextExceeded {
                 len: s,
-                limit: *SEQ_BUCKETS.last().unwrap(),
+                limit: *SEQ_BUCKETS.last()
+                    .expect("SEQ_BUCKETS is a non-empty static"),
             })?;
 
         // positions restart per sequence
@@ -248,9 +298,12 @@ enum AttnPath<'a> {
 /// [`AttnPath`] and in whether activations are retained.
 ///
 /// KEEP IN SYNC: the pipelined prefill driver ([`PipelineDriver`])
-/// encodes the same block math as a split-phase state machine (one
-/// `Stage` per base-layer hop).  Any change to the block structure or
-/// hook order here must be mirrored there — the equivalence tests
+/// encodes the same walk as a split-phase state machine (one `Stage`
+/// per base-layer hop).  The block *math* is shared — both walks go
+/// through the `ClientCore` transition helpers (`qkv_split_adjust`,
+/// `attn_out_transition`, `ffn_activate`, `final_norm`) — so what can
+/// still drift is the dispatch/collect sequencing: any change to the
+/// hop order here must be mirrored there.  The equivalence tests
 /// (`tests/pipeline_equivalence.rs`) and the `pipeline` bench assert
 /// the two walks stay output-identical, but only on hosts with AOT
 /// artifacts.
@@ -342,30 +395,22 @@ impl<'a> LayerWalker<'a> {
     /// Run every block, final norm, and the LM head; returns logits.
     fn walk(mut self, mut h: Tensor) -> Result<Tensor> {
         let core = self.core;
-        let d = core.cfg.d_model;
-        let hooks = core.hooks();
         let cx = HookCtx { engine: core.engine.as_ref(), cfg: &core.cfg };
         for l in 0..core.cfg.n_layers {
             let h_in = h.clone();
             let a_in = ops::rmsnorm(&h, &core.weights.norm1[l]);
             let qkv = core.virt.forward(LayerId::Qkv(l), a_in.clone(),
                                         self.urgency)?;
-            let mut q = qkv.slice_cols(0, d);
-            let mut k = qkv.slice_cols(d, 2 * d);
-            let mut v = qkv.slice_cols(2 * d, 3 * d);
-            hooks.qkv_delta(&cx, l, &a_in, &mut q, &mut k, &mut v)?;
-            hooks.kv_scale(l, &mut k, &mut v);
+            let (q, k, v) = core.qkv_split_adjust(&cx, l, &a_in, &qkv)?;
             let (attn_merged, qh, kh, vh) = self.attention(l, &q, &k, &v)?;
             let mut o = core.virt.forward(LayerId::AttnOut(l),
                                           attn_merged.clone(),
                                           self.urgency)?;
-            hooks.attn_out_delta(&cx, l, &attn_merged, &mut o)?;
-            let h_mid = ops::add(&h, &o);
-            let m_in = ops::rmsnorm(&h_mid, &core.weights.norm2[l]);
+            let (h_mid, m_in) = core.attn_out_transition(
+                &cx, l, &h, &attn_merged, &mut o)?;
             let mut u_pre = core.virt.forward(LayerId::MlpUp(l), m_in,
                                               self.urgency)?;
-            hooks.ffn_scale(l, &mut u_pre);
-            let u = ops::gelu(&u_pre);
+            let u = core.ffn_activate(l, &mut u_pre);
             let down = core.virt.forward(LayerId::MlpDown(l), u,
                                          self.urgency)?;
             let h_out = ops::add(&h_mid, &down);
@@ -386,7 +431,7 @@ impl<'a> LayerWalker<'a> {
         if let Some(sv) = self.save.as_deref_mut() {
             sv.h_last = h.clone();
         }
-        let hf = ops::rmsnorm(&h, &core.weights.norm_f);
+        let hf = core.final_norm(&h);
         core.virt.forward(LayerId::LmHead, hf, self.urgency)
     }
 }
@@ -431,8 +476,10 @@ struct ChunkState<'a> {
 /// while micro-batch k+1 occupies shard s.
 ///
 /// KEEP IN SYNC: the stage transitions in [`Self::advance`] are the
-/// split-phase form of [`LayerWalker::walk`]'s block math (same hooks,
-/// same order); change both together or the equivalence tests diverge.
+/// split-phase form of [`LayerWalker::walk`].  The block math itself
+/// is shared (both call the `ClientCore` transition helpers), so only
+/// the dispatch/collect *order* lives twice; change both together or
+/// the equivalence tests diverge.
 struct PipelineDriver<'a> {
     core: &'a ClientCore,
     virt: &'a VirtLayerCtx,
@@ -496,7 +543,8 @@ impl<'a> PipelineDriver<'a> {
         let bucket = bucket_for(ctx_len, SEQ_BUCKETS)
             .ok_or(SymbiosisError::ContextExceeded {
                 len: ctx_len,
-                limit: *SEQ_BUCKETS.last().unwrap(),
+                limit: *SEQ_BUCKETS.last()
+                    .expect("SEQ_BUCKETS is a non-empty static"),
             })?;
         let (kc, vc) = kv.padded(l, bucket);
         let qp = ClientCore::place_seq(&qh, ctx_len - tc, bucket);
@@ -532,8 +580,6 @@ impl<'a> PipelineDriver<'a> {
                ch: &mut ChunkState<'a>) -> Result<bool> {
         let core = self.core;
         let virt = self.virt;
-        let d = core.cfg.d_model;
-        let hooks = core.hooks();
         let cx = HookCtx { engine: core.engine.as_ref(), cfg: &core.cfg };
         let stage = std::mem::replace(&mut ch.stage, Stage::Taken);
         let (next, progressed) = match stage {
@@ -550,11 +596,8 @@ impl<'a> PipelineDriver<'a> {
             Stage::PendQkv { h, a_in, pend } => {
                 let l = ch.layer;
                 let qkv = pend.collect()?;
-                let mut q = qkv.slice_cols(0, d);
-                let mut k = qkv.slice_cols(d, 2 * d);
-                let mut v = qkv.slice_cols(2 * d, 3 * d);
-                hooks.qkv_delta(&cx, l, &a_in, &mut q, &mut k, &mut v)?;
-                hooks.kv_scale(l, &mut k, &mut v);
+                let (q, k, v) =
+                    core.qkv_split_adjust(&cx, l, &a_in, &qkv)?;
                 // collecting the projection is progress even if the
                 // reorder gate then parks the chunk
                 let (st, _) = self.attend_or_wait(kv, k_idx, ch.c0,
@@ -568,9 +611,8 @@ impl<'a> PipelineDriver<'a> {
             Stage::PendAttnOut { h, attn_merged, pend } => {
                 let l = ch.layer;
                 let mut o = pend.collect()?;
-                hooks.attn_out_delta(&cx, l, &attn_merged, &mut o)?;
-                let h_mid = ops::add(&h, &o);
-                let m_in = ops::rmsnorm(&h_mid, &core.weights.norm2[l]);
+                let (h_mid, m_in) = core.attn_out_transition(
+                    &cx, l, &h, &attn_merged, &mut o)?;
                 let pend = virt.dispatch_forward(LayerId::MlpUp(l), m_in,
                                                  self.urgency)?;
                 (Stage::PendMlpUp { h_mid, pend }, true)
@@ -578,8 +620,7 @@ impl<'a> PipelineDriver<'a> {
             Stage::PendMlpUp { h_mid, pend } => {
                 let l = ch.layer;
                 let mut u_pre = pend.collect()?;
-                hooks.ffn_scale(l, &mut u_pre);
-                let u = ops::gelu(&u_pre);
+                let u = core.ffn_activate(l, &mut u_pre);
                 let pend = virt.dispatch_forward(LayerId::MlpDown(l), u,
                                                  self.urgency)?;
                 (Stage::PendMlpDown { h_mid, pend }, true)
@@ -591,7 +632,7 @@ impl<'a> PipelineDriver<'a> {
                 if ch.layer < core.cfg.n_layers {
                     (self.begin_block(h, ch.layer)?, true)
                 } else {
-                    let hf = ops::rmsnorm(&h, &core.weights.norm_f);
+                    let hf = core.final_norm(&h);
                     let pend = virt.dispatch_forward(LayerId::LmHead, hf,
                                                      self.urgency)?;
                     (Stage::PendHead(pend), true)
@@ -626,7 +667,8 @@ impl ClientCore {
         bucket_for(final_len, SEQ_BUCKETS)
             .ok_or(SymbiosisError::ContextExceeded {
                 len: final_len,
-                limit: *SEQ_BUCKETS.last().unwrap(),
+                limit: *SEQ_BUCKETS.last()
+                    .expect("SEQ_BUCKETS is a non-empty static"),
             })?;
         let virt: &VirtLayerCtx = self.virt.as_ref();
         let mut driver = PipelineDriver {
@@ -827,7 +869,7 @@ impl Sampler {
                         return idx[j] as i32;
                     }
                 }
-                *idx.last().unwrap() as i32
+                *idx.last().expect("top-k keeps >= 1 candidate") as i32
             }
         }
     }
@@ -856,6 +898,9 @@ pub struct InferenceSession {
     /// Session-default pipelined-prefill micro-batch size (columns);
     /// `None` = sequential prefill.
     prefill_chunk: Option<usize>,
+    /// Slot in the tenant's concurrent-session quota (RAII: dropping
+    /// the session frees it).  `None` for untenanted sessions.
+    _tenant_ticket: Option<SessionTicket>,
 }
 
 impl InferenceSession {
@@ -874,6 +919,7 @@ impl InferenceSession {
             prefix_seeded: false,
             urgency: UrgencyPolicy::default(),
             prefill_chunk: None,
+            _tenant_ticket: None,
         })
     }
 
@@ -1184,7 +1230,8 @@ impl InferenceSession {
         let sb = bucket_for(len, SEQ_BUCKETS)
             .ok_or(SymbiosisError::ContextExceeded {
                 len,
-                limit: *SEQ_BUCKETS.last().unwrap(),
+                limit: *SEQ_BUCKETS.last()
+                    .expect("SEQ_BUCKETS is a non-empty static"),
             })?;
         let logits =
             LayerWalker::cached(&self.core, b, &mut self.kv, len, sb,
@@ -1226,6 +1273,12 @@ pub struct Trainer {
     pub core: ClientCore,
     pub batch: usize,
     pub optimizer: Adam,
+    /// Scheduling class of every layer invocation this job issues
+    /// (default [`Urgency::Training`]).  [`Urgency::Background`] makes
+    /// the job sheddable when its shard's ingress queue saturates.
+    pub urgency: Urgency,
+    /// Slot in the tenant's concurrent-session quota (RAII).
+    _tenant_ticket: Option<SessionTicket>,
 }
 
 impl Trainer {
@@ -1247,7 +1300,13 @@ impl Trainer {
                 })
             }
         };
-        Ok(Trainer { core, batch, optimizer: Adam::new(n) })
+        Ok(Trainer {
+            core,
+            batch,
+            optimizer: Adam::new(n),
+            urgency: Urgency::Training,
+            _tenant_ticket: None,
+        })
     }
 
     /// One full iteration: forward, loss, backward, optimizer step.
@@ -1255,7 +1314,8 @@ impl Trainer {
                       -> SymResult<TrainOutcome> {
         let (loss, grads) = self.loss_and_grads(tokens, labels)?;
         let grad_norm = grads.l2_norm();
-        let adapter = self.core.adapter.as_mut().unwrap();
+        let adapter = self.core.adapter.as_mut()
+            .expect("Trainer::new verified a trainable adapter");
         let mut flat = adapter.flatten();
         self.optimizer
             .step_artifact(&self.core.engine, &mut flat, &grads.flat)
@@ -1274,7 +1334,7 @@ impl Trainer {
     fn loss_and_grads_inner(&mut self, tokens: &[i32], labels: &[i32])
                             -> Result<(f32, AdapterGrads)> {
         let t = tokens.len();
-        let urgency = Urgency::Training;
+        let urgency = self.urgency;
         let mut saved = SavedActs {
             layers: Vec::with_capacity(self.core.cfg.n_layers),
             h_last: Tensor::zeros(&[1]),
@@ -1286,7 +1346,8 @@ impl Trainer {
         let tb = bucket_for(t, TOKEN_BUCKETS)
             .ok_or(SymbiosisError::ContextExceeded {
                 len: t,
-                limit: *TOKEN_BUCKETS.last().unwrap(),
+                limit: *TOKEN_BUCKETS.last()
+                    .expect("TOKEN_BUCKETS is a non-empty static"),
             })?;
         let mut lab = labels.to_vec();
         lab.resize(tb, 0);
@@ -1307,8 +1368,9 @@ impl Trainer {
             engine: self.core.engine.as_ref(),
             cfg: &self.core.cfg,
         };
-        let mut grads =
-            AdapterGrads::zeros_like(self.core.adapter.as_ref().unwrap());
+        let mut grads = AdapterGrads::zeros_like(
+            self.core.adapter.as_ref()
+                .expect("Trainer::new verified a trainable adapter"));
 
         // ---- backward ----
         let dhf = self.core.virt.backward(LayerId::LmHead, dlogits,
@@ -1316,7 +1378,8 @@ impl Trainer {
         let mut dh = ops::rmsnorm_bwd(&saved.h_last,
                                       &self.core.weights.norm_f, &dhf);
         let s = t / self.batch;
-        let sb = bucket_for(s, SEQ_BUCKETS).unwrap();
+        let sb = bucket_for(s, SEQ_BUCKETS)
+            .expect("forward_full already bucketed this seq length");
         let nh = self.core.cfg.n_heads;
         let attn_bwd = format!("attn_bwd_bh{}_s{sb}_h{}",
                                self.batch * nh, self.core.cfg.d_head());
@@ -1421,6 +1484,7 @@ pub struct SessionBuilder<'d> {
     prefill_chunk: Option<usize>,
     request_timeout: Option<std::time::Duration>,
     retry: Option<RetryPolicy>,
+    tenant: Option<String>,
 }
 
 impl<'d> SessionBuilder<'d> {
@@ -1437,6 +1501,7 @@ impl<'d> SessionBuilder<'d> {
             prefill_chunk: None,
             request_timeout: None,
             retry: None,
+            tenant: None,
         }
     }
 
@@ -1515,6 +1580,23 @@ impl<'d> SessionBuilder<'d> {
         self
     }
 
+    /// Name the tenant this session belongs to for admission control
+    /// (default: untenanted — admission is bypassed entirely).  Quotas
+    /// are configured on the fleet's
+    /// [`AdmissionController`](crate::coordinator::AdmissionController)
+    /// via `Deployment::admission().set_quota(..)`; `build` then fails
+    /// fast with a typed [`SymbiosisError::AdmissionDenied`] when the
+    /// tenant is at its concurrent-session limit, and the session's
+    /// dispatches / KV growth charge the tenant's in-flight and
+    /// KV-byte budgets.
+    ///
+    /// [`SymbiosisError::AdmissionDenied`]:
+    /// crate::error::SymbiosisError::AdmissionDenied
+    pub fn tenant(mut self, name: &str) -> Self {
+        self.tenant = Some(name.to_string());
+        self
+    }
+
     /// Pipeline prefill in micro-batches of `tokens` columns (default
     /// off = sequential prefill): prompts split into
     /// `ceil(seq/tokens)` micro-batches driven as a wavefront across
@@ -1528,11 +1610,16 @@ impl<'d> SessionBuilder<'d> {
     }
 
     pub fn build(self) -> SymResult<InferenceSession> {
+        // Admission first: a denied tenant fails fast, before any
+        // executor registration or device charge happens.
+        let (tenant, ticket) = admit(self.dep, self.tenant.as_deref())?;
         let core = self.dep.build_core(self.adapter, self.link,
                                        self.realize_delays, self.privacy,
-                                       self.request_timeout, self.retry);
+                                       self.request_timeout, self.retry,
+                                       tenant.clone());
         let mut sess =
             InferenceSession::new(core, self.batch, self.kv_placement)?;
+        sess._tenant_ticket = ticket;
         sess.set_urgency(self.urgency);
         sess.set_prefill_chunk(self.prefill_chunk);
         // Charge the session's KV cache to the hosting device's shared
@@ -1544,10 +1631,33 @@ impl<'d> SessionBuilder<'d> {
         };
         let tag = format!("kv:client{}", sess.core.virt.client_id);
         sess.attach_kv_ledger(device, tag)?;
+        // The tenant's KV budget is checked *before* the device ledger
+        // on every growth, so one tenant exhausts its own quota with
+        // QuotaExceeded before it can push a co-tenant into KvCacheOom.
+        if let Some(t) = tenant {
+            sess.kv.set_tenant(t)?;
+        }
         // Prefix adapters seed the cache here, which flips the session
         // into incremental-prefill routing (`generate`/`prefill_auto`).
         sess.seed_prefix()?;
         Ok(sess)
+    }
+}
+
+/// Resolve a builder's tenant name against the fleet's admission
+/// controller: returns the shared tenant state (wired into the client's
+/// dispatch path and KV ledger) plus the session ticket holding the
+/// concurrent-session slot.  Untenanted builds get `(None, None)` and
+/// bypass admission entirely.
+fn admit(dep: &Deployment, tenant: Option<&str>)
+         -> SymResult<(Option<Arc<TenantState>>, Option<SessionTicket>)> {
+    match tenant {
+        Some(name) => {
+            let t = dep.executor.admission().tenant(name);
+            let ticket = t.admit_session()?;
+            Ok((Some(t), Some(ticket)))
+        }
+        None => Ok((None, None)),
     }
 }
 
@@ -1561,6 +1671,8 @@ pub struct TrainerBuilder<'d> {
     lr: Option<f32>,
     request_timeout: Option<std::time::Duration>,
     retry: Option<RetryPolicy>,
+    tenant: Option<String>,
+    urgency: Option<Urgency>,
 }
 
 impl<'d> TrainerBuilder<'d> {
@@ -1574,6 +1686,8 @@ impl<'d> TrainerBuilder<'d> {
             lr: None,
             request_timeout: None,
             retry: None,
+            tenant: None,
+            urgency: None,
         }
     }
 
@@ -1620,14 +1734,41 @@ impl<'d> TrainerBuilder<'d> {
         self
     }
 
+    /// Name the tenant this job belongs to for admission control (see
+    /// [`SessionBuilder::tenant`] — trainers count against the same
+    /// concurrent-session and in-flight quotas).
+    pub fn tenant(mut self, name: &str) -> Self {
+        self.tenant = Some(name.to_string());
+        self
+    }
+
+    /// Scheduling class of the job's layer invocations (default
+    /// [`Urgency::Training`]).  [`Urgency::Background`] keeps the full
+    /// batching wait budget but marks the work sheddable: when the
+    /// shard's ingress queue saturates, its flushes answer a typed
+    /// [`SymbiosisError::WorkShed`] instead of occupying the device.
+    ///
+    /// [`SymbiosisError::WorkShed`]:
+    /// crate::error::SymbiosisError::WorkShed
+    pub fn urgency(mut self, urgency: Urgency) -> Self {
+        self.urgency = Some(urgency);
+        self
+    }
+
     pub fn build(self) -> SymResult<Trainer> {
+        let (tenant, ticket) = admit(self.dep, self.tenant.as_deref())?;
         let core =
             self.dep.build_core(self.adapter, self.link,
                                 self.realize_delays, None,
-                                self.request_timeout, self.retry);
+                                self.request_timeout, self.retry,
+                                tenant);
         let mut trainer = Trainer::new(core, self.batch)?;
+        trainer._tenant_ticket = ticket;
         if let Some(lr) = self.lr {
             trainer.optimizer.lr = lr;
+        }
+        if let Some(u) = self.urgency {
+            trainer.urgency = u;
         }
         Ok(trainer)
     }
@@ -1714,6 +1855,7 @@ impl DecodeReshape for Tensor {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

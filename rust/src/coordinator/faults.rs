@@ -15,7 +15,17 @@
 //! * answer with an **error** (failed flush),
 //! * **delay** the response (slow shard / congested link),
 //! * **kill** the executor thread ([`ExecMsg::Crash`] — the watchdog
-//!   observes the dead join handle and respawns).
+//!   observes the dead join handle and respawns),
+//! * **flood** the shard's ingress meter with phantom queue entries
+//!   (background tenants piling on — drives the overload path:
+//!   saturation backpressure and urgency-based shedding).
+//!
+//! Interposers share the inner endpoint's [`IngressMeter`] and circuit
+//! breaker, so the overload machinery observes faulted traffic exactly
+//! as it would real traffic: a request the interposer swallows (drop /
+//! error / kill) releases its ingress slot, a stalled one holds it
+//! until the interposer exits (a hung shard backs up its queue), and
+//! flood phantoms drain on exit.
 //!
 //! Determinism: probabilistic rules draw from a splitmix64 stream
 //! seeded with `seed ^ hash(shard)` (the same no-`rand` idiom as
@@ -38,7 +48,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::proto::{ExecMsg, LayerRequest};
-use crate::coordinator::virt_layer::ShardEndpoint;
+use crate::coordinator::virt_layer::{IngressMeter, ShardEndpoint};
 
 /// What the interposer does to a matched request.
 #[derive(Debug, Clone, PartialEq)]
@@ -60,6 +70,13 @@ pub enum FaultAction {
     /// the request: the shard thread dies mid-service, exactly as a
     /// panic would kill it.
     KillShard,
+    /// Force-admit this many phantom entries into the shard's ingress
+    /// meter (the triggering request still flows).  Each firing makes
+    /// the queue look that much deeper — a brown-out in a bottle:
+    /// dispatch beyond the high-water mark answers `ShardSaturated`,
+    /// and background flushes shed.  Phantoms drain when the
+    /// interposer exits.
+    Flood(usize),
 }
 
 /// One matching rule: *which shard*, *what*, *from when*, *how often*.
@@ -150,7 +167,9 @@ impl FaultPlan {
     /// The interposer resolves `inner.sender()` per message, so a fleet
     /// respawn swapping the inner endpoint redirects faulted traffic
     /// too.  The *wrapped* endpoint mirrors no epoch; read recovery
-    /// state from the fleet's own endpoints.
+    /// state from the fleet's own endpoints.  It does share the
+    /// inner's ingress meter and circuit breaker — overload accounting
+    /// stays fleet-global across the interposition.
     pub fn wrap_endpoint(&self, shard: usize,
                          inner: Arc<ShardEndpoint>)
                          -> Arc<ShardEndpoint> {
@@ -168,11 +187,13 @@ impl FaultPlan {
             .seed
             .wrapping_add((shard as u64)
                 .wrapping_mul(0x9E3779B97F4A7C15));
+        let wrapped = Arc::new(ShardEndpoint::with_shared(
+            tx, inner.meter().clone(), inner.breaker().clone()));
         std::thread::Builder::new()
             .name(format!("fault-interposer-{shard}"))
             .spawn(move || interpose(rx, inner, rules, seed))
             .expect("spawn fault interposer");
-        Arc::new(ShardEndpoint::new(tx))
+        wrapped
     }
 }
 
@@ -203,6 +224,11 @@ fn interpose(rx: std::sync::mpsc::Receiver<ExecMsg>,
              seed: u64) {
     let mut rng = FaultRng { state: seed };
     let mut step: u64 = 0;
+    // The shard's real meter: swallowed requests release their ingress
+    // slot here (the executor they never reach cannot), stalls hold
+    // theirs, and flood phantoms accumulate until exit.
+    let meter: Arc<IngressMeter> = inner.meter().clone();
+    let mut flooded: usize = 0;
     // Held requests of `Stall` rules: dropped (→ client-side
     // disconnect) only when the interposer exits.
     let mut stalled: Vec<LayerRequest> = Vec::new();
@@ -233,9 +259,21 @@ fn interpose(rx: std::sync::mpsc::Receiver<ExecMsg>,
             None => {
                 let _ = inner.sender().send(ExecMsg::Request(req));
             }
-            Some(FaultAction::Drop) => drop(req),
+            Some(FaultAction::Flood(n)) => {
+                for _ in 0..n {
+                    meter.force_admit();
+                }
+                flooded += n;
+                // the triggering request itself still flows
+                let _ = inner.sender().send(ExecMsg::Request(req));
+            }
+            Some(FaultAction::Drop) => {
+                meter.exit(); // a lost message occupies no queue
+                drop(req);
+            }
             Some(FaultAction::Stall) => stalled.push(req),
             Some(FaultAction::ErrorResponse(message)) => {
+                meter.exit();
                 let _ = req.resp.send(
                     crate::coordinator::proto::LayerResponse {
                         y: Err(message),
@@ -259,10 +297,18 @@ fn interpose(rx: std::sync::mpsc::Receiver<ExecMsg>,
                 });
             }
             Some(FaultAction::KillShard) => {
+                meter.exit();
                 let _ = inner.sender().send(ExecMsg::Crash);
                 drop(req);
             }
         }
+    }
+    // Return every ingress slot this interposer still holds: stalled
+    // requests' and flood phantoms'.  (The fleet's respawn path also
+    // resets the meter, but a plan cleared without a crash must not
+    // leave the shard looking saturated forever.)
+    for _ in 0..stalled.len() + flooded {
+        meter.exit();
     }
     drop(stalled);
 }
@@ -433,6 +479,64 @@ mod tests {
         let fired = a.iter().filter(|&&b| b).count();
         assert!(fired > 4 && fired < 28,
                 "p=0.5 should fire sometimes, not always ({fired}/32)");
+    }
+
+    #[test]
+    fn flood_saturates_the_shared_meter_and_drains_on_exit() {
+        let (exec_tx, exec_rx) = std::sync::mpsc::channel();
+        let _shard = echo_shard(exec_rx);
+        let inner = Arc::new(ShardEndpoint::new(exec_tx));
+        inner.meter().set_high_water(4);
+        let plan = FaultPlan::new(11)
+            .rule(FaultRule::on(0, FaultAction::Flood(8)).times(1));
+        let wrapped = plan.wrap_endpoint(0, inner.clone());
+        assert!(Arc::ptr_eq(wrapped.meter(), inner.meter()),
+                "interposition shares the inner meter");
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        wrapped.sender().send(request(rtx)).unwrap();
+        // the triggering request still flows …
+        assert!(rrx
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .y
+            .is_ok());
+        // … but 8 phantoms now sit over the 4-entry mark
+        assert!(inner.meter().saturated());
+        assert_eq!(inner.meter().depth(), 8);
+        drop(wrapped); // interposer exits, draining its phantoms
+        let t0 = std::time::Instant::now();
+        while inner.meter().depth() != 0
+            && t0.elapsed() < Duration::from_secs(5)
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(inner.meter().depth(), 0,
+                   "flood phantoms drain on interposer exit");
+    }
+
+    #[test]
+    fn swallowed_requests_release_their_ingress_slot() {
+        let (exec_tx, exec_rx) = std::sync::mpsc::channel();
+        let _shard = echo_shard(exec_rx);
+        let inner = Arc::new(ShardEndpoint::new(exec_tx));
+        let plan = FaultPlan::new(2).rule(
+            FaultRule::on(0, FaultAction::ErrorResponse("boom".into())));
+        let wrapped = plan.wrap_endpoint(0, inner.clone());
+        // what dispatch() does: admit, then send
+        wrapped.meter().try_admit().unwrap();
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        wrapped.sender().send(request(rtx)).unwrap();
+        assert!(rrx.recv_timeout(Duration::from_secs(5))
+            .unwrap().y.is_err());
+        // the executor never saw the request, so the interposer must
+        // have released the admitted slot
+        let t0 = std::time::Instant::now();
+        while wrapped.meter().depth() != 0
+            && t0.elapsed() < Duration::from_secs(5)
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(wrapped.meter().depth(), 0);
     }
 
     #[test]

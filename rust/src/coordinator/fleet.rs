@@ -42,6 +42,18 @@
 //! Table-5 style metrics still come out of one call; it `Deref`s to the
 //! merged view, keeping existing consumers (`stats.n_flushes`,
 //! `stats.mean_batch_clients()`, …) source-compatible.
+//!
+//! # Overload management
+//!
+//! The fleet also owns the overload layer: each endpoint carries the
+//! shard's shared [`IngressMeter`] (bounded ingress queue — see
+//! [`ExecutorFleet::set_ingress_high_water`]) and [`CircuitBreaker`]
+//! ([`ExecutorFleet::set_breaker_threshold`]); the watchdog heartbeat
+//! re-arms open breakers to half-open, and a respawn resets both, since
+//! the replacement executor starts with an empty queue and a clean
+//! record.  Tenant quotas live in the fleet's
+//! [`AdmissionController`] ([`ExecutorFleet::admission`]), consulted by
+//! session builders and by every dispatch of a tenant-tagged client.
 
 // Fault-domain hot path: see `virt_layer` — locks recover from poison
 // explicitly, failures are typed.
@@ -55,6 +67,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::coordinator::admission::AdmissionController;
 use crate::coordinator::base_executor::{ExecutorStats, ShardExecutor};
 use crate::coordinator::batching::BatchPolicy;
 use crate::coordinator::faults::FaultPlan;
@@ -62,8 +75,9 @@ use crate::coordinator::model_state::{self, BaseWeights, ShardWeights};
 use crate::coordinator::placement::Placement;
 use crate::coordinator::proto::{ExecMsg, LayerId};
 use crate::coordinator::sharding::LayerAssignment;
-use crate::coordinator::virt_layer::{RoutingTable, ShardEndpoint,
-                                     ShardRoute};
+use crate::coordinator::virt_layer::{BreakerState, CircuitBreaker,
+                                     IngressMeter, RoutingTable,
+                                     ShardEndpoint, ShardRoute};
 use crate::device::{Device, DeviceKind, MemoryLedger};
 use crate::error::SymbiosisError;
 use crate::runtime::Engine;
@@ -207,6 +221,9 @@ struct FleetCore {
     /// generation, per shard, so fleet stats stay exact across
     /// respawns.
     retired: Mutex<Vec<ExecutorStats>>,
+    /// Tenant quota registry, consulted by session builders and by
+    /// every dispatch of a tenant-tagged client.
+    admission: AdmissionController,
     respawns: AtomicU64,
     stop: AtomicBool,
 }
@@ -234,11 +251,19 @@ impl FleetCore {
             device,
             self.barrier.clone(),
             self.barrier.registered(),
+            // The replacement drains the shard's *stable* meter — queue
+            // accounting survives the generation change.
+            self.endpoints[s].meter().clone(),
         );
         // Swap the endpoint first: from this instant every new dispatch
         // (and every retry resolving the current sender) reaches the
         // replacement.
         self.endpoints[s].swap(replacement.sender());
+        // The dead generation's queue died with it: zero the ingress
+        // depth and close the breaker so the replacement starts clean
+        // instead of inheriting phantom backlog or an open circuit.
+        self.endpoints[s].meter().reset();
+        self.endpoints[s].breaker().reset();
         let old = {
             let mut shards = lock(&self.shards);
             std::mem::replace(&mut shards[s], replacement)
@@ -277,6 +302,13 @@ fn watchdog_loop(core: Arc<FleetCore>) {
                     eprintln!("fleet-watchdog: respawn of shard {s} \
                                failed: {e:#}");
                 }
+            } else {
+                // Heartbeat doubles as the breaker re-arm: an open
+                // breaker over a live shard goes half-open (one probe
+                // may pass), and a probe lost to a dropped collect is
+                // returned — recovery latency is bounded by the
+                // watchdog interval, like crash detection.
+                core.endpoints[s].breaker().probe();
             }
         }
     }
@@ -343,17 +375,33 @@ impl ExecutorFleet {
                 device_capacity: device.ledger.capacity(),
             })
             .collect();
+        // One meter per shard, created *before* the executor: the
+        // executor decrements it per dequeued request, the endpoint
+        // gates dispatches against it, and it survives respawns (the
+        // endpoint keeps the same Arc across generations).
+        let meters: Vec<Arc<IngressMeter>> = (0..seeds.len())
+            .map(|_| Arc::new(IngressMeter::unbounded()))
+            .collect();
         let shards: Vec<ShardExecutor> = slices
             .into_iter()
             .zip(devices)
-            .map(|(slice, device)| {
+            .zip(&meters)
+            .map(|((slice, device), meter)| {
                 ShardExecutor::spawn(engine.clone(), slice, policy,
-                                     device, barrier.clone())
+                                     device, barrier.clone(),
+                                     meter.clone())
             })
             .collect();
         let endpoints = shards
             .iter()
-            .map(|s| Arc::new(ShardEndpoint::new(s.sender())))
+            .zip(meters)
+            .map(|(s, meter)| {
+                Arc::new(ShardEndpoint::with_shared(
+                    s.sender(),
+                    meter,
+                    Arc::new(CircuitBreaker::disabled()),
+                ))
+            })
             .collect();
         let retired = vec![ExecutorStats::default(); shards.len()];
         let core = Arc::new(FleetCore {
@@ -364,6 +412,7 @@ impl ExecutorFleet {
             endpoints,
             shards: Mutex::new(shards),
             retired: Mutex::new(retired),
+            admission: AdmissionController::new(),
             respawns: AtomicU64::new(0),
             stop: AtomicBool::new(false),
         });
@@ -425,6 +474,47 @@ impl ExecutorFleet {
     /// Total respawns performed over the fleet's lifetime.
     pub fn respawns(&self) -> u64 {
         self.core.respawns.load(Ordering::Acquire)
+    }
+
+    /// Tenant quota registry — configure with
+    /// [`AdmissionController::set_quota`]; session builders consult it
+    /// when a tenant name is attached.
+    pub fn admission(&self) -> &AdmissionController {
+        &self.core.admission
+    }
+
+    /// Bound every shard's ingress queue at `mark` requests (0 restores
+    /// the unbounded default).  Takes effect immediately for new
+    /// dispatches; already-queued work drains normally.
+    pub fn set_ingress_high_water(&self, mark: usize) {
+        for e in &self.core.endpoints {
+            e.meter().set_high_water(mark);
+        }
+    }
+
+    /// Arm every shard's circuit breaker to trip after `threshold`
+    /// consecutive request failures (0 disables, the default).
+    pub fn set_breaker_threshold(&self, threshold: u32) {
+        for e in &self.core.endpoints {
+            e.breaker().set_threshold(threshold);
+        }
+    }
+
+    /// Current circuit-breaker state of shard `s` (observability,
+    /// tests, the overload bench).
+    pub fn breaker_state(&self, s: usize) -> BreakerState {
+        self.core.endpoints[s].breaker().state()
+    }
+
+    /// Current ingress-queue depth of shard `s`.
+    pub fn ingress_depth(&self, s: usize) -> usize {
+        self.core.endpoints[s].meter().depth()
+    }
+
+    /// Shard `s`'s ingress meter (tests and the overload bench inject
+    /// phantom load with [`IngressMeter::force_admit`] through this).
+    pub fn ingress_meter(&self, s: usize) -> Arc<IngressMeter> {
+        self.core.endpoints[s].meter().clone()
     }
 
     /// Rebuild shard `s` on its retained seed: fresh device ledger

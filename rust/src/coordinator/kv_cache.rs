@@ -20,13 +20,20 @@
 //! mixed-tenant OOM lines (Figs 9/10).  `clear()` keeps the grown
 //! buffers and therefore keeps the charge; the charge is released when
 //! the cache drops.
+//!
+//! A tenanted session additionally carries its [`TenantState`]: every
+//! growth is charged against the tenant's KV-byte quota *before* the
+//! device ledger, so a tenant at its budget fails with a typed
+//! [`SymbiosisError::QuotaExceeded`] without ever contending for the
+//! shared device — its co-tenants keep their headroom.
 
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::coordinator::admission::TenantState;
 use crate::device::Device;
-use crate::error::SymbiosisError;
+use crate::error::{SymResult, SymbiosisError};
 use crate::tensor::Tensor;
 
 /// Where the cache bytes live.
@@ -84,6 +91,9 @@ pub struct KvCache {
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
     ledger: Option<KvLedger>,
+    /// Tenant whose KV-byte quota this cache charges (checked before
+    /// the device ledger); `None` = untenanted, no quota.
+    tenant: Option<Arc<TenantState>>,
 }
 
 impl KvCache {
@@ -98,6 +108,7 @@ impl KvCache {
             k: vec![Vec::new(); n_layers],
             v: vec![Vec::new(); n_layers],
             ledger: None,
+            tenant: None,
         }
     }
 
@@ -109,6 +120,19 @@ impl KvCache {
         let ledger = KvLedger { device, tag };
         ledger.charge(self.bytes())?;
         self.ledger = Some(ledger);
+        Ok(())
+    }
+
+    /// Charge this cache against a tenant's KV-byte quota: the current
+    /// footprint immediately, every growth thereafter — checked
+    /// *before* the device ledger so the tenant hits its own budget
+    /// (typed [`SymbiosisError::QuotaExceeded`]) before it can push a
+    /// co-tenant into [`SymbiosisError::KvCacheOom`].  Released when
+    /// the cache drops.
+    pub fn set_tenant(&mut self, tenant: Arc<TenantState>)
+                      -> SymResult<()> {
+        tenant.adjust_kv(0, self.bytes())?;
+        self.tenant = Some(tenant);
         Ok(())
     }
 
@@ -147,10 +171,22 @@ impl KvCache {
             return Ok(());
         }
         let new_cap = want.next_power_of_two().max(16);
-        // Charge the ledger *before* growing: a rejected growth leaves
-        // both the cache and the ledger exactly as they were.
+        // Tenant quota first, then device ledger, both *before*
+        // growing: a rejected growth leaves cache, quota, and ledger
+        // exactly as they were.
+        if let Some(t) = &self.tenant {
+            t.adjust_kv(self.bytes(), self.bytes_at_cap(new_cap))
+                .map_err(anyhow::Error::new)?;
+        }
         if let Some(ledger) = &self.ledger {
-            ledger.charge(self.bytes_at_cap(new_cap))?;
+            if let Err(e) = ledger.charge(self.bytes_at_cap(new_cap)) {
+                // roll the tenant charge back so both books agree
+                if let Some(t) = &self.tenant {
+                    let _ = t.adjust_kv(self.bytes_at_cap(new_cap),
+                                        self.bytes());
+                }
+                return Err(e);
+            }
         }
         for layer in 0..self.k.len() {
             let mut nk = vec![0.0f32; self.bh * new_cap * self.head_dim];
@@ -251,10 +287,14 @@ impl KvCache {
 }
 
 impl Drop for KvCache {
-    /// Release the device charge with the buffers.
+    /// Release the device charge and the tenant's KV budget with the
+    /// buffers.
     fn drop(&mut self) {
         if let Some(ledger) = &self.ledger {
             ledger.release();
+        }
+        if let Some(t) = &self.tenant {
+            t.release_kv(self.bytes());
         }
     }
 }
@@ -353,6 +393,44 @@ mod tests {
                    charged);
         drop(c);
         assert_eq!(dev.lock().unwrap().ledger.tag_bytes("kv:test"), 0);
+    }
+
+    #[test]
+    fn tenant_kv_quota_denies_before_the_device_ledger() {
+        use crate::coordinator::admission::{AdmissionController,
+                                            TenantQuota};
+        let ctl = AdmissionController::new();
+        ctl.set_quota("acme", TenantQuota::unlimited().max_kv_bytes(64));
+        let dev = Arc::new(Mutex::new(Device::new("cli",
+                                                  DeviceKind::GpuFast40)));
+        let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
+        c.attach_ledger(dev.clone(), "kv:t".into()).unwrap();
+        c.set_tenant(ctl.tenant("acme")).unwrap();
+        let err = c
+            .append(0, &kv(3, 2, 4, 0.0), &kv(3, 2, 4, 0.0))
+            .unwrap_err();
+        match SymbiosisError::from(err) {
+            SymbiosisError::QuotaExceeded { tenant, resource, limit,
+                                            .. } => {
+                assert_eq!(tenant, "acme");
+                assert_eq!(resource, "KV-cache bytes");
+                assert_eq!(limit, 64);
+            }
+            other => panic!("expected QuotaExceeded, got {other}"),
+        }
+        // the denied growth left every book untouched: the tenant hit
+        // its own quota before contending for the shared device
+        assert_eq!(c.capacity(), 0);
+        assert_eq!(dev.lock().unwrap().ledger.used(), 0);
+        assert_eq!(ctl.tenant("acme").kv_bytes(), 0);
+        // an in-budget tenant still reaches the device ledger
+        ctl.set_quota("acme", TenantQuota::unlimited());
+        c.append(0, &kv(3, 2, 4, 0.0), &kv(3, 2, 4, 0.0)).unwrap();
+        assert_eq!(ctl.tenant("acme").kv_bytes(), c.bytes());
+        assert_eq!(dev.lock().unwrap().ledger.used(), c.bytes());
+        drop(c);
+        assert_eq!(ctl.tenant("acme").kv_bytes(), 0,
+                   "drop returns the tenant's KV budget");
     }
 
     #[test]

@@ -68,13 +68,24 @@
 //!   kill rules interpose on client→shard routes so the chaos suite and
 //!   benches can rehearse every failure the fleet claims to survive.
 //!
+//! * [`admission`] — per-tenant quotas (sessions, in-flight requests,
+//!   KV bytes) enforced at build and dispatch time, so dense
+//!   multi-tenancy degrades with typed denials instead of one tenant
+//!   starving the rest.
+//!
 //! The failure model is first-class: per-request deadlines
 //! (`SessionBuilder::request_timeout`), bounded client-side retry
 //! (`RetryPolicy`), and fleet supervision (watchdog +
 //! [`ExecutorFleet::respawn_shard`]) are wired through the same typed
-//! error surface — see the taxonomy table in [`crate::error`].
+//! error surface — see the taxonomy table in [`crate::error`].  The
+//! overload path is equally typed: bounded shard ingress
+//! ([`IngressMeter`] → `ShardSaturated`), per-shard circuit breakers
+//! ([`CircuitBreaker`] → fast-fail `ShardUnavailable`), tenant quotas
+//! (`AdmissionDenied` / `QuotaExceeded`), and urgency-based shedding of
+//! `Urgency::Background` work (`WorkShed`).
 
 pub mod adapter;
+pub mod admission;
 pub mod base_executor;
 pub mod batching;
 pub mod client;
@@ -103,6 +114,7 @@ use crate::transport::LinkKind;
 pub use crate::error::{SymResult, SymbiosisError};
 pub use adapter::{Adapter, AdapterHooks, HookCtx, Ia3Adapter,
                   LoraAdapter, LoraTargets, NoAdapter, PrefixAdapter};
+pub use admission::{AdmissionController, TenantQuota, TenantState};
 pub use base_executor::{ExecutorStats, FlushRecord, ShardExecutor};
 pub use batching::BatchPolicy;
 pub use client::{ClientCore, GenerationConfig, InferenceSession,
@@ -114,7 +126,8 @@ pub use kv_cache::{KvLedger, KvPlacement};
 pub use placement::Placement;
 pub use proto::{LayerId, OpKind, Urgency};
 pub use sharding::{LayerAssignment, ShardPlan};
-pub use virt_layer::{PendingLayer, RetryPolicy, RoutingTable,
+pub use virt_layer::{BreakerState, CircuitBreaker, IngressMeter,
+                     PendingLayer, RetryPolicy, RoutingTable,
                      ShardEndpoint, ShardRoute, VirtLayerCtx};
 
 /// A running deployment: an executor fleet + the pieces needed to attach
@@ -225,14 +238,15 @@ impl Deployment {
     /// the placement's links.  Lower-level than the builders; most
     /// callers want [`Deployment::session`] / [`Deployment::trainer`].
     pub fn client_core(&self, adapter: Option<Adapter>) -> ClientCore {
-        self.build_core(adapter, None, false, None, None, None)
+        self.build_core(adapter, None, false, None, None, None, None)
     }
 
     /// Same, with an explicit link kind applied to every shard hop
     /// (heterogeneous topologies).
     pub fn client_core_with_link(&self, adapter: Option<Adapter>,
                                  link: LinkKind) -> ClientCore {
-        self.build_core(adapter, Some(link), false, None, None, None)
+        self.build_core(adapter, Some(link), false, None, None, None,
+                        None)
     }
 
     /// Full control: link kind + whether simulated link delays are
@@ -241,7 +255,7 @@ impl Deployment {
                             link: LinkKind, realize_delays: bool)
                             -> ClientCore {
         self.build_core(adapter, Some(link), realize_delays, None, None,
-                        None)
+                        None, None)
     }
 
     /// The one place client contexts are wired: allocates a client id,
@@ -249,14 +263,20 @@ impl Deployment {
     /// interposers), registers it with every shard.  `link_override`
     /// replaces the placement-derived per-shard link kinds when set;
     /// `request_timeout` puts a deadline on every collect; `retry`
-    /// bounds client-side re-dispatch of pure frozen-base ops.
+    /// bounds client-side re-dispatch of pure frozen-base ops;
+    /// `tenant` charges every dispatch against that tenant's in-flight
+    /// quota (`None` bypasses admission).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn build_core(&self, adapter: Option<Adapter>,
                              link_override: Option<LinkKind>,
                              realize_delays: bool,
                              privacy: Option<PrivacyCtx>,
                              request_timeout:
                                  Option<std::time::Duration>,
-                             retry: Option<RetryPolicy>) -> ClientCore {
+                             retry: Option<RetryPolicy>,
+                             tenant:
+                                 Option<Arc<admission::TenantState>>)
+                             -> ClientCore {
         let id = self
             .next_client_id
             .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
@@ -271,6 +291,7 @@ impl Deployment {
         ctx.realize_delays = realize_delays;
         ctx.privacy = privacy;
         ctx.request_timeout = request_timeout;
+        ctx.tenant = tenant;
         if let Some(retry) = retry {
             ctx.retry = retry;
         }
@@ -286,6 +307,14 @@ impl Deployment {
             weights: self.client_weights.clone(),
             adapter,
         }
+    }
+
+    /// The fleet's admission controller: name tenants on the builders
+    /// ([`SessionBuilder::tenant`](client::SessionBuilder::tenant)),
+    /// configure their quotas here
+    /// ([`AdmissionController::set_quota`]).
+    pub fn admission(&self) -> &AdmissionController {
+        self.executor.admission()
     }
 
     /// Stop the fleet (draining shards in layer order) and return its

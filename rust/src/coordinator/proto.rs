@@ -100,7 +100,19 @@ pub enum Urgency {
     Bulk,
     /// Fine-tuning pass: longest wait budget.
     Training,
+    /// Deferrable background work (e.g. best-effort training steps):
+    /// same wait budget as `Training`, but first to be **shed** when a
+    /// shard's ingress queue is at its high-water mark — the executor
+    /// answers with a typed shed error instead of occupying the device
+    /// ahead of interactive decode (graceful brown-out).
+    Background,
 }
+
+/// Wire marker prefixing the `Err` payload of a [`LayerResponse`]
+/// answered by the executor's load shedder.  `VirtLayerCtx` maps it to
+/// `SymbiosisError::WorkShed` (deferred, not retried) instead of the
+/// `ExecutorFailed` every other `Err` payload becomes.
+pub const SHED_MARKER: &str = "__shed__: ";
 
 /// One base-layer invocation from a client.
 #[derive(Debug)]

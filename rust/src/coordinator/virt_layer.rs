@@ -46,6 +46,30 @@
 //! is exhausted.  Both the sequential walk and the pipelined wavefront
 //! go through `collect`, so they inherit deadlines and retry for free.
 //!
+//! # Overload: bounded ingress and circuit breakers
+//!
+//! Every shard endpoint carries an [`IngressMeter`] — a queue-depth
+//! counter incremented when a request is dispatched and decremented
+//! when the shard executor dequeues it — with a configurable
+//! high-water mark.  A dispatch that would exceed the mark fails fast
+//! with a typed [`SymbiosisError::ShardSaturated`] instead of growing
+//! the queue without bound; the default mark is 0 (unbounded), the
+//! pre-overload behavior.  The endpoint also carries a
+//! [`CircuitBreaker`]: after a configurable number of *consecutive*
+//! failures (`ExecutorFailed`/`DeadlineExceeded`) the breaker opens
+//! and dispatches fast-fail as
+//! [`SymbiosisError::ShardUnavailable`]` { retries: 0 }` without
+//! burning retry sleeps — so a fleet of retrying clients cannot
+//! dogpile a shard that is dead or mid-respawn.  The fleet watchdog
+//! re-arms an open breaker to half-open each tick; one probe dispatch
+//! is admitted, and its success closes the breaker (failure reopens
+//! it).  Per-tenant quotas (in-flight requests) are checked here too
+//! when the context carries a tenant — see
+//! [`crate::coordinator::admission`].  An executor-shed background
+//! request surfaces as [`SymbiosisError::WorkShed`] and is *not*
+//! retried: re-sending shed work into the same saturated queue is the
+//! dogpile the shedder exists to prevent.
+//!
 //! Ordering guarantees: requests dispatched over one context to the
 //! *same* shard arrive in dispatch order (the channel is FIFO); requests
 //! to different shards are unordered relative to each other.  Dropping a
@@ -78,36 +102,340 @@
 // poisoning explicitly; everything else is typed.
 #![deny(clippy::unwrap_used)]
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8,
+                        AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::coordinator::admission::{InFlightGuard, TenantState};
 use crate::coordinator::fleet::FleetBarrier;
 use crate::coordinator::privacy::PrivacyCtx;
 use crate::coordinator::proto::{ExecMsg, LayerId, LayerRequest,
-                                LayerResponse, OpKind, Urgency};
+                                LayerResponse, OpKind, Urgency,
+                                SHED_MARKER};
 use crate::coordinator::sharding::LayerAssignment;
 use crate::error::{SymResult, SymbiosisError};
 use crate::tensor::Tensor;
 use crate::transport::{Link, LinkKind};
+
+/// Deterministic 64-bit mixer (splitmix64 finalizer) — the same family
+/// the fault plans use, so jitter and chaos streams stay seed-pinnable.
+fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Queue-depth accounting for one shard's ingress, shared between the
+/// dispatch side (increment on every request send) and the shard
+/// executor (decrement on every request dequeue).  The high-water mark
+/// bounds the queue: a dispatch that would exceed it is refused with a
+/// typed [`SymbiosisError::ShardSaturated`] — backpressure instead of
+/// unbounded growth.  Mark 0 (the default) means unbounded, the
+/// pre-overload behavior.  Control messages (register, privacy, crash)
+/// never pass through the meter.
+pub struct IngressMeter {
+    depth: AtomicUsize,
+    high_water: AtomicUsize,
+}
+
+impl Default for IngressMeter {
+    fn default() -> Self {
+        IngressMeter::unbounded()
+    }
+}
+
+impl IngressMeter {
+    /// No high-water mark: every dispatch is admitted.
+    pub fn unbounded() -> Self {
+        IngressMeter {
+            depth: AtomicUsize::new(0),
+            high_water: AtomicUsize::new(0),
+        }
+    }
+
+    /// Bounded at `mark` queued requests.
+    pub fn with_high_water(mark: usize) -> Self {
+        let m = IngressMeter::unbounded();
+        m.set_high_water(mark);
+        m
+    }
+
+    /// Requests currently queued (sent, not yet dequeued).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    /// The configured high-water mark (0 = unbounded).
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::SeqCst)
+    }
+
+    /// Set the high-water mark, live (0 disables the bound).
+    pub fn set_high_water(&self, mark: usize) {
+        self.high_water.store(mark, Ordering::SeqCst);
+    }
+
+    /// Reserve one queue slot; `Err((depth, limit))` when the queue is
+    /// at its mark (the reservation is rolled back — a refused dispatch
+    /// leaves no trace).
+    pub fn try_admit(&self) -> Result<(), (usize, usize)> {
+        let depth = self.depth.fetch_add(1, Ordering::SeqCst) + 1;
+        let limit = self.high_water.load(Ordering::SeqCst);
+        if limit != 0 && depth > limit {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            return Err((depth, limit));
+        }
+        Ok(())
+    }
+
+    /// Occupy one slot unconditionally — fault injection's flood action
+    /// inflates the queue past its mark on purpose.
+    pub fn force_admit(&self) {
+        self.depth.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Release one slot (executor dequeued a request, or a send
+    /// failed after admission).  Saturating: a respawn reset racing
+    /// in-flight decrements must not underflow.
+    pub fn exit(&self) {
+        let _ = self.depth.fetch_update(Ordering::SeqCst,
+                                        Ordering::SeqCst, |d| {
+            Some(d.saturating_sub(1))
+        });
+    }
+
+    /// Whether the queue currently stands at (or past) its mark — the
+    /// executor's shed trigger.
+    pub fn saturated(&self) -> bool {
+        let limit = self.high_water.load(Ordering::SeqCst);
+        limit != 0 && self.depth.load(Ordering::SeqCst) >= limit
+    }
+
+    /// Zero the depth (shard respawn: the dead executor's queue died
+    /// with it).
+    pub fn reset(&self) {
+        self.depth.store(0, Ordering::SeqCst);
+    }
+}
+
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Observable state of a [`CircuitBreaker`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: every dispatch admitted.
+    Closed,
+    /// Tripped: dispatches fast-fail without touching the shard.
+    Open,
+    /// Probing: exactly one dispatch admitted per watchdog re-arm;
+    /// its success closes the breaker, its failure reopens it.
+    HalfOpen,
+}
+
+/// Per-shard circuit breaker: opens after `threshold` *consecutive*
+/// request failures (`ExecutorFailed`/`DeadlineExceeded`), fast-failing
+/// subsequent dispatches as `ShardUnavailable { retries: 0 }` so a
+/// retry storm cannot dogpile a dead or respawning shard.  The fleet
+/// watchdog re-arms an open breaker to half-open on its heartbeat
+/// ([`Self::probe`]); the first successful call closes it.  Threshold 0
+/// (the default) disables the breaker entirely — the pre-overload
+/// behavior.
+pub struct CircuitBreaker {
+    state: AtomicU8,
+    consecutive_failures: AtomicU32,
+    threshold: AtomicU32,
+    probe_inflight: AtomicBool,
+    transitions: AtomicU64,
+}
+
+impl Default for CircuitBreaker {
+    fn default() -> Self {
+        CircuitBreaker::disabled()
+    }
+}
+
+impl CircuitBreaker {
+    /// Threshold 0: never trips, always admits.
+    pub fn disabled() -> Self {
+        CircuitBreaker {
+            state: AtomicU8::new(BREAKER_CLOSED),
+            consecutive_failures: AtomicU32::new(0),
+            threshold: AtomicU32::new(0),
+            probe_inflight: AtomicBool::new(false),
+            transitions: AtomicU64::new(0),
+        }
+    }
+
+    /// Trip after `threshold` consecutive failures.
+    pub fn with_threshold(threshold: u32) -> Self {
+        let b = CircuitBreaker::disabled();
+        b.set_threshold(threshold);
+        b
+    }
+
+    /// Configure the trip threshold, live (0 disables).
+    pub fn set_threshold(&self, threshold: u32) {
+        self.threshold.store(threshold, Ordering::SeqCst);
+    }
+
+    pub fn state(&self) -> BreakerState {
+        match self.state.load(Ordering::SeqCst) {
+            BREAKER_OPEN => BreakerState::Open,
+            BREAKER_HALF_OPEN => BreakerState::HalfOpen,
+            _ => BreakerState::Closed,
+        }
+    }
+
+    /// Lifetime state-transition count (for the overload bench).
+    pub fn transitions(&self) -> u64 {
+        self.transitions.load(Ordering::SeqCst)
+    }
+
+    /// Whether a dispatch may proceed.  Closed: yes.  Open: no.
+    /// Half-open: exactly one caller wins the probe slot per re-arm.
+    pub fn allow(&self) -> bool {
+        if self.threshold.load(Ordering::SeqCst) == 0 {
+            return true;
+        }
+        match self.state.load(Ordering::SeqCst) {
+            BREAKER_OPEN => false,
+            BREAKER_HALF_OPEN => self
+                .probe_inflight
+                .compare_exchange(false, true, Ordering::SeqCst,
+                                  Ordering::SeqCst)
+                .is_ok(),
+            _ => true,
+        }
+    }
+
+    /// A request against this shard succeeded: reset the failure run
+    /// and close the breaker from any state.
+    pub fn record_success(&self) {
+        self.consecutive_failures.store(0, Ordering::SeqCst);
+        self.probe_inflight.store(false, Ordering::SeqCst);
+        let prev = self.state.swap(BREAKER_CLOSED, Ordering::SeqCst);
+        if prev != BREAKER_CLOSED {
+            self.transitions.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// A request against this shard failed.  Half-open: the probe
+    /// failed, reopen.  Closed: trip once the consecutive run reaches
+    /// the threshold.
+    pub fn record_failure(&self) {
+        let threshold = self.threshold.load(Ordering::SeqCst);
+        if threshold == 0 {
+            return;
+        }
+        let run = self
+            .consecutive_failures
+            .fetch_add(1, Ordering::SeqCst)
+            .saturating_add(1);
+        match self.state.load(Ordering::SeqCst) {
+            BREAKER_HALF_OPEN => {
+                self.probe_inflight.store(false, Ordering::SeqCst);
+                if self
+                    .state
+                    .compare_exchange(BREAKER_HALF_OPEN, BREAKER_OPEN,
+                                      Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    self.transitions.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            BREAKER_CLOSED if run >= threshold => {
+                if self
+                    .state
+                    .compare_exchange(BREAKER_CLOSED, BREAKER_OPEN,
+                                      Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    self.transitions.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Watchdog re-arm: an open breaker goes half-open (one probe may
+    /// pass); a half-open breaker gets its probe slot back, bounding a
+    /// lost probe (dropped `PendingLayer`) to one heartbeat.
+    pub fn probe(&self) {
+        if self
+            .state
+            .compare_exchange(BREAKER_OPEN, BREAKER_HALF_OPEN,
+                              Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            self.probe_inflight.store(false, Ordering::SeqCst);
+            self.transitions.fetch_add(1, Ordering::SeqCst);
+        } else if self.state.load(Ordering::SeqCst) == BREAKER_HALF_OPEN {
+            self.probe_inflight.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Shard respawned on a fresh executor: close and forget the run.
+    pub fn reset(&self) {
+        self.consecutive_failures.store(0, Ordering::SeqCst);
+        self.probe_inflight.store(false, Ordering::SeqCst);
+        let prev = self.state.swap(BREAKER_CLOSED, Ordering::SeqCst);
+        if prev != BREAKER_CLOSED {
+            self.transitions.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
 
 /// One shard's *current* executor channel, shared by the fleet and by
 /// every client routing table.  When the fleet respawns a dead shard it
 /// [`swap`](Self::swap)s in the new thread's sender and bumps the
 /// epoch; clients resolve the sender *per message*, so in-flight
 /// sessions migrate to the replacement executor without rebuilding
-/// their tables — no one holds a dead channel.
+/// their tables — no one holds a dead channel.  The endpoint also
+/// carries the shard's shared [`IngressMeter`] and [`CircuitBreaker`]:
+/// a fault-plan interposer wrapping the endpoint shares both, so
+/// overload accounting survives interposition.
 pub struct ShardEndpoint {
     tx: RwLock<Sender<ExecMsg>>,
     epoch: AtomicU64,
+    meter: Arc<IngressMeter>,
+    breaker: Arc<CircuitBreaker>,
 }
 
 impl ShardEndpoint {
     pub fn new(tx: Sender<ExecMsg>) -> Self {
-        ShardEndpoint { tx: RwLock::new(tx), epoch: AtomicU64::new(0) }
+        ShardEndpoint::with_shared(tx,
+                                   Arc::new(IngressMeter::unbounded()),
+                                   Arc::new(CircuitBreaker::disabled()))
+    }
+
+    /// An endpoint over pre-existing overload state — how the fleet
+    /// ties the endpoint to the executor's meter, and how a fault
+    /// interposer's wrapped endpoint keeps the inner one's accounting.
+    pub fn with_shared(tx: Sender<ExecMsg>, meter: Arc<IngressMeter>,
+                       breaker: Arc<CircuitBreaker>) -> Self {
+        ShardEndpoint {
+            tx: RwLock::new(tx),
+            epoch: AtomicU64::new(0),
+            meter,
+            breaker,
+        }
+    }
+
+    /// The shard's ingress queue meter.
+    pub fn meter(&self) -> &Arc<IngressMeter> {
+        &self.meter
+    }
+
+    /// The shard's circuit breaker.
+    pub fn breaker(&self) -> &Arc<CircuitBreaker> {
+        &self.breaker
     }
 
     /// The current executor channel (clone of the live sender).  Poison
@@ -281,6 +609,27 @@ impl RetryPolicy {
         self.backoff = backoff;
         self
     }
+
+    /// Backoff before retry attempt `attempt` (1-based) for a given
+    /// client: linear base (`backoff * attempt`) scaled by a
+    /// *deterministic* per-(client, attempt) jitter factor in
+    /// [0.5, 1.5).  Jitter de-synchronizes clients retrying against the
+    /// same respawning shard (no thundering herd on the watchdog's
+    /// heartbeat), while splitmix64 over the salt keeps chaos runs
+    /// seed-pinnable — the same client makes the same sleeps every run,
+    /// and send counts never change.
+    pub fn backoff_for(&self, attempt: u32, client_salt: u64) -> Duration {
+        let h = splitmix64(
+            client_salt
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(attempt as u64),
+        );
+        // 53 high-quality bits -> uniform in [0, 1), shifted to
+        // [0.5, 1.5) so jitter never more than halves or doubles the
+        // linear schedule.
+        let unit = (h >> 11) as f64 / (1u64 << 53) as f64;
+        self.backoff.mul_f64(attempt as f64 * (0.5 + unit))
+    }
 }
 
 /// Per-client view of the executor fleet: layer proxies share this
@@ -306,6 +655,12 @@ pub struct VirtLayerCtx {
     pub request_timeout: Option<Duration>,
     /// Bounded-retry budget applied by every `collect` on this context.
     pub retry: RetryPolicy,
+    /// Admission-control identity: when set, every dispatch reserves an
+    /// in-flight slot against this tenant's quota (released when the
+    /// `PendingLayer` resolves or drops) and the session's KV ledger
+    /// charges the tenant's byte quota.  `None` — an unnamed client —
+    /// bypasses admission entirely, the pre-overload behavior.
+    pub tenant: Option<Arc<TenantState>>,
     /// Accumulated queue-wait observed by this client (Fig 7);
     /// f64 seconds bit-cast into the atomic.
     wait_secs: AtomicU64,
@@ -335,6 +690,9 @@ pub struct PendingLayer<'a> {
     x: Tensor,
     positions: Option<Tensor>,
     urgency: Urgency,
+    /// Tenant in-flight reservation (RAII): released when the pending
+    /// layer resolves or drops, so a leaked response cannot leak quota.
+    _admitted: Option<InFlightGuard>,
 }
 
 impl PendingLayer<'_> {
@@ -365,36 +723,64 @@ impl PendingLayer<'_> {
     fn collect_inner(mut self, deadline: Option<Duration>)
                      -> Result<Tensor> {
         let retry = self.ctx.retry;
+        let breaker = self.route.endpoint().breaker().clone();
         let mut attempt: u32 = 0;
         loop {
             match self.wait_once(deadline) {
                 Ok(y) => {
+                    breaker.record_success();
                     self.ctx.charge(self.route, &y);
                     return Ok(match &self.n_eff {
                         Some(n) => crate::tensor::ops::sub(&y, n),
                         None => y,
                     });
                 }
-                Err(e) if attempt < retry.max_retries => {
-                    attempt += 1;
-                    // Linear backoff: give the watchdog time to respawn
-                    // the shard before the request goes out again.
-                    std::thread::sleep(retry.backoff * attempt);
-                    self.redispatch();
-                    let _ = e; // superseded by the retry's outcome
-                }
                 Err(e) => {
-                    if retry.max_retries > 0 {
-                        // The budget is spent: surface the triage-level
-                        // error, keeping the last fault in the chain.
+                    // Shed work is *deferred*, not failed: it never
+                    // burns retry budget and never counts against the
+                    // breaker — the shard is healthy, just saturated.
+                    if matches!(e.downcast_ref::<SymbiosisError>(),
+                                Some(SymbiosisError::WorkShed { .. })) {
+                        return Err(e);
+                    }
+                    breaker.record_failure();
+                    if attempt >= retry.max_retries {
+                        if retry.max_retries > 0 {
+                            // The budget is spent: surface the
+                            // triage-level error, keeping the last
+                            // fault in the chain.
+                            return Err(e.context(
+                                SymbiosisError::ShardUnavailable {
+                                    shard: self.route.shard(),
+                                    retries: retry.max_retries,
+                                },
+                            ));
+                        }
+                        return Err(e);
+                    }
+                    if !breaker.allow() {
+                        // Breaker tripped mid-budget: fast-fail instead
+                        // of sleeping through backoffs a dead shard
+                        // will never answer.  `retries: attempt` says
+                        // how much budget was actually burned.
                         return Err(e.context(
                             SymbiosisError::ShardUnavailable {
                                 shard: self.route.shard(),
-                                retries: retry.max_retries,
+                                retries: attempt,
                             },
                         ));
                     }
-                    return Err(e);
+                    attempt += 1;
+                    // Linear backoff with deterministic per-client
+                    // jitter: give the watchdog time to respawn the
+                    // shard before the request goes out again, without
+                    // every client's retry landing on the same tick.
+                    std::thread::sleep(retry.backoff_for(
+                        attempt,
+                        self.ctx.client_id as u64,
+                    ));
+                    self.redispatch();
+                    let _ = e; // superseded by the retry's outcome
                 }
             }
         }
@@ -432,6 +818,14 @@ impl PendingLayer<'_> {
         };
         atomic_f64_add(&self.ctx.wait_secs, resp.queue_wait_secs);
         resp.y.map_err(|message| {
+            if message.starts_with(SHED_MARKER) {
+                // The executor's load shedder answered instead of the
+                // device: background work deferred under saturation.
+                return anyhow::Error::new(SymbiosisError::WorkShed {
+                    layer: self.layer.label(),
+                    shard: self.route.shard(),
+                });
+            }
             anyhow::Error::new(SymbiosisError::ExecutorFailed {
                 layer: self.layer.label(),
                 message,
@@ -445,17 +839,34 @@ impl PendingLayer<'_> {
     /// which the next `wait_once` surfaces as a failed attempt — so a
     /// still-dead shard burns budget instead of looping.
     fn redispatch(&mut self) {
+        let meter = self.route.endpoint().meter().clone();
+        if meter.try_admit().is_err() {
+            // The replacement shard is already saturated: leave a
+            // disconnected receiver behind so the next `wait_once`
+            // burns a retry attempt instead of blocking on a request
+            // that was never queued.
+            let (_tx, rx) = channel::<LayerResponse>();
+            self.rx = rx;
+            return;
+        }
         self.ctx.charge(self.route, &self.x);
         let (tx, rx) = channel::<LayerResponse>();
-        let _ = self.route.send(ExecMsg::Request(LayerRequest {
-            client_id: self.ctx.client_id,
-            layer: self.layer,
-            op: self.op,
-            x: self.x.clone(),
-            positions: self.positions.clone(),
-            urgency: self.urgency,
-            resp: tx,
-        }));
+        if self
+            .route
+            .send(ExecMsg::Request(LayerRequest {
+                client_id: self.ctx.client_id,
+                layer: self.layer,
+                op: self.op,
+                x: self.x.clone(),
+                positions: self.positions.clone(),
+                urgency: self.urgency,
+                resp: tx,
+            }))
+            .is_err()
+        {
+            // Never queued: release the reserved ingress slot.
+            meter.exit();
+        }
         self.rx = rx;
     }
 }
@@ -470,6 +881,7 @@ impl VirtLayerCtx {
             fleet_barrier: None,
             request_timeout: None,
             retry: RetryPolicy::default(),
+            tenant: None,
             wait_secs: AtomicU64::new(0.0f64.to_bits()),
             link_secs: AtomicU64::new(0.0f64.to_bits()),
         }
@@ -571,10 +983,36 @@ impl VirtLayerCtx {
     /// everything the response owes — queue wait, response link,
     /// failure surfacing, deadline/retry handling — happens in
     /// [`PendingLayer::collect`].
+    /// Overload gates run *before* the payload is charged or sent, in
+    /// fast-fail order: open breaker (`ShardUnavailable { retries: 0 }`),
+    /// tenant in-flight quota (`QuotaExceeded`), then the shard's
+    /// bounded ingress queue (`ShardSaturated`).  All three are typed
+    /// and leave no partial state behind.
     pub fn dispatch(&self, layer: LayerId, op: OpKind, x: Tensor,
                     positions: Option<Tensor>, urgency: Urgency)
                     -> Result<PendingLayer<'_>> {
         let route = self.routing.route(layer);
+        if !route.endpoint().breaker().allow() {
+            return Err(anyhow::Error::new(
+                SymbiosisError::ShardUnavailable {
+                    shard: route.shard(),
+                    retries: 0,
+                },
+            ));
+        }
+        let admitted = self
+            .tenant
+            .as_ref()
+            .map(|t| t.begin_request())
+            .transpose()?;
+        let meter = route.endpoint().meter().clone();
+        meter.try_admit().map_err(|(depth, limit)| {
+            SymbiosisError::ShardSaturated {
+                shard: route.shard(),
+                depth,
+                limit,
+            }
+        })?;
         self.charge(route, &x);
         let (tx, rx) = channel::<LayerResponse>();
         route
@@ -588,6 +1026,8 @@ impl VirtLayerCtx {
                 resp: tx,
             }))
             .map_err(|_| {
+                // Never queued: the reserved ingress slot comes back.
+                meter.exit();
                 SymbiosisError::ExecutorFailed {
                     layer: layer.label(),
                     message: "shard executor is gone (fleet shut down \
@@ -605,6 +1045,7 @@ impl VirtLayerCtx {
             x,
             positions,
             urgency,
+            _admitted: admitted,
         })
     }
 
@@ -981,5 +1422,224 @@ mod tests {
             batch_clients: 1,
         });
         assert!(send_result.is_err(), "receiver should be gone");
+    }
+
+    #[test]
+    fn ingress_meter_bounds_at_its_mark() {
+        let m = IngressMeter::with_high_water(2);
+        assert!(m.try_admit().is_ok());
+        assert!(m.try_admit().is_ok());
+        assert!(m.saturated());
+        assert_eq!(m.try_admit().unwrap_err(), (3, 2));
+        assert_eq!(m.depth(), 2, "refused admit must roll back");
+        m.exit();
+        assert!(!m.saturated());
+        assert!(m.try_admit().is_ok());
+        // unbounded meter never refuses, whatever the depth
+        let u = IngressMeter::unbounded();
+        for _ in 0..100 {
+            assert!(u.try_admit().is_ok());
+        }
+        assert!(!u.saturated());
+        // exit never underflows past a reset
+        u.reset();
+        u.exit();
+        assert_eq!(u.depth(), 0);
+    }
+
+    #[test]
+    fn saturated_dispatch_is_typed_backpressure() {
+        let (tx, _rx) = channel();
+        let endpoint = Arc::new(ShardEndpoint::with_shared(
+            tx,
+            Arc::new(IngressMeter::with_high_water(2)),
+            Arc::new(CircuitBreaker::disabled()),
+        ));
+        let table = RoutingTable {
+            assign: LayerAssignment::contiguous(1, 1),
+            routes: vec![ShardRoute::shared(0, endpoint,
+                                            LinkKind::SharedLocal)],
+        };
+        let ctx = VirtLayerCtx::new(0, table);
+        let mut pending = Vec::new();
+        for _ in 0..2 {
+            pending.push(ctx
+                .dispatch(LayerId::Qkv(0), OpKind::Forward,
+                          Tensor::zeros(&[1, 4]), None, Urgency::Bulk)
+                .unwrap());
+        }
+        let err = ctx
+            .dispatch(LayerId::Qkv(0), OpKind::Forward,
+                      Tensor::zeros(&[1, 4]), None, Urgency::Bulk)
+            .unwrap_err();
+        match SymbiosisError::from(err) {
+            SymbiosisError::ShardSaturated { shard, depth, limit } => {
+                assert_eq!(shard, 0);
+                assert_eq!(depth, 3);
+                assert_eq!(limit, 2);
+            }
+            other => panic!("expected ShardSaturated, got {other}"),
+        }
+        // a refused dispatch charged nothing to the link
+        let (msgs, _) = ctx.link_traffic()[0];
+        assert_eq!(msgs, 2);
+    }
+
+    #[test]
+    fn breaker_trips_after_consecutive_failures() {
+        let b = CircuitBreaker::with_threshold(3);
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_failure();
+        b.record_failure();
+        b.record_success(); // run broken: back to zero
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow());
+        // watchdog heartbeat re-arms to half-open: one probe passes
+        b.probe();
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.allow(), "first caller wins the probe slot");
+        assert!(!b.allow(), "second caller is still fast-failed");
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow());
+    }
+
+    #[test]
+    fn half_open_probe_failure_reopens() {
+        let b = CircuitBreaker::with_threshold(1);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        b.probe();
+        assert!(b.allow());
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow());
+        // a lost probe (dropped PendingLayer) re-arms on the next tick
+        b.probe();
+        assert!(b.allow());
+        b.probe(); // half-open tick: returns the stuck probe slot
+        assert!(b.allow());
+    }
+
+    #[test]
+    fn open_breaker_fast_fails_dispatch_without_sending() {
+        let (tx, rx) = channel();
+        let breaker = Arc::new(CircuitBreaker::with_threshold(1));
+        let endpoint = Arc::new(ShardEndpoint::with_shared(
+            tx,
+            Arc::new(IngressMeter::unbounded()),
+            breaker.clone(),
+        ));
+        let table = RoutingTable {
+            assign: LayerAssignment::contiguous(1, 1),
+            routes: vec![ShardRoute::shared(0, endpoint,
+                                            LinkKind::SharedLocal)],
+        };
+        let ctx = VirtLayerCtx::new(0, table);
+        breaker.record_failure();
+        let before = std::time::Instant::now();
+        let err = ctx
+            .dispatch(LayerId::Qkv(0), OpKind::Forward,
+                      Tensor::zeros(&[1, 4]), None, Urgency::Bulk)
+            .unwrap_err();
+        match SymbiosisError::from(err) {
+            SymbiosisError::ShardUnavailable { shard, retries } => {
+                assert_eq!(shard, 0);
+                assert_eq!(retries, 0, "fast-fail burns no retries");
+            }
+            other => panic!("expected ShardUnavailable, got {other}"),
+        }
+        assert!(before.elapsed() < Duration::from_millis(20),
+                "open breaker must not sleep through backoff");
+        assert!(rx.try_recv().is_err(), "nothing reached the shard");
+    }
+
+    #[test]
+    fn shed_response_is_deferred_not_retried() {
+        let (tx, rx) = channel();
+        std::thread::spawn(move || {
+            while let Ok(ExecMsg::Request(req)) = rx.recv() {
+                let _ = req.resp.send(LayerResponse {
+                    y: Err(format!("{SHED_MARKER}saturation brown-out")),
+                    queue_wait_secs: 0.0,
+                    batch_clients: 1,
+                });
+            }
+        });
+        let table = RoutingTable::single(tx, LinkKind::SharedLocal);
+        let mut ctx = VirtLayerCtx::new(0, table);
+        ctx.retry = RetryPolicy::retries(3)
+            .with_backoff(Duration::from_millis(1));
+        let err = ctx
+            .forward(LayerId::Qkv(0), Tensor::zeros(&[1, 4]),
+                     Urgency::Background)
+            .unwrap_err();
+        match SymbiosisError::from(err) {
+            SymbiosisError::WorkShed { layer, shard } => {
+                assert_eq!(layer, "l0.qkv");
+                assert_eq!(shard, 0);
+            }
+            other => panic!("expected WorkShed, got {other}"),
+        }
+        // shed never burns the retry budget: one request only
+        let (msgs, _) = ctx.link_traffic()[0];
+        assert_eq!(msgs, 1);
+    }
+
+    #[test]
+    fn backoff_jitter_is_deterministic_and_bounded() {
+        let p = RetryPolicy::retries(4)
+            .with_backoff(Duration::from_millis(20));
+        for attempt in 1..=4u32 {
+            for salt in [0u64, 7, 1337, u64::MAX] {
+                let a = p.backoff_for(attempt, salt);
+                let b = p.backoff_for(attempt, salt);
+                assert_eq!(a, b, "jitter must be deterministic");
+                let linear = p.backoff * attempt;
+                assert!(a >= linear / 2 && a < linear * 3 / 2,
+                        "attempt {attempt} salt {salt}: {a:?} outside \
+                         [0.5, 1.5) x {linear:?}");
+            }
+        }
+        // different clients de-synchronize
+        assert_ne!(p.backoff_for(1, 1), p.backoff_for(1, 2));
+    }
+
+    #[test]
+    fn tenant_in_flight_quota_gates_dispatch() {
+        use crate::coordinator::admission::AdmissionController;
+        let ac = AdmissionController::new();
+        ac.set_quota("acme",
+                     crate::coordinator::admission::TenantQuota::unlimited()
+                         .max_in_flight(1));
+        let (tx, _rx) = channel();
+        let table = RoutingTable::single(tx, LinkKind::SharedLocal);
+        let mut ctx = VirtLayerCtx::new(0, table);
+        ctx.tenant = Some(ac.tenant("acme"));
+        let pend = ctx
+            .dispatch(LayerId::Qkv(0), OpKind::Forward,
+                      Tensor::zeros(&[1, 4]), None, Urgency::Bulk)
+            .unwrap();
+        let err = ctx
+            .dispatch(LayerId::Qkv(0), OpKind::Forward,
+                      Tensor::zeros(&[1, 4]), None, Urgency::Bulk)
+            .unwrap_err();
+        match SymbiosisError::from(err) {
+            SymbiosisError::QuotaExceeded { tenant, resource, .. } => {
+                assert_eq!(tenant, "acme");
+                assert_eq!(resource, "in-flight layer requests");
+            }
+            other => panic!("expected QuotaExceeded, got {other}"),
+        }
+        // dropping the pending layer releases the slot (RAII guard)
+        drop(pend);
+        assert!(ctx
+            .dispatch(LayerId::Qkv(0), OpKind::Forward,
+                      Tensor::zeros(&[1, 4]), None, Urgency::Bulk)
+            .is_ok());
     }
 }

@@ -31,10 +31,24 @@
 //! | `MalformedRoutingTable` | reject | assignment/route count mismatch |
 //! | `DeadlineExceeded` | retry | shard hung or overloaded; frozen-base ops are pure, safe to re-send |
 //! | `ExecutorFailed` | retry | per-request shard fault; a respawned shard may serve it |
-//! | `ShardUnavailable` | retry (after respawn) | bounded-retry budget exhausted; escalate if it persists |
+//! | `ShardUnavailable` | retry (after respawn) | bounded-retry budget exhausted, or the shard's circuit breaker is open; escalate if it persists |
+//! | `ShardSaturated` | retry (after backoff) | ingress queue at its high-water mark — backpressure, not a fault; drains as the shard catches up |
+//! | `AdmissionDenied` | reject (until a session exits) | tenant at its concurrent-session quota; admitting more would not fit |
+//! | `QuotaExceeded` | reject (until the tenant frees) | per-tenant in-flight/KV budget exhausted by the tenant's *own* usage |
+//! | `WorkShed` | defer (re-submit later) | background work shed during a brown-out; interactive traffic still proceeds |
 //! | `KvCacheOom` | retry (after eviction) | co-tenant pressure; frees up when a tenant leaves |
 //! | `ShardOom` | 500 | fleet cannot hold the model; operator must re-plan |
 //! | `Runtime` | 500 | engine/artifact/channel fault below the API |
+//!
+//! The overload variants differ in *who* must act: `ShardSaturated`
+//! is fleet-wide pressure (any client backing off helps),
+//! `AdmissionDenied`/`QuotaExceeded` name one tenant whose own usage
+//! is the cause (only that tenant releasing resources helps), and
+//! `WorkShed` is the executor choosing the victim (background work)
+//! so interactive tenants never see the brown-out.  None of the four
+//! are retried by the client's [`crate::coordinator::RetryPolicy`]
+//! ladder — retrying into a saturated queue is exactly the dogpile
+//! the breaker and shedder exist to prevent.
 
 use std::fmt;
 
@@ -81,7 +95,44 @@ pub enum SymbiosisError {
     /// The bounded-retry budget against one shard is exhausted: every
     /// attempt (including any against a re-spawned executor) failed or
     /// timed out.  The source chain carries the last underlying fault.
+    /// Also surfaced with `retries: 0` when the shard's circuit
+    /// breaker is open — a fast-fail that spends no retry sleeps.
     ShardUnavailable { shard: usize, retries: u32 },
+    /// A dispatch would push the shard's ingress queue past its
+    /// configured high-water mark.  This is backpressure, not a fault:
+    /// the shard is healthy but behind, and the bounded queue refuses
+    /// new work instead of growing without limit.  Back off and
+    /// re-send; the queue drains as the shard catches up.
+    ShardSaturated { shard: usize, depth: usize, limit: usize },
+    /// The admission controller refused a new session/trainer: the
+    /// tenant is at its concurrent-session quota.  Re-sending fails
+    /// until one of the tenant's existing sessions exits.
+    AdmissionDenied {
+        tenant: String,
+        resource: &'static str,
+        current: usize,
+        limit: usize,
+    },
+    /// A per-tenant runtime quota (in-flight layer requests, KV-cache
+    /// bytes) is exhausted by the tenant's own usage.  Unlike
+    /// [`SymbiosisError::ShardSaturated`] this names the tenant whose
+    /// budget ran out — only that tenant completing or releasing work
+    /// clears it.
+    QuotaExceeded {
+        tenant: String,
+        resource: &'static str,
+        used: u64,
+        requested: u64,
+        limit: u64,
+    },
+    /// The executor shed this request during a saturation brown-out:
+    /// the work was [`crate::coordinator::proto::Urgency::Background`]
+    /// and the shard's ingress queue was at its high-water mark, so
+    /// the batch was answered with this error instead of occupying the
+    /// device ahead of interactive decode.  Deferred, not failed —
+    /// re-submit when load drops (the client retry ladder deliberately
+    /// does *not* re-send it into the same saturated queue).
+    WorkShed { layer: String, shard: usize },
     /// A routing table was built with a route count that does not match
     /// its layer assignment's shard count — a malformed deployment, not
     /// a runtime fault.
@@ -159,6 +210,41 @@ impl fmt::Display for SymbiosisError {
                 write!(f, "shard {shard} unavailable after {retries} \
                            retr{} — respawn the shard or escalate",
                        if *retries == 1 { "y" } else { "ies" })
+            }
+            SymbiosisError::ShardSaturated { shard, depth, limit } => {
+                write!(f, "shard {shard} ingress queue is saturated \
+                           ({depth} queued, high-water {limit}) — \
+                           backpressure, not a fault; back off and \
+                           re-send")
+            }
+            SymbiosisError::AdmissionDenied {
+                tenant,
+                resource,
+                current,
+                limit,
+            } => {
+                write!(f, "admission denied for tenant '{tenant}': \
+                           {resource} quota reached ({current} of \
+                           {limit}) — an existing session must exit \
+                           first")
+            }
+            SymbiosisError::QuotaExceeded {
+                tenant,
+                resource,
+                used,
+                requested,
+                limit,
+            } => {
+                write!(f, "tenant '{tenant}' exceeded its {resource} \
+                           quota: {used} used + {requested} requested \
+                           vs limit {limit} — the tenant must complete \
+                           or release work")
+            }
+            SymbiosisError::WorkShed { layer, shard } => {
+                write!(f, "background work on layer {layer} was shed \
+                           by shard {shard} during a saturation \
+                           brown-out — deferred, re-submit when load \
+                           drops")
             }
             SymbiosisError::MalformedRoutingTable { shards, routes } => {
                 write!(f, "routing table is malformed: the layer \
@@ -301,6 +387,71 @@ mod tests {
         assert!(matches!(back,
                          SymbiosisError::ShardUnavailable { shard: 0,
                                                             retries: 2 }));
+    }
+
+    #[test]
+    fn overload_errors_name_tenant_and_resource() {
+        let e = SymbiosisError::ShardSaturated {
+            shard: 2,
+            depth: 65,
+            limit: 64,
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("shard 2"));
+        assert!(msg.contains("65 queued"));
+        assert!(msg.contains("high-water 64"));
+        let e = SymbiosisError::AdmissionDenied {
+            tenant: "acme".into(),
+            resource: "concurrent sessions",
+            current: 3,
+            limit: 3,
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("'acme'"));
+        assert!(msg.contains("concurrent sessions"));
+        assert!(msg.contains("3 of 3"));
+        let e = SymbiosisError::QuotaExceeded {
+            tenant: "acme".into(),
+            resource: "KV-cache bytes",
+            used: 900,
+            requested: 200,
+            limit: 1024,
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("'acme'"));
+        assert!(msg.contains("900 used"));
+        assert!(msg.contains("200 requested"));
+        assert!(msg.contains("limit 1024"));
+        let e = SymbiosisError::WorkShed {
+            layer: "l3.mlp_up".into(),
+            shard: 1,
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("l3.mlp_up"));
+        assert!(msg.contains("shard 1"));
+        assert!(msg.contains("re-submit"));
+    }
+
+    #[test]
+    fn overload_errors_roundtrip_through_anyhow() {
+        let typed: anyhow::Error = SymbiosisError::ShardSaturated {
+            shard: 0,
+            depth: 9,
+            limit: 8,
+        }
+        .into();
+        let back: SymbiosisError = typed.into();
+        assert!(matches!(back,
+                         SymbiosisError::ShardSaturated { shard: 0,
+                                                          depth: 9,
+                                                          limit: 8 }));
+        let typed: anyhow::Error = SymbiosisError::WorkShed {
+            layer: "l0.qkv".into(),
+            shard: 0,
+        }
+        .into();
+        let back: SymbiosisError = typed.into();
+        assert!(matches!(back, SymbiosisError::WorkShed { .. }));
     }
 
     #[test]
