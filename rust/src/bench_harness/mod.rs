@@ -185,6 +185,65 @@ pub fn json_escape(s: &str) -> String {
     out
 }
 
+// ---------------------------------------------------------------------------
+// The shared bench-record schema (symbiosis-bench-v1)
+// ---------------------------------------------------------------------------
+
+/// Schema tag stamped into every CI bench artifact so downstream
+/// tooling can diff `BENCH_*.json` files across PRs without guessing
+/// at their shape.
+pub const BENCH_SCHEMA: &str = "symbiosis-bench-v1";
+
+/// Build one standardized bench record.  Every CI artifact
+/// (`BENCH_pipeline.json`, `BENCH_chaos.json`, `BENCH_overload.json`,
+/// `BENCH_serving.json`) is an array of these:
+///
+/// ```json
+/// { "schema": "symbiosis-bench-v1", "name": "...", "quick": true,
+///   "config": {...}, "percentiles": {...}, "counters": {...},
+///   "detail": {...} }
+/// ```
+///
+/// * `config` — the knobs that shaped the run (shards, sessions, seed);
+/// * `percentiles` — latency distributions, milliseconds, named
+///   `<metric>_p<q>_ms`;
+/// * `counters` — monotone totals (requests, sheds, retries);
+/// * `detail` — anything section-specific that fits neither bucket.
+///
+/// Keys inside each sub-object are section-defined; the four top-level
+/// buckets are the stable contract.
+pub fn bench_record(name: &str, quick: bool,
+                    config: Vec<(&str, JsonValue)>,
+                    percentiles: Vec<(&str, JsonValue)>,
+                    counters: Vec<(&str, JsonValue)>,
+                    detail: Vec<(&str, JsonValue)>) -> JsonValue {
+    JsonValue::obj(vec![
+        ("schema", JsonValue::Str(BENCH_SCHEMA.into())),
+        ("name", JsonValue::Str(name.into())),
+        ("quick", JsonValue::Bool(quick)),
+        ("config", JsonValue::obj(config)),
+        ("percentiles", JsonValue::obj(percentiles)),
+        ("counters", JsonValue::obj(counters)),
+        ("detail", JsonValue::obj(detail)),
+    ])
+}
+
+/// Nearest-rank percentile over raw samples (`q` in 0..=100).  Returns
+/// 0.0 on an empty slice — bench tables render that as "no samples"
+/// rather than poisoning the JSON with null.
+pub fn percentile_of(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| {
+        a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let rank = ((q / 100.0) * (sorted.len() as f64 - 1.0)).round();
+    let idx = (rank as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
 /// Human duration formatting: ns/us/ms/s.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {
@@ -237,5 +296,32 @@ mod tests {
         assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
         assert_eq!(JsonValue::Num(f64::NAN).render(), "null");
         assert_eq!(JsonValue::Str("x\t".into()).render(), "\"x\\t\"");
+    }
+
+    #[test]
+    fn bench_record_has_stable_top_level_shape() {
+        let rec = bench_record(
+            "serving_load_gen", true,
+            vec![("sessions", JsonValue::Int(96))],
+            vec![("ttft_p50_ms", JsonValue::Num(1.25))],
+            vec![("completed", JsonValue::Int(96))],
+            vec![]);
+        let s = rec.render();
+        assert!(s.starts_with(
+            r#"{"schema":"symbiosis-bench-v1","name":"serving_load_gen","quick":true"#));
+        for key in ["\"config\":", "\"percentiles\":", "\"counters\":",
+                    "\"detail\":"] {
+            assert!(s.contains(key), "missing bucket {key} in {s}");
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_of(&xs, 50.0), 51.0);
+        assert_eq!(percentile_of(&xs, 0.0), 1.0);
+        assert_eq!(percentile_of(&xs, 100.0), 100.0);
+        assert_eq!(percentile_of(&[], 99.0), 0.0);
+        assert_eq!(percentile_of(&[7.5], 99.0), 7.5);
     }
 }

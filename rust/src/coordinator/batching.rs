@@ -9,6 +9,13 @@
 //! * **Opportunistic** — wait a bounded, urgency-scaled time to
 //!   accumulate a batch; requests batched at layer *i* are NOT required
 //!   to batch again at layer *i+1* (section 3.7).
+//!
+//! A fourth, [`BatchPolicy::Continuous`], serves the iteration-level
+//! scheduler ([`crate::coordinator::scheduler`]): the executor never
+//! waits on a registration cohort — each flush takes whatever the
+//! scheduler's current wavefront dispatched.
+
+#![deny(clippy::unwrap_used)]
 
 use std::time::Duration;
 
@@ -35,6 +42,14 @@ pub enum BatchPolicy {
     /// `base_wait` is the budget for `Urgency::Training`; other classes
     /// scale down from it.
     Opportunistic { base_wait: Duration },
+    /// Iteration-driven continuous batching: the scheduler — not a
+    /// registration cohort — decides who participates in each token
+    /// iteration, so the executor flushes per iteration: requests
+    /// accumulate only while the ingress channel drains (one wavefront's
+    /// dispatches arrive back-to-back), then the idle flush sends the
+    /// whole batch.  A small deadline bounds the wait so a straggling
+    /// iteration cannot park the device.
+    Continuous,
 }
 
 impl BatchPolicy {
@@ -63,6 +78,9 @@ impl BatchPolicy {
                 // training budget when admitted at all.
                 Urgency::Training | Urgency::Background => *base_wait,
             },
+            // Long enough to catch a wavefront's stragglers arriving
+            // back-to-back, short enough to never stall an iteration.
+            BatchPolicy::Continuous => Duration::from_millis(2),
         }
     }
 
@@ -81,6 +99,9 @@ impl BatchPolicy {
             BatchPolicy::Opportunistic { .. } => {
                 registered > 0 && queued_clients >= registered
             }
+            // Never cohort-flush: the drain-idle flush (plus the small
+            // deadline) delivers exactly the current iteration's batch.
+            BatchPolicy::Continuous => false,
         }
     }
 
@@ -92,6 +113,7 @@ impl BatchPolicy {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -126,5 +148,22 @@ mod tests {
         assert_eq!(p.wait_budget(Urgency::Background), t,
                    "background waits like training; shedding — not a \
                     shorter budget — is its degraded mode");
+    }
+
+    #[test]
+    fn continuous_never_cohort_flushes_and_holds_no_barrier() {
+        let p = BatchPolicy::Continuous;
+        assert!(!p.ready(8, 8),
+                "continuous ignores the registration cohort entirely");
+        assert!(!p.ready(1, 0));
+        assert!(!p.is_lockstep(),
+                "must flush on idle drain, or iterations would deadlock");
+        for u in [Urgency::Interactive, Urgency::Bulk, Urgency::Training,
+                  Urgency::Background] {
+            let w = p.wait_budget(u);
+            assert!(w > Duration::ZERO && w <= Duration::from_millis(5),
+                    "small uniform deadline, urgency-independent: the \
+                     scheduler already ordered the iteration");
+        }
     }
 }

@@ -875,6 +875,54 @@ impl Sampler {
     }
 }
 
+/// Resumable generation bookkeeping: the sampler stream, per-sequence
+/// done mask, and emission budget that [`InferenceSession::generate`]
+/// used to keep on its stack.  Factored into a value so an external
+/// driver — the continuous-batching scheduler
+/// ([`crate::coordinator::scheduler`]) — can advance a request one
+/// token step at a time across many sessions, while `generate` itself
+/// stays a thin loop over the same methods.  Because both paths run
+/// the *same* selection code, their token streams are bit-identical
+/// (pinned by `tests/serving.rs`).
+pub(crate) struct GenState {
+    sampler: Sampler,
+    /// Per-sequence stop mask; empty until the first (prefill) token.
+    done: Vec<bool>,
+    /// Tokens emitted so far, the prefill token included.
+    emitted: usize,
+    max_tokens: usize,
+    stop_tokens: Vec<i32>,
+    /// Per-sequence `generated` lengths when the request began, so the
+    /// request's own output can be sliced off a continued session.
+    already: Vec<usize>,
+}
+
+impl GenState {
+    /// Whether the request still wants decode steps.  False before the
+    /// first token (the prefill phase is tracked by the caller) and
+    /// after every sequence stopped or the budget is spent.
+    pub(crate) fn running(&self) -> bool {
+        self.emitted > 0
+            && self.emitted < self.max_tokens
+            && !self.done.iter().all(|&d| d)
+    }
+
+    pub(crate) fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// Absorb the prefill token per sequence: initialize the stop mask
+    /// and count the first emission — the done-mask line of the
+    /// sequential `generate`.
+    fn absorb_first(&mut self, first: &[i32]) {
+        self.done = first
+            .iter()
+            .map(|t| self.stop_tokens.contains(t))
+            .collect();
+        self.emitted = 1;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Inference
 // ---------------------------------------------------------------------------
@@ -929,6 +977,12 @@ impl InferenceSession {
 
     pub(crate) fn set_prefill_chunk(&mut self, chunk: Option<usize>) {
         self.prefill_chunk = chunk;
+    }
+
+    /// Session-default pipelined-prefill micro-batch size, if any (the
+    /// scheduler resolves request > session > engine defaults).
+    pub(crate) fn session_prefill_chunk(&self) -> Option<usize> {
+        self.prefill_chunk
     }
 
     /// Charge this session's KV cache to a simulated device ledger
@@ -1011,7 +1065,7 @@ impl InferenceSession {
         self.prefill_with(tokens, &mut Sampler::Greedy)
     }
 
-    fn check_prompt(&self, tokens: &[i32]) -> SymResult<()> {
+    pub(crate) fn check_prompt(&self, tokens: &[i32]) -> SymResult<()> {
         if tokens.len() < self.batch || tokens.len() % self.batch != 0 {
             return Err(SymbiosisError::InvalidGenerationConfig(format!(
                 "prompt length {} is not a positive multiple of batch {}",
@@ -1157,61 +1211,103 @@ impl InferenceSession {
     /// requests' tokens).
     pub fn generate(&mut self, prompt: &[i32], cfg: &GenerationConfig)
                     -> SymResult<Vec<Vec<i32>>> {
+        let mut st = self.begin_generate(cfg)?;
+        // per-request chunk overrides the session default
+        let chunk = cfg.prefill_chunk.or(self.prefill_chunk);
+        let first = if let Some(c) = chunk {
+            self.prefill_pipelined_with(prompt, c, &mut st.sampler)?
+        } else if self.kv.is_empty() {
+            self.prefill_with(prompt, &mut st.sampler)?
+        } else {
+            self.prefill_incremental_with(prompt, &mut st.sampler)?
+        };
+        st.absorb_first(&first);
+        while st.running() {
+            let last = self.last.clone();
+            let logits =
+                self.step_logits(&last).map_err(SymbiosisError::from)?;
+            self.apply_decode_logits(&mut st, &logits);
+        }
+        Ok(self.take_generated(&st))
+    }
+
+    /// Validate the request and open its resumable [`GenState`] —
+    /// sampler stream, stop set, and the per-sequence `generated`
+    /// snapshot used to slice this request's output off a continued
+    /// session.  Also seeds the adapter's KV prefix (a prefix adapter
+    /// on a hand-constructed session may not have seeded yet, and
+    /// prefill routing depends on it).
+    pub(crate) fn begin_generate(&mut self, cfg: &GenerationConfig)
+                                 -> SymResult<GenState> {
         if cfg.max_tokens == 0 {
             return Err(SymbiosisError::InvalidGenerationConfig(
                 "max_tokens must be >= 1".to_string()));
         }
         let already: Vec<usize> =
             self.generated.iter().map(|g| g.len()).collect();
-        let mut sampler = Sampler::new(&cfg.sampling);
-        // a prefix adapter on a hand-constructed session may not have
-        // seeded yet — do it here so routing below stays correct
         self.seed_prefix()?;
-        // per-request chunk overrides the session default
-        let chunk = cfg.prefill_chunk.or(self.prefill_chunk);
-        let first = if let Some(c) = chunk {
-            self.prefill_pipelined_with(prompt, c, &mut sampler)?
-        } else if self.kv.is_empty() {
-            self.prefill_with(prompt, &mut sampler)?
-        } else {
-            self.prefill_incremental_with(prompt, &mut sampler)?
-        };
-        let mut done: Vec<bool> = first
-            .iter()
-            .map(|t| cfg.stop_tokens.contains(t))
-            .collect();
-        let mut emitted = 1usize;
-        while emitted < cfg.max_tokens && !done.iter().all(|&d| d) {
-            let last = self.last.clone();
-            let logits =
-                self.step_logits(&last).map_err(SymbiosisError::from)?;
-            let mut next = Vec::with_capacity(self.batch);
-            for b in 0..self.batch {
-                if done[b] {
-                    // finished sequences keep feeding their last token
-                    // (cache stays aligned) but record nothing
-                    next.push(last[b]);
-                } else {
-                    next.push(sampler.pick(&logits, b));
-                }
-            }
-            for (b, t) in next.iter().enumerate() {
-                if !done[b] {
-                    self.generated[b].push(*t);
-                    if cfg.stop_tokens.contains(t) {
-                        done[b] = true;
-                    }
-                }
-            }
-            self.last = next;
-            emitted += 1;
+        Ok(GenState {
+            sampler: Sampler::new(&cfg.sampling),
+            done: Vec::new(),
+            emitted: 0,
+            max_tokens: cfg.max_tokens,
+            stop_tokens: cfg.stop_tokens.clone(),
+            already,
+        })
+    }
+
+    /// Sample the first token per sequence from final-chunk prefill
+    /// logits (`batch * tc` token-major rows: row `(b + 1) * tc - 1` is
+    /// the last prompt column of sequence `b`), record it, and open the
+    /// stop mask — the external-driver form of the `prefill_*_with`
+    /// tails.  Consumes exactly one sampler pick per sequence, in
+    /// sequence order, just like every sequential prefill route.
+    pub(crate) fn pick_prefill(&mut self, st: &mut GenState,
+                               logits: &Tensor, tc: usize) -> Vec<i32> {
+        let mut first = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            first.push(st.sampler.pick(logits, (b + 1) * tc - 1));
         }
-        Ok(self
-            .generated
+        self.record(&first);
+        st.absorb_first(&first);
+        first
+    }
+
+    /// Apply one decode step's logits: exactly the selection body of
+    /// the sequential `generate` loop — finished sequences keep feeding
+    /// their last token (cache stays aligned) but record nothing — so
+    /// external drivers stay bit-identical with it.
+    pub(crate) fn apply_decode_logits(&mut self, st: &mut GenState,
+                                      logits: &Tensor) {
+        let last = self.last.clone();
+        let mut next = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            if st.done[b] {
+                next.push(last[b]);
+            } else {
+                next.push(st.sampler.pick(logits, b));
+            }
+        }
+        for (b, t) in next.iter().enumerate() {
+            if !st.done[b] {
+                self.generated[b].push(*t);
+                if st.stop_tokens.contains(t) {
+                    st.done[b] = true;
+                }
+            }
+        }
+        self.last = next;
+        st.emitted += 1;
+    }
+
+    /// This request's emitted tokens per sequence (everything past the
+    /// `generated` snapshot taken by [`Self::begin_generate`]).
+    pub(crate) fn take_generated(&self, st: &GenState) -> Vec<Vec<i32>> {
+        self.generated
             .iter()
-            .zip(&already)
+            .zip(&st.already)
             .map(|(g, &from)| g[from..].to_vec())
-            .collect())
+            .collect()
     }
 
     /// Core single-column step: embed `tokens` at the current position,
@@ -1251,6 +1347,280 @@ impl InferenceSession {
 
     pub fn kv_transfer_bytes_per_step(&self) -> u64 {
         self.kv.transfer_bytes_per_step()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Externally driven steps — the continuous-batching scheduler's walk
+// ---------------------------------------------------------------------------
+
+/// What one externally driven micro-step does to a session.
+#[derive(Clone, Copy)]
+enum WalkKind {
+    /// One decode token column against the session cache — the
+    /// split-phase form of [`InferenceSession::step_logits`].
+    Decode,
+    /// One prefill micro-batch: prompt columns `[c0, c1)` through the
+    /// *prefill* attention artifact over the real cache prefix — one
+    /// [`PipelineDriver`] chunk driven stand-alone.  The scheduler runs
+    /// a session's chunks strictly in token order (one per scheduler
+    /// step), so no reorder gate is needed; cross-session overlap comes
+    /// from the wavefront instead.
+    Chunk { c0: usize, c1: usize },
+}
+
+/// A suspended single-step layer walk: the split-phase state of one
+/// decode column (or one prefill micro-batch) that an external driver —
+/// the continuous-batching scheduler
+/// ([`crate::coordinator::scheduler`]) — advances one dispatch/collect
+/// stage at a time via [`InferenceSession::advance_walk`].  While one
+/// session's walk blocks collecting a shard response, every other
+/// session in the wavefront already has its request queued at some
+/// shard.
+///
+/// A walk that returns an error is poisoned (its stage is consumed);
+/// the driver must retire the session, not re-advance the walk.
+pub(crate) struct StepWalk<'v> {
+    kind: WalkKind,
+    layer: usize,
+    stage: Stage<'v>,
+    /// Decode-mode cache geometry, fixed at walk start — exactly as
+    /// [`InferenceSession::step_logits`] computes it once per column.
+    dec_len: usize,
+    dec_bucket: usize,
+    dec_artifact: String,
+}
+
+impl<'v> StepWalk<'v> {
+    /// A one-token decode step over the session's last-emitted tokens.
+    pub(crate) fn decode() -> Self {
+        StepWalk {
+            kind: WalkKind::Decode,
+            layer: 0,
+            stage: Stage::Start,
+            dec_len: 0,
+            dec_bucket: 0,
+            dec_artifact: String::new(),
+        }
+    }
+
+    /// A prefill micro-batch over prompt columns `[c0, c1)`.
+    pub(crate) fn chunk(c0: usize, c1: usize) -> Self {
+        StepWalk {
+            kind: WalkKind::Chunk { c0, c1 },
+            layer: 0,
+            stage: Stage::Start,
+            dec_len: 0,
+            dec_bucket: 0,
+            dec_artifact: String::new(),
+        }
+    }
+
+    pub(crate) fn is_done(&self) -> bool {
+        matches!(self.stage, Stage::Done(_))
+    }
+
+    /// The walk's final logits; errors unless [`Self::is_done`].
+    pub(crate) fn take_logits(self) -> Result<Tensor> {
+        match self.stage {
+            Stage::Done(t) => Ok(t),
+            _ => Err(anyhow::anyhow!(
+                "walk logits taken before completion")),
+        }
+    }
+}
+
+impl InferenceSession {
+    /// Advance an externally driven walk by one split-phase stage;
+    /// returns whether the walk is still in flight (`false` once
+    /// [`StepWalk::is_done`]).
+    ///
+    /// KEEP IN SYNC: decode mode is the split-phase form of
+    /// [`Self::step_logits`] + [`LayerWalker::walk`]; chunk mode is one
+    /// [`PipelineDriver`] chunk driven strictly in token order.  The
+    /// block math itself is shared (all three call the `ClientCore`
+    /// transition helpers), so only the dispatch/collect order lives
+    /// here as a third copy — `tests/serving.rs` pins the equivalence
+    /// against sequential `generate`.
+    ///
+    /// `virt` must be this session's own `core.virt`; the scheduler
+    /// passes an `Arc` clone held outside its `&mut` borrow of the
+    /// session so the pending request may outlive that borrow.
+    pub(crate) fn advance_walk<'v>(&mut self, w: &mut StepWalk<'v>,
+                                   virt: &'v VirtLayerCtx,
+                                   prompt: &[i32]) -> Result<bool> {
+        let core = &self.core;
+        let cx = HookCtx { engine: core.engine.as_ref(), cfg: &core.cfg };
+        let batch = self.batch;
+        let urgency = match w.kind {
+            WalkKind::Decode => self.urgency.decode,
+            WalkKind::Chunk { .. } => self.urgency.prefill,
+        };
+        let stage = std::mem::replace(&mut w.stage, Stage::Taken);
+        let next = match stage {
+            Stage::Start => match w.kind {
+                WalkKind::Decode => {
+                    if self.last.is_empty() {
+                        return Err(
+                            SymbiosisError::DecodeBeforePrefill.into());
+                    }
+                    // Cache geometry once per column, as step_logits
+                    // does: per-layer length after this step's append.
+                    let len = self.kv.len() + 1;
+                    let sb = bucket_for(len, SEQ_BUCKETS)
+                        .ok_or(SymbiosisError::ContextExceeded {
+                            len,
+                            limit: *SEQ_BUCKETS.last()
+                                .expect("SEQ_BUCKETS is a non-empty static"),
+                        })?;
+                    w.dec_len = len;
+                    w.dec_bucket = sb;
+                    w.dec_artifact =
+                        format!("attn_decode_bh{}_s{sb}_h{}",
+                                batch * core.cfg.n_heads,
+                                core.cfg.d_head());
+                    let tokens =
+                        Tensor::from_i32(self.last.clone(), &[batch]);
+                    let positions = Tensor::from_i32(
+                        vec![self.pos as i32; batch], &[batch]);
+                    let pend =
+                        virt.dispatch_embed(tokens, positions, urgency)?;
+                    Stage::PendEmbed(pend)
+                }
+                WalkKind::Chunk { c0, c1 } => {
+                    let s = prompt.len() / batch;
+                    let tc = c1 - c0;
+                    let mut toks = Vec::with_capacity(batch * tc);
+                    let mut poss = Vec::with_capacity(batch * tc);
+                    // Token-major within the chunk; column `col` sits
+                    // at position `pos + (col - c0)` because earlier
+                    // chunks already advanced `pos` past their columns.
+                    for b in 0..batch {
+                        for col in c0..c1 {
+                            toks.push(prompt[b * s + col]);
+                            poss.push((self.pos + (col - c0)) as i32);
+                        }
+                    }
+                    let pend = virt.dispatch_embed(
+                        Tensor::from_i32(toks, &[batch * tc]),
+                        Tensor::from_i32(poss, &[batch * tc]),
+                        urgency)?;
+                    Stage::PendEmbed(pend)
+                }
+            },
+            Stage::PendEmbed(pend) => {
+                let h = pend.collect()?;
+                let a_in = ops::rmsnorm(&h, &core.weights.norm1[w.layer]);
+                let pend = virt.dispatch_forward(
+                    LayerId::Qkv(w.layer), a_in.clone(), urgency)?;
+                Stage::PendQkv { h, a_in, pend }
+            }
+            Stage::PendQkv { h, a_in, pend } => {
+                let l = w.layer;
+                let qkv = pend.collect()?;
+                let (q, k, v) =
+                    core.qkv_split_adjust(&cx, l, &a_in, &qkv)?;
+                let nh = core.cfg.n_heads;
+                let merged = match w.kind {
+                    WalkKind::Decode => {
+                        let qh = q.split_heads_rows(batch, nh);
+                        let kh = k.split_heads_rows(batch, nh);
+                        let vh = v.split_heads_rows(batch, nh);
+                        let layer_len = self.kv.append(l, &kh, &vh)?;
+                        debug_assert_eq!(layer_len, w.dec_len);
+                        let (kc, vc) = self.kv.padded(l, w.dec_bucket);
+                        let kv_len = Tensor::scalar_i32(w.dec_len as i32);
+                        // interactive decode rides the high-priority
+                        // device lane (as LayerWalker::attention does)
+                        let prio = urgency == Urgency::Interactive;
+                        let out = core.engine.execute_prio(
+                            &w.dec_artifact, &[&qh, &kc, &vc, &kv_len],
+                            prio)?;
+                        out[0].merge_heads_rows(batch)
+                    }
+                    WalkKind::Chunk { c0, c1 } => {
+                        let tc = c1 - c0;
+                        let qh = to_heads_batched(&q, batch, nh);
+                        let kh = to_heads_batched(&k, batch, nh);
+                        let vh = to_heads_batched(&v, batch, nh);
+                        let ctx_len = self.kv.append(l, &kh, &vh)?;
+                        let bucket = bucket_for(ctx_len, SEQ_BUCKETS)
+                            .ok_or(SymbiosisError::ContextExceeded {
+                                len: ctx_len,
+                                limit: *SEQ_BUCKETS.last()
+                                    .expect(
+                                        "SEQ_BUCKETS is a non-empty static"),
+                            })?;
+                        let (kc, vc) = self.kv.padded(l, bucket);
+                        let qp = ClientCore::place_seq(
+                            &qh, ctx_len - tc, bucket);
+                        let name =
+                            format!("attn_prefill_bh{}_s{bucket}_h{}",
+                                    batch * nh, core.cfg.d_head());
+                        let out = core.engine
+                            .execute(&name, &[&qp, &kc, &vc])?;
+                        let attn = ClientCore::slice_seq(
+                            &out[0], ctx_len - tc, tc);
+                        from_heads_batched(&attn, batch)
+                    }
+                };
+                let pend = virt.dispatch_forward(
+                    LayerId::AttnOut(l), merged.clone(), urgency)?;
+                Stage::PendAttnOut { h, attn_merged: merged, pend }
+            }
+            Stage::HaveQkv { .. } => unreachable!(
+                "reorder gate is pipeline-only; scheduler chunks run \
+                 strictly in token order"),
+            Stage::PendAttnOut { h, attn_merged, pend } => {
+                let l = w.layer;
+                let mut o = pend.collect()?;
+                let (h_mid, m_in) = core.attn_out_transition(
+                    &cx, l, &h, &attn_merged, &mut o)?;
+                let pend = virt.dispatch_forward(LayerId::MlpUp(l), m_in,
+                                                 urgency)?;
+                Stage::PendMlpUp { h_mid, pend }
+            }
+            Stage::PendMlpUp { h_mid, pend } => {
+                let l = w.layer;
+                let mut u_pre = pend.collect()?;
+                let u = core.ffn_activate(l, &mut u_pre);
+                let pend = virt.dispatch_forward(LayerId::MlpDown(l), u,
+                                                 urgency)?;
+                Stage::PendMlpDown { h_mid, pend }
+            }
+            Stage::PendMlpDown { h_mid, pend } => {
+                let down = pend.collect()?;
+                let h = ops::add(&h_mid, &down);
+                w.layer += 1;
+                if w.layer < core.cfg.n_layers {
+                    let a_in =
+                        ops::rmsnorm(&h, &core.weights.norm1[w.layer]);
+                    let pend = virt.dispatch_forward(
+                        LayerId::Qkv(w.layer), a_in.clone(), urgency)?;
+                    Stage::PendQkv { h, a_in, pend }
+                } else {
+                    let hf = core.final_norm(&h);
+                    let pend = virt.dispatch_forward(LayerId::LmHead, hf,
+                                                     urgency)?;
+                    Stage::PendHead(pend)
+                }
+            }
+            Stage::PendHead(pend) => {
+                let logits = pend.collect()?;
+                // The walk owns position advancement, at the exact spot
+                // the sequential paths do it (end of step_logits; end
+                // of the chunk's columns in forward_pipelined).
+                match w.kind {
+                    WalkKind::Decode => self.pos += 1,
+                    WalkKind::Chunk { c0, c1 } => self.pos += c1 - c0,
+                }
+                Stage::Done(logits)
+            }
+            done @ Stage::Done(_) => done,
+            Stage::Taken => unreachable!("stage advanced re-entrantly"),
+        };
+        w.stage = next;
+        Ok(!matches!(w.stage, Stage::Done(_)))
     }
 }
 

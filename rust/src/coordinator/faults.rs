@@ -43,6 +43,8 @@
 //! by dropping them — blocked clients observe a disconnect, not a
 //! leak.
 
+#![deny(clippy::unwrap_used)]
+
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::time::Duration;
@@ -314,6 +316,7 @@ fn interpose(rx: std::sync::mpsc::Receiver<ExecMsg>,
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::coordinator::proto::{LayerId, LayerResponse, OpKind,

@@ -131,6 +131,13 @@ impl FleetBarrier {
 pub struct FleetStats {
     merged: ExecutorStats,
     pub per_shard: Vec<ExecutorStats>,
+    /// Executor generations retired over the fleet's lifetime (crashes
+    /// + rolling restarts).  Zero on snapshots built from a bare
+    /// [`FleetStats::merge`].
+    pub respawns: u64,
+    /// Per-shard circuit-breaker state transitions (trips + probe
+    /// outcomes); empty on bare merges.
+    pub breaker_transitions: Vec<u64>,
 }
 
 impl FleetStats {
@@ -142,7 +149,12 @@ impl FleetStats {
             // flush ring bounded at FLUSH_RECORD_CAP (newest win).
             merged.absorb(s);
         }
-        FleetStats { merged, per_shard }
+        FleetStats {
+            merged,
+            per_shard,
+            respawns: 0,
+            breaker_transitions: Vec::new(),
+        }
     }
 
     /// Per-shard occupancy (busy / (busy + idle)) in shard order — what
@@ -166,6 +178,66 @@ impl std::ops::Deref for FleetStats {
 
     fn deref(&self) -> &ExecutorStats {
         &self.merged
+    }
+}
+
+/// One-screen human-readable fleet report: merged totals, then one
+/// occupancy line per shard — what the benches and the serving load
+/// generator print as their end-of-run summary.
+impl std::fmt::Display for FleetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "fleet: {} shard(s), {} flushes, {} served, {} shed, \
+             {} generation(s) retired",
+            self.n_shards(), self.merged.n_flushes,
+            self.merged.requests_served, self.merged.requests_shed,
+            self.respawns)?;
+        writeln!(
+            f,
+            "  mean batch {:.2} client(s), mean wait {:.3} ms, \
+             padding overhead {:.1}%",
+            self.merged.mean_batch_clients(),
+            self.merged.mean_wait_secs() * 1e3,
+            self.merged.padding_overhead() * 100.0)?;
+        for (s, st) in self.per_shard.iter().enumerate() {
+            let trips = self.breaker_transitions.get(s).copied()
+                .unwrap_or(0);
+            writeln!(
+                f,
+                "  shard {s}: occupancy {:5.1}%, {} flushes, \
+                 {} served, {} shed, {} breaker transition(s)",
+                st.occupancy() * 100.0, st.n_flushes,
+                st.requests_served, st.requests_shed, trips)?;
+        }
+        Ok(())
+    }
+}
+
+/// Instantaneous per-shard load snapshot — the occupancy feedback the
+/// continuous-batching scheduler reads each iteration to decide whether
+/// to admit more sessions or let `Urgency::Background` work yield
+/// ([`ExecutorFleet::shard_loads`]).
+#[derive(Debug, Clone)]
+pub struct ShardLoad {
+    pub shard: usize,
+    /// Whether the shard's executor thread currently serves (a dead
+    /// shard is respawned by the watchdog shortly).
+    pub alive: bool,
+    pub breaker: BreakerState,
+    /// Requests sitting in the shard's ingress queue right now.
+    pub ingress_depth: usize,
+    /// `depth / high_water` clamped to [0, 1]; 0.0 when unbounded.
+    pub pressure: f64,
+    pub saturated: bool,
+}
+
+impl ShardLoad {
+    /// Whether the scheduler should stop piling work onto this shard:
+    /// dead, breaker open, or ingress at the high-water mark.
+    pub fn overloaded(&self) -> bool {
+        !self.alive || self.breaker == BreakerState::Open
+            || self.saturated
     }
 }
 
@@ -517,6 +589,27 @@ impl ExecutorFleet {
         self.core.endpoints[s].meter().clone()
     }
 
+    /// Per-shard load snapshot in shard order — liveness, breaker
+    /// state, and ingress pressure in one read.  The continuous-batching
+    /// scheduler consults this every iteration: any
+    /// [`ShardLoad::overloaded`] shard throttles admission and benches
+    /// background work for the step instead of dogpiling.
+    pub fn shard_loads(&self) -> Vec<ShardLoad> {
+        self.core
+            .endpoints
+            .iter()
+            .enumerate()
+            .map(|(s, e)| ShardLoad {
+                shard: s,
+                alive: self.core.is_alive(s),
+                breaker: e.breaker().state(),
+                ingress_depth: e.meter().depth(),
+                pressure: e.meter().pressure(),
+                saturated: e.meter().saturated(),
+            })
+            .collect()
+    }
+
     /// Rebuild shard `s` on its retained seed: fresh device ledger
     /// (re-charged), registration count seeded from the fleet barrier,
     /// endpoint swapped under a bumped epoch, old generation's stats
@@ -574,7 +667,21 @@ impl ExecutorFleet {
                 s
             })
             .collect();
-        FleetStats::merge(per_shard)
+        self.finish_stats(FleetStats::merge(per_shard))
+    }
+
+    /// Stamp fleet-level health counters (respawns, breaker trips) onto
+    /// a merged snapshot — shared by [`Self::stats`] and
+    /// [`Self::shutdown`].
+    fn finish_stats(&self, mut fs: FleetStats) -> FleetStats {
+        fs.respawns = self.respawns();
+        fs.breaker_transitions = self
+            .core
+            .endpoints
+            .iter()
+            .map(|e| e.breaker().transitions())
+            .collect();
+        fs
     }
 
     /// Bytes resident on each shard's device ledger (the real weight
@@ -599,7 +706,7 @@ impl ExecutorFleet {
             s.absorb(&shard.shutdown());
             per_shard.push(s);
         }
-        FleetStats::merge(per_shard)
+        self.finish_stats(FleetStats::merge(per_shard))
     }
 
     fn stop_watchdog(&mut self) {

@@ -27,6 +27,8 @@
 //! [`SymbiosisError::QuotaExceeded`] without ever contending for the
 //! shared device — its co-tenants keep their headroom.
 
+#![deny(clippy::unwrap_used)]
+
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -59,7 +61,8 @@ impl KvLedger {
     /// Charge the tag to `bytes` total; typed
     /// [`SymbiosisError::KvCacheOom`] when the device cannot hold it.
     fn charge(&self, bytes: u64) -> Result<()> {
-        let mut dev = self.device.lock().unwrap();
+        let mut dev =
+            self.device.lock().unwrap_or_else(|p| p.into_inner());
         let capacity = dev.ledger.capacity();
         // what *other* allocations hold — the informative number in
         // the multi-tenant case, where this cache alone would fit
@@ -74,7 +77,11 @@ impl KvLedger {
     }
 
     fn release(&self) {
-        self.device.lock().unwrap().ledger.free(&self.tag);
+        self.device
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .ledger
+            .free(&self.tag);
     }
 }
 
@@ -300,6 +307,7 @@ impl Drop for KvCache {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::device::{DeviceKind, MemoryLedger};

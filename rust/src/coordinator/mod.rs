@@ -72,6 +72,12 @@
 //!   KV bytes) enforced at build and dispatch time, so dense
 //!   multi-tenancy degrades with typed denials instead of one tenant
 //!   starving the rest.
+//! * [`scheduler`] — the continuous-batching serving engine
+//!   ([`Deployment::serving`]): an iteration-level scheduler that owns
+//!   a pool of decode slots and drives many sessions as one wavefront
+//!   per token step, admitting new prompts via `prefill_chunk`
+//!   micro-batches without stalling in-flight decodes.  Pair with
+//!   [`BatchPolicy::Continuous`].
 //!
 //! The failure model is first-class: per-request deadlines
 //! (`SessionBuilder::request_timeout`), bounded client-side retry
@@ -97,6 +103,7 @@ pub mod optimizer;
 pub mod placement;
 pub mod privacy;
 pub mod proto;
+pub mod scheduler;
 pub mod sharding;
 pub mod virt_layer;
 
@@ -121,10 +128,12 @@ pub use client::{ClientCore, GenerationConfig, InferenceSession,
                  Sampling, SessionBuilder, Trainer, TrainerBuilder,
                  TrainOutcome, UrgencyPolicy};
 pub use faults::{FaultAction, FaultPlan, FaultRule};
-pub use fleet::{ExecutorFleet, FleetBarrier, FleetStats};
+pub use fleet::{ExecutorFleet, FleetBarrier, FleetStats, ShardLoad};
 pub use kv_cache::{KvLedger, KvPlacement};
 pub use placement::Placement;
 pub use proto::{LayerId, OpKind, Urgency};
+pub use scheduler::{HandleStatus, ServingBuilder, ServingEngine,
+                    ServingReport, ServingRequest, SessionHandle};
 pub use sharding::{LayerAssignment, ShardPlan};
 pub use virt_layer::{BreakerState, CircuitBreaker, IngressMeter,
                      PendingLayer, RetryPolicy, RoutingTable,
@@ -232,6 +241,15 @@ impl Deployment {
     /// Begin configuring a fine-tuning job against this deployment.
     pub fn trainer(&self) -> TrainerBuilder<'_> {
         TrainerBuilder::new(self)
+    }
+
+    /// Begin configuring a continuous-batching serving engine: submit
+    /// prompts, get streaming handles, pump
+    /// [`ServingEngine::step`](scheduler::ServingEngine::step) (or
+    /// [`run`](scheduler::ServingEngine::run)) to drive every active
+    /// session as one iteration-level wavefront.
+    pub fn serving(&self) -> scheduler::ServingBuilder<'_> {
+        scheduler::ServingBuilder::new(self)
     }
 
     /// Allocate a client context routed over this deployment's fleet on

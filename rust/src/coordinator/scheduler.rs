@@ -1,0 +1,849 @@
+//! Continuous-batching serving engine — Orca-style iteration-level
+//! scheduling over the shard fleet.
+//!
+//! The sequential [`InferenceSession::generate`] loop drives one
+//! request at a time: its decode only overlaps another client's by
+//! scheduling luck.  The [`ServingEngine`] makes the overlap
+//! deliberate: it owns a pool of decode *slots* and advances every
+//! occupied slot as one wavefront per [`ServingEngine::step`] — while
+//! session A's walk blocks collecting a layer response from shard 1,
+//! session B's request is already queued at shard 0.  Each step:
+//!
+//! 1. **yield** — under pressure (requests queued, no free slot, or an
+//!    overloaded shard) the first `Urgency::Background` slot is
+//!    evicted so foreground work can land;
+//! 2. **admit** — up to `admit_per_step` queued requests fill free
+//!    slots, each passing tenant admission
+//!    ([`SymbiosisError::AdmissionDenied`] /
+//!    [`SymbiosisError::QuotaExceeded`] surface as typed terminal
+//!    states on the request's handle); admission throttles to zero
+//!    while any shard is dead, breaker-open, or ingress-saturated
+//!    ([`ExecutorFleet::shard_loads`]) — backing off instead of
+//!    dogpiling a struggling fleet;
+//! 3. **iterate** — every participating slot advances one token step:
+//!    prefilling sessions run one `prefill_chunk` micro-batch,
+//!    decoding sessions one token column, all interleaved in a single
+//!    split-phase wavefront ([`InferenceSession::advance_walk`]);
+//! 4. **retire** — finished/failed sessions free their slot, KV ledger
+//!    charge, and tenant quota (RAII on session drop); their handles
+//!    flip to a terminal status.
+//!
+//! Per-session output is **bit-identical** to sequential `generate`:
+//! both paths run the same walk math and the same [`GenState`] token
+//! selection, and the executor batches concurrent wavefront requests
+//! output-identically (the repo-wide batching-equivalence premise).
+//! `tests/serving.rs` pins this across shard counts and adapter kinds.
+//!
+//! Pair the engine with [`BatchPolicy::Continuous`]
+//! (`crate::coordinator::BatchPolicy`): the executor then flushes per
+//! iteration — exactly the wavefront's dispatches — instead of waiting
+//! on a registration cohort.
+
+#![deny(clippy::unwrap_used)]
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::adapter::Adapter;
+use crate::coordinator::client::{GenState, GenerationConfig,
+                                 InferenceSession, StepWalk,
+                                 UrgencyPolicy};
+use crate::coordinator::kv_cache::KvPlacement;
+use crate::coordinator::proto::Urgency;
+use crate::coordinator::virt_layer::RetryPolicy;
+use crate::coordinator::Deployment;
+use crate::error::{SymResult, SymbiosisError};
+use crate::metrics::LatencyStats;
+use crate::tensor::Tensor;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Requests and handles
+// ---------------------------------------------------------------------------
+
+/// One serving request: a prompt plus the per-tenant session choices
+/// the scheduler forwards to [`SessionBuilder`] at admission time.
+///
+/// [`SessionBuilder`]: crate::coordinator::SessionBuilder
+#[derive(Debug, Clone)]
+pub struct ServingRequest {
+    pub prompt: Vec<i32>,
+    pub cfg: GenerationConfig,
+    pub adapter: Option<Adapter>,
+    /// Tenant name for admission control (`None` bypasses quotas).
+    pub tenant: Option<String>,
+    pub urgency: UrgencyPolicy,
+    pub batch: usize,
+    pub kv: KvPlacement,
+}
+
+impl ServingRequest {
+    pub fn new(prompt: Vec<i32>, cfg: GenerationConfig) -> Self {
+        ServingRequest {
+            prompt,
+            cfg,
+            adapter: None,
+            tenant: None,
+            urgency: UrgencyPolicy::default(),
+            batch: 1,
+            kv: KvPlacement::Device,
+        }
+    }
+
+    pub fn adapter(mut self, a: Adapter) -> Self {
+        self.adapter = Some(a);
+        self
+    }
+
+    pub fn tenant(mut self, name: &str) -> Self {
+        self.tenant = Some(name.to_string());
+        self
+    }
+
+    pub fn urgency(mut self, policy: UrgencyPolicy) -> Self {
+        self.urgency = policy;
+        self
+    }
+
+    /// Mark the whole request `Urgency::Background`: first to yield its
+    /// slot under pressure, sheddable at saturated shards.
+    pub fn background(mut self) -> Self {
+        self.urgency = UrgencyPolicy {
+            prefill: Urgency::Background,
+            decode: Urgency::Background,
+        };
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn kv(mut self, placement: KvPlacement) -> Self {
+        self.kv = placement;
+        self
+    }
+
+    fn is_background(&self) -> bool {
+        self.urgency.decode == Urgency::Background
+    }
+}
+
+/// Where a request currently is in its lifecycle.  `Finished`,
+/// `Denied`, `Evicted`, and `Failed` are terminal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandleStatus {
+    /// Waiting for a free slot.
+    Queued,
+    /// In a slot, prompt chunks still flowing.
+    Prefilling,
+    /// In a slot, emitting tokens.
+    Decoding,
+    /// Completed normally; all tokens are on the handle.
+    Finished,
+    /// Admission denied (tenant quota) — see [`SessionHandle::take_error`].
+    Denied,
+    /// A background session that yielded its slot under pressure.
+    Evicted,
+    /// The session's walk failed terminally (retry budget exhausted).
+    Failed,
+}
+
+impl HandleStatus {
+    pub fn is_terminal(self) -> bool {
+        matches!(self,
+                 HandleStatus::Finished | HandleStatus::Denied
+                 | HandleStatus::Evicted | HandleStatus::Failed)
+    }
+}
+
+struct HandleInner {
+    status: HandleStatus,
+    /// Tokens streamed so far, per sequence (this request only).
+    tokens: Vec<Vec<i32>>,
+    /// `poll` cursor per sequence.
+    polled: Vec<usize>,
+    error: Option<SymbiosisError>,
+}
+
+/// The caller's view of a submitted request: cheap to clone, safe to
+/// poll from another thread.  Tokens stream onto it as the scheduler's
+/// iterations emit them.
+#[derive(Clone)]
+pub struct SessionHandle {
+    inner: Arc<Mutex<HandleInner>>,
+}
+
+impl SessionHandle {
+    fn new(batch: usize) -> Self {
+        SessionHandle {
+            inner: Arc::new(Mutex::new(HandleInner {
+                status: HandleStatus::Queued,
+                tokens: vec![Vec::new(); batch],
+                polled: vec![0; batch],
+                error: None,
+            })),
+        }
+    }
+
+    pub fn status(&self) -> HandleStatus {
+        lock(&self.inner).status
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.status().is_terminal()
+    }
+
+    /// Tokens emitted since the last `poll`, per sequence (the
+    /// streaming interface).
+    pub fn poll(&self) -> Vec<Vec<i32>> {
+        let mut h = lock(&self.inner);
+        let mut fresh = Vec::with_capacity(h.tokens.len());
+        for b in 0..h.tokens.len() {
+            let from = h.polled[b];
+            fresh.push(h.tokens[b][from..].to_vec());
+            h.polled[b] = h.tokens[b].len();
+        }
+        fresh
+    }
+
+    /// Everything emitted so far, per sequence (does not move the
+    /// `poll` cursor).
+    pub fn tokens(&self) -> Vec<Vec<i32>> {
+        lock(&self.inner).tokens.clone()
+    }
+
+    /// The typed error behind a `Denied`/`Failed` status, if any.
+    /// Consumes it (errors are not `Clone`).
+    pub fn take_error(&self) -> Option<SymbiosisError> {
+        lock(&self.inner).error.take()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine internals
+// ---------------------------------------------------------------------------
+
+struct Queued {
+    req: ServingRequest,
+    handle: SessionHandle,
+    submitted: Instant,
+}
+
+enum Phase {
+    /// Prompt chunks still flowing; `next_col` is the first unprocessed
+    /// prompt column.
+    Prefill,
+    Decode,
+}
+
+/// One occupied decode slot.
+struct Slot {
+    sess: InferenceSession,
+    gen: GenState,
+    phase: Phase,
+    prompt: Vec<i32>,
+    /// Prompt columns per sequence.
+    s_cols: usize,
+    /// Resolved prefill micro-batch size (columns per iteration).
+    chunk: usize,
+    next_col: usize,
+    /// Chunk bounds of the in-flight iteration (set while its walk
+    /// runs, consumed at completion).
+    cur: Option<(usize, usize)>,
+    handle: SessionHandle,
+    background: bool,
+    submitted: Instant,
+    last_token_at: Option<Instant>,
+    /// Streaming cursor into `sess.generated`, per sequence.
+    streamed: Vec<usize>,
+}
+
+impl Slot {
+    /// Push everything newly recorded on the session out to the handle.
+    fn stream_tokens(&mut self) {
+        let mut h = lock(&self.handle.inner);
+        for (b, g) in self.sess.generated.iter().enumerate() {
+            while self.streamed[b] < g.len() {
+                h.tokens[b].push(g[self.streamed[b]]);
+                self.streamed[b] += 1;
+            }
+        }
+    }
+}
+
+/// Aggregated serving metrics; snapshot via [`ServingEngine::report`].
+#[derive(Debug, Default, Clone)]
+pub struct ServingReport {
+    pub steps: u64,
+    /// Steps during which admission was throttled because some shard
+    /// was overloaded (dead / breaker-open / saturated).
+    pub throttled_steps: u64,
+    pub submitted: u64,
+    pub admitted: u64,
+    pub denied: u64,
+    pub evicted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub tokens_emitted: u64,
+    /// Peak concurrently occupied slots.
+    pub max_active: usize,
+    /// Time-to-first-token: submit → prefill token on the handle.
+    pub ttft: LatencyStats,
+    /// Inter-token latency between successive decode emissions of one
+    /// session.
+    pub itl: LatencyStats,
+}
+
+impl std::fmt::Display for ServingReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "serving: {} submitted / {} admitted / {} completed \
+             ({} denied, {} evicted, {} failed) over {} step(s), \
+             peak {} active",
+            self.submitted, self.admitted, self.completed, self.denied,
+            self.evicted, self.failed, self.steps, self.max_active)?;
+        writeln!(
+            f,
+            "  ttft  p50 {:.3} ms  p90 {:.3} ms  p99 {:.3} ms  (n={})",
+            self.ttft.p50() * 1e3, self.ttft.percentile(90.0) * 1e3,
+            self.ttft.p99() * 1e3, self.ttft.count())?;
+        writeln!(
+            f,
+            "  itl   p50 {:.3} ms  p90 {:.3} ms  p99 {:.3} ms  (n={})",
+            self.itl.p50() * 1e3, self.itl.percentile(90.0) * 1e3,
+            self.itl.p99() * 1e3, self.itl.count())?;
+        write!(f, "  {} token(s) emitted, {} throttled step(s)",
+               self.tokens_emitted, self.throttled_steps)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Configures a [`ServingEngine`] against a deployment
+/// ([`Deployment::serving`]).
+pub struct ServingBuilder<'d> {
+    dep: &'d Deployment,
+    slots: usize,
+    prefill_chunk: Option<usize>,
+    admit_per_step: usize,
+    max_wavefront: usize,
+    request_timeout: Option<Duration>,
+    retry: Option<RetryPolicy>,
+}
+
+impl<'d> ServingBuilder<'d> {
+    pub(crate) fn new(dep: &'d Deployment) -> Self {
+        ServingBuilder {
+            dep,
+            slots: 8,
+            prefill_chunk: None,
+            admit_per_step: 4,
+            max_wavefront: usize::MAX,
+            request_timeout: None,
+            retry: None,
+        }
+    }
+
+    /// Decode-slot pool size — the max sessions in flight (default 8).
+    pub fn slots(mut self, n: usize) -> Self {
+        self.slots = n.max(1);
+        self
+    }
+
+    /// Engine-default prefill micro-batch size in token columns
+    /// (default: the whole prompt in one chunk).  Per-request
+    /// [`GenerationConfig::prefill_chunk`] overrides it.  Smaller
+    /// chunks bound how long one admission's prefill can delay the
+    /// in-flight decodes' next iteration.
+    pub fn prefill_chunk(mut self, cols: usize) -> Self {
+        self.prefill_chunk = Some(cols.max(1));
+        self
+    }
+
+    /// Max sessions admitted per scheduler step (default 4) — bounds
+    /// per-iteration registration work.
+    pub fn admit_per_step(mut self, n: usize) -> Self {
+        self.admit_per_step = n.max(1);
+        self
+    }
+
+    /// Cap how many sessions join one iteration's token step (default:
+    /// every occupied slot).  With a cap, participation rotates
+    /// round-robin so every session keeps making progress.
+    pub fn max_wavefront(mut self, n: usize) -> Self {
+        self.max_wavefront = n.max(1);
+        self
+    }
+
+    /// Per-collect deadline forwarded to every session
+    /// ([`SessionBuilder::request_timeout`]).
+    ///
+    /// [`SessionBuilder::request_timeout`]:
+    /// crate::coordinator::SessionBuilder::request_timeout
+    pub fn request_timeout(mut self, timeout: Duration) -> Self {
+        self.request_timeout = Some(timeout);
+        self
+    }
+
+    /// Bounded retry forwarded to every session
+    /// ([`SessionBuilder::retry`]) — with this set, a shard killed
+    /// mid-iteration is retried transparently inside the walk once the
+    /// watchdog respawns it.
+    ///
+    /// [`SessionBuilder::retry`]: crate::coordinator::SessionBuilder::retry
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = Some(policy);
+        self
+    }
+
+    pub fn build(self) -> ServingEngine<'d> {
+        let mut slots = Vec::with_capacity(self.slots);
+        slots.resize_with(self.slots, || None);
+        ServingEngine {
+            dep: self.dep,
+            slots,
+            queue: VecDeque::new(),
+            prefill_chunk: self.prefill_chunk,
+            admit_per_step: self.admit_per_step,
+            max_wavefront: self.max_wavefront,
+            request_timeout: self.request_timeout,
+            retry: self.retry,
+            rr: 0,
+            metrics: ServingReport::default(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------------
+
+/// The fleet-level continuous-batching engine.  Single-threaded by
+/// design: the caller (or the load generator) pumps
+/// [`ServingEngine::step`]; handles are the thread-safe surface.
+pub struct ServingEngine<'d> {
+    dep: &'d Deployment,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<Queued>,
+    prefill_chunk: Option<usize>,
+    admit_per_step: usize,
+    max_wavefront: usize,
+    request_timeout: Option<Duration>,
+    retry: Option<RetryPolicy>,
+    /// Round-robin cursor for capped-wavefront fairness.
+    rr: usize,
+    metrics: ServingReport,
+}
+
+impl<'d> ServingEngine<'d> {
+    /// Enqueue a request; returns its handle immediately.  The request
+    /// starts once [`Self::step`] admits it into a slot.
+    pub fn submit(&mut self, req: ServingRequest) -> SessionHandle {
+        let handle = SessionHandle::new(req.batch.max(1));
+        self.metrics.submitted += 1;
+        self.queue.push_back(Queued {
+            req,
+            handle: handle.clone(),
+            submitted: Instant::now(),
+        });
+        handle
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn report(&self) -> ServingReport {
+        self.metrics.clone()
+    }
+
+    /// One scheduler iteration: yield → admit → iterate → retire.
+    /// Returns the number of sessions that took part in the token step.
+    pub fn step(&mut self) -> SymResult<usize> {
+        self.metrics.steps += 1;
+        let loads = self.dep.executor.shard_loads();
+        let overloaded = loads.iter().any(|l| l.overloaded());
+
+        // 1. Background yields under pressure: a queued foreground
+        // request with no free slot (or an overloaded fleet) bumps the
+        // first background slot.
+        let fg_waiting =
+            self.queue.iter().any(|q| !q.req.is_background());
+        let free = self.slots.iter().filter(|s| s.is_none()).count();
+        if fg_waiting && (free == 0 || overloaded) {
+            if let Some(i) = self.slots.iter().position(
+                |s| s.as_ref().is_some_and(|s| s.background)) {
+                self.evict(i);
+            }
+        }
+
+        // 2. Admission — throttled to zero while any shard is
+        // overloaded: the breaker/saturation recovers fastest when the
+        // scheduler stops feeding it new sessions.
+        if overloaded {
+            self.metrics.throttled_steps += 1;
+        } else {
+            let mut admitted = 0;
+            while admitted < self.admit_per_step {
+                let Some(free) =
+                    self.slots.iter().position(|s| s.is_none())
+                else { break };
+                let Some(q) = self.queue.pop_front() else { break };
+                if self.admit(free, q) {
+                    admitted += 1;
+                }
+            }
+        }
+        self.metrics.max_active =
+            self.metrics.max_active.max(self.active());
+
+        // 3. The iteration wavefront: pick participants, drive every
+        // walk to completion round-robin.
+        let ids = self.wavefront(overloaded);
+        if ids.is_empty() {
+            return Ok(0);
+        }
+        // The pending requests must borrow something that outlives the
+        // per-advance `&mut` slot borrows: clone each session's virt
+        // handle out first.
+        let virts: Vec<_> = ids
+            .iter()
+            .map(|&i| {
+                self.slot_ref(i).sess.core.virt.clone()
+            })
+            .collect();
+        let mut walks: Vec<StepWalk<'_>> = Vec::with_capacity(ids.len());
+        for &i in &ids {
+            let chunk = {
+                let slot = self.slot_mut(i);
+                match slot.phase {
+                    Phase::Decode => None,
+                    Phase::Prefill => {
+                        let c0 = slot.next_col;
+                        let c1 = (c0 + slot.chunk).min(slot.s_cols);
+                        slot.cur = Some((c0, c1));
+                        Some((c0, c1))
+                    }
+                }
+            };
+            walks.push(match chunk {
+                Some((c0, c1)) => StepWalk::chunk(c0, c1),
+                None => StepWalk::decode(),
+            });
+        }
+        let mut fails: Vec<Option<SymbiosisError>> =
+            Vec::with_capacity(ids.len());
+        fails.resize_with(ids.len(), || None);
+        loop {
+            let mut pending = false;
+            for (k, &i) in ids.iter().enumerate() {
+                if walks[k].is_done() || fails[k].is_some() {
+                    continue;
+                }
+                // Split borrow: the walk advances against the slot's
+                // session while the pending request borrows `virts`.
+                let slot = self.slots[i]
+                    .as_mut()
+                    .expect("wavefront ids index occupied slots");
+                match slot.sess.advance_walk(&mut walks[k], &virts[k],
+                                             &slot.prompt) {
+                    Ok(in_flight) => pending |= in_flight,
+                    Err(e) => fails[k] = Some(SymbiosisError::from(e)),
+                }
+            }
+            if !pending {
+                break;
+            }
+        }
+        let mut outcomes: Vec<Option<Tensor>> =
+            Vec::with_capacity(ids.len());
+        for (k, w) in walks.into_iter().enumerate() {
+            if fails[k].is_some() {
+                outcomes.push(None);
+                continue;
+            }
+            match w.take_logits() {
+                Ok(t) => outcomes.push(Some(t)),
+                Err(e) => {
+                    fails[k] = Some(SymbiosisError::from(e));
+                    outcomes.push(None);
+                }
+            }
+        }
+
+        // 4. Apply outcomes and retire.
+        let stepped = ids.len();
+        for (k, &i) in ids.iter().enumerate() {
+            if let Some(e) = fails[k].take() {
+                self.retire(i, HandleStatus::Failed, Some(e));
+                continue;
+            }
+            let logits = outcomes[k]
+                .take()
+                .expect("non-failed walk produced logits");
+            self.complete_iteration(i, &logits);
+        }
+        Ok(stepped)
+    }
+
+    /// Pump [`Self::step`] until the queue is empty and every slot is
+    /// free.  Errors if the engine makes no progress for a prolonged
+    /// stretch (e.g. admission throttled forever by a breaker that
+    /// never recovers).
+    pub fn run(&mut self) -> SymResult<ServingReport> {
+        let mut stalled = 0u32;
+        while !self.queue.is_empty() || self.active() > 0 {
+            let before = (self.queue.len(), self.active());
+            let stepped = self.step()?;
+            let progressed = stepped > 0
+                || (self.queue.len(), self.active()) != before;
+            if progressed {
+                stalled = 0;
+            } else {
+                stalled += 1;
+                if stalled > 20_000 {
+                    return Err(SymbiosisError::Runtime(anyhow::anyhow!(
+                        "serving engine stalled: {} queued, {} active, \
+                         admission throttled and nothing advancing",
+                        self.queue.len(), self.active())));
+                }
+                // Give the watchdog/breaker a chance to recover.
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        Ok(self.report())
+    }
+
+    // -- internals ---------------------------------------------------------
+
+    fn slot_ref(&self, i: usize) -> &Slot {
+        self.slots[i].as_ref().expect("index names an occupied slot")
+    }
+
+    fn slot_mut(&mut self, i: usize) -> &mut Slot {
+        self.slots[i].as_mut().expect("index names an occupied slot")
+    }
+
+    /// Participants of this iteration, in fairness order: foreground
+    /// slots first (round-robin rotated), background slots last — and
+    /// excluded entirely while any shard is overloaded (they are the
+    /// first to yield device time, before their slots are taken).
+    fn wavefront(&mut self, overloaded: bool) -> Vec<usize> {
+        let occupied: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].is_some())
+            .collect();
+        let n = occupied.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let rot = self.rr % n;
+        self.rr = self.rr.wrapping_add(1);
+        let mut fg = Vec::with_capacity(n);
+        let mut bg = Vec::new();
+        for off in 0..n {
+            let i = occupied[(rot + off) % n];
+            if self.slot_ref(i).background {
+                bg.push(i);
+            } else {
+                fg.push(i);
+            }
+        }
+        if !overloaded {
+            fg.extend(bg);
+        }
+        fg.truncate(self.max_wavefront);
+        fg
+    }
+
+    /// Build the session for a queued request and place it in slot
+    /// `free`.  Admission failures (tenant quotas) mark the handle
+    /// `Denied` with the typed error; other build failures mark it
+    /// `Failed`.  Returns whether the slot was filled.
+    fn admit(&mut self, free: usize, q: Queued) -> bool {
+        let Queued { req, handle, submitted } = q;
+        let background = req.is_background();
+        let mut b = self.dep
+            .session()
+            .batch(req.batch.max(1))
+            .kv(req.kv)
+            .urgency(req.urgency);
+        if let Some(a) = req.adapter {
+            b = b.adapter(a);
+        }
+        if let Some(t) = &req.tenant {
+            b = b.tenant(t);
+        }
+        if let Some(d) = self.request_timeout {
+            b = b.request_timeout(d);
+        }
+        if let Some(r) = self.retry {
+            b = b.retry(r);
+        }
+        let mut sess = match b.build() {
+            Ok(s) => s,
+            Err(e) => {
+                let status = match &e {
+                    SymbiosisError::AdmissionDenied { .. }
+                    | SymbiosisError::QuotaExceeded { .. } => {
+                        self.metrics.denied += 1;
+                        HandleStatus::Denied
+                    }
+                    _ => {
+                        self.metrics.failed += 1;
+                        HandleStatus::Failed
+                    }
+                };
+                let mut h = lock(&handle.inner);
+                h.status = status;
+                h.error = Some(e);
+                return false;
+            }
+        };
+        let gen = match sess.begin_generate(&req.cfg) {
+            Ok(g) => g,
+            Err(e) => {
+                self.metrics.failed += 1;
+                let mut h = lock(&handle.inner);
+                h.status = HandleStatus::Failed;
+                h.error = Some(e);
+                return false;
+            }
+        };
+        if let Err(e) = sess.check_prompt(&req.prompt) {
+            self.metrics.failed += 1;
+            let mut h = lock(&handle.inner);
+            h.status = HandleStatus::Failed;
+            h.error = Some(e);
+            return false;
+        }
+        let batch = req.batch.max(1);
+        let s_cols = req.prompt.len() / batch;
+        // Chunk resolution: request > session default > engine default
+        // > whole prompt in one go.
+        let chunk = req.cfg.prefill_chunk
+            .or_else(|| sess.session_prefill_chunk())
+            .or(self.prefill_chunk)
+            .unwrap_or(s_cols)
+            .clamp(1, s_cols);
+        lock(&handle.inner).status = HandleStatus::Prefilling;
+        self.metrics.admitted += 1;
+        self.slots[free] = Some(Slot {
+            // Stream cursors start past anything already recorded
+            // (prefix-seeded sessions), so the handle sees exactly this
+            // request's tokens.
+            streamed: (0..batch).map(|b| sess.generated[b].len())
+                .collect(),
+            sess,
+            gen,
+            phase: Phase::Prefill,
+            prompt: req.prompt,
+            s_cols,
+            chunk,
+            next_col: 0,
+            cur: None,
+            handle,
+            background,
+            submitted,
+            last_token_at: None,
+        });
+        true
+    }
+
+    /// Fold one completed walk's logits into its slot: advance the
+    /// prefill cursor or apply the decode selection, stream new tokens,
+    /// retire the session when the request is finished.
+    fn complete_iteration(&mut self, i: usize, logits: &Tensor) {
+        let now = Instant::now();
+        let mut finished = false;
+        {
+            // Index the field directly (not through `slot_mut`) so the
+            // `self.slots` borrow splits from the `self.metrics` ones
+            // below.
+            let slot = self.slots[i]
+                .as_mut()
+                .expect("completed walk indexes an occupied slot");
+            match slot.phase {
+                Phase::Prefill => {
+                    let (c0, c1) = slot.cur.take()
+                        .unwrap_or((slot.next_col, slot.s_cols));
+                    slot.next_col = c1;
+                    if c1 < slot.s_cols {
+                        // Mid-prompt chunk: its logits feed nothing
+                        // (sequential prefill likewise samples only the
+                        // final column's rows).
+                        return;
+                    }
+                    let tc = c1 - c0;
+                    slot.sess.pick_prefill(&mut slot.gen, logits, tc);
+                    slot.phase = Phase::Decode;
+                    lock(&slot.handle.inner).status =
+                        HandleStatus::Decoding;
+                    self.metrics
+                        .ttft
+                        .record(now.duration_since(slot.submitted));
+                    slot.last_token_at = Some(now);
+                    slot.stream_tokens();
+                    self.metrics.tokens_emitted += 1;
+                    finished = !slot.gen.running();
+                }
+                Phase::Decode => {
+                    slot.sess.apply_decode_logits(&mut slot.gen, logits);
+                    if let Some(prev) = slot.last_token_at {
+                        self.metrics.itl.record(now.duration_since(prev));
+                    }
+                    slot.last_token_at = Some(now);
+                    slot.stream_tokens();
+                    self.metrics.tokens_emitted += 1;
+                    finished = !slot.gen.running();
+                }
+            }
+        }
+        if finished {
+            self.retire(i, HandleStatus::Finished, None);
+        }
+    }
+
+    /// Evict a background session under pressure: stream what it has,
+    /// mark the handle, free the slot (dropping the session releases
+    /// its KV ledger charge and tenant ticket).
+    fn evict(&mut self, i: usize) {
+        self.metrics.evicted += 1;
+        self.retire_inner(i, HandleStatus::Evicted, None);
+    }
+
+    fn retire(&mut self, i: usize, status: HandleStatus,
+              error: Option<SymbiosisError>) {
+        match status {
+            HandleStatus::Finished => self.metrics.completed += 1,
+            HandleStatus::Failed => self.metrics.failed += 1,
+            _ => {}
+        }
+        self.retire_inner(i, status, error);
+    }
+
+    fn retire_inner(&mut self, i: usize, status: HandleStatus,
+                    error: Option<SymbiosisError>) {
+        if let Some(mut slot) = self.slots[i].take() {
+            slot.stream_tokens();
+            let mut h = lock(&slot.handle.inner);
+            h.status = status;
+            h.error = error;
+            // `slot` (and its session) drops here: the executor
+            // deregistration, KV ledger release, and tenant session
+            // ticket all fire via RAII.
+        }
+    }
+}

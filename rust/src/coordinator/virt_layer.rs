@@ -175,6 +175,19 @@ impl IngressMeter {
         self.high_water.load(Ordering::SeqCst)
     }
 
+    /// Ingress pressure in `[0, 1]`: current depth over the high-water
+    /// mark, clamped; 0.0 when unbounded (no mark means no pressure
+    /// signal).  The continuous-batching scheduler reads this per
+    /// iteration as occupancy feedback into slot selection.
+    pub fn pressure(&self) -> f64 {
+        let limit = self.high_water.load(Ordering::SeqCst);
+        if limit == 0 {
+            return 0.0;
+        }
+        let depth = self.depth.load(Ordering::SeqCst);
+        (depth as f64 / limit as f64).min(1.0)
+    }
+
     /// Set the high-water mark, live (0 disables the bound).
     pub fn set_high_water(&self, mark: usize) {
         self.high_water.store(mark, Ordering::SeqCst);

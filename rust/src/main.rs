@@ -84,6 +84,7 @@ fn policy(args: &[String]) -> Result<BatchPolicy> {
         "no-lockstep" => BatchPolicy::NoLockstep,
         "lockstep" => BatchPolicy::Lockstep,
         "opportunistic" => BatchPolicy::opportunistic_default(),
+        "continuous" => BatchPolicy::Continuous,
         other => bail!("unknown policy {other}"),
     })
 }

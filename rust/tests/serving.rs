@@ -1,0 +1,379 @@
+//! Continuous-batching serving engine: the scheduler may change *when*
+//! sessions advance, never *what* they emit.
+//!
+//! The acceptance bar for the iteration-level scheduler (ISSUE 8):
+//! per-session token streams under the continuous scheduler are
+//! bit-identical to sequential `InferenceSession::generate` across
+//! shards=1/2/4 x adapter kinds (base/LoRA/IA3/prefix) with staggered
+//! arrivals; session churn under tenant quotas surfaces typed
+//! `AdmissionDenied` on the request handle and provably releases the
+//! KV ledger charge, tenant quota, and decode slot on retirement;
+//! background sessions yield their slot (and quota) to foreground
+//! arrivals; and a shard killed mid-iteration recovers
+//! token-identically behind the walk's bounded retry.
+//!
+//! Tests skip when artifacts are absent (same convention as
+//! `integration.rs`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use symbiosis::config::SYM_TINY;
+use symbiosis::coordinator::adapter::LoraTargets;
+use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
+                             FaultAction, FaultPlan, FaultRule,
+                             GenerationConfig, HandleStatus, Placement,
+                             RetryPolicy, ServingRequest,
+                             SymbiosisError, TenantQuota};
+use symbiosis::runtime::Engine;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("manifest.txt").exists()
+}
+
+/// One engine (compile cache) shared by every deployment in this file.
+fn engine() -> Arc<Engine> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| Arc::new(Engine::new(&artifact_dir()).unwrap()))
+        .clone()
+}
+
+fn deploy(shards: usize) -> Deployment {
+    let placement = if shards == 1 {
+        Placement::Local
+    } else {
+        Placement::ShardedLocal { shards }
+    };
+    Deployment::start_with_engine(engine(), &SYM_TINY, &artifact_dir(),
+                                  BatchPolicy::Continuous, placement)
+        .unwrap()
+}
+
+fn prompt(len: usize) -> Vec<i32> {
+    (0..len).map(|i| (i * 7 + 3) as i32 % 256).collect()
+}
+
+fn lora8() -> Adapter {
+    Adapter::lora_from_artifacts(&SYM_TINY, &artifact_dir(), 8,
+                                 LoraTargets::QKVO, 2.0)
+        .unwrap()
+}
+
+fn adapter_kinds() -> Vec<(&'static str, Option<Adapter>)> {
+    vec![
+        ("base", None),
+        ("lora8", Some(lora8())),
+        ("ia3", Some(Adapter::ia3(&SYM_TINY))),
+        ("prefix4", Some(Adapter::prefix(&SYM_TINY, 1, 4, 11))),
+    ]
+}
+
+/// Sequential golden for one spec on an existing deployment.
+fn sequential(dep: &Deployment, adapter: &Option<Adapter>,
+              toks: &[i32], cfg: &GenerationConfig) -> Vec<Vec<i32>> {
+    let mut b = dep.session();
+    if let Some(a) = adapter {
+        b = b.adapter(a.clone());
+    }
+    let mut sess = b.build().unwrap();
+    sess.generate(toks, cfg).unwrap()
+}
+
+/// Tentpole acceptance: staggered arrivals across every adapter kind,
+/// driven concurrently by the iteration-level scheduler with fewer
+/// slots than sessions (so retirement must refill slots mid-run), emit
+/// token streams bit-identical to sequential `generate` — at every
+/// shard count.
+#[test]
+fn continuous_scheduler_matches_sequential_across_shards_and_adapters() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for shards in [1usize, 2, 4] {
+        let dep = deploy(shards);
+        let kinds = adapter_kinds();
+        // two requests per adapter kind with different prompt/output
+        // lengths — mixed enough that iterations interleave prefill
+        // chunks and decodes of different sessions
+        let specs: Vec<(&str, usize, Vec<i32>, GenerationConfig)> =
+            (0..2 * kinds.len())
+                .map(|i| {
+                    let k = i % kinds.len();
+                    let toks = prompt(8 + 4 * (i / kinds.len()));
+                    let cfg = GenerationConfig::greedy(6 + 2 * (i % 3));
+                    (kinds[k].0, k, toks, cfg)
+                })
+                .collect();
+        let goldens: Vec<Vec<Vec<i32>>> = specs
+            .iter()
+            .map(|(_, k, toks, cfg)| {
+                sequential(&dep, &kinds[*k].1, toks, cfg)
+            })
+            .collect();
+
+        // fewer slots than sessions + staggered submission: early
+        // sessions are deep into decode when late ones prefill
+        let mut srv = dep
+            .serving()
+            .slots(3)
+            .admit_per_step(2)
+            .prefill_chunk(4)
+            .build();
+        let mut handles = Vec::new();
+        for (i, (_, k, toks, cfg)) in specs.iter().enumerate() {
+            let mut req =
+                ServingRequest::new(toks.clone(), cfg.clone());
+            if let Some(a) = &kinds[*k].1 {
+                req = req.adapter(a.clone());
+            }
+            handles.push(srv.submit(req));
+            if i % 2 == 1 {
+                // interleave arrivals with live iterations
+                srv.step().unwrap();
+            }
+        }
+        let report = srv.run().unwrap();
+        assert_eq!(report.completed as usize, specs.len(),
+                   "shards={shards}: every session must finish");
+        assert_eq!(report.failed, 0);
+        for (i, h) in handles.iter().enumerate() {
+            assert_eq!(h.status(), HandleStatus::Finished,
+                       "shards={shards} session {i}");
+            assert_eq!(h.tokens(), goldens[i],
+                       "shards={shards} {} session {i}: scheduler \
+                        stream diverged from sequential generate",
+                       specs[i].0);
+        }
+        dep.shutdown();
+    }
+}
+
+/// Handles stream incrementally: `poll` returns only tokens emitted
+/// since the last `poll`, and the concatenation equals the final
+/// stream.
+#[test]
+fn handle_poll_streams_incrementally() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(1);
+    let cfg = GenerationConfig::greedy(8);
+    let golden = sequential(&dep, &None, &prompt(8), &cfg);
+    let mut srv = dep.serving().slots(1).build();
+    let h = srv.submit(ServingRequest::new(prompt(8), cfg));
+    let mut streamed: Vec<i32> = Vec::new();
+    while !h.is_done() {
+        srv.step().unwrap();
+        streamed.extend(h.poll()[0].iter());
+    }
+    assert_eq!(h.status(), HandleStatus::Finished);
+    assert!(h.poll()[0].is_empty(), "poll cursor must not rewind");
+    assert_eq!(vec![streamed], golden);
+    assert_eq!(h.tokens(), golden, "tokens() must not move the cursor");
+    dep.shutdown();
+}
+
+/// Churn storm under a tenant session quota: over-subscribed arrivals
+/// surface typed `AdmissionDenied` on their handles while in-quota
+/// sessions proceed; once those finish, the *same tenant* admits again
+/// (tickets released on retirement), and after the storm the tenant
+/// count, decode slots, and KV ledger are all provably back to zero.
+#[test]
+fn churn_storm_respects_tenant_quota_with_typed_denials() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(2);
+    dep.admission()
+        .set_quota("acme", TenantQuota::unlimited().max_sessions(2));
+    let cfg = GenerationConfig::greedy(6);
+    let golden = sequential(&dep, &None, &prompt(8), &cfg);
+    assert_eq!(dep.client_device.lock().unwrap().ledger.used(), 0,
+               "sequential golden session must have released its KV");
+
+    let mut srv = dep
+        .serving()
+        .slots(4)
+        .admit_per_step(8)
+        .prefill_chunk(4)
+        .build();
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            srv.submit(ServingRequest::new(prompt(8), cfg.clone())
+                .tenant("acme"))
+        })
+        .collect();
+    srv.run().unwrap();
+    // first two queued requests fit the quota; the rest are denied with
+    // the typed error naming the tenant
+    for (i, h) in handles.iter().enumerate() {
+        if i < 2 {
+            assert_eq!(h.status(), HandleStatus::Finished,
+                       "in-quota session {i}");
+            assert_eq!(h.tokens(), golden);
+        } else {
+            assert_eq!(h.status(), HandleStatus::Denied,
+                       "over-quota session {i}");
+            match h.take_error() {
+                Some(SymbiosisError::AdmissionDenied {
+                    tenant, ..
+                }) => assert_eq!(tenant, "acme"),
+                other => panic!(
+                    "expected typed AdmissionDenied, got {other:?}"),
+            }
+        }
+    }
+    // steady state after the storm: the tenant's tickets were released
+    // on retirement, so fresh submissions admit again
+    let h = srv.submit(
+        ServingRequest::new(prompt(8), cfg.clone()).tenant("acme"));
+    srv.run().unwrap();
+    assert_eq!(h.status(), HandleStatus::Finished);
+    assert_eq!(h.tokens(), golden);
+
+    assert_eq!(srv.active(), 0, "slots must drain after the storm");
+    assert_eq!(dep.admission().tenant("acme").sessions(), 0,
+               "tenant session tickets leaked");
+    assert_eq!(dep.client_device.lock().unwrap().ledger.used(), 0,
+               "KV ledger charge leaked");
+    dep.shutdown();
+}
+
+/// Under pressure a background session yields: a foreground arrival
+/// with no free slot evicts it (typed terminal state, partial stream a
+/// prefix of its sequential run) and — because eviction releases the
+/// tenant ticket — the foreground request admits under the same
+/// 1-session quota in the same scheduler step.
+#[test]
+fn background_session_yields_slot_quota_and_kv_to_foreground() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(1);
+    dep.admission()
+        .set_quota("solo", TenantQuota::unlimited().max_sessions(1));
+    let long = GenerationConfig::greedy(64);
+    let short = GenerationConfig::greedy(6);
+    let golden_long = sequential(&dep, &None, &prompt(8), &long);
+    let golden_short = sequential(&dep, &None, &prompt(8), &short);
+
+    let mut srv = dep.serving().slots(1).prefill_chunk(4).build();
+    let bg = srv.submit(ServingRequest::new(prompt(8), long)
+        .background()
+        .tenant("solo"));
+    for _ in 0..6 {
+        srv.step().unwrap();
+    }
+    assert_eq!(bg.status(), HandleStatus::Decoding,
+               "background session should be mid-decode");
+    let fg = srv.submit(
+        ServingRequest::new(prompt(8), short).tenant("solo"));
+    srv.run().unwrap();
+
+    assert_eq!(bg.status(), HandleStatus::Evicted);
+    let bg_tokens = bg.tokens();
+    assert!(!bg_tokens[0].is_empty() && bg_tokens[0].len() < 64,
+            "evicted mid-stream, got {} tokens", bg_tokens[0].len());
+    assert!(golden_long[0].starts_with(&bg_tokens[0]),
+            "evicted stream must be a prefix of the sequential run");
+    assert_eq!(fg.status(), HandleStatus::Finished,
+               "foreground must admit under the freed quota");
+    assert_eq!(fg.tokens(), golden_short);
+
+    assert_eq!(srv.active(), 0);
+    assert_eq!(dep.admission().tenant("solo").sessions(), 0,
+               "eviction must release the tenant ticket");
+    assert_eq!(dep.client_device.lock().unwrap().ledger.used(), 0,
+               "eviction must release the KV ledger charge");
+    dep.shutdown();
+}
+
+/// Chaos cell: a shard killed mid-iteration (fault-injected on the
+/// serving sessions' own routes) recovers token-identically — the
+/// walk's bounded retry rides across the watchdog respawn, and no
+/// session fails or diverges.
+#[test]
+fn shard_killed_mid_iteration_recovers_token_identically() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(2);
+    let kinds = adapter_kinds();
+    let cfg = GenerationConfig::greedy(8);
+    // goldens ride clean routes: computed before faults are armed
+    let goldens: Vec<Vec<Vec<i32>>> = kinds
+        .iter()
+        .map(|(_, a)| sequential(&dep, a, &prompt(12), &cfg))
+        .collect();
+
+    // every serving session is built after this, so each one's route to
+    // shard 1 kills it once, a few requests into the walk — mid
+    // iteration by construction
+    dep.inject_faults(FaultPlan::new(29).rule(
+        FaultRule::on(1, FaultAction::KillShard).from_step(5).times(1),
+    ));
+    let mut srv = dep
+        .serving()
+        .slots(4)
+        .prefill_chunk(4)
+        .request_timeout(Duration::from_millis(250))
+        .retry(RetryPolicy::retries(8)
+            .with_backoff(Duration::from_millis(10)))
+        .build();
+    let handles: Vec<_> = kinds
+        .iter()
+        .map(|(_, a)| {
+            let mut req =
+                ServingRequest::new(prompt(12), cfg.clone());
+            if let Some(a) = a {
+                req = req.adapter(a.clone());
+            }
+            srv.submit(req)
+        })
+        .collect();
+    let report = srv.run().unwrap();
+    assert_eq!(report.failed, 0,
+               "retry must absorb the mid-iteration kill");
+    for (i, h) in handles.iter().enumerate() {
+        assert_eq!(h.status(), HandleStatus::Finished,
+                   "{} session", kinds[i].0);
+        assert_eq!(h.tokens(), goldens[i],
+                   "{}: post-respawn stream diverged", kinds[i].0);
+    }
+    assert!(dep.executor.respawns() >= 1,
+            "the kill never actually landed");
+    dep.clear_faults();
+    dep.shutdown();
+}
+
+/// Scheduler surface sanity that needs no artifacts: terminal-status
+/// classification and the report's human-readable rendering.
+#[test]
+fn handle_status_terminality_and_report_render() {
+    use symbiosis::coordinator::ServingReport;
+    for s in [HandleStatus::Finished, HandleStatus::Denied,
+              HandleStatus::Evicted, HandleStatus::Failed] {
+        assert!(s.is_terminal());
+    }
+    for s in [HandleStatus::Queued, HandleStatus::Prefilling,
+              HandleStatus::Decoding] {
+        assert!(!s.is_terminal());
+    }
+    let r = ServingReport::default();
+    let text = format!("{r}");
+    assert!(text.contains("submitted"), "{text}");
+    assert!(text.contains("ttft"), "{text}");
+    assert!(text.contains("itl"), "{text}");
+}
