@@ -13,9 +13,10 @@
 //! * **in-flight layer requests** — checked by `VirtLayerCtx::dispatch`;
 //!   exceeding it is [`SymbiosisError::QuotaExceeded`].  Released when
 //!   the request is collected or abandoned (RAII [`InFlightGuard`]).
-//! * **KV-cache bytes** — charged by `KvLedger` *before* the device
-//!   ledger, so a tenant hits its own budget with `QuotaExceeded`
-//!   before it can push a co-tenant into `KvCacheOom`.
+//! * **KV-cache bytes** — charged by `KvCache::append` *before* the
+//!   block pool touches the device ledger, so a tenant hits its own
+//!   budget with `QuotaExceeded` before it can push a co-tenant into
+//!   `KvCacheOom`.
 //!
 //! Sessions that never name a tenant bypass admission entirely — the
 //! controller costs nothing until quotas are configured, and every

@@ -57,7 +57,8 @@ use crate::config::{bucket_for, ModelConfig, ATTN_BATCHES, SEQ_BUCKETS,
 use crate::coordinator::adapter::{Adapter, AdapterGrads, AdapterHooks,
                                   HookCtx, NO_ADAPTER};
 use crate::coordinator::admission::{SessionTicket, TenantState};
-use crate::coordinator::kv_cache::{KvCache, KvPlacement};
+use crate::coordinator::kv_cache::{BlockPool, KvCache, KvPlacement,
+                                   PrefixMeta};
 use crate::coordinator::model_state::ClientWeights;
 use crate::coordinator::optimizer::Adam;
 use crate::coordinator::privacy::PrivacyCtx;
@@ -379,7 +380,7 @@ impl<'a> LayerWalker<'a> {
                 let vh = v.split_heads_rows(*batch, nh);
                 let layer_len = kv.append(l, &kh, &vh)?;
                 debug_assert_eq!(layer_len, *len);
-                let (kc, vc) = kv.padded(l, *seq_bucket);
+                let (kc, vc) = kv.padded_view(l, *seq_bucket)?;
                 let kv_len = Tensor::scalar_i32(*len as i32);
                 // interactive decode rides the high-priority device lane
                 let prio = self.urgency == Urgency::Interactive;
@@ -546,7 +547,7 @@ impl<'a> PipelineDriver<'a> {
                 limit: *SEQ_BUCKETS.last()
                     .expect("SEQ_BUCKETS is a non-empty static"),
             })?;
-        let (kc, vc) = kv.padded(l, bucket);
+        let (kc, vc) = kv.padded_view(l, bucket)?;
         let qp = ClientCore::place_seq(&qh, ctx_len - tc, bucket);
         let name = format!("attn_prefill_bh{}_s{bucket}_h{}",
                            self.batch * nh, core.cfg.d_head());
@@ -1018,11 +1019,37 @@ impl InferenceSession {
     /// crate::coordinator::SessionBuilder::build), [`Self::generate`],
     /// and [`Self::prefill_auto`].  Errors if the prefix was built for
     /// a different batch size than this session's.
+    ///
+    /// Co-tenant sessions of the *same* prefix adapter share seed
+    /// blocks: the first session publishes its seeded rows into the
+    /// block pool's prefix registry (keyed by the seed tensor's shared
+    /// buffer, so clones of one adapter hit the same key and distinct
+    /// adapters cannot collide), and later sessions adopt those blocks
+    /// copy-on-write instead of re-materializing the seed.
     pub fn seed_prefix(&mut self) -> SymResult<()> {
         if self.prefix_seeded {
             return Ok(());
         }
         let bh = self.batch * self.core.cfg.n_heads;
+        let seed_key = self
+            .core
+            .hooks()
+            .seed_kv(0)
+            .map(|(k0, _)| {
+                format!("seed:{:p}:bh{bh}", k0.as_f32().as_ptr())
+            });
+        // a brand-new cache (no blocks yet — a cleared cache keeps its
+        // grown tables and takes the append path below) adopts the
+        // published seed blocks when a sibling session already paid
+        if self.kv.capacity() == 0 {
+            if let Some(key) = &seed_key {
+                if let Some(meta) = self.kv.adopt_prefix(key)? {
+                    debug_assert!(meta.seeded);
+                    self.prefix_seeded = true;
+                    return Ok(());
+                }
+            }
+        }
         let hooks = self.core.hooks();
         let mut seeded = false;
         for l in 0..self.core.cfg.n_layers {
@@ -1042,7 +1069,80 @@ impl InferenceSession {
             }
         }
         self.prefix_seeded = seeded;
+        if seeded {
+            // publish for the next session of this adapter — only a
+            // uniformly seeded cache is a shareable prefix (a hook
+            // seeding a subset of layers is legal but private)
+            let uniform = (0..self.core.cfg.n_layers)
+                .all(|l| self.kv.layer_len(l) == self.kv.layer_len(0));
+            if uniform {
+                if let Some(key) = &seed_key {
+                    self.kv.publish_prefix(key, PrefixMeta {
+                        cols: 0,
+                        tokens: Vec::new(),
+                        pos: 0,
+                        seeded: true,
+                    })?;
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Publish this session's current KV prefix (typically a just
+    /// prefilled system prompt) into the deployment's block pool under
+    /// `key`, so sibling sessions built with
+    /// [`SessionBuilder::adopt_kv_prefix`](
+    /// crate::coordinator::SessionBuilder::adopt_kv_prefix) map the
+    /// same refcounted blocks instead of re-prefilling and re-charging
+    /// the device.  `prompt` is the prompt this cache holds (validated
+    /// at adoption).  Returns `false` when the key is already taken.
+    pub fn publish_kv_prefix(&mut self, key: &str, prompt: &[i32])
+                             -> SymResult<bool> {
+        self.check_prompt(prompt)?;
+        let s = prompt.len() / self.batch;
+        let tokens: Vec<Vec<i32>> = (0..self.batch)
+            .map(|b| prompt[b * s..(b + 1) * s].to_vec())
+            .collect();
+        self.kv.publish_prefix(key, PrefixMeta {
+            cols: s,
+            tokens,
+            pos: self.pos,
+            seeded: self.prefix_seeded,
+        })
+    }
+
+    /// Adopt a prefix published by [`Self::publish_kv_prefix`]: the
+    /// shared blocks become this session's cache prefix (copy-on-write)
+    /// and the position counter resumes after the shared prompt, so the
+    /// next [`Self::generate`] call only pays for the *suffix* of its
+    /// prompt.  Requires a fresh session; returns the shared prompt
+    /// columns per sequence (`None`: no such key, the session is
+    /// unchanged).
+    pub fn adopt_kv_prefix(&mut self, key: &str)
+                           -> SymResult<Option<Vec<Vec<i32>>>> {
+        if self.pos != 0 || !self.last.is_empty() {
+            return Err(SymbiosisError::Runtime(anyhow::anyhow!(
+                "adopt_kv_prefix on a session that already processed \
+                 tokens"
+            )));
+        }
+        match self.kv.adopt_prefix(key)? {
+            Some(meta) => {
+                self.pos = meta.pos;
+                self.prefix_seeded = meta.seeded;
+                Ok(Some(meta.tokens))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Demote this session's KV cache: swap every exclusive block to
+    /// the host device (the scheduler's yield path calls this so a
+    /// preempted background session parks its KV off-device instead of
+    /// being evicted and losing its work).  Returns blocks moved.
+    pub fn demote_kv(&mut self) -> SymResult<usize> {
+        self.kv.swap_out_all()
     }
 
     fn record(&mut self, next: &[i32]) {
@@ -1528,7 +1628,8 @@ impl InferenceSession {
                         let vh = v.split_heads_rows(batch, nh);
                         let layer_len = self.kv.append(l, &kh, &vh)?;
                         debug_assert_eq!(layer_len, w.dec_len);
-                        let (kc, vc) = self.kv.padded(l, w.dec_bucket);
+                        let (kc, vc) =
+                            self.kv.padded_view(l, w.dec_bucket)?;
                         let kv_len = Tensor::scalar_i32(w.dec_len as i32);
                         // interactive decode rides the high-priority
                         // device lane (as LayerWalker::attention does)
@@ -1551,7 +1652,7 @@ impl InferenceSession {
                                     .expect(
                                         "SEQ_BUCKETS is a non-empty static"),
                             })?;
-                        let (kc, vc) = self.kv.padded(l, bucket);
+                        let (kc, vc) = self.kv.padded_view(l, bucket)?;
                         let qp = ClientCore::place_seq(
                             &qh, ctx_len - tc, bucket);
                         let name =
@@ -1855,6 +1956,7 @@ pub struct SessionBuilder<'d> {
     request_timeout: Option<std::time::Duration>,
     retry: Option<RetryPolicy>,
     tenant: Option<String>,
+    adopt_prefix: Option<String>,
 }
 
 impl<'d> SessionBuilder<'d> {
@@ -1872,6 +1974,7 @@ impl<'d> SessionBuilder<'d> {
             request_timeout: None,
             retry: None,
             tenant: None,
+            adopt_prefix: None,
         }
     }
 
@@ -1979,6 +2082,18 @@ impl<'d> SessionBuilder<'d> {
         self
     }
 
+    /// Start from a KV prefix a sibling session published under `key`
+    /// ([`InferenceSession::publish_kv_prefix`]): the new session maps
+    /// the publisher's refcounted blocks copy-on-write — charging the
+    /// device for none of them — and its position counter resumes
+    /// after the shared prompt.  Unknown keys are ignored (the session
+    /// just prefills normally), so racing publishers/adopters need no
+    /// coordination.
+    pub fn adopt_kv_prefix(mut self, key: &str) -> Self {
+        self.adopt_prefix = Some(key.to_string());
+        self
+    }
+
     pub fn build(self) -> SymResult<InferenceSession> {
         // Admission first: a denied tenant fails fast, before any
         // executor registration or device charge happens.
@@ -1992,6 +2107,10 @@ impl<'d> SessionBuilder<'d> {
         sess._tenant_ticket = ticket;
         sess.set_urgency(self.urgency);
         sess.set_prefill_chunk(self.prefill_chunk);
+        // Every session of a deployment draws blocks from the shared
+        // pool — prefix sharing and swap victim selection are
+        // fleet-wide decisions, not per-cache ones.
+        sess.kv.set_pool(self.dep.kv_pool.clone())?;
         // Charge the session's KV cache to the hosting device's shared
         // ledger: growth past the device capacity fails with a typed
         // KvCacheOom (the executable form of Figs 9/10).
@@ -2001,11 +2120,27 @@ impl<'d> SessionBuilder<'d> {
         };
         let tag = format!("kv:client{}", sess.core.virt.client_id);
         sess.attach_kv_ledger(device, tag)?;
+        // Device-resident background sessions may have cold blocks
+        // swapped to host DRAM when a foreground append would
+        // otherwise fire KvCacheOom (host-placed caches are already
+        // there — nowhere colder to go).
+        if self.kv_placement == KvPlacement::Device {
+            sess.kv.attach_swap(self.dep.host_device.clone());
+            sess.kv.set_background(
+                self.urgency.decode == Urgency::Background);
+        }
         // The tenant's KV budget is checked *before* the device ledger
         // on every growth, so one tenant exhausts its own quota with
         // QuotaExceeded before it can push a co-tenant into KvCacheOom.
         if let Some(t) = tenant {
             sess.kv.set_tenant(t)?;
+        }
+        // A requested shared prompt prefix maps the publisher's blocks
+        // before any seeding decision: the published prefix includes
+        // the publisher's seed rows, so a hit also satisfies
+        // seed_prefix below.
+        if let Some(key) = &self.adopt_prefix {
+            sess.adopt_kv_prefix(key)?;
         }
         // Prefix adapters seed the cache here, which flips the session
         // into incremental-prefill routing (`generate`/`prefill_auto`).

@@ -138,6 +138,14 @@ pub struct FleetStats {
     /// Per-shard circuit-breaker state transitions (trips + probe
     /// outcomes); empty on bare merges.
     pub breaker_transitions: Vec<u64>,
+    /// KV blocks swapped device → host over the deployment's lifetime
+    /// (stamped by [`Deployment::shutdown`](
+    /// crate::coordinator::Deployment::shutdown); zero on bare merges).
+    pub kv_swap_outs: u64,
+    /// KV blocks faulted host → device.
+    pub kv_fault_ins: u64,
+    /// KV blocks still host-resident at shutdown.
+    pub kv_swapped_blocks: u64,
 }
 
 impl FleetStats {
@@ -154,6 +162,9 @@ impl FleetStats {
             per_shard,
             respawns: 0,
             breaker_transitions: Vec::new(),
+            kv_swap_outs: 0,
+            kv_fault_ins: 0,
+            kv_swapped_blocks: 0,
         }
     }
 
@@ -200,6 +211,14 @@ impl std::fmt::Display for FleetStats {
             self.merged.mean_batch_clients(),
             self.merged.mean_wait_secs() * 1e3,
             self.merged.padding_overhead() * 100.0)?;
+        if self.kv_swap_outs > 0 || self.kv_fault_ins > 0 {
+            writeln!(
+                f,
+                "  kv swap: {} block(s) out, {} faulted back, \
+                 {} still on host",
+                self.kv_swap_outs, self.kv_fault_ins,
+                self.kv_swapped_blocks)?;
+        }
         for (s, st) in self.per_shard.iter().enumerate() {
             let trips = self.breaker_transitions.get(s).copied()
                 .unwrap_or(0);

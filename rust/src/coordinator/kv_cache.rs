@@ -1,42 +1,69 @@
-//! Per-client KV cache with host-offload accounting and real ledger
-//! charging.
+//! Paged per-client KV cache: block tables, copy-on-write prefix
+//! sharing, and ledger-backed swap to the host device.
 //!
 //! The client owns its KV cache (it is request runtime state — the whole
-//! point of the split is that it never burdens the executor).  Layout per
-//! layer: K and V as `(BH, cap, H)` with `cap` grown by doubling along
-//! the sequence axis.  `KvPlacement` models the paper's OffloadedCache
-//! path (section 3.4): with `Host`, the cache bytes are charged to the
-//! host ledger and each decode step charges a PCIe transfer for the
-//! layer's K/V working set — unless the client itself runs on the CPU,
-//! in which case the transfer is free (that asymmetry is Fig. 19).
+//! point of the split is that it never burdens the executor).  Storage is
+//! a [`BlockPool`] of fixed-size blocks — per layer, K and V live in
+//! `(BH, BLOCK_TOKENS, H)` blocks addressed through a per-layer block
+//! table — instead of one contiguous `(BH, cap, H)` slab per layer:
 //!
-//! A cache built by the session builder
-//! ([`crate::coordinator::SessionBuilder`]) carries a [`KvLedger`]:
-//! every capacity growth is charged to the hosting device's
-//! [`crate::device::MemoryLedger`] *before* the buffers grow, so an
-//! over-committed session fails its `append` with a typed
-//! [`SymbiosisError::KvCacheOom`] instead of only showing up in the
-//! analytic memory model — the executable form of the paper's
-//! mixed-tenant OOM lines (Figs 9/10).  `clear()` keeps the grown
-//! buffers and therefore keeps the charge; the charge is released when
-//! the cache drops.
+//! * **O(1) bytes per appended token.**  `append` writes only the rows it
+//!   received into the tail block, and [`KvCache::padded_view`] keeps a
+//!   memoized gather buffer per layer so a decode step copies exactly the
+//!   newly appended rows into the attention operand — not the whole
+//!   prefix, as the old contiguous `padded` re-copy did.  The contiguous
+//!   behaviour survives as [`KvCache::padded`], a compat shim and the
+//!   bench baseline.
+//! * **Copy-on-write prefix sharing.**  A prefix (a common system
+//!   prompt, or a [`crate::adapters::PrefixAdapter`]'s seed KV) can be
+//!   published into the pool's registry under a key; later caches adopt
+//!   it by mapping the *same refcounted blocks* into their tables, so N
+//!   sessions sharing a prompt charge ~1 prefix to the device ledger.  A
+//!   write into a shared block forks only that block.
+//! * **Ledger-backed oversubscription.**  Every block is charged to the
+//!   hosting device's [`crate::device::MemoryLedger`] under its own tag
+//!   *before* it is handed out, so an over-committed session fails its
+//!   `append` with a typed [`SymbiosisError::KvCacheOom`] — unless cold
+//!   blocks of `Background`-class sessions can first be swapped to the
+//!   host device (charge moves ledgers; typed
+//!   [`SymbiosisError::KvSwapOom`] when the host is full too).  Swapped
+//!   blocks fault back in on the owner's next touch (typed
+//!   [`SymbiosisError::KvFaultInOom`] when the device cannot take them
+//!   back), and the pool counts swap-outs/fault-ins for
+//!   [`crate::coordinator::FleetStats`].
 //!
-//! A tenanted session additionally carries its [`TenantState`]: every
-//! growth is charged against the tenant's KV-byte quota *before* the
-//! device ledger, so a tenant at its budget fails with a typed
+//! `KvPlacement` still models the paper's OffloadedCache path (section
+//! 3.4): with `Host`, the cache blocks are charged to the host ledger
+//! and each decode step charges a PCIe transfer for the layer's K/V
+//! working set.
+//!
+//! A tenanted cache additionally charges its [`TenantState`]'s KV-byte
+//! quota per *referenced* block — checked *before* the device ledger, so
+//! a tenant at its budget fails with a typed
 //! [`SymbiosisError::QuotaExceeded`] without ever contending for the
-//! shared device — its co-tenants keep their headroom.
+//! shared device.  CoW forks are tenant-neutral (the fork replaces a
+//! reference, it does not add one); adopting a shared prefix charges the
+//! adopter's tenant for the blocks it now references even though the
+//! device holds only one copy — quota is a per-tenant promise, the
+//! ledger is physical truth.
 
 #![deny(clippy::unwrap_used)]
 
-use std::sync::{Arc, Mutex};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::Result;
 
 use crate::coordinator::admission::TenantState;
 use crate::device::Device;
 use crate::error::{SymResult, SymbiosisError};
-use crate::tensor::Tensor;
+use crate::tensor::{ops, Tensor};
+
+/// Tokens per block.  16 is the smallest decode bucket: small enough
+/// that a short session wastes at most one partial block per layer,
+/// large enough that the per-block ledger tags stay countable.
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 
 /// Where the cache bytes live.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,87 +74,644 @@ pub enum KvPlacement {
     Host,
 }
 
-/// A handle charging this cache's bytes to a (shared) simulated device:
-/// sessions on the same device contend for the same capacity, which is
-/// what makes multi-tenant OOM executable.
-#[derive(Debug, Clone)]
-pub struct KvLedger {
-    pub device: Arc<Mutex<Device>>,
-    /// Ledger tag, e.g. `kv:client3`.
-    pub tag: String,
+/// Swap activity counters, surfaced through
+/// [`crate::coordinator::FleetStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvSwapStats {
+    /// Blocks swapped device → host since the pool was created.
+    pub swap_outs: u64,
+    /// Blocks faulted host → device since the pool was created.
+    pub fault_ins: u64,
+    /// Blocks currently resident on the host (gauge).
+    pub swapped_blocks: u64,
 }
 
-impl KvLedger {
-    /// Charge the tag to `bytes` total; typed
-    /// [`SymbiosisError::KvCacheOom`] when the device cannot hold it.
-    fn charge(&self, bytes: u64) -> Result<()> {
-        let mut dev =
-            self.device.lock().unwrap_or_else(|p| p.into_inner());
-        let capacity = dev.ledger.capacity();
-        // what *other* allocations hold — the informative number in
-        // the multi-tenant case, where this cache alone would fit
-        let others = dev.ledger.used() - dev.ledger.tag_bytes(&self.tag);
-        dev.ledger.set(&self.tag, bytes).map_err(|_| {
-            anyhow::Error::new(SymbiosisError::KvCacheOom {
-                need_bytes: bytes,
-                used_bytes: others,
-                capacity_bytes: capacity,
-            })
+/// One fixed-size KV block: K and V as `(BH, BLOCK_TOKENS, H)`.
+#[derive(Debug)]
+struct Block {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    bytes: u64,
+    refs: usize,
+    /// Cache id of the allocator / last exclusive writer — meaningful
+    /// while `refs == 1`, which is the only state a block can swap in.
+    owner: usize,
+    on_host: bool,
+    /// Per-block ledger tag (`<cache tag>/b<id>`); `None` while the
+    /// owning cache has no ledger attached.
+    tag: Option<String>,
+    /// Device whose ledger currently carries the charge.
+    device: Option<Arc<Mutex<Device>>>,
+}
+
+impl Block {
+    fn new(floats: usize, bytes: u64, owner: usize) -> Self {
+        Block {
+            k: vec![0.0; floats],
+            v: vec![0.0; floats],
+            bytes,
+            refs: 1,
+            owner,
+            on_host: false,
+            tag: None,
+            device: None,
+        }
+    }
+}
+
+/// Per-cache registration: where its blocks charge, whether it may be
+/// swapped out, and how recently it touched its blocks.
+#[derive(Debug)]
+struct CacheReg {
+    device: Option<Arc<Mutex<Device>>>,
+    tag: String,
+    host: Option<Arc<Mutex<Device>>>,
+    background: bool,
+    last_touch: u64,
+}
+
+/// Session-level description of a published prefix, returned verbatim
+/// to the adopter so it can restore position/seed state and validate
+/// its prompt against the shared columns.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixMeta {
+    /// Prompt columns covered by the shared blocks.
+    pub cols: usize,
+    /// Those prompt columns per batch row, for adopt-time validation.
+    pub tokens: Vec<Vec<i32>>,
+    /// Session position counter after the prefix.
+    pub pos: usize,
+    /// Whether a learned prefix seed is included.
+    pub seeded: bool,
+}
+
+#[derive(Debug)]
+struct PrefixEntry {
+    /// Per-layer block ids; the entry holds +1 ref on each.
+    layers: Vec<Vec<usize>>,
+    bh: usize,
+    head_dim: usize,
+    /// Tokens per layer covered by the blocks.
+    len: usize,
+    /// Live caches referencing this entry (publisher included); the
+    /// entry and its refs are released when the last user drops, so a
+    /// drained fleet leaves the ledger empty.
+    users: usize,
+    meta: PrefixMeta,
+}
+
+#[derive(Debug, Default)]
+struct PoolInner {
+    blocks: Vec<Option<Block>>,
+    free: Vec<usize>,
+    regs: HashMap<usize, CacheReg>,
+    next_cache: usize,
+    registry: HashMap<String, PrefixEntry>,
+    clock: u64,
+    swap_outs: u64,
+    fault_ins: u64,
+    swapped: u64,
+}
+
+/// Shared pool of fixed-size KV blocks.  One pool per
+/// [`crate::coordinator::Deployment`] (every session cache draws from
+/// it, which is what makes prefix sharing and victim selection
+/// fleet-wide); a bare [`KvCache::new`] gets a private pool so the
+/// low-level API keeps working standalone.
+#[derive(Debug)]
+pub struct BlockPool {
+    block_tokens: usize,
+    inner: Mutex<PoolInner>,
+}
+
+impl BlockPool {
+    /// A pool with the default block size.
+    pub fn new() -> Arc<Self> {
+        Self::with_block_tokens(DEFAULT_BLOCK_TOKENS)
+    }
+
+    /// A pool with a custom block size (tests use tiny blocks to force
+    /// many-block tables cheaply).
+    pub fn with_block_tokens(block_tokens: usize) -> Arc<Self> {
+        assert!(block_tokens > 0);
+        Arc::new(BlockPool {
+            block_tokens,
+            inner: Mutex::new(PoolInner::default()),
         })
     }
 
-    fn release(&self) {
-        self.device
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .ledger
-            .free(&self.tag);
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Swap activity counters.
+    pub fn swap_stats(&self) -> KvSwapStats {
+        let i = self.lock();
+        KvSwapStats {
+            swap_outs: i.swap_outs,
+            fault_ins: i.fault_ins,
+            swapped_blocks: i.swapped,
+        }
+    }
+
+    /// Live (allocated, unfreed) blocks in the pool.
+    pub fn live_blocks(&self) -> usize {
+        self.lock().blocks.iter().flatten().count()
+    }
+
+    /// Sum of ledger-charged block bytes, split (device, host) — the
+    /// property tests compare these against the actual ledgers.
+    pub fn charged_bytes(&self) -> (u64, u64) {
+        let i = self.lock();
+        let mut dev = 0;
+        let mut host = 0;
+        for b in i.blocks.iter().flatten() {
+            if b.tag.is_some() {
+                if b.on_host {
+                    host += b.bytes;
+                } else {
+                    dev += b.bytes;
+                }
+            }
+        }
+        (dev, host)
     }
 }
 
-/// KV cache for one client: per layer, K and V `(BH, cap, H)`.
-#[derive(Debug)]
+/// Charge `tag` to `bytes` on `dev`; on failure report what *other*
+/// allocations hold (everything outside `own_prefix`) and the capacity.
+fn try_charge(dev: &Arc<Mutex<Device>>, tag: &str, own_prefix: &str,
+              bytes: u64) -> std::result::Result<(), (u64, u64)> {
+    let mut d = dev.lock().unwrap_or_else(|p| p.into_inner());
+    let capacity = d.ledger.capacity();
+    let others = d.ledger.used() - d.ledger.prefix_bytes(own_prefix);
+    match d.ledger.set(tag, bytes) {
+        Ok(()) => Ok(()),
+        Err(_) => Err((others, capacity)),
+    }
+}
+
+fn free_charge(dev: &Arc<Mutex<Device>>, tag: &str) {
+    dev.lock().unwrap_or_else(|p| p.into_inner()).ledger.free(tag);
+}
+
+impl PoolInner {
+    fn register(&mut self) -> usize {
+        let id = self.next_cache;
+        self.next_cache += 1;
+        self.clock += 1;
+        self.regs.insert(id, CacheReg {
+            device: None,
+            tag: format!("kv:anon{id}"),
+            host: None,
+            background: false,
+            last_touch: self.clock,
+        });
+        id
+    }
+
+    fn touch(&mut self, cache: usize) {
+        self.clock += 1;
+        if let Some(r) = self.regs.get_mut(&cache) {
+            r.last_touch = self.clock;
+        }
+    }
+
+    fn block(&self, id: usize) -> &Block {
+        match self.blocks.get(id).and_then(|b| b.as_ref()) {
+            Some(b) => b,
+            None => panic!("stale KV block id {id}"),
+        }
+    }
+
+    fn block_mut(&mut self, id: usize) -> &mut Block {
+        match self.blocks.get_mut(id).and_then(|b| b.as_mut()) {
+            Some(b) => b,
+            None => panic!("stale KV block id {id}"),
+        }
+    }
+
+    /// Allocate a zeroed block charged to `cache`'s device (if it has
+    /// one), swapping background co-tenants out to make room.  On
+    /// failure nothing is allocated or charged.
+    fn alloc_block(&mut self, cache: usize, floats: usize, bytes: u64)
+                   -> Result<usize> {
+        let id = match self.free.pop() {
+            Some(i) => {
+                self.blocks[i] = Some(Block::new(floats, bytes, cache));
+                i
+            }
+            None => {
+                self.blocks.push(Some(Block::new(floats, bytes, cache)));
+                self.blocks.len() - 1
+            }
+        };
+        if let Err(e) = self.charge_block(cache, id, bytes) {
+            self.blocks[id] = None;
+            self.free.push(id);
+            return Err(e);
+        }
+        Ok(id)
+    }
+
+    /// Charge one block to `cache`'s device ledger under a per-block
+    /// tag.  A cache without a registered device holds its blocks
+    /// uncharged (they are retro-charged by `attach_ledger`).
+    fn charge_block(&mut self, cache: usize, id: usize, bytes: u64)
+                    -> Result<()> {
+        let (dev, tag, own_prefix) = match self.regs.get(&cache) {
+            Some(r) => match &r.device {
+                Some(d) => (d.clone(), format!("{}/b{id}", r.tag),
+                            format!("{}/", r.tag)),
+                None => return Ok(()),
+            },
+            None => return Ok(()),
+        };
+        loop {
+            match try_charge(&dev, &tag, &own_prefix, bytes) {
+                Ok(()) => {
+                    let b = self.block_mut(id);
+                    b.tag = Some(tag);
+                    b.device = Some(dev);
+                    return Ok(());
+                }
+                Err((used_bytes, capacity_bytes)) => {
+                    if !self.make_room(cache, &dev) {
+                        return Err(anyhow::Error::new(
+                            SymbiosisError::KvCacheOom {
+                                need_bytes: bytes,
+                                used_bytes,
+                                capacity_bytes,
+                            },
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Release a block's ledger charge (used to unwind a failed
+    /// `attach_ledger`).
+    fn uncharge_block(&mut self, id: usize) {
+        let b = self.block_mut(id);
+        if let (Some(tag), Some(dev)) = (b.tag.take(), b.device.take()) {
+            free_charge(&dev, &tag);
+        }
+    }
+
+    /// Swap the coldest eligible background cache's exclusive blocks to
+    /// its host device.  Returns true when at least one block moved off
+    /// `dev` (so a failed charge is worth retrying).
+    fn make_room(&mut self, requester: usize, dev: &Arc<Mutex<Device>>)
+                 -> bool {
+        let mut victims: Vec<(u64, usize)> = self
+            .regs
+            .iter()
+            .filter(|(cid, r)| {
+                **cid != requester
+                    && r.background
+                    && r.host.is_some()
+                    && r.device.as_ref().is_some_and(|d| Arc::ptr_eq(d, dev))
+            })
+            .map(|(cid, r)| (r.last_touch, *cid))
+            .collect();
+        victims.sort_unstable();
+        for (_, vid) in victims {
+            if self.swap_cache_blocks(vid, false).unwrap_or(0) > 0 {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Swap every exclusive, device-resident block of `victim` to its
+    /// host device.  `strict` distinguishes the explicit demotion path
+    /// (a full host is a typed [`SymbiosisError::KvSwapOom`]) from
+    /// best-effort room-making (a full host just stops the sweep).
+    fn swap_cache_blocks(&mut self, victim: usize, strict: bool)
+                         -> Result<usize> {
+        let host = match self.regs.get(&victim).and_then(|r| r.host.clone())
+        {
+            Some(h) => h,
+            None => return Ok(0),
+        };
+        let ids: Vec<usize> = self
+            .blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| {
+                b.as_ref().is_some_and(|b| {
+                    b.owner == victim
+                        && !b.on_host
+                        && b.refs == 1
+                        && b.tag.is_some()
+                        && b.device
+                            .as_ref()
+                            .is_some_and(|d| !Arc::ptr_eq(d, &host))
+                })
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let mut moved = 0;
+        for id in ids {
+            let (tag, bytes, dev) = {
+                let b = self.block(id);
+                match (&b.tag, &b.device) {
+                    (Some(t), Some(d)) => {
+                        (t.clone(), b.bytes, d.clone())
+                    }
+                    _ => continue,
+                }
+            };
+            match try_charge(&host, &tag, "", bytes) {
+                Ok(()) => {}
+                Err((used_bytes, capacity_bytes)) => {
+                    if strict {
+                        return Err(anyhow::Error::new(
+                            SymbiosisError::KvSwapOom {
+                                need_bytes: bytes,
+                                used_bytes,
+                                capacity_bytes,
+                            },
+                        ));
+                    }
+                    break;
+                }
+            }
+            free_charge(&dev, &tag);
+            let b = self.block_mut(id);
+            b.device = Some(host.clone());
+            b.on_host = true;
+            self.swap_outs += 1;
+            self.swapped += 1;
+            moved += 1;
+        }
+        Ok(moved)
+    }
+
+    /// Fault one block back onto its owner's device (no-op when it is
+    /// already resident), swapping background co-tenants out to make
+    /// room.
+    fn fault_in_one(&mut self, cache: usize, id: usize) -> Result<()> {
+        if !self.block(id).on_host {
+            return Ok(());
+        }
+        let (tag, bytes, host) = {
+            let b = self.block(id);
+            match (&b.tag, &b.device) {
+                (Some(t), Some(d)) => (t.clone(), b.bytes, d.clone()),
+                _ => return Ok(()),
+            }
+        };
+        let (dev, own_prefix) = match self.regs.get(&cache) {
+            Some(r) => match &r.device {
+                Some(d) => (d.clone(), format!("{}/", r.tag)),
+                None => return Ok(()),
+            },
+            None => return Ok(()),
+        };
+        loop {
+            match try_charge(&dev, &tag, &own_prefix, bytes) {
+                Ok(()) => {
+                    free_charge(&host, &tag);
+                    let b = self.block_mut(id);
+                    b.device = Some(dev);
+                    b.on_host = false;
+                    self.fault_ins += 1;
+                    self.swapped -= 1;
+                    return Ok(());
+                }
+                Err((used_bytes, capacity_bytes)) => {
+                    if !self.make_room(cache, &dev) {
+                        return Err(anyhow::Error::new(
+                            SymbiosisError::KvFaultInOom {
+                                need_bytes: bytes,
+                                used_bytes,
+                                capacity_bytes,
+                            },
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fault every listed block back in (the blocks an attention read
+    /// is about to touch).
+    fn fault_in(&mut self, cache: usize, ids: &[usize]) -> Result<()> {
+        for &id in ids {
+            self.fault_in_one(cache, id)?;
+        }
+        Ok(())
+    }
+
+    /// Copy-on-write fork: a private, identically-valued copy of `src`
+    /// charged to `cache`; drops one reference to `src`.  On failure
+    /// `src` is untouched.
+    fn fork_block(&mut self, cache: usize, src: usize) -> Result<usize> {
+        let (kd, vd, bytes) = {
+            let b = self.block(src);
+            (b.k.clone(), b.v.clone(), b.bytes)
+        };
+        let floats = kd.len();
+        let nid = self.alloc_block(cache, floats, bytes)?;
+        {
+            let nb = self.block_mut(nid);
+            nb.k = kd;
+            nb.v = vd;
+        }
+        self.deref_block(src);
+        Ok(nid)
+    }
+
+    fn deref_block(&mut self, id: usize) {
+        let freed = {
+            let b = self.block_mut(id);
+            b.refs -= 1;
+            b.refs == 0
+        };
+        if freed {
+            if let Some(b) = self.blocks[id].take() {
+                if let (Some(tag), Some(dev)) = (&b.tag, &b.device) {
+                    free_charge(dev, tag);
+                }
+                if b.on_host {
+                    self.swapped -= 1;
+                }
+            }
+            self.free.push(id);
+        }
+    }
+
+    /// Drop one user of a registry entry; the last user out releases
+    /// the entry's block references.
+    fn release_entry(&mut self, key: &str) {
+        let emptied = match self.registry.get_mut(key) {
+            Some(e) => {
+                e.users -= 1;
+                e.users == 0
+            }
+            None => false,
+        };
+        if emptied {
+            if let Some(e) = self.registry.remove(key) {
+                for layer in &e.layers {
+                    for &id in layer {
+                        self.deref_block(id);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct Gather {
+    k: Option<Tensor>,
+    v: Option<Tensor>,
+    bucket: usize,
+    /// Rows `[0, valid)` of the gather buffers match the cache (rows
+    /// below `valid` are append-only, so they never go stale).
+    valid: usize,
+}
+
+/// KV cache for one client: per layer, a block table over a
+/// [`BlockPool`].
 pub struct KvCache {
     pub bh: usize,
     pub head_dim: usize,
     pub placement: KvPlacement,
+    pool: Arc<BlockPool>,
+    /// This cache's registration id in the pool.
+    id: usize,
+    /// Per-layer block tables (block `i` holds tokens
+    /// `[i*BT, (i+1)*BT)`); tables may hold trailing spare blocks after
+    /// `clear()` keeps grown capacity.
+    tables: Vec<Vec<usize>>,
     /// Per-layer token lengths (layers fill front-to-back within a step,
     /// so lengths may transiently differ by one during a decode step).
     lens: Vec<usize>,
-    cap: usize,
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
-    ledger: Option<KvLedger>,
+    /// Memoized per-layer gather buffers backing `padded_view`.
+    gather: Vec<Gather>,
+    /// Registry keys this cache references (publisher or adopter).
+    entries: Vec<String>,
     /// Tenant whose KV-byte quota this cache charges (checked before
     /// the device ledger); `None` = untenanted, no quota.
     tenant: Option<Arc<TenantState>>,
+    /// Bytes moved by this cache (appends, gathers, forks) — the
+    /// quantity `BENCH_kv.json` plots per decode step.
+    copied: AtomicU64,
 }
 
 impl KvCache {
     pub fn new(n_layers: usize, bh: usize, head_dim: usize,
                placement: KvPlacement) -> Self {
+        let pool = BlockPool::new();
+        let id = pool.lock().register();
         KvCache {
             bh,
             head_dim,
             placement,
+            pool,
+            id,
+            tables: vec![Vec::new(); n_layers],
             lens: vec![0; n_layers],
-            cap: 0,
-            k: vec![Vec::new(); n_layers],
-            v: vec![Vec::new(); n_layers],
-            ledger: None,
+            gather: (0..n_layers).map(|_| Gather::default()).collect(),
+            entries: Vec::new(),
             tenant: None,
+            copied: AtomicU64::new(0),
         }
     }
 
-    /// Attach a device ledger: from now on every capacity growth is
-    /// charged (and the current footprint is charged immediately).
-    /// The charge is released when the cache drops.
+    /// Move this (still empty) cache onto a shared pool — done by the
+    /// session builder so every session of a deployment draws from one
+    /// pool (prefix sharing and swap victim selection are pool-wide).
+    pub fn set_pool(&mut self, pool: Arc<BlockPool>) -> SymResult<()> {
+        if self.tables.iter().any(|t| !t.is_empty())
+            || !self.entries.is_empty()
+        {
+            return Err(SymbiosisError::Runtime(anyhow::anyhow!(
+                "set_pool on a non-empty KV cache"
+            )));
+        }
+        if Arc::ptr_eq(&self.pool, &pool) {
+            return Ok(());
+        }
+        self.pool.lock().regs.remove(&self.id);
+        self.id = pool.lock().register();
+        self.pool = pool;
+        Ok(())
+    }
+
+    /// The pool this cache draws from.
+    pub fn pool(&self) -> Arc<BlockPool> {
+        self.pool.clone()
+    }
+
+    /// Attach a device ledger: every block this cache holds (and every
+    /// future block) is charged under `<tag>/b<id>`, so the device's
+    /// `prefix_bytes(tag)` is this cache's resident footprint.  Already
+    /// charged blocks (an adopted shared prefix) keep their publisher's
+    /// charge — that is the sharing win.
     pub fn attach_ledger(&mut self, device: Arc<Mutex<Device>>,
                          tag: String) -> Result<()> {
-        let ledger = KvLedger { device, tag };
-        ledger.charge(self.bytes())?;
-        self.ledger = Some(ledger);
+        let pool = self.pool.clone();
+        let mut inner = pool.lock();
+        if let Some(r) = inner.regs.get_mut(&self.id) {
+            r.device = Some(device);
+            r.tag = tag;
+        }
+        let mut charged: Vec<usize> = Vec::new();
+        let mut failed = None;
+        'outer: for table in &self.tables {
+            for &id in table {
+                let (uncharged, bytes) = {
+                    let b = inner.block(id);
+                    (b.tag.is_none(), b.bytes)
+                };
+                if !uncharged {
+                    continue;
+                }
+                if let Err(e) = inner.charge_block(self.id, id, bytes) {
+                    failed = Some(e);
+                    break 'outer;
+                }
+                charged.push(id);
+            }
+        }
+        if let Some(e) = failed {
+            for id in charged {
+                inner.uncharge_block(id);
+            }
+            if let Some(r) = inner.regs.get_mut(&self.id) {
+                r.device = None;
+            }
+            return Err(e);
+        }
         Ok(())
+    }
+
+    /// Register a host device as this cache's swap target.  Only caches
+    /// with a swap target (and marked background, see
+    /// [`KvCache::set_background`]) are eligible victims when a
+    /// co-tenant's `append` would otherwise fire
+    /// [`SymbiosisError::KvCacheOom`].
+    pub fn attach_swap(&mut self, host: Arc<Mutex<Device>>) {
+        if let Some(r) = self.pool.lock().regs.get_mut(&self.id) {
+            r.host = Some(host);
+        }
+    }
+
+    /// Mark this cache as background-class: its cold blocks may be
+    /// swapped to the host to make room for foreground appends.
+    pub fn set_background(&mut self, background: bool) {
+        if let Some(r) = self.pool.lock().regs.get_mut(&self.id) {
+            r.background = background;
+        }
     }
 
     /// Charge this cache against a tenant's KV-byte quota: the current
@@ -157,126 +741,350 @@ impl KvCache {
         self.len() == 0
     }
 
+    /// Token capacity of the largest per-layer block table.
     pub fn capacity(&self) -> usize {
-        self.cap
+        self.tables.iter().map(Vec::len).max().unwrap_or(0)
+            * self.pool.block_tokens
     }
 
-    /// Bytes currently held (all layers, K+V).
+    /// Tokens per block of the backing pool.
+    pub fn block_tokens(&self) -> usize {
+        self.pool.block_tokens
+    }
+
+    /// Bytes of one block (K+V).
+    pub fn block_bytes(&self) -> u64 {
+        (2 * self.bh * self.pool.block_tokens * self.head_dim * 4) as u64
+    }
+
+    /// Bytes this cache references (all layers, K+V, block-granular).
+    /// Shared blocks count fully for every referencing cache — this is
+    /// the tenant-quota view; the device ledger holds each block once.
     pub fn bytes(&self) -> u64 {
-        self.bytes_at_cap(self.cap)
+        let blocks: usize = self.tables.iter().map(Vec::len).sum();
+        blocks as u64 * self.block_bytes()
     }
 
-    /// Footprint at a hypothetical capacity — the single source of the
-    /// layout formula, used both for the current footprint and for the
-    /// ledger pre-charge in `ensure_cap`.
-    fn bytes_at_cap(&self, cap: usize) -> u64 {
-        (2 * self.k.len() * self.bh * cap * self.head_dim * 4) as u64
+    /// Bytes this cache has moved (appends, gathers, CoW forks) since
+    /// creation or the last [`KvCache::reset_copied`].
+    pub fn copied_bytes(&self) -> u64 {
+        self.copied.load(Ordering::Relaxed)
     }
 
-    fn ensure_cap(&mut self, want: usize) -> Result<()> {
-        if want <= self.cap {
-            return Ok(());
-        }
-        let new_cap = want.next_power_of_two().max(16);
-        // Tenant quota first, then device ledger, both *before*
-        // growing: a rejected growth leaves cache, quota, and ledger
-        // exactly as they were.
-        if let Some(t) = &self.tenant {
-            t.adjust_kv(self.bytes(), self.bytes_at_cap(new_cap))
-                .map_err(anyhow::Error::new)?;
-        }
-        if let Some(ledger) = &self.ledger {
-            if let Err(e) = ledger.charge(self.bytes_at_cap(new_cap)) {
-                // roll the tenant charge back so both books agree
-                if let Some(t) = &self.tenant {
-                    let _ = t.adjust_kv(self.bytes_at_cap(new_cap),
-                                        self.bytes());
-                }
-                return Err(e);
-            }
-        }
-        for layer in 0..self.k.len() {
-            let mut nk = vec![0.0f32; self.bh * new_cap * self.head_dim];
-            let mut nv = vec![0.0f32; self.bh * new_cap * self.head_dim];
-            let h = self.head_dim;
-            for b in 0..self.bh {
-                for t in 0..self.lens[layer] {
-                    let src = (b * self.cap + t) * h;
-                    let dst = (b * new_cap + t) * h;
-                    if !self.k[layer].is_empty() {
-                        nk[dst..dst + h]
-                            .copy_from_slice(&self.k[layer][src..src + h]);
-                        nv[dst..dst + h]
-                            .copy_from_slice(&self.v[layer][src..src + h]);
-                    }
-                }
-            }
-            self.k[layer] = nk;
-            self.v[layer] = nv;
-        }
-        self.cap = new_cap;
-        Ok(())
+    pub fn reset_copied(&self) {
+        self.copied.store(0, Ordering::Relaxed);
     }
 
     /// Forget all cached rows (per-layer lengths to zero) while keeping
-    /// the grown buffers, so a reused session does not re-pay the
-    /// doubling growth.  `append`/`padded` never read past the lengths,
-    /// so stale bytes in the retained capacity are unreachable.  The
-    /// ledger charge is retained with the buffers.
+    /// the block tables as grown capacity, so a reused session does not
+    /// re-pay allocation.  Shared blocks still referenced by a registry
+    /// entry are forked on the next overwrite, never scribbled on.  The
+    /// ledger charge is retained with the blocks.
     pub fn clear(&mut self) {
         for l in &mut self.lens {
             *l = 0;
         }
+        for g in &mut self.gather {
+            g.k = None;
+            g.v = None;
+            g.valid = 0;
+        }
     }
 
     /// Append `t_new` tokens of K/V for `layer` (`k`/`v` are
-    /// `(BH, t_new, H)`); returns the layer's new token length.  During a
-    /// decode step earlier layers lead later ones by one token — the
+    /// `(BH, t_new, H)`); returns the layer's new token length.  During
+    /// a decode step earlier layers lead later ones by one token — the
     /// caller must use the returned per-layer length for attention, not
-    /// the global `len()`.  Fails with a typed
-    /// [`SymbiosisError::KvCacheOom`] when a ledger is attached and the
-    /// required capacity growth does not fit the device.
+    /// the global `len()`.  Writing into a shared block forks only that
+    /// block (copy-on-write).  When a needed block does not fit the
+    /// device, cold background blocks are swapped to the host first;
+    /// only when that cannot make room does the append fail with a
+    /// typed [`SymbiosisError::KvCacheOom`].
     pub fn append(&mut self, layer: usize, k: &Tensor, v: &Tensor)
                   -> Result<usize> {
         let t_new = k.shape[1];
         let h = self.head_dim;
+        let bt = self.pool.block_tokens;
+        let bb = self.block_bytes();
         let old = self.lens[layer];
-        self.ensure_cap(old + t_new)?;
-        let (ks, vs) = (k.as_f32(), v.as_f32());
-        for b in 0..self.bh {
-            for t in 0..t_new {
-                let src = (b * t_new + t) * h;
-                let dst = (b * self.cap + old + t) * h;
-                self.k[layer][dst..dst + h]
-                    .copy_from_slice(&ks[src..src + h]);
-                self.v[layer][dst..dst + h]
-                    .copy_from_slice(&vs[src..src + h]);
+        let new_len = old + t_new;
+        let have = self.tables[layer].len();
+        let need = new_len.div_ceil(bt);
+        let extra = need.saturating_sub(have) as u64;
+        // Tenant quota first, device ledger second, both *before*
+        // writing: a rejected growth leaves cache, quota, and ledger
+        // exactly as they were.
+        if extra > 0 {
+            if let Some(t) = &self.tenant {
+                t.adjust_kv(self.bytes(), self.bytes() + extra * bb)
+                    .map_err(anyhow::Error::new)?;
             }
         }
-        self.lens[layer] = old + t_new;
-        Ok(self.lens[layer])
+        let pool = self.pool.clone();
+        let mut inner = pool.lock();
+        inner.touch(self.id);
+        let mut failed = None;
+        for bi in old / bt..need {
+            if bi < have {
+                // existing block we are about to write: fault it in if
+                // swapped, fork it if shared
+                let id = self.tables[layer][bi];
+                if let Err(e) = inner.fault_in_one(self.id, id) {
+                    failed = Some(e);
+                    break;
+                }
+                if inner.block(id).refs > 1 {
+                    match inner.fork_block(self.id, id) {
+                        Ok(nid) => {
+                            self.tables[layer][bi] = nid;
+                            self.copied.fetch_add(bb, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            failed = Some(e);
+                            break;
+                        }
+                    }
+                }
+            } else {
+                match inner.alloc_block(self.id, self.bh * bt * h, bb) {
+                    Ok(nid) => self.tables[layer].push(nid),
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(e) = failed {
+            while self.tables[layer].len() > have {
+                if let Some(id) = self.tables[layer].pop() {
+                    inner.deref_block(id);
+                }
+            }
+            drop(inner);
+            if extra > 0 {
+                if let Some(t) = &self.tenant {
+                    t.release_kv(extra * bb);
+                }
+            }
+            return Err(e);
+        }
+        let (ks, vs) = (k.as_f32(), v.as_f32());
+        let mut t = 0usize;
+        while t < t_new {
+            let global = old + t;
+            let bi = global / bt;
+            let r = global % bt;
+            let n = (bt - r).min(t_new - t);
+            let id = self.tables[layer][bi];
+            let blk = inner.block_mut(id);
+            ops::copy_seq_rows(&mut blk.k, bt, r, ks, t_new, t,
+                               self.bh, h, n);
+            ops::copy_seq_rows(&mut blk.v, bt, r, vs, t_new, t,
+                               self.bh, h, n);
+            t += n;
+        }
+        self.copied.fetch_add((2 * t_new * self.bh * h * 4) as u64,
+                              Ordering::Relaxed);
+        self.lens[layer] = new_len;
+        Ok(new_len)
     }
 
     /// K and V for `layer`, padded to `bucket` along the sequence axis:
-    /// `(BH, bucket, H)` — ready for the bucketed decode artifact.
+    /// `(BH, bucket, H)`, byte-identical to [`KvCache::padded`] — but
+    /// memoized.  Rows already gathered on a previous call at the same
+    /// bucket are reused, so a decode step copies only the newly
+    /// appended rows: O(1) bytes per token regardless of prefix length.
+    /// Faults swapped blocks back in before reading (the "next touch"
+    /// of the swap contract), which is why this takes `&mut self` and
+    /// can fail.
+    pub fn padded_view(&mut self, layer: usize, bucket: usize)
+                       -> Result<(Tensor, Tensor)> {
+        let len = self.lens[layer];
+        assert!(bucket >= len, "bucket {bucket} < len {len}");
+        let h = self.head_dim;
+        let bt = self.pool.block_tokens;
+        let pool = self.pool.clone();
+        let mut inner = pool.lock();
+        inner.touch(self.id);
+        inner.fault_in(self.id,
+                       &self.tables[layer][..len.div_ceil(bt)])?;
+        let g = &mut self.gather[layer];
+        if g.k.is_none() || g.bucket != bucket {
+            let shape = [self.bh, bucket, h];
+            let floats = self.bh * bucket * h;
+            g.k = Some(Tensor::from_f32(vec![0.0; floats], &shape));
+            g.v = Some(Tensor::from_f32(vec![0.0; floats], &shape));
+            g.bucket = bucket;
+            g.valid = 0;
+        }
+        if g.valid < len {
+            let fresh = len - g.valid;
+            if let (Some(kt), Some(vt)) = (g.k.as_mut(), g.v.as_mut()) {
+                let gk = kt.as_f32_mut();
+                let gv = vt.as_f32_mut();
+                let mut t = g.valid;
+                while t < len {
+                    let bi = t / bt;
+                    let r = t % bt;
+                    let n = (bt - r).min(len - t);
+                    let b = inner.block(self.tables[layer][bi]);
+                    ops::copy_seq_rows(gk, bucket, t, &b.k, bt, r,
+                                       self.bh, h, n);
+                    ops::copy_seq_rows(gv, bucket, t, &b.v, bt, r,
+                                       self.bh, h, n);
+                    t += n;
+                }
+            }
+            g.valid = len;
+            self.copied.fetch_add((2 * fresh * self.bh * h * 4) as u64,
+                                  Ordering::Relaxed);
+        }
+        match (&g.k, &g.v) {
+            (Some(kt), Some(vt)) => Ok((kt.clone(), vt.clone())),
+            _ => unreachable!("gather buffers were just built"),
+        }
+    }
+
+    /// Contiguous compat shim: K and V for `layer`, zero-padded to
+    /// `bucket`, freshly gathered on every call — the pre-paged
+    /// behaviour, kept for tests wanting a contiguous view and as the
+    /// bench baseline the paged path is measured against.  Reads
+    /// swapped blocks in place without fault-in accounting.
     pub fn padded(&self, layer: usize, bucket: usize) -> (Tensor, Tensor) {
         let len = self.lens[layer];
         assert!(bucket >= len, "bucket {bucket} < len {len}");
         let h = self.head_dim;
+        let bt = self.pool.block_tokens;
         let mut k = vec![0.0f32; self.bh * bucket * h];
         let mut v = vec![0.0f32; self.bh * bucket * h];
-        for b in 0..self.bh {
-            for t in 0..len {
-                let src = (b * self.cap + t) * h;
-                let dst = (b * bucket + t) * h;
-                k[dst..dst + h].copy_from_slice(&self.k[layer][src..src + h]);
-                v[dst..dst + h].copy_from_slice(&self.v[layer][src..src + h]);
+        {
+            let inner = self.pool.lock();
+            let mut t = 0usize;
+            while t < len {
+                let bi = t / bt;
+                let r = t % bt;
+                let n = (bt - r).min(len - t);
+                let b = inner.block(self.tables[layer][bi]);
+                ops::copy_seq_rows(&mut k, bucket, t, &b.k, bt, r,
+                                   self.bh, h, n);
+                ops::copy_seq_rows(&mut v, bucket, t, &b.v, bt, r,
+                                   self.bh, h, n);
+                t += n;
             }
         }
+        self.copied.fetch_add((2 * len * self.bh * h * 4) as u64,
+                              Ordering::Relaxed);
         (
             Tensor::from_f32(k, &[self.bh, bucket, h]),
             Tensor::from_f32(v, &[self.bh, bucket, h]),
         )
+    }
+
+    /// Publish this cache's current contents (all layers at equal
+    /// length) into the pool's prefix registry under `key`.  The
+    /// registry takes a reference on every block, and this cache counts
+    /// as a user; later caches on the same pool adopt the *same*
+    /// blocks.  Returns `false` (and shares nothing) when the key is
+    /// already taken — a benign race between identical publishers.
+    pub fn publish_prefix(&mut self, key: &str, meta: PrefixMeta)
+                          -> SymResult<bool> {
+        let len = self.lens.first().copied().unwrap_or(0);
+        if self.lens.iter().any(|&l| l != len) {
+            return Err(SymbiosisError::Runtime(anyhow::anyhow!(
+                "publish_prefix mid-step: layer lengths differ"
+            )));
+        }
+        let bt = self.pool.block_tokens;
+        let nblocks = len.div_ceil(bt);
+        let pool = self.pool.clone();
+        let mut inner = pool.lock();
+        if inner.registry.contains_key(key) {
+            return Ok(false);
+        }
+        let layers: Vec<Vec<usize>> = self
+            .tables
+            .iter()
+            .map(|t| t[..nblocks].to_vec())
+            .collect();
+        for layer in &layers {
+            for &id in layer {
+                inner.block_mut(id).refs += 1;
+            }
+        }
+        inner.registry.insert(key.to_string(), PrefixEntry {
+            layers,
+            bh: self.bh,
+            head_dim: self.head_dim,
+            len,
+            users: 1,
+            meta,
+        });
+        self.entries.push(key.to_string());
+        Ok(true)
+    }
+
+    /// Adopt a published prefix into this (still empty) cache: the
+    /// shared blocks are mapped into the block tables with a reference
+    /// each — no device bytes are charged (the publisher's charge
+    /// already covers them), only the adopter's tenant quota.  Returns
+    /// the publisher's [`PrefixMeta`], or `None` when no such key is
+    /// registered on this pool.
+    pub fn adopt_prefix(&mut self, key: &str)
+                        -> SymResult<Option<PrefixMeta>> {
+        if self.tables.iter().any(|t| !t.is_empty()) {
+            return Err(SymbiosisError::Runtime(anyhow::anyhow!(
+                "adopt_prefix on a non-empty KV cache"
+            )));
+        }
+        let pool = self.pool.clone();
+        let mut inner = pool.lock();
+        let (layers, len, meta) = match inner.registry.get(key) {
+            Some(e) => {
+                if e.bh != self.bh
+                    || e.head_dim != self.head_dim
+                    || e.layers.len() != self.tables.len()
+                {
+                    return Err(SymbiosisError::Runtime(anyhow::anyhow!(
+                        "prefix entry '{key}' was published for a \
+                         different model shape"
+                    )));
+                }
+                (e.layers.clone(), e.len, e.meta.clone())
+            }
+            None => return Ok(None),
+        };
+        if let Some(t) = &self.tenant {
+            let blocks: usize = layers.iter().map(Vec::len).sum();
+            t.adjust_kv(0, blocks as u64 * self.block_bytes())?;
+        }
+        for layer in &layers {
+            for &id in layer {
+                inner.block_mut(id).refs += 1;
+            }
+        }
+        if let Some(e) = inner.registry.get_mut(key) {
+            e.users += 1;
+        }
+        self.tables = layers;
+        self.lens = vec![len; self.tables.len()];
+        self.entries.push(key.to_string());
+        Ok(Some(meta))
+    }
+
+    /// Demote this cache: swap every exclusive, device-resident block
+    /// to the registered host device (explicit form of the swap the
+    /// allocator does under pressure — the scheduler's yield path uses
+    /// it to demote background sessions instead of evicting them).
+    /// Returns the number of blocks moved; typed
+    /// [`SymbiosisError::KvSwapOom`] when the host ledger cannot take
+    /// them.
+    pub fn swap_out_all(&mut self) -> SymResult<usize> {
+        let pool = self.pool.clone();
+        let mut inner = pool.lock();
+        inner
+            .swap_cache_blocks(self.id, true)
+            .map_err(SymbiosisError::from)
     }
 
     /// Bytes that must cross PCIe per decode step if the cache is
@@ -286,20 +1094,30 @@ impl KvCache {
         match self.placement {
             KvPlacement::Device => 0,
             KvPlacement::Host => {
-                (2 * self.k.len() * self.bh * self.len() * self.head_dim
-                    * 4) as u64
+                (2 * self.tables.len() * self.bh * self.len()
+                    * self.head_dim * 4) as u64
             }
         }
     }
 }
 
 impl Drop for KvCache {
-    /// Release the device charge and the tenant's KV budget with the
-    /// buffers.
+    /// Release registry entries, block references (freeing whatever
+    /// ledger charge each block carries — device or host), and the
+    /// tenant's KV budget.
     fn drop(&mut self) {
-        if let Some(ledger) = &self.ledger {
-            ledger.release();
+        let pool = self.pool.clone();
+        let mut inner = pool.lock();
+        for key in std::mem::take(&mut self.entries) {
+            inner.release_entry(&key);
         }
+        for table in &self.tables {
+            for &id in table {
+                inner.deref_block(id);
+            }
+        }
+        inner.regs.remove(&self.id);
+        drop(inner);
         if let Some(t) = &self.tenant {
             t.release_kv(self.bytes());
         }
@@ -319,6 +1137,12 @@ mod tests {
         )
     }
 
+    fn small_device(bytes: u64) -> Arc<Mutex<Device>> {
+        let mut d = Device::new("tiny", DeviceKind::GpuFast40);
+        d.ledger = MemoryLedger::new(bytes);
+        Arc::new(Mutex::new(d))
+    }
+
     #[test]
     fn append_and_read_back() {
         let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
@@ -331,8 +1155,8 @@ mod tests {
         assert_eq!(k.shape, vec![2, 16, 4]);
         // first row of first batch-head must be the first appended row
         assert_eq!(&k.as_f32()[0..4], &[100.0, 101.0, 102.0, 103.0]);
-        // padding is zero
-        assert_eq!(k.as_f32()[(0 * 16 + 3) * 4], 0.0);
+        // padding is zero (row 3 of batch-head 0)
+        assert_eq!(k.as_f32()[3 * 4], 0.0);
     }
 
     #[test]
@@ -370,6 +1194,36 @@ mod tests {
     }
 
     #[test]
+    fn padded_view_matches_padded_and_copies_only_the_delta() {
+        let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
+        let row_bytes = (2 * 2 * 4 * 4) as u64; // K+V, bh=2, h=4, f32
+        for step in 0..40 {
+            for layer in 0..2 {
+                let t = kv(1, 2, 4, step as f32 + layer as f32 * 1000.0);
+                c.append(layer, &t, &t).unwrap();
+            }
+            let bucket = (step + 1usize).next_power_of_two().max(16);
+            for layer in 0..2 {
+                let (ke, ve) = c.padded(layer, bucket);
+                c.reset_copied();
+                let (kp, vp) = c.padded_view(layer, bucket).unwrap();
+                assert_eq!(ke.as_f32(), kp.as_f32(),
+                           "paged K diverged at step {step}");
+                assert_eq!(ve.as_f32(), vp.as_f32(),
+                           "paged V diverged at step {step}");
+                // steady state (no bucket change): exactly one fresh
+                // row was gathered, independent of the prefix length
+                if step > 0 && bucket == step.next_power_of_two().max(16)
+                {
+                    assert_eq!(c.copied_bytes(), row_bytes,
+                               "step {step} gathered more than the \
+                                appended row");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn host_offload_charges_transfers() {
         let mut dev = KvCache::new(4, 4, 16, KvPlacement::Device);
         let mut host = KvCache::new(4, 4, 16, KvPlacement::Host);
@@ -390,17 +1244,18 @@ mod tests {
                                                   DeviceKind::GpuFast40)));
         let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
         c.attach_ledger(dev.clone(), "kv:test".into()).unwrap();
-        assert_eq!(dev.lock().unwrap().ledger.tag_bytes("kv:test"), 0);
+        assert_eq!(dev.lock().unwrap().ledger.prefix_bytes("kv:test"), 0);
         c.append(0, &kv(3, 2, 4, 0.0), &kv(3, 2, 4, 0.0)).unwrap();
-        let charged = dev.lock().unwrap().ledger.tag_bytes("kv:test");
+        let charged = dev.lock().unwrap().ledger.prefix_bytes("kv:test");
         assert_eq!(charged, c.bytes());
         assert!(charged > 0);
-        // clear keeps the buffers and therefore the charge
+        // clear keeps the blocks and therefore the charge
         c.clear();
-        assert_eq!(dev.lock().unwrap().ledger.tag_bytes("kv:test"),
+        assert_eq!(dev.lock().unwrap().ledger.prefix_bytes("kv:test"),
                    charged);
         drop(c);
-        assert_eq!(dev.lock().unwrap().ledger.tag_bytes("kv:test"), 0);
+        assert_eq!(dev.lock().unwrap().ledger.prefix_bytes("kv:test"), 0);
+        assert_eq!(dev.lock().unwrap().ledger.used(), 0);
     }
 
     #[test]
@@ -443,9 +1298,7 @@ mod tests {
 
     #[test]
     fn over_committed_append_fails_typed_and_leaves_state_intact() {
-        let mut small = Device::new("tiny", DeviceKind::GpuFast40);
-        small.ledger = MemoryLedger::new(256); // far below one growth
-        let dev = Arc::new(Mutex::new(small));
+        let dev = small_device(256); // far below one block
         let mut c = KvCache::new(2, 2, 4, KvPlacement::Device);
         c.attach_ledger(dev.clone(), "kv:tiny".into()).unwrap();
         let err = c
@@ -464,5 +1317,177 @@ mod tests {
         assert_eq!(c.capacity(), 0);
         assert_eq!(c.layer_len(0), 0);
         assert_eq!(dev.lock().unwrap().ledger.used(), 0);
+    }
+
+    /// Acceptance: 8 caches sharing a 256-token prefix charge the
+    /// device less than 2x one cache's prefix bytes.
+    #[test]
+    fn shared_prefix_charges_the_ledger_once() {
+        let pool = BlockPool::new();
+        let dev = Arc::new(Mutex::new(Device::new("cli",
+                                                  DeviceKind::GpuFast40)));
+        let (layers, bh, h) = (2usize, 2usize, 4usize);
+        let mut publisher = KvCache::new(layers, bh, h,
+                                         KvPlacement::Device);
+        publisher.set_pool(pool.clone()).unwrap();
+        publisher.attach_ledger(dev.clone(), "kv:pub".into()).unwrap();
+        for l in 0..layers {
+            publisher
+                .append(l, &kv(256, bh, h, 1.0), &kv(256, bh, h, 2.0))
+                .unwrap();
+        }
+        let single = dev.lock().unwrap().ledger.used();
+        assert_eq!(single, publisher.bytes());
+        publisher
+            .publish_prefix("sys-prompt", PrefixMeta::default())
+            .unwrap();
+        let mut adopters = Vec::new();
+        for i in 0..7 {
+            let mut a = KvCache::new(layers, bh, h, KvPlacement::Device);
+            a.set_pool(pool.clone()).unwrap();
+            a.attach_ledger(dev.clone(), format!("kv:a{i}")).unwrap();
+            let meta = a.adopt_prefix("sys-prompt").unwrap();
+            assert!(meta.is_some());
+            assert_eq!(a.len(), 256);
+            // adopted rows read back identically to the publisher's
+            let (kp, _) = publisher.padded(0, 256);
+            let (ka, _) = a.padded(0, 256);
+            assert_eq!(kp.as_f32(), ka.as_f32());
+            // each adopter decodes a few private tokens of its own
+            for l in 0..layers {
+                a.append(l, &kv(1, bh, h, 900.0 + i as f32),
+                         &kv(1, bh, h, 901.0)).unwrap();
+            }
+            adopters.push(a);
+        }
+        let total = dev.lock().unwrap().ledger.used();
+        assert!(total < 2 * single,
+                "8 sessions charged {total} B, expected < 2x one \
+                 session's {single} B");
+        // the whole cohort dropping returns the ledger to zero
+        drop(adopters);
+        drop(publisher);
+        assert_eq!(dev.lock().unwrap().ledger.used(), 0);
+        assert_eq!(pool.live_blocks(), 0);
+    }
+
+    /// A write into a shared partial block forks only that block: the
+    /// publisher's view is untouched and the device is charged for
+    /// exactly one extra block.
+    #[test]
+    fn cow_fork_isolates_writers() {
+        let pool = BlockPool::new();
+        let dev = Arc::new(Mutex::new(Device::new("cli",
+                                                  DeviceKind::GpuFast40)));
+        let mut p = KvCache::new(1, 1, 2, KvPlacement::Device);
+        p.set_pool(pool.clone()).unwrap();
+        p.attach_ledger(dev.clone(), "kv:pub".into()).unwrap();
+        // 8 tokens: one partial block
+        p.append(0, &kv(8, 1, 2, 10.0), &kv(8, 1, 2, 20.0)).unwrap();
+        p.publish_prefix("p", PrefixMeta::default()).unwrap();
+        let before = dev.lock().unwrap().ledger.used();
+        let mut a = KvCache::new(1, 1, 2, KvPlacement::Device);
+        a.set_pool(pool.clone()).unwrap();
+        a.attach_ledger(dev.clone(), "kv:a".into()).unwrap();
+        a.adopt_prefix("p").unwrap();
+        assert_eq!(dev.lock().unwrap().ledger.used(), before,
+                   "adoption itself charges nothing");
+        // the adopter's 9th token lands in the shared partial block
+        a.append(0, &kv(1, 1, 2, 99.0), &kv(1, 1, 2, 98.0)).unwrap();
+        assert_eq!(dev.lock().unwrap().ledger.used(),
+                   before + a.block_bytes(),
+                   "the fork charges exactly one block");
+        let (ka, _) = a.padded(0, 16);
+        let (kp, _) = p.padded(0, 16);
+        assert_eq!(ka.as_f32()[8 * 2], 99.0);
+        assert_eq!(kp.as_f32()[8 * 2], 0.0,
+                   "publisher still sees zero padding at row 8");
+        assert_eq!(&ka.as_f32()[..8 * 2], &kp.as_f32()[..8 * 2],
+                   "shared rows stayed identical");
+    }
+
+    /// Acceptance: an append that would fire `KvCacheOom` instead swaps
+    /// a background cache's cold blocks to the host; the background
+    /// cache faults them back in later with its data intact.
+    #[test]
+    fn oom_append_swaps_background_blocks_and_faults_back() {
+        let pool = BlockPool::new();
+        // room for exactly 3 blocks of a (L=1, bh=2, h=4) cache
+        let bb = (2 * 2 * 16 * 4 * 4) as u64;
+        let dev = small_device(3 * bb);
+        let host = Arc::new(Mutex::new(Device::new("host",
+                                                   DeviceKind::Cpu)));
+        let mut bg = KvCache::new(1, 2, 4, KvPlacement::Device);
+        bg.set_pool(pool.clone()).unwrap();
+        bg.attach_ledger(dev.clone(), "kv:bg".into()).unwrap();
+        bg.attach_swap(host.clone());
+        bg.set_background(true);
+        bg.append(0, &kv(32, 2, 4, 7.0), &kv(32, 2, 4, 8.0)).unwrap();
+        let (bg_k, bg_v) = bg.padded(0, 32);
+        let mut fg = KvCache::new(1, 2, 4, KvPlacement::Device);
+        fg.set_pool(pool.clone()).unwrap();
+        fg.attach_ledger(dev.clone(), "kv:fg".into()).unwrap();
+        // 32 fg tokens need 2 blocks; only 1 fits next to bg's 2 —
+        // without swap this is the old KvCacheOom
+        fg.append(0, &kv(32, 2, 4, 50.0), &kv(32, 2, 4, 60.0)).unwrap();
+        let stats = pool.swap_stats();
+        assert_eq!(stats.swap_outs, 2, "bg's two blocks moved to host");
+        assert_eq!(stats.swapped_blocks, 2);
+        assert_eq!(host.lock().unwrap().ledger.used(), 2 * bb);
+        assert_eq!(dev.lock().unwrap().ledger.used(), 2 * bb);
+        // while the device is still full, bg cannot fault back in and
+        // says so with a typed error (fg is not an eligible victim)
+        match bg.padded_view(0, 32) {
+            Err(e) => match SymbiosisError::from(e) {
+                SymbiosisError::KvFaultInOom { .. } => {}
+                other => panic!("expected KvFaultInOom, got {other}"),
+            },
+            Ok(_) => panic!("fault-in succeeded on a full device"),
+        }
+        // fg finishing frees the device; bg's next touch faults in
+        drop(fg);
+        let (k2, v2) = bg.padded_view(0, 32).unwrap();
+        assert_eq!(bg_k.as_f32(), k2.as_f32(),
+                   "K survived the swap round-trip");
+        assert_eq!(bg_v.as_f32(), v2.as_f32(),
+                   "V survived the swap round-trip");
+        let stats = pool.swap_stats();
+        assert_eq!(stats.fault_ins, 2);
+        assert_eq!(stats.swapped_blocks, 0);
+        assert_eq!(host.lock().unwrap().ledger.used(), 0);
+        assert_eq!(dev.lock().unwrap().ledger.used(), 2 * bb);
+    }
+
+    /// Explicit demotion (the scheduler's yield path) moves every
+    /// exclusive block to the host; a full host is a typed KvSwapOom.
+    #[test]
+    fn explicit_swap_out_and_full_host_error() {
+        let pool = BlockPool::new();
+        let bb = (2 * 2 * 16 * 4 * 4) as u64;
+        let dev = small_device(4 * bb);
+        let host = small_device(bb); // holds exactly one block
+        let mut c = KvCache::new(1, 2, 4, KvPlacement::Device);
+        c.set_pool(pool.clone()).unwrap();
+        c.attach_ledger(dev.clone(), "kv:c".into()).unwrap();
+        c.attach_swap(host.clone());
+        c.append(0, &kv(32, 2, 4, 1.0), &kv(32, 2, 4, 2.0)).unwrap();
+        match c.swap_out_all() {
+            Err(SymbiosisError::KvSwapOom { capacity_bytes, .. }) => {
+                assert_eq!(capacity_bytes, bb);
+            }
+            other => panic!("expected KvSwapOom, got {other:?}"),
+        }
+        // one block did move before the host filled; demoting a cache
+        // with a roomy host moves the rest
+        host.lock().unwrap().ledger = MemoryLedger::new(16 * bb);
+        // the partial first swap left its charge on the old host ledger
+        // object, which was replaced above — re-demote moves the rest
+        let moved = c.swap_out_all().unwrap();
+        assert!(moved >= 1);
+        assert_eq!(pool.swap_stats().swapped_blocks, 2);
+        // data still reads back after fault-in
+        let (k, _) = c.padded_view(0, 32).unwrap();
+        assert_eq!(k.as_f32()[0], 1.0);
+        assert_eq!(pool.swap_stats().swapped_blocks, 0);
     }
 }

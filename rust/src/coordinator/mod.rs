@@ -114,7 +114,7 @@ use anyhow::Result;
 
 use crate::config::ModelConfig;
 use crate::coordinator::privacy::PrivacyCtx;
-use crate::device::{Device, DeviceKind};
+use crate::device::Device;
 use crate::runtime::Engine;
 use crate::transport::LinkKind;
 
@@ -129,7 +129,8 @@ pub use client::{ClientCore, GenerationConfig, InferenceSession,
                  TrainOutcome, UrgencyPolicy};
 pub use faults::{FaultAction, FaultPlan, FaultRule};
 pub use fleet::{ExecutorFleet, FleetBarrier, FleetStats, ShardLoad};
-pub use kv_cache::{KvLedger, KvPlacement};
+pub use kv_cache::{BlockPool, KvCache, KvPlacement, KvSwapStats,
+                   PrefixMeta};
 pub use placement::Placement;
 pub use proto::{LayerId, OpKind, Urgency};
 pub use scheduler::{HandleStatus, ServingBuilder, ServingEngine,
@@ -155,8 +156,15 @@ pub struct Deployment {
     /// session's append with a typed
     /// [`SymbiosisError::KvCacheOom`], not just the analytic model.
     pub client_device: Arc<Mutex<Device>>,
-    /// Host DRAM device: `KvPlacement::Host` caches charge here.
+    /// Host DRAM device: `KvPlacement::Host` caches charge here, and
+    /// device-resident caches swap cold background blocks here under
+    /// memory pressure.
     pub host_device: Arc<Mutex<Device>>,
+    /// Shared paged-KV block pool: every session's cache draws
+    /// fixed-size blocks from it, which is what makes prefix sharing
+    /// (one charge for N sessions' common prompt) and swap victim
+    /// selection fleet-wide decisions.
+    pub kv_pool: Arc<BlockPool>,
     next_client_id: std::sync::atomic::AtomicUsize,
     /// Active fault-injection plan; applied to every client core built
     /// *after* [`Deployment::inject_faults`].  Interior mutability so
@@ -197,7 +205,7 @@ impl Deployment {
         let client_device = Arc::new(Mutex::new(Device::new(
             "clients", placement.client_device())));
         let host_device = Arc::new(Mutex::new(Device::new(
-            "host", DeviceKind::Cpu)));
+            "host", placement.host_device())));
         Ok(Deployment {
             cfg: cfg.clone(),
             engine,
@@ -206,6 +214,7 @@ impl Deployment {
             placement,
             client_device,
             host_device,
+            kv_pool: BlockPool::new(),
             next_client_id: std::sync::atomic::AtomicUsize::new(0),
             fault_plan: Mutex::new(None),
         })
@@ -336,8 +345,14 @@ impl Deployment {
     }
 
     /// Stop the fleet (draining shards in layer order) and return its
-    /// statistics — the merged view plus per-shard detail.
+    /// statistics — the merged view plus per-shard detail, stamped
+    /// with the KV block pool's swap activity.
     pub fn shutdown(self) -> FleetStats {
-        self.executor.shutdown()
+        let swap = self.kv_pool.swap_stats();
+        let mut stats = self.executor.shutdown();
+        stats.kv_swap_outs = swap.swap_outs;
+        stats.kv_fault_ins = swap.fault_ins;
+        stats.kv_swapped_blocks = swap.swapped_blocks;
+        stats
     }
 }

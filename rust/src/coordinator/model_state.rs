@@ -10,6 +10,8 @@
 //! tensor views, so the cut moves no bytes — and its `Device` ledger is
 //! charged with exactly that resident slice.
 
+#![deny(clippy::unwrap_used)]
+
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -281,6 +283,7 @@ pub fn load_split(cfg: &ModelConfig, artifact_dir: &Path)
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::config::SYM_TINY;

@@ -8,6 +8,8 @@
 //! paper's placement figures (13-20) on the paper-scale models that
 //! cannot execute here.
 
+#![deny(clippy::unwrap_used)]
+
 use crate::config::ModelConfig;
 use crate::device::{Device, DeviceKind};
 use crate::transport::LinkKind;
@@ -59,6 +61,15 @@ impl Placement {
             Placement::CpuClient => DeviceKind::Cpu,
             _ => DeviceKind::GpuA100_80,
         }
+    }
+
+    /// Device kind backing host DRAM — where `KvPlacement::Host`
+    /// caches live and where the paged KV pool swaps cold background
+    /// blocks under device pressure.  The host is the CPU under every
+    /// placement shape; the accessor exists so the deployment charges
+    /// it through the placement like every other device decision.
+    pub fn host_device(&self) -> DeviceKind {
+        DeviceKind::Cpu
     }
 
     pub fn shards(&self) -> usize {

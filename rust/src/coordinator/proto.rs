@@ -15,6 +15,8 @@
 //! sent over one channel arrive in send order; responses come whenever
 //! the owning shard flushes the batch that served them.
 
+#![deny(clippy::unwrap_used)]
+
 use std::sync::mpsc::Sender;
 
 use crate::tensor::Tensor;

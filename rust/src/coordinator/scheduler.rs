@@ -258,6 +258,12 @@ struct Slot {
     cur: Option<(usize, usize)>,
     handle: SessionHandle,
     background: bool,
+    /// Set when the slot was demoted under pressure (KV parked on the
+    /// host, excluded from the wavefront).  Sticky while the pressure
+    /// lasts: a still-yielded background slot is the eviction candidate
+    /// on the next strike, which bounds demote→resume churn.  Cleared
+    /// when the pressure passes.
+    yielded: bool,
     submitted: Instant,
     last_token_at: Option<Instant>,
     /// Streaming cursor into `sess.generated`, per sequence.
@@ -288,6 +294,11 @@ pub struct ServingReport {
     pub admitted: u64,
     pub denied: u64,
     pub evicted: u64,
+    /// Background sessions demoted under pressure: their KV blocks
+    /// swapped to the host and their slot sat out the wavefront, so a
+    /// later admission could take the device memory without the
+    /// session losing its work (it faults back in when resumed).
+    pub demoted: u64,
     pub completed: u64,
     pub failed: u64,
     pub tokens_emitted: u64,
@@ -305,10 +316,11 @@ impl std::fmt::Display for ServingReport {
         writeln!(
             f,
             "serving: {} submitted / {} admitted / {} completed \
-             ({} denied, {} evicted, {} failed) over {} step(s), \
-             peak {} active",
+             ({} denied, {} demoted, {} evicted, {} failed) over \
+             {} step(s), peak {} active",
             self.submitted, self.admitted, self.completed, self.denied,
-            self.evicted, self.failed, self.steps, self.max_active)?;
+            self.demoted, self.evicted, self.failed, self.steps,
+            self.max_active)?;
         writeln!(
             f,
             "  ttft  p50 {:.3} ms  p90 {:.3} ms  p99 {:.3} ms  (n={})",
@@ -478,15 +490,43 @@ impl<'d> ServingEngine<'d> {
         let overloaded = loads.iter().any(|l| l.overloaded());
 
         // 1. Background yields under pressure: a queued foreground
-        // request with no free slot (or an overloaded fleet) bumps the
-        // first background slot.
+        // request with no free slot (or an overloaded fleet) bumps a
+        // background slot — in two strikes.  First strike *demotes*:
+        // the session's KV blocks swap to the host and the slot sits
+        // out the wavefront, so the foreground request gets the device
+        // memory while the background session keeps its work (blocks
+        // fault back in when it resumes).  Second strike — pressure
+        // still on and every background slot already yielded — evicts.
         let fg_waiting =
             self.queue.iter().any(|q| !q.req.is_background());
         let free = self.slots.iter().filter(|s| s.is_none()).count();
         if fg_waiting && (free == 0 || overloaded) {
-            if let Some(i) = self.slots.iter().position(
-                |s| s.as_ref().is_some_and(|s| s.background)) {
-                self.evict(i);
+            let fresh = self.slots.iter().position(
+                |s| s.as_ref()
+                    .is_some_and(|s| s.background && !s.yielded));
+            match fresh {
+                Some(i) => {
+                    let slot = self.slot_mut(i);
+                    slot.yielded = true;
+                    // A cache with nothing swappable (host-placed, or
+                    // the host ledger is full) just parks; the sticky
+                    // flag still makes it next in line to evict.
+                    if matches!(slot.sess.demote_kv(), Ok(n) if n > 0) {
+                        self.metrics.demoted += 1;
+                    }
+                }
+                None => {
+                    if let Some(i) = self.slots.iter().position(
+                        |s| s.as_ref().is_some_and(|s| s.background)) {
+                        self.evict(i);
+                    }
+                }
+            }
+        } else {
+            // Pressure passed: resume parked background sessions (their
+            // blocks fault back in on the next touch).
+            for slot in self.slots.iter_mut().flatten() {
+                slot.yielded = false;
             }
         }
 
@@ -655,7 +695,13 @@ impl<'d> ServingEngine<'d> {
         let mut bg = Vec::new();
         for off in 0..n {
             let i = occupied[(rot + off) % n];
-            if self.slot_ref(i).background {
+            let s = self.slot_ref(i);
+            if s.yielded {
+                // Demoted under pressure: parked off the wavefront
+                // (its KV is on the host) until the pressure passes.
+                continue;
+            }
+            if s.background {
                 bg.push(i);
             } else {
                 fg.push(i);
@@ -756,6 +802,7 @@ impl<'d> ServingEngine<'d> {
             cur: None,
             handle,
             background,
+            yielded: false,
             submitted,
             last_token_at: None,
         });

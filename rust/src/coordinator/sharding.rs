@@ -14,6 +14,8 @@
 //! yields the contiguous block partition that `coordinator::fleet`
 //! spawns one shard executor per range for.
 
+#![deny(clippy::unwrap_used)]
+
 use anyhow::Result;
 
 use crate::config::ModelConfig;

@@ -37,6 +37,8 @@
 //! | `QuotaExceeded` | reject (until the tenant frees) | per-tenant in-flight/KV budget exhausted by the tenant's *own* usage |
 //! | `WorkShed` | defer (re-submit later) | background work shed during a brown-out; interactive traffic still proceeds |
 //! | `KvCacheOom` | retry (after eviction) | co-tenant pressure; frees up when a tenant leaves |
+//! | `KvSwapOom` | retry (after host frees) | host ledger full — oversubscription exhausted both memory tiers |
+//! | `KvFaultInOom` | retry (after device frees) | swapped blocks cannot return to the device; a co-tenant must finish or evict first |
 //! | `ShardOom` | 500 | fleet cannot hold the model; operator must re-plan |
 //! | `Runtime` | 500 | engine/artifact/channel fault below the API |
 //!
@@ -150,6 +152,18 @@ pub enum SymbiosisError {
     /// the multi-tenant case `need_bytes` alone is typically well below
     /// `capacity_bytes`.
     KvCacheOom { need_bytes: u64, used_bytes: u64, capacity_bytes: u64 },
+    /// Swapping a cold KV block to the host device failed: the host
+    /// ledger is itself full.  Oversubscription has exhausted both
+    /// memory tiers — only a session finishing (on either tier) frees
+    /// room.  `used_bytes`/`capacity_bytes` describe the *host* ledger.
+    KvSwapOom { need_bytes: u64, used_bytes: u64, capacity_bytes: u64 },
+    /// A swapped-out KV block could not be faulted back onto the client
+    /// device: the device is full and no further background blocks are
+    /// eligible to swap out.  The session's data is intact on the host;
+    /// the touch that triggered the fault-in is safe to retry once a
+    /// co-tenant frees device memory.  `used_bytes`/`capacity_bytes`
+    /// describe the *device* ledger.
+    KvFaultInOom { need_bytes: u64, used_bytes: u64, capacity_bytes: u64 },
     /// Anything below the API surface: engine execution, executor
     /// channel loss, artifact I/O.
     Runtime(anyhow::Error),
@@ -272,6 +286,28 @@ impl fmt::Display for SymbiosisError {
                            offload the cache to the host, shorten the \
                            context, or evict a tenant")
             }
+            SymbiosisError::KvSwapOom {
+                need_bytes,
+                used_bytes,
+                capacity_bytes,
+            } => {
+                write!(f, "cannot swap a {need_bytes} B KV block to the \
+                           host: the host ledger already holds \
+                           {used_bytes} B of {capacity_bytes} B — both \
+                           memory tiers are full; a session must finish \
+                           before more KV can be oversubscribed")
+            }
+            SymbiosisError::KvFaultInOom {
+                need_bytes,
+                used_bytes,
+                capacity_bytes,
+            } => {
+                write!(f, "cannot fault a swapped {need_bytes} B KV \
+                           block back in: the device holds {used_bytes} \
+                           B of {capacity_bytes} B and no background \
+                           blocks are left to swap out — retry after a \
+                           co-tenant frees device memory")
+            }
             SymbiosisError::Runtime(e) => write!(f, "{e:#}"),
         }
     }
@@ -343,6 +379,26 @@ mod tests {
         assert!(msg.contains("512"));
         assert!(msg.contains("768"));
         assert!(msg.contains("1024"));
+    }
+
+    #[test]
+    fn swap_errors_name_the_full_tier() {
+        let e = SymbiosisError::KvSwapOom {
+            need_bytes: 4096,
+            used_bytes: 900,
+            capacity_bytes: 1024,
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("4096"));
+        assert!(msg.contains("host ledger"));
+        let e = SymbiosisError::KvFaultInOom {
+            need_bytes: 4096,
+            used_bytes: 900,
+            capacity_bytes: 1024,
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("fault"));
+        assert!(msg.contains("retry"));
     }
 
     #[test]

@@ -47,6 +47,24 @@ pub fn add_scaled(a: &mut Tensor, b: &Tensor, s: f32) {
     }
 }
 
+/// Copy `n` token rows between two `(BH, ·, H)` row-major f32 buffers
+/// whose sequence strides differ: source rows start at token `s0` with
+/// per-batch-head stride `s_tokens`, destination rows at `d0` with
+/// stride `d_tokens`.  This is the single row-movement primitive of the
+/// paged KV cache (block → gather buffer, append input → block), so the
+/// cache's bytes-copied accounting maps 1:1 onto calls to this helper.
+#[allow(clippy::too_many_arguments)] // two (buffer, stride, offset) triples
+pub fn copy_seq_rows(dst: &mut [f32], d_tokens: usize, d0: usize,
+                     src: &[f32], s_tokens: usize, s0: usize,
+                     bh: usize, h: usize, n: usize) {
+    debug_assert!(d0 + n <= d_tokens && s0 + n <= s_tokens);
+    for b in 0..bh {
+        let d = (b * d_tokens + d0) * h;
+        let s = (b * s_tokens + s0) * h;
+        dst[d..d + n * h].copy_from_slice(&src[s..s + n * h]);
+    }
+}
+
 /// RMSNorm over the last axis of a (T, D) tensor with a (D,) gain.
 pub fn rmsnorm(x: &Tensor, gain: &Tensor) -> Tensor {
     let (t, d) = (x.shape[0], x.shape[1]);

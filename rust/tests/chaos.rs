@@ -313,6 +313,94 @@ fn watchdog_respawns_a_crashed_shard() {
     assert!(stats.requests_served > 0);
 }
 
+/// Swap-under-fault cell: a foreground generation swaps a background
+/// session's KV blocks to the host ledger; the LM-head shard is then
+/// crashed and respawned *while those blocks sit on the host*.  The
+/// background session must fault its blocks back in against the
+/// respawned fleet and finish token-identical to a fault-free,
+/// unconstrained run — and the swap traffic must reach `FleetStats`.
+#[test]
+fn swapped_kv_survives_shard_crash_and_respawn() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use symbiosis::coordinator::proto::Urgency;
+    use symbiosis::coordinator::UrgencyPolicy;
+    use symbiosis::device::MemoryLedger;
+
+    // fault-free, unconstrained reference tokens
+    let golden = {
+        let dep = deploy(2);
+        let out = generate(&dep);
+        dep.shutdown();
+        out
+    };
+
+    for &seed in &chaos_seeds() {
+        let dep = deploy(2);
+        // sym-tiny 16-token block: 2 (K+V) * 4 bh * 16 t * 16 h * 4 B.
+        // The foreground run ends at 17 tokens = 8 blocks; 9 leave one
+        // spare so its growth must displace the background's 4 blocks.
+        let block: u64 = 2 * 4 * 16 * 16 * 4;
+        dep.client_device.lock().unwrap().ledger =
+            MemoryLedger::new(9 * block);
+
+        let mut bg = dep
+            .session()
+            .request_timeout(CHAOS_TIMEOUT)
+            .retry(chaos_retry())
+            .urgency(UrgencyPolicy {
+                prefill: Urgency::Background,
+                decode: Urgency::Background,
+            })
+            .build()
+            .unwrap();
+        bg.prefill(&prompt(12)).unwrap();
+
+        let mut fg = dep
+            .session()
+            .request_timeout(CHAOS_TIMEOUT)
+            .retry(chaos_retry())
+            .build()
+            .unwrap();
+        let fg_out = fg
+            .generate(&prompt(12), &GenerationConfig::greedy(6))
+            .unwrap();
+        assert_eq!(fg_out, golden,
+                   "seed={seed}: foreground diverged under KV pressure");
+        assert!(dep.kv_pool.swap_stats().swap_outs > 0,
+                "seed={seed}: foreground growth swapped nothing");
+
+        // crash the LM-head owner while bg's blocks sit on the host
+        dep.executor
+            .sender_for(LayerId::LmHead)
+            .send(ExecMsg::Crash)
+            .unwrap();
+        let t0 = Instant::now();
+        while !(dep.executor.is_alive(1) && dep.executor.respawns() >= 1)
+        {
+            assert!(t0.elapsed() < Duration::from_secs(10),
+                    "seed={seed}: watchdog never respawned the shard");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        drop(fg);
+        for _ in 1..6 {
+            bg.decode_step().unwrap();
+        }
+        assert_eq!(bg.generated[0], golden[0],
+                   "seed={seed}: background tokens corrupted across \
+                    swap + crash + respawn");
+        drop(bg);
+        let stats = dep.shutdown();
+        assert!(stats.kv_swap_outs > 0,
+                "seed={seed}: swap-outs missing from FleetStats");
+        assert!(stats.kv_fault_ins > 0,
+                "seed={seed}: fault-ins missing from FleetStats");
+    }
+}
+
 /// Rolling restart: respawning a *live* shard under a session built
 /// before the respawn.  The endpoint swap migrates the session without
 /// rebuilding its table; retired-generation statistics stay in the

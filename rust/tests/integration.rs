@@ -14,9 +14,11 @@ use symbiosis::config::SYM_TINY;
 use symbiosis::coordinator::adapter::LoraTargets;
 use symbiosis::coordinator::kv_cache::KvPlacement;
 use symbiosis::coordinator::privacy::{NoiseGen, PrivacyCtx};
-use symbiosis::coordinator::proto::LayerId;
+use symbiosis::coordinator::proto::{LayerId, Urgency};
 use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
-                             InferenceSession, Placement, Trainer};
+                             InferenceSession, Placement, Trainer,
+                             UrgencyPolicy};
+use symbiosis::device::MemoryLedger;
 use symbiosis::tensor::{container, Tensor};
 
 fn artifact_dir() -> PathBuf {
@@ -560,4 +562,171 @@ fn sym_small_training_matches_jax() {
     assert!(max_diff < 5e-4, "grad diff {max_diff}");
     drop(tr);
     dep.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV cache: prefix sharing and ledger-backed swap (PR 9)
+// ---------------------------------------------------------------------------
+
+fn kv_charged(dep: &Deployment) -> u64 {
+    dep.client_device.lock().unwrap().ledger.prefix_bytes("kv:")
+}
+
+/// A session adopting a published KV prefix must generate exactly the
+/// tokens a session that prefilled the full prompt generates — and the
+/// adoption itself must charge the device ledger nothing (the
+/// publisher's blocks are mapped, not copied).
+#[test]
+fn adopted_kv_prefix_generates_identically_and_charges_nothing() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let prompt: Vec<i32> = g["gen_prompt"].as_i32().to_vec();
+    let (prefix, suffix) = prompt.split_at(prompt.len() / 2);
+    let dep = start(BatchPolicy::NoLockstep);
+
+    // baseline: one session pays the full prompt
+    let mut base = dep.session().build().unwrap();
+    base.prefill(&prompt).unwrap();
+    for _ in 1..8 {
+        base.decode_step().unwrap();
+    }
+    let want = base.generated[0].clone();
+    drop(base);
+
+    // publisher prefills only the shared prefix and publishes it
+    let mut publ = dep.session().build().unwrap();
+    publ.prefill(prefix).unwrap();
+    assert!(publ.publish_kv_prefix("sys", prefix).unwrap(),
+            "first publish must take the key");
+    let before = kv_charged(&dep);
+    assert!(before > 0, "publisher's prefix must be charged");
+
+    // two adopters map the same blocks; each pays only its suffix
+    let mut adopters = Vec::new();
+    for _ in 0..2 {
+        let mut s = dep
+            .session()
+            .adopt_kv_prefix("sys")
+            .build()
+            .unwrap();
+        assert_eq!(kv_charged(&dep), before,
+                   "adoption itself must not charge the device");
+        s.prefill_incremental(suffix).unwrap();
+        for _ in 1..8 {
+            s.decode_step().unwrap();
+        }
+        assert_eq!(s.generated[0], want,
+                   "adopter diverged from full-prompt prefill");
+        adopters.push(s);
+    }
+    drop(adopters);
+    drop(publ);
+    dep.shutdown();
+}
+
+/// Acceptance: 8 sessions sharing a 256-token prefix charge the device
+/// ledger less than 2x what one session charges.
+#[test]
+fn eight_sessions_sharing_a_long_prefix_charge_less_than_two() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = start(BatchPolicy::NoLockstep);
+    let prefix: Vec<i32> =
+        (0..256).map(|i| ((i * 7 + 3) % 256) as i32).collect();
+    let suffix: Vec<i32> = (0..16).map(|i| (i % 256) as i32).collect();
+
+    let mut publ = dep.session().build().unwrap();
+    publ.prefill(&prefix).unwrap();
+    assert!(publ.publish_kv_prefix("doc", &prefix).unwrap());
+    let one = kv_charged(&dep);
+
+    let mut sessions = Vec::new();
+    for _ in 0..7 {
+        let mut s = dep
+            .session()
+            .adopt_kv_prefix("doc")
+            .build()
+            .unwrap();
+        s.prefill_incremental(&suffix).unwrap();
+        sessions.push(s);
+    }
+    let total = kv_charged(&dep);
+    assert!(total < 2 * one,
+            "8 sessions over a shared 256-token prefix charged {total} \
+             bytes, >= 2x one session's {one}");
+    drop(sessions);
+    drop(publ);
+    assert_eq!(kv_charged(&dep), 0, "drained sessions left KV charged");
+    dep.shutdown();
+}
+
+/// Acceptance: an append that would fire `KvCacheOom` instead swaps a
+/// background session's cold blocks to the host; both sessions finish
+/// token-identically to an unconstrained run, and the swap shows up in
+/// `FleetStats`.
+#[test]
+fn kv_swap_rescues_foreground_and_counts_in_fleet_stats() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = golden();
+    let prompt: Vec<i32> = g["gen_prompt"].as_i32().to_vec();
+
+    // reference: unconstrained device
+    let dep0 = start(BatchPolicy::NoLockstep);
+    let mut r = dep0.session().build().unwrap();
+    r.prefill(&prompt).unwrap();
+    for _ in 1..8 {
+        r.decode_step().unwrap();
+    }
+    let want = r.generated[0].clone();
+    drop(r);
+    dep0.shutdown();
+
+    // constrained device: room for one session's blocks plus one more
+    // block — the second prefill must displace the background session
+    let dep = start(BatchPolicy::NoLockstep);
+    let block: u64 = 2 * 4 * 16 * 16 * 4; // bh=4, 16 tokens, h=16, f32
+    dep.client_device.lock().unwrap().ledger =
+        MemoryLedger::new(5 * block);
+
+    let mut bg = dep
+        .session()
+        .urgency(UrgencyPolicy {
+            prefill: Urgency::Background,
+            decode: Urgency::Background,
+        })
+        .build()
+        .unwrap();
+    bg.prefill(&prompt).unwrap(); // one block per layer: 4 blocks
+
+    let mut fg = dep.session().build().unwrap();
+    fg.prefill(&prompt).unwrap(); // needs 4 blocks, only 1 is free
+    for _ in 1..8 {
+        fg.decode_step().unwrap();
+    }
+    assert_eq!(fg.generated[0], want, "foreground diverged under swap");
+    assert!(dep.kv_pool.swap_stats().swap_outs > 0,
+            "foreground prefill did not swap background blocks");
+
+    // the background session faults its blocks back in and finishes
+    // with identical tokens
+    drop(fg);
+    for _ in 1..8 {
+        bg.decode_step().unwrap();
+    }
+    assert_eq!(bg.generated[0], want,
+               "background tokens corrupted by swap round-trip");
+    drop(bg);
+    let stats = dep.shutdown();
+    assert!(stats.kv_swap_outs > 0, "swap-outs missing from FleetStats");
+    assert!(stats.kv_fault_ins > 0, "fault-ins missing from FleetStats");
+    assert_eq!(stats.kv_swapped_blocks, 0,
+               "all swapped blocks should have faulted back or freed");
 }

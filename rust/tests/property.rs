@@ -5,10 +5,15 @@
 //! splitmix64 RNG drives randomized cases; failures print the case seed
 //! so they can be replayed exactly.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use symbiosis::config::{bucket_for, SEQ_BUCKETS, TOKEN_BUCKETS};
-use symbiosis::coordinator::kv_cache::{KvCache, KvPlacement};
+use symbiosis::coordinator::kv_cache::{
+    BlockPool, KvCache, KvPlacement, PrefixMeta,
+};
 use symbiosis::coordinator::optimizer::Adam;
-use symbiosis::device::MemoryLedger;
+use symbiosis::device::{Device, DeviceKind, MemoryLedger};
 use symbiosis::tensor::{ops, Tensor};
 
 // ---------------------------------------------------------------------
@@ -157,6 +162,292 @@ fn prop_kv_cache_matches_naive_reference() {
                 }
             }
         }
+    });
+}
+
+// ---------------------------------------------------------------------
+// paged block allocator vs reference refcount model
+// ---------------------------------------------------------------------
+
+/// Reference model of the block pool: model block ids with refcounts,
+/// mirrored through the same alloc / CoW-fork / publish / adopt /
+/// release rules the real allocator implements.  After every operation
+/// the pool's live-block count and ledger charges must match the model
+/// exactly — a leak or double-free in either direction diverges.
+struct BlockModel {
+    refs: HashMap<u64, usize>,
+    next: u64,
+    registry: HashMap<String, ModelEntry>,
+}
+
+struct ModelEntry {
+    layers: Vec<Vec<u64>>,
+    users: usize,
+    len: usize,
+}
+
+/// Model mirror of one cache's block tables.
+struct CacheModel {
+    tables: Vec<Vec<u64>>,
+    len: usize,
+    entries: Vec<String>,
+}
+
+impl BlockModel {
+    fn alloc(&mut self) -> u64 {
+        self.next += 1;
+        self.refs.insert(self.next, 1);
+        self.next
+    }
+
+    fn live(&self) -> usize {
+        self.refs.len()
+    }
+
+    fn deref(&mut self, id: u64) {
+        let r = self.refs.get_mut(&id).expect("model double-free");
+        *r -= 1;
+        if *r == 0 {
+            self.refs.remove(&id);
+        }
+    }
+
+    fn release_entry(&mut self, key: &str) {
+        let drained = {
+            let e = self.registry.get_mut(key).expect("unknown entry");
+            e.users -= 1;
+            e.users == 0
+        };
+        if drained {
+            let e = self.registry.remove(key).expect("entry vanished");
+            for layer in e.layers {
+                for id in layer {
+                    self.deref(id);
+                }
+            }
+        }
+    }
+}
+
+/// Mirror of `KvCache::append`: for every block index the write touches,
+/// fork it when shared (refs > 1), allocate it when missing.
+fn model_append(bm: &mut BlockModel, cm: &mut CacheModel, t: usize,
+                bt: usize) {
+    let old = cm.len;
+    let need = (old + t).div_ceil(bt);
+    for table in &mut cm.tables {
+        let have = table.len();
+        for bi in old / bt..need {
+            if bi < have {
+                let id = table[bi];
+                if bm.refs[&id] > 1 {
+                    bm.deref(id);
+                    table[bi] = bm.alloc();
+                }
+            } else {
+                table.push(bm.alloc());
+            }
+        }
+    }
+    cm.len += t;
+}
+
+/// Mirror of `KvCache::publish_prefix`.
+fn model_publish(bm: &mut BlockModel, cm: &mut CacheModel, key: &str,
+                 bt: usize) -> bool {
+    if bm.registry.contains_key(key) {
+        return false;
+    }
+    let nblocks = cm.len.div_ceil(bt);
+    let layers: Vec<Vec<u64>> =
+        cm.tables.iter().map(|t| t[..nblocks].to_vec()).collect();
+    for layer in &layers {
+        for &id in layer {
+            *bm.refs.get_mut(&id).expect("published unknown block") += 1;
+        }
+    }
+    bm.registry.insert(
+        key.to_string(),
+        ModelEntry { layers, users: 1, len: cm.len },
+    );
+    cm.entries.push(key.to_string());
+    true
+}
+
+/// Mirror of `KvCache::adopt_prefix`.
+fn model_adopt(bm: &mut BlockModel, cm: &mut CacheModel, key: &str)
+               -> bool {
+    let (layers, len) = match bm.registry.get_mut(key) {
+        Some(e) => {
+            e.users += 1;
+            (e.layers.clone(), e.len)
+        }
+        None => return false,
+    };
+    for layer in &layers {
+        for &id in layer {
+            *bm.refs.get_mut(&id).expect("adopted unknown block") += 1;
+        }
+    }
+    cm.tables = layers;
+    cm.len = len;
+    cm.entries.push(key.to_string());
+    true
+}
+
+/// Mirror of `KvCache::drop`.
+fn model_drop(bm: &mut BlockModel, cm: CacheModel) {
+    for key in cm.entries {
+        bm.release_entry(&key);
+    }
+    for table in cm.tables {
+        for id in table {
+            bm.deref(id);
+        }
+    }
+}
+
+#[test]
+fn prop_block_allocator_matches_reference_model() {
+    for_all("block_alloc", 30, |rng| {
+        let layers = rng.range(1, 4);
+        let (bh, h, bt) = (2usize, 4usize, 4usize);
+        let bb = (2 * bh * bt * h * 4) as u64;
+        let pool = BlockPool::with_block_tokens(bt);
+        let mk_dev = |name: &str| {
+            let mut d = Device::new(name, DeviceKind::Cpu);
+            d.ledger = MemoryLedger::new(4 << 20);
+            Arc::new(Mutex::new(d))
+        };
+        let dev = mk_dev("prop-dev");
+        let host = mk_dev("prop-host");
+
+        let mut bm = BlockModel {
+            refs: HashMap::new(),
+            next: 0,
+            registry: HashMap::new(),
+        };
+        let mut caches: Vec<Option<(KvCache, CacheModel)>> =
+            (0..4).map(|_| None).collect();
+        let keys = ["pfx-a", "pfx-b", "pfx-c"];
+        let mut tag_seq = 0usize;
+
+        for _ in 0..rng.range(20, 60) {
+            let slot = rng.range(0, caches.len());
+            match rng.range(0, 6) {
+                0 => {
+                    // (re)create the slot's cache, sometimes adopting a
+                    // published prefix into it
+                    if caches[slot].is_none() {
+                        let mut c =
+                            KvCache::new(layers, bh, h, KvPlacement::Device);
+                        c.set_pool(pool.clone()).unwrap();
+                        tag_seq += 1;
+                        c.attach_ledger(dev.clone(),
+                                        format!("kv:prop{tag_seq}"))
+                            .unwrap();
+                        c.attach_swap(host.clone());
+                        c.set_background(rng.range(0, 2) == 0);
+                        let mut cm = CacheModel {
+                            tables: vec![Vec::new(); layers],
+                            len: 0,
+                            entries: Vec::new(),
+                        };
+                        if rng.range(0, 2) == 0 {
+                            let key = keys[rng.range(0, keys.len())];
+                            let adopted =
+                                c.adopt_prefix(key).unwrap().is_some();
+                            assert_eq!(adopted,
+                                       model_adopt(&mut bm, &mut cm, key),
+                                       "adopt outcome diverged on {key}");
+                        }
+                        caches[slot] = Some((c, cm));
+                    }
+                }
+                1 | 2 => {
+                    // append the same token count to every layer (keeps
+                    // layer lengths uniform so publish stays legal)
+                    if let Some((c, cm)) = caches[slot].as_mut() {
+                        let t = rng.range(1, 9);
+                        for l in 0..layers {
+                            let k = rng.tensor(&[bh, t, h]);
+                            let v = rng.tensor(&[bh, t, h]);
+                            c.append(l, &k, &v).unwrap();
+                        }
+                        model_append(&mut bm, cm, t, bt);
+                        if cm.len > 0 && rng.range(0, 3) == 0 {
+                            let l = rng.range(0, layers);
+                            let bucket =
+                                bucket_for(cm.len, SEQ_BUCKETS).unwrap();
+                            let (pk, pv) = c.padded(l, bucket);
+                            let (gk, gv) =
+                                c.padded_view(l, bucket).unwrap();
+                            assert_eq!(gk, pk, "padded_view K diverged");
+                            assert_eq!(gv, pv, "padded_view V diverged");
+                        }
+                    }
+                }
+                3 => {
+                    if let Some((c, cm)) = caches[slot].as_mut() {
+                        let key = keys[rng.range(0, keys.len())];
+                        let published = c
+                            .publish_prefix(key, PrefixMeta::default())
+                            .unwrap();
+                        assert_eq!(published,
+                                   model_publish(&mut bm, cm, key, bt),
+                                   "publish outcome diverged on {key}");
+                    }
+                }
+                4 => {
+                    // clear keeps blocks; swap moves charges, not refs
+                    if let Some((c, cm)) = caches[slot].as_mut() {
+                        if rng.range(0, 2) == 0 {
+                            c.clear();
+                            cm.len = 0;
+                        } else {
+                            c.swap_out_all().unwrap();
+                        }
+                    }
+                }
+                _ => {
+                    if let Some((c, cm)) = caches[slot].take() {
+                        drop(c);
+                        model_drop(&mut bm, cm);
+                    }
+                }
+            }
+
+            // invariants after every op: no leaked or double-freed
+            // blocks, and ledger charge == live blocks x block bytes
+            assert_eq!(pool.live_blocks(), bm.live(),
+                       "live block count diverged from model");
+            let (d, hst) = pool.charged_bytes();
+            assert_eq!(d + hst, bm.live() as u64 * bb,
+                       "charge != live blocks x block bytes");
+            {
+                let dl = dev.lock().unwrap();
+                assert!(dl.ledger.check_balanced());
+                assert_eq!(dl.ledger.used(), d, "device ledger drifted");
+            }
+            {
+                let hl = host.lock().unwrap();
+                assert!(hl.ledger.check_balanced());
+                assert_eq!(hl.ledger.used(), hst, "host ledger drifted");
+            }
+        }
+
+        // drain: every reference released, nothing charged anywhere
+        for slot in caches.iter_mut() {
+            if let Some((c, cm)) = slot.take() {
+                drop(c);
+                model_drop(&mut bm, cm);
+            }
+        }
+        assert_eq!(pool.live_blocks(), 0, "blocks leaked after drain");
+        assert_eq!(bm.live(), 0, "model leaked — mirror bug");
+        assert_eq!(pool.charged_bytes(), (0, 0));
+        assert_eq!(dev.lock().unwrap().ledger.used(), 0);
+        assert_eq!(host.lock().unwrap().ledger.used(), 0);
     });
 }
 
