@@ -18,6 +18,10 @@
 //! parameter count, flatten/unflatten) — the walker, sessions, and
 //! trainers in `client.rs` need no edits.
 
+// Client-owned trainable state sits on the training hot path: every
+// failure must surface as a typed error, never a panic.
+#![deny(clippy::unwrap_used)]
+
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
@@ -296,7 +300,9 @@ impl LoraAdapter {
         let list = self.targets.list();
         for m in &mut self.pairs {
             for t in &list {
-                let p = m.get_mut(t).unwrap();
+                let p = m.get_mut(t)
+                    .expect("pairs hold every listed target by \
+                             construction");
                 take(&mut p.a);
                 take(&mut p.b);
             }
@@ -337,7 +343,8 @@ impl AdapterHooks for LoraAdapter {
             if let Some((da, db, dx)) =
                 self.delta_bwd(cx, layer, target, a_in, dt)?
             {
-                let off = self.flat_offset(layer, target).unwrap();
+                let off = self.flat_offset(layer, target)
+                    .expect("delta_bwd only fires on active targets");
                 grads.accumulate(off, da.len(), &da, &db);
                 match &mut extra {
                     Some(e) => ops::add_assign(e, &dx),
@@ -357,7 +364,8 @@ impl AdapterHooks for LoraAdapter {
         else {
             return Ok(None);
         };
-        let off = self.flat_offset(layer, "o").unwrap();
+        let off = self.flat_offset(layer, "o")
+            .expect("delta_bwd only fires on active targets");
         grads.accumulate(off, da.len(), &da, &db);
         Ok(Some(dx))
     }
@@ -684,6 +692,7 @@ pub fn apply_lora_native(x: &Tensor, pair: &LoraPair, scale: f32)
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::config::SYM_TINY;

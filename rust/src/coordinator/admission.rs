@@ -17,6 +17,10 @@
 //!   block pool touches the device ledger, so a tenant hits its own
 //!   budget with `QuotaExceeded` before it can push a co-tenant into
 //!   `KvCacheOom`.
+//! * **training-state bytes** — charged by the trainer's `opt:`/`act:`
+//!   ledger writes *before* the device ledger, the same ordering as KV:
+//!   a tenant exhausts its own training budget with `QuotaExceeded`
+//!   before it can push a co-tenant into `TrainerOom`.
 //!
 //! Sessions that never name a tenant bypass admission entirely — the
 //! controller costs nothing until quotas are configured, and every
@@ -46,6 +50,9 @@ pub struct TenantQuota {
     pub max_in_flight: Option<usize>,
     /// Max bytes of KV cache across all of the tenant's sessions.
     pub max_kv_bytes: Option<u64>,
+    /// Max bytes of training state (optimizer moments + saved
+    /// activations) across all of the tenant's trainers.
+    pub max_train_bytes: Option<u64>,
 }
 
 impl TenantQuota {
@@ -68,6 +75,11 @@ impl TenantQuota {
         self.max_kv_bytes = Some(bytes);
         self
     }
+
+    pub fn max_train_bytes(mut self, bytes: u64) -> Self {
+        self.max_train_bytes = Some(bytes);
+        self
+    }
 }
 
 /// Live usage + limits of one tenant.  Shared (`Arc`) between the
@@ -80,9 +92,11 @@ pub struct TenantState {
     max_sessions: AtomicUsize,
     max_in_flight: AtomicUsize,
     max_kv_bytes: AtomicU64,
+    max_train_bytes: AtomicU64,
     sessions: AtomicUsize,
     in_flight: AtomicUsize,
     kv_bytes: AtomicU64,
+    train_bytes: AtomicU64,
 }
 
 impl TenantState {
@@ -92,9 +106,11 @@ impl TenantState {
             max_sessions: AtomicUsize::new(usize::MAX),
             max_in_flight: AtomicUsize::new(usize::MAX),
             max_kv_bytes: AtomicU64::new(u64::MAX),
+            max_train_bytes: AtomicU64::new(u64::MAX),
             sessions: AtomicUsize::new(0),
             in_flight: AtomicUsize::new(0),
             kv_bytes: AtomicU64::new(0),
+            train_bytes: AtomicU64::new(0),
         }
     }
 
@@ -110,6 +126,8 @@ impl TenantState {
                    Ordering::SeqCst);
         self.max_kv_bytes
             .store(q.max_kv_bytes.unwrap_or(u64::MAX), Ordering::SeqCst);
+        self.max_train_bytes
+            .store(q.max_train_bytes.unwrap_or(u64::MAX), Ordering::SeqCst);
     }
 
     /// Admit one new session/trainer, or fail with a typed
@@ -186,6 +204,42 @@ impl TenantState {
         });
     }
 
+    /// Re-charge one training-state allocation from `prev` to `next`
+    /// bytes against the tenant budget (trainers charge absolute totals
+    /// per `opt:`/`act:` ledger tag, like KV).  Shrinking always
+    /// succeeds; growth past the quota fails with a typed
+    /// [`SymbiosisError::QuotaExceeded`] *without* mutating the count,
+    /// so the caller never needs to roll this back.
+    pub fn adjust_train(&self, prev: u64, next: u64) -> SymResult<()> {
+        let limit = self.max_train_bytes.load(Ordering::SeqCst);
+        match self.train_bytes.fetch_update(Ordering::SeqCst,
+                                            Ordering::SeqCst, |cur| {
+            let total = cur.saturating_sub(prev).saturating_add(next);
+            if next > prev && total > limit {
+                None
+            } else {
+                Some(total)
+            }
+        }) {
+            Ok(_) => Ok(()),
+            Err(cur) => Err(SymbiosisError::QuotaExceeded {
+                tenant: self.name.clone(),
+                resource: "training-state bytes",
+                used: cur.saturating_sub(prev),
+                requested: next,
+                limit,
+            }),
+        }
+    }
+
+    /// Return `bytes` of training budget (trainer teardown).
+    pub fn release_train(&self, bytes: u64) {
+        let _ = self.train_bytes.fetch_update(Ordering::SeqCst,
+                                              Ordering::SeqCst, |cur| {
+            Some(cur.saturating_sub(bytes))
+        });
+    }
+
     /// Live sessions held by this tenant right now.
     pub fn sessions(&self) -> usize {
         self.sessions.load(Ordering::SeqCst)
@@ -200,6 +254,11 @@ impl TenantState {
     pub fn kv_bytes(&self) -> u64 {
         self.kv_bytes.load(Ordering::SeqCst)
     }
+
+    /// Training-state bytes charged right now.
+    pub fn train_bytes(&self) -> u64 {
+        self.train_bytes.load(Ordering::SeqCst)
+    }
 }
 
 impl std::fmt::Debug for TenantState {
@@ -210,6 +269,7 @@ impl std::fmt::Debug for TenantState {
             .field("sessions", &self.sessions())
             .field("in_flight", &self.in_flight())
             .field("kv_bytes", &self.kv_bytes())
+            .field("train_bytes", &self.train_bytes())
             .finish_non_exhaustive()
     }
 }
@@ -364,6 +424,44 @@ mod tests {
         assert_eq!(t.kv_bytes(), 400);
         t.release_kv(300);
         assert_eq!(t.kv_bytes(), 100);
+    }
+
+    #[test]
+    fn train_quota_mirrors_kv_semantics() {
+        let ctl = AdmissionController::new();
+        ctl.set_quota("acme",
+                      TenantQuota::unlimited().max_train_bytes(1000));
+        let t = ctl.tenant("acme");
+        t.adjust_train(0, 600).unwrap(); // one trainer's opt state
+        t.adjust_train(0, 300).unwrap(); // a second trainer
+        assert_eq!(t.train_bytes(), 900);
+        // growing the first past the budget fails, count untouched
+        let err = t.adjust_train(600, 800).unwrap_err();
+        match err {
+            SymbiosisError::QuotaExceeded {
+                resource,
+                used,
+                requested,
+                limit,
+                ..
+            } => {
+                assert_eq!(resource, "training-state bytes");
+                assert_eq!(used, 300);
+                assert_eq!(requested, 800);
+                assert_eq!(limit, 1000);
+            }
+            other => panic!("expected QuotaExceeded, got {other}"),
+        }
+        assert_eq!(t.train_bytes(), 900);
+        // shrinking is always admitted, even at the limit
+        t.adjust_train(600, 100).unwrap();
+        assert_eq!(t.train_bytes(), 400);
+        t.release_train(300);
+        assert_eq!(t.train_bytes(), 100);
+        // KV and training budgets are independent books
+        t.adjust_kv(0, 500).unwrap();
+        assert_eq!(t.kv_bytes(), 500);
+        assert_eq!(t.train_bytes(), 100);
     }
 
     #[test]

@@ -45,6 +45,29 @@
 //!   composes the executor's memory-optimized `dX = dY . W^T` with
 //!   client-side attention/adapter/norm gradients, reproducing jax
 //!   autodiff (pinned by the golden integration tests).
+//!
+//! # Pipelined training
+//!
+//! With [`TrainerBuilder::micro_batches`] the training batch is split
+//! along the *batch* axis into M micro-batches driven through the fleet
+//! as a GPipe-style wavefront ([`TrainDriver`]): the forward fills the
+//! pipeline, the backward drains it, and each micro-batch keeps its own
+//! activation stash.  Per-micro-batch work is row-wise (every
+//! client-side op, the executor's linears, and per-(b,h) attention), so
+//! each micro-batch's activations and dX chain are bit-identical to the
+//! corresponding rows of the full-batch walk.  The two reductions that
+//! are *not* row-wise are run once at full shape behind barriers: the
+//! loss (per-chunk logits reassembled, the same `xent` artifact call)
+//! and the adapter-gradient accumulations (per layer, once every
+//! micro-batch has passed it in backward, over the reassembled
+//! full-batch tensors).  The final Adam step is therefore bit-identical
+//! to the sequential walk — pinned by `tests/training_pipeline.rs`.
+//!
+//! Training memory is a first-class ledger citizen like KV: Adam state
+//! is charged under `opt:client{id}` at build, saved activations under
+//! `act:client{id}` as micro-batches stash them (released as backward
+//! consumes the stash), with typed [`SymbiosisError::TrainerOom`] /
+//! `QuotaExceeded` at the capacity edge.
 
 #![deny(clippy::unwrap_used)]
 
@@ -57,6 +80,7 @@ use crate::config::{bucket_for, ModelConfig, ATTN_BATCHES, SEQ_BUCKETS,
 use crate::coordinator::adapter::{Adapter, AdapterGrads, AdapterHooks,
                                   HookCtx, NO_ADAPTER};
 use crate::coordinator::admission::{SessionTicket, TenantState};
+use crate::coordinator::fleet::TrainingStats;
 use crate::coordinator::kv_cache::{BlockPool, KvCache, KvPlacement,
                                    PrefixMeta};
 use crate::coordinator::model_state::ClientWeights;
@@ -1737,6 +1761,126 @@ pub struct TrainOutcome {
     pub tokens: usize,
 }
 
+/// Ledger-side identity of a trainer: the device its Adam state and
+/// activation stash are charged to (under `opt:client{id}` /
+/// `act:client{id}` tags), the tenant whose training-bytes budget those
+/// charges draw from, and the fleet's shared [`TrainingStats`].  All
+/// charging goes through here so the two books (tenant, device) move
+/// together: the tenant budget is adjusted *first* — one tenant
+/// exhausts its own quota with `QuotaExceeded` before it can push a
+/// co-tenant into [`SymbiosisError::TrainerOom`] — and rolled back when
+/// the device ledger refuses, mirroring the KV cache's charge order.
+struct TrainCharge {
+    device: Option<Arc<Mutex<Device>>>,
+    tenant: Option<Arc<TenantState>>,
+    stats: Option<Arc<TrainingStats>>,
+    opt_tag: String,
+    act_tag: String,
+    /// Bytes currently charged under `opt_tag` / `act_tag`.
+    opt_bytes: u64,
+    act_bytes: u64,
+    /// This trainer's balance on the tenant's training-bytes book.
+    tenant_charged: u64,
+}
+
+impl TrainCharge {
+    fn detached() -> Self {
+        TrainCharge {
+            device: None,
+            tenant: None,
+            stats: None,
+            opt_tag: String::new(),
+            act_tag: String::new(),
+            opt_bytes: 0,
+            act_bytes: 0,
+            tenant_charged: 0,
+        }
+    }
+
+    /// Resize one tag to `bytes` with tenant-first ordering and typed
+    /// OOM naming what did not fit.
+    fn set_tag(&mut self, what: &'static str, act: bool, bytes: u64)
+               -> SymResult<()> {
+        let (other, tag) = if act {
+            (self.opt_bytes, self.act_tag.clone())
+        } else {
+            (self.act_bytes, self.opt_tag.clone())
+        };
+        let next_total = other + bytes;
+        if let Some(t) = &self.tenant {
+            t.adjust_train(self.tenant_charged, next_total)?;
+        }
+        if let Some(dev) = &self.device {
+            let mut d = dev.lock().unwrap_or_else(|p| p.into_inner());
+            let capacity = d.ledger.capacity();
+            let others = d.ledger.used() - d.ledger.tag_bytes(&tag);
+            if d.ledger.set(&tag, bytes).is_err() {
+                // Device refused: roll the tenant book back before
+                // surfacing, so both books stay consistent.
+                if let Some(t) = &self.tenant {
+                    let _ = t.adjust_train(next_total,
+                                           self.tenant_charged);
+                }
+                return Err(SymbiosisError::TrainerOom {
+                    what,
+                    need_bytes: bytes,
+                    used_bytes: others,
+                    capacity_bytes: capacity,
+                });
+            }
+        }
+        if act {
+            if let Some(st) = &self.stats {
+                if bytes > self.act_bytes {
+                    st.stash_grew(bytes - self.act_bytes);
+                } else {
+                    st.stash_shrunk(self.act_bytes - bytes);
+                }
+            }
+            self.act_bytes = bytes;
+        } else {
+            self.opt_bytes = bytes;
+        }
+        self.tenant_charged = next_total;
+        Ok(())
+    }
+
+    fn charge_opt(&mut self, bytes: u64) -> SymResult<()> {
+        self.set_tag("optimizer state", false, bytes)
+    }
+
+    fn grow_act(&mut self, delta: u64) -> SymResult<()> {
+        self.set_tag("activation stash", true, self.act_bytes + delta)
+    }
+
+    /// Shrinks never fail: the tenant book shrinks freely and a ledger
+    /// resize downward always fits.
+    fn shrink_act(&mut self, delta: u64) {
+        let next = self.act_bytes.saturating_sub(delta);
+        let _ = self.set_tag("activation stash", true, next);
+    }
+
+    /// Free both tags and the tenant balance (trainer exit).
+    fn release_all(&mut self) {
+        if let Some(st) = &self.stats {
+            st.stash_shrunk(self.act_bytes);
+        }
+        if let Some(dev) = &self.device {
+            let mut d = dev.lock().unwrap_or_else(|p| p.into_inner());
+            d.ledger.free(&self.opt_tag);
+            d.ledger.free(&self.act_tag);
+        }
+        if let Some(t) = &self.tenant {
+            t.release_train(self.tenant_charged);
+        }
+        self.opt_bytes = 0;
+        self.act_bytes = 0;
+        self.tenant_charged = 0;
+        self.device = None;
+        self.tenant = None;
+    }
+}
+
 /// A fine-tuning job: forward, hand-rolled backward, Adam on the
 /// adapter.  Build one with
 /// [`Deployment::trainer`](crate::coordinator::Deployment::trainer).
@@ -1748,13 +1892,42 @@ pub struct Trainer {
     /// (default [`Urgency::Training`]).  [`Urgency::Background`] makes
     /// the job sheddable when its shard's ingress queue saturates.
     pub urgency: Urgency,
+    /// Micro-batches per step (GPipe wavefront when > 1; see
+    /// [`TrainerBuilder::micro_batches`]).
+    micro_batches: usize,
+    /// Ledger identity — `opt:`/`act:` tags on the client device plus
+    /// the tenant training-bytes book (no-op until
+    /// [`Trainer::attach_train_ledger`]).
+    charge: TrainCharge,
     /// Slot in the tenant's concurrent-session quota (RAII).
     _tenant_ticket: Option<SessionTicket>,
 }
 
 impl Trainer {
     pub fn new(core: ClientCore, batch: usize) -> SymResult<Self> {
-        core.check_batch(batch)?;
+        Self::with_micro_batches(core, batch, 1)
+    }
+
+    /// Like [`Trainer::new`], splitting each step's batch into
+    /// `micro_batches` pipelined micro-batches.  The per-micro-batch
+    /// size `batch / micro_batches` must be an attention batch size —
+    /// which also means the *total* batch may exceed the largest
+    /// attention artifact (e.g. batch 8 as 8×1): micro-batching is how
+    /// large batches become runnable at all, not just faster.
+    pub fn with_micro_batches(core: ClientCore, batch: usize,
+                              micro_batches: usize) -> SymResult<Self> {
+        let m = micro_batches.max(1);
+        if m == 1 {
+            core.check_batch(batch)?;
+        } else if batch % m != 0
+            || !ATTN_BATCHES.contains(&(batch / m))
+        {
+            return Err(SymbiosisError::InvalidMicroBatch {
+                batch,
+                micro_batches: m,
+                supported: ATTN_BATCHES,
+            });
+        }
         // Only adapters whose gradients are wired into the flattened
         // optimizer layout can be fine-tuned (currently LoRA; IA3 and
         // Prefix are inference-only — see `AdapterHooks::trainable`).
@@ -1776,11 +1949,43 @@ impl Trainer {
             batch,
             optimizer: Adam::new(n),
             urgency: Urgency::Training,
+            micro_batches: m,
+            charge: TrainCharge::detached(),
             _tenant_ticket: None,
         })
     }
 
+    /// Micro-batches per training step (1 = sequential walk).
+    pub fn micro_batches(&self) -> usize {
+        self.micro_batches
+    }
+
+    /// Charge this trainer's Adam state to `device` under
+    /// `opt:client{id}` and arm `act:client{id}` for per-micro-batch
+    /// activation charges — making training memory ledger-visible the
+    /// way KV already is.  Fails with a typed
+    /// [`SymbiosisError::TrainerOom`] (or `QuotaExceeded` when `tenant`
+    /// is at its training-bytes budget) if the optimizer state does not
+    /// fit; [`Deployment::trainer`] wires this automatically.
+    ///
+    /// [`Deployment::trainer`]: crate::coordinator::Deployment::trainer
+    pub fn attach_train_ledger(&mut self, device: Arc<Mutex<Device>>,
+                               tenant: Option<Arc<TenantState>>,
+                               stats: Option<Arc<TrainingStats>>)
+                               -> SymResult<()> {
+        let id = self.core.virt.client_id;
+        self.charge.opt_tag = format!("opt:client{id}");
+        self.charge.act_tag = format!("act:client{id}");
+        self.charge.device = Some(device);
+        self.charge.tenant = tenant;
+        self.charge.stats = stats;
+        self.charge.charge_opt(self.optimizer.state_bytes())
+    }
+
     /// One full iteration: forward, loss, backward, optimizer step.
+    /// With `micro_batches > 1` the forward+backward run as a GPipe
+    /// wavefront; the resulting step is bit-identical to the sequential
+    /// walk (see the module docs).
     pub fn train_step(&mut self, tokens: &[i32], labels: &[i32])
                       -> SymResult<TrainOutcome> {
         let (loss, grads) = self.loss_and_grads(tokens, labels)?;
@@ -1798,14 +2003,43 @@ impl Trainer {
     /// Forward + backward only (used by the golden gradient tests).
     pub fn loss_and_grads(&mut self, tokens: &[i32], labels: &[i32])
                           -> SymResult<(f32, AdapterGrads)> {
-        self.loss_and_grads_inner(tokens, labels)
-            .map_err(SymbiosisError::from)
+        let r = if self.micro_batches > 1 {
+            self.loss_and_grads_pipelined(tokens, labels)
+        } else {
+            self.loss_and_grads_inner(tokens, labels)
+        };
+        if r.is_err() {
+            // A failed step must not leak stash charges: zero the act
+            // book (both ledgers) so co-tenant trainers see a clean
+            // rollback.
+            self.charge.shrink_act(u64::MAX);
+        }
+        r.map_err(SymbiosisError::from)
+    }
+
+    /// Bytes of one [`SavedLayer`] over `t` tokens: four `(T, D)`
+    /// residual-path tensors + three `(T, D)` head tensors + the
+    /// `(T, F)` pre-activation.
+    fn saved_layer_bytes(&self, t: usize) -> u64 {
+        let d = self.core.cfg.d_model as u64;
+        let f = self.core.cfg.d_ff as u64;
+        t as u64 * (7 * d + f) * 4
+    }
+
+    fn h_last_bytes(&self, t: usize) -> u64 {
+        (t * self.core.cfg.d_model * 4) as u64
     }
 
     fn loss_and_grads_inner(&mut self, tokens: &[i32], labels: &[i32])
                             -> Result<(f32, AdapterGrads)> {
         let t = tokens.len();
         let urgency = self.urgency;
+        // The sequential walk stashes every layer at once: one
+        // full-batch charge up front, released when backward finishes.
+        let full_act = self.core.cfg.n_layers as u64
+            * self.saved_layer_bytes(t)
+            + self.h_last_bytes(t);
+        self.charge.grow_act(full_act)?;
         let mut saved = SavedActs {
             layers: Vec::with_capacity(self.core.cfg.n_layers),
             h_last: Tensor::zeros(&[1]),
@@ -1910,11 +2144,16 @@ impl Trainer {
                                           &da_in);
             dh = ops::add(&dh_mid, &dnorm1);
         }
+        // Backward consumed every saved layer: release the stash.
+        self.charge.shrink_act(u64::MAX);
         Ok((loss, grads))
     }
 
-    /// Client-side memory (adapter + optimizer + saved activations
-    /// estimate) for the memory figures.
+    /// Client-side memory (adapter + optimizer + saved activations) for
+    /// the memory figures.  Once the trainer is ledger-attached this
+    /// reads the live `opt:`/`act:` tag balances — the report *is* the
+    /// ledger (pinned by `tests/training_pipeline.rs`); detached
+    /// trainers fall back to the analytic estimate over `seq_len`.
     pub fn client_state_bytes(&self, seq_len: usize) -> u64 {
         let adapter = self
             .core
@@ -1922,6 +2161,12 @@ impl Trainer {
             .as_ref()
             .map(|a| (a.n_params() * 4) as u64)
             .unwrap_or(0);
+        if let Some(dev) = &self.charge.device {
+            let d = dev.lock().unwrap_or_else(|p| p.into_inner());
+            return adapter
+                + d.ledger.tag_bytes(&self.charge.opt_tag)
+                + d.ledger.tag_bytes(&self.charge.act_tag);
+        }
         let opt = self.optimizer.state_bytes();
         let t = (self.batch * seq_len) as u64;
         let d = self.core.cfg.d_model as u64;
@@ -1930,6 +2175,608 @@ impl Trainer {
         let saved =
             self.core.cfg.n_layers as u64 * t * (8 * d + f) * 4;
         adapter + opt + saved
+    }
+}
+
+impl Drop for Trainer {
+    fn drop(&mut self) {
+        // Trainer exit returns its opt/act bytes to the device ledger
+        // and its balance to the tenant's training-bytes book.
+        self.charge.release_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined training — micro-batched GPipe wavefront over the shard fleet
+// ---------------------------------------------------------------------------
+
+/// One training micro-batch's position in the forward *or* backward
+/// walk: an in-flight base-layer request or client-side tensors waiting
+/// for the next dispatch.  Unlike pipelined prefill there is no reorder
+/// gate — training micro-batches split the *batch* axis, so they are
+/// fully independent in forward (no KV cache) and in the dX chain.
+enum TrainStage<'a> {
+    FwdStart,
+    FwdPendEmbed(PendingLayer<'a>),
+    FwdPendQkv { h_in: Tensor, a_in: Tensor, pend: PendingLayer<'a> },
+    FwdPendAttnOut {
+        h_in: Tensor,
+        a_in: Tensor,
+        qh: Tensor,
+        kh: Tensor,
+        vh: Tensor,
+        attn_merged: Tensor,
+        pend: PendingLayer<'a>,
+    },
+    FwdPendMlpUp {
+        h_in: Tensor,
+        a_in: Tensor,
+        qh: Tensor,
+        kh: Tensor,
+        vh: Tensor,
+        attn_merged: Tensor,
+        h_mid: Tensor,
+        pend: PendingLayer<'a>,
+    },
+    FwdPendMlpDown { saved: SavedLayer, pend: PendingLayer<'a> },
+    FwdPendHead(PendingLayer<'a>),
+    /// Forward finished: this micro-batch's logits, held for the loss
+    /// barrier.
+    FwdDone(Tensor),
+    /// Re-seeded after the loss barrier with this micro-batch's dlogits
+    /// rows.
+    BwdStart(Tensor),
+    BwdPendHead(PendingLayer<'a>),
+    BwdPendMlpDown { dh: Tensor, pend: PendingLayer<'a> },
+    BwdPendMlpUp { dh: Tensor, pend: PendingLayer<'a> },
+    BwdPendAttnOut { dh_mid: Tensor, pend: PendingLayer<'a> },
+    BwdPendQkv {
+        dh_mid: Tensor,
+        dq: Tensor,
+        dk: Tensor,
+        dv: Tensor,
+        pend: PendingLayer<'a>,
+    },
+    BwdDone,
+    /// Transient placeholder while a transition executes.
+    Taken,
+}
+
+/// One training micro-batch: sequences `[b0, b0 + mb)` of the step's
+/// batch, its per-layer activation stash, and its stage.  `layer`
+/// counts up in forward and down in backward.
+struct TrainChunk<'a> {
+    idx: usize,
+    b0: usize,
+    layer: usize,
+    saved: Vec<Option<SavedLayer>>,
+    h_last: Option<Tensor>,
+    stage: TrainStage<'a>,
+}
+
+/// Per-micro-batch tensors retained after a layer's backward for the
+/// deferred full-shape adapter-gradient pass (see [`BwdShared`]).
+struct DeferredStash {
+    a_in: Tensor,
+    attn_merged: Tensor,
+    dq: Tensor,
+    dk: Tensor,
+    dv: Tensor,
+    do_: Tensor,
+}
+
+/// Backward state shared across micro-batches.  The adapter-gradient
+/// accumulations (`attn_out_delta_bwd` / `qkv_delta_bwd` into `grads`)
+/// are the one non-row-wise reduction in the backward, so per-micro
+/// hook calls go into a throwaway `scratch` (only their dX side-outputs
+/// are used — those *are* row-wise) and the real accumulation runs once
+/// per layer at full batch shape, over tensors reassembled from
+/// `stash`, as soon as every micro-batch has passed that layer
+/// (`done[l] == m`).  Because chunk k reaches layer l only after layer
+/// l+1, the deferred passes fire in descending layer order — and the
+/// flat-gradient offsets are disjoint per (layer, target) regardless —
+/// so the result is bit-identical to the sequential accumulation.
+struct BwdShared {
+    grads: AdapterGrads,
+    scratch: AdapterGrads,
+    /// `stash[layer][chunk]`, filled as chunks pass the layer.
+    stash: Vec<Vec<Option<DeferredStash>>>,
+    /// Micro-batches that have completed each layer's backward.
+    done: Vec<usize>,
+    m: usize,
+}
+
+/// Drives all training micro-batches round-robin, one stage per turn:
+/// while one chunk blocks collecting its response, every other chunk's
+/// request is already queued at some shard.  Forward fills the
+/// pipeline, backward drains it.
+///
+/// KEEP IN SYNC: the forward transitions in [`Self::advance_fwd`] are
+/// the split-phase form of [`LayerWalker::walk`] and the backward
+/// transitions in [`Self::advance_bwd`] the split-phase form of
+/// `Trainer::loss_and_grads_inner`'s loop.  The block math is shared
+/// (the `ClientCore` transition helpers and the same hook/op calls);
+/// only the dispatch/collect sequencing lives twice — change both
+/// together or `tests/training_pipeline.rs` diverges.
+struct TrainDriver<'a> {
+    core: &'a ClientCore,
+    virt: &'a VirtLayerCtx,
+    urgency: Urgency,
+    /// Sequences per micro-batch (`batch / m`).
+    mb: usize,
+    /// Columns per sequence and their bucket.
+    s: usize,
+    sb: usize,
+    tokens: &'a [i32],
+    attn_fwd: String,
+    attn_bwd: String,
+}
+
+impl<'a> TrainDriver<'a> {
+    /// Token ids and positions of sequences `[b0, b0 + mb)` — a
+    /// contiguous row block of the token-major full batch, so chunk
+    /// logits reassemble by plain concatenation.
+    fn chunk_tokens(&self, b0: usize) -> (Tensor, Tensor) {
+        let t = self.mb * self.s;
+        let toks = self.tokens[b0 * self.s..b0 * self.s + t].to_vec();
+        let poss: Vec<i32> =
+            (0..t).map(|i| (i % self.s) as i32).collect();
+        (Tensor::from_i32(toks, &[t]), Tensor::from_i32(poss, &[t]))
+    }
+
+    /// Bytes of one micro-batch's [`SavedLayer`].
+    fn layer_act_bytes(&self) -> u64 {
+        let d = self.core.cfg.d_model as u64;
+        let f = self.core.cfg.d_ff as u64;
+        (self.mb * self.s) as u64 * (7 * d + f) * 4
+    }
+
+    /// Bytes of one micro-batch's per-layer [`DeferredStash`].
+    fn stash_bytes(&self) -> u64 {
+        (self.mb * self.s * 6 * self.core.cfg.d_model * 4) as u64
+    }
+
+    fn h_last_bytes(&self) -> u64 {
+        (self.mb * self.s * self.core.cfg.d_model * 4) as u64
+    }
+
+    /// rmsnorm-1 + QKV dispatch for block `l` over hidden `h`.
+    fn begin_block(&self, h: Tensor, l: usize) -> Result<TrainStage<'a>> {
+        let a_in = ops::rmsnorm(&h, &self.core.weights.norm1[l]);
+        let pend = self.virt.dispatch_forward(LayerId::Qkv(l),
+                                              a_in.clone(),
+                                              self.urgency)?;
+        Ok(TrainStage::FwdPendQkv { h_in: h, a_in, pend })
+    }
+
+    /// Advance micro-batch `ch` by one forward stage; returns whether
+    /// it made progress (`false` once its logits are ready).
+    fn advance_fwd(&self, charge: &mut TrainCharge,
+                   ch: &mut TrainChunk<'a>) -> Result<bool> {
+        let core = self.core;
+        let cx = HookCtx { engine: core.engine.as_ref(), cfg: &core.cfg };
+        let nh = core.cfg.n_heads;
+        let stage = std::mem::replace(&mut ch.stage, TrainStage::Taken);
+        let (next, progressed) = match stage {
+            TrainStage::FwdStart => {
+                if let Some(st) = &charge.stats {
+                    st.microbatch_started();
+                }
+                let (toks, poss) = self.chunk_tokens(ch.b0);
+                let pend =
+                    self.virt.dispatch_embed(toks, poss, self.urgency)?;
+                (TrainStage::FwdPendEmbed(pend), true)
+            }
+            TrainStage::FwdPendEmbed(pend) => {
+                let h = pend.collect()?;
+                (self.begin_block(h, ch.layer)?, true)
+            }
+            TrainStage::FwdPendQkv { h_in, a_in, pend } => {
+                let l = ch.layer;
+                let qkv = pend.collect()?;
+                let (q, k, v) =
+                    core.qkv_split_adjust(&cx, l, &a_in, &qkv)?;
+                let qh = to_heads_batched(&q, self.mb, nh);
+                let kh = to_heads_batched(&k, self.mb, nh);
+                let vh = to_heads_batched(&v, self.mb, nh);
+                let qp = ClientCore::pad_seq(&qh, self.sb);
+                let kp = ClientCore::pad_seq(&kh, self.sb);
+                let vp = ClientCore::pad_seq(&vh, self.sb);
+                let out = core.engine
+                    .execute(&self.attn_fwd, &[&qp, &kp, &vp])?;
+                let attn = ClientCore::unpad_seq(&out[0], self.s);
+                let merged = from_heads_batched(&attn, self.mb);
+                let pend = self.virt.dispatch_forward(
+                    LayerId::AttnOut(l), merged.clone(), self.urgency)?;
+                (TrainStage::FwdPendAttnOut {
+                    h_in, a_in, qh, kh, vh, attn_merged: merged, pend,
+                }, true)
+            }
+            TrainStage::FwdPendAttnOut {
+                h_in, a_in, qh, kh, vh, attn_merged, pend,
+            } => {
+                let l = ch.layer;
+                let mut o = pend.collect()?;
+                let (h_mid, m_in) = core.attn_out_transition(
+                    &cx, l, &h_in, &attn_merged, &mut o)?;
+                let pend = self.virt.dispatch_forward(
+                    LayerId::MlpUp(l), m_in, self.urgency)?;
+                (TrainStage::FwdPendMlpUp {
+                    h_in, a_in, qh, kh, vh, attn_merged, h_mid, pend,
+                }, true)
+            }
+            TrainStage::FwdPendMlpUp {
+                h_in, a_in, qh, kh, vh, attn_merged, h_mid, pend,
+            } => {
+                let l = ch.layer;
+                let mut u_pre = pend.collect()?;
+                let u = core.ffn_activate(l, &mut u_pre);
+                let pend = self.virt.dispatch_forward(
+                    LayerId::MlpDown(l), u, self.urgency)?;
+                let saved = SavedLayer {
+                    h_in, a_in, qh, kh, vh, attn_merged, h_mid, u_pre,
+                };
+                (TrainStage::FwdPendMlpDown { saved, pend }, true)
+            }
+            TrainStage::FwdPendMlpDown { saved, pend } => {
+                let down = pend.collect()?;
+                let h = ops::add(&saved.h_mid, &down);
+                charge.grow_act(self.layer_act_bytes())?;
+                ch.saved[ch.layer] = Some(saved);
+                ch.layer += 1;
+                if ch.layer < core.cfg.n_layers {
+                    (self.begin_block(h, ch.layer)?, true)
+                } else {
+                    charge.grow_act(self.h_last_bytes())?;
+                    ch.h_last = Some(h.clone());
+                    let hf = core.final_norm(&h);
+                    let pend = self.virt.dispatch_forward(
+                        LayerId::LmHead, hf, self.urgency)?;
+                    (TrainStage::FwdPendHead(pend), true)
+                }
+            }
+            TrainStage::FwdPendHead(pend) => {
+                (TrainStage::FwdDone(pend.collect()?), true)
+            }
+            done @ TrainStage::FwdDone(_) => (done, false),
+            TrainStage::Taken => {
+                unreachable!("stage advanced re-entrantly")
+            }
+            _ => unreachable!("backward stage in forward wavefront"),
+        };
+        ch.stage = next;
+        Ok(progressed)
+    }
+
+    /// Advance micro-batch `ch` by one backward stage.
+    fn advance_bwd(&self, charge: &mut TrainCharge,
+                   shared: &mut BwdShared, ch: &mut TrainChunk<'a>)
+                   -> Result<bool> {
+        let core = self.core;
+        let cx = HookCtx { engine: core.engine.as_ref(), cfg: &core.cfg };
+        let hooks = core.hooks();
+        let stage = std::mem::replace(&mut ch.stage, TrainStage::Taken);
+        let (next, progressed) = match stage {
+            TrainStage::BwdStart(dlogits) => {
+                let pend = self.virt.dispatch_backward(
+                    LayerId::LmHead, dlogits, self.urgency)?;
+                (TrainStage::BwdPendHead(pend), true)
+            }
+            TrainStage::BwdPendHead(pend) => {
+                let dhf = pend.collect()?;
+                let h_last = ch.h_last.take()
+                    .expect("forward saved h_last");
+                let dh = ops::rmsnorm_bwd(&h_last,
+                                          &core.weights.norm_f, &dhf);
+                charge.shrink_act(self.h_last_bytes());
+                ch.layer = core.cfg.n_layers - 1;
+                let pend = self.virt.dispatch_backward(
+                    LayerId::MlpDown(ch.layer), dh.clone(),
+                    self.urgency)?;
+                (TrainStage::BwdPendMlpDown { dh, pend }, true)
+            }
+            TrainStage::BwdPendMlpDown { dh, pend } => {
+                let l = ch.layer;
+                let sv = ch.saved[l].as_ref()
+                    .expect("forward saved this layer");
+                let dd = pend.collect()?;
+                let dg = hooks.ffn_scale_bwd(l, &sv.u_pre, &dd);
+                let dgelu = ops::gelu_bwd(&sv.u_pre, &dg);
+                let pend = self.virt.dispatch_backward(
+                    LayerId::MlpUp(l), dgelu, self.urgency)?;
+                (TrainStage::BwdPendMlpUp { dh, pend }, true)
+            }
+            TrainStage::BwdPendMlpUp { dh, pend } => {
+                let l = ch.layer;
+                let sv = ch.saved[l].as_ref()
+                    .expect("forward saved this layer");
+                let dm = pend.collect()?;
+                let dnorm2 = ops::rmsnorm_bwd(&sv.h_mid,
+                                              &core.weights.norm2[l],
+                                              &dm);
+                let dh_mid = ops::add(&dh, &dnorm2);
+                let pend = self.virt.dispatch_backward(
+                    LayerId::AttnOut(l), dh_mid.clone(), self.urgency)?;
+                (TrainStage::BwdPendAttnOut { dh_mid, pend }, true)
+            }
+            TrainStage::BwdPendAttnOut { dh_mid, pend } => {
+                let l = ch.layer;
+                let sv = ch.saved[l].as_ref()
+                    .expect("forward saved this layer");
+                let mut dattn = pend.collect()?;
+                // Per-micro hook call: only the row-wise dX output is
+                // used; the parameter-gradient side goes to `scratch`
+                // (the real accumulation runs deferred at full shape).
+                if let Some(dx) = hooks.attn_out_delta_bwd(
+                    &cx, l, &sv.attn_merged, &dh_mid,
+                    &mut shared.scratch)?
+                {
+                    ops::add_assign(&mut dattn, &dx);
+                }
+                let dattn_h = to_heads_batched(&dattn, self.mb,
+                                               core.cfg.n_heads);
+                let qp = ClientCore::pad_seq(&sv.qh, self.sb);
+                let kp = ClientCore::pad_seq(&sv.kh, self.sb);
+                let vp = ClientCore::pad_seq(&sv.vh, self.sb);
+                let dop = ClientCore::pad_seq(&dattn_h, self.sb);
+                let out = core.engine.execute(
+                    &self.attn_bwd, &[&qp, &kp, &vp, &dop])?;
+                let dq = from_heads_batched(
+                    &ClientCore::unpad_seq(&out[0], self.s), self.mb);
+                let dk = from_heads_batched(
+                    &ClientCore::unpad_seq(&out[1], self.s), self.mb);
+                let dv = from_heads_batched(
+                    &ClientCore::unpad_seq(&out[2], self.s), self.mb);
+                let (dk, dv) = hooks.kv_scale_bwd(l, &dk, &dv);
+                let dqkv = ClientCore::concat_cols3(&dq, &dk, &dv);
+                let pend = self.virt.dispatch_backward(
+                    LayerId::Qkv(l), dqkv, self.urgency)?;
+                (TrainStage::BwdPendQkv { dh_mid, dq, dk, dv, pend },
+                 true)
+            }
+            TrainStage::BwdPendQkv { dh_mid, dq, dk, dv, pend } => {
+                let l = ch.layer;
+                let mut da_in = pend.collect()?;
+                let sv = ch.saved[l].take()
+                    .expect("forward saved this layer");
+                if let Some(extra) = hooks.qkv_delta_bwd(
+                    &cx, l, &sv.a_in, &dq, &dk, &dv,
+                    &mut shared.scratch)?
+                {
+                    ops::add_assign(&mut da_in, &extra);
+                }
+                let dnorm1 = ops::rmsnorm_bwd(&sv.h_in,
+                                              &core.weights.norm1[l],
+                                              &da_in);
+                let dh = ops::add(&dh_mid, &dnorm1);
+                // Swap the consumed SavedLayer charge for the smaller
+                // deferred stash (released when the layer's full-shape
+                // adapter pass runs).
+                charge.shrink_act(self.layer_act_bytes());
+                charge.grow_act(self.stash_bytes())?;
+                shared.stash[l][ch.idx] = Some(DeferredStash {
+                    a_in: sv.a_in,
+                    attn_merged: sv.attn_merged,
+                    dq,
+                    dk,
+                    dv,
+                    do_: dh_mid,
+                });
+                shared.done[l] += 1;
+                if shared.done[l] == shared.m {
+                    self.deferred_adapter_pass(&cx, l, shared)?;
+                    charge.shrink_act(
+                        self.stash_bytes() * shared.m as u64);
+                }
+                if l > 0 {
+                    ch.layer = l - 1;
+                    let pend = self.virt.dispatch_backward(
+                        LayerId::MlpDown(l - 1), dh.clone(),
+                        self.urgency)?;
+                    (TrainStage::BwdPendMlpDown { dh, pend }, true)
+                } else {
+                    if let Some(st) = &charge.stats {
+                        st.grad_accum_step();
+                        st.microbatch_finished();
+                    }
+                    (TrainStage::BwdDone, true)
+                }
+            }
+            done @ TrainStage::BwdDone => (done, false),
+            TrainStage::Taken => {
+                unreachable!("stage advanced re-entrantly")
+            }
+            _ => unreachable!("forward stage in backward drain"),
+        };
+        ch.stage = next;
+        Ok(progressed)
+    }
+
+    /// The deferred full-shape adapter-gradient pass for layer `l`:
+    /// reassemble the full batch by row-concatenating every
+    /// micro-batch's stash (chunks are contiguous sequence blocks, so
+    /// index-order concat *is* the full-batch layout) and run the two
+    /// accumulation hooks once into the real `grads`.  Their dX returns
+    /// are discarded — those were applied per-micro already.
+    fn deferred_adapter_pass(&self, cx: &HookCtx, l: usize,
+                             shared: &mut BwdShared) -> Result<()> {
+        let entries: Vec<DeferredStash> =
+            std::mem::take(&mut shared.stash[l])
+                .into_iter()
+                .map(|e| e.expect("done[l] == m implies a full stash"))
+                .collect();
+        let hooks = self.core.hooks();
+        let cat = |field: fn(&DeferredStash) -> &Tensor| {
+            concat_rows(&entries.iter().map(field).collect::<Vec<_>>())
+        };
+        let a_in = cat(|e| &e.a_in);
+        let attn_merged = cat(|e| &e.attn_merged);
+        let dq = cat(|e| &e.dq);
+        let dk = cat(|e| &e.dk);
+        let dv = cat(|e| &e.dv);
+        let do_ = cat(|e| &e.do_);
+        let _ = hooks.attn_out_delta_bwd(cx, l, &attn_merged, &do_,
+                                         &mut shared.grads)?;
+        let _ = hooks.qkv_delta_bwd(cx, l, &a_in, &dq, &dk, &dv,
+                                    &mut shared.grads)?;
+        Ok(())
+    }
+}
+
+/// `(T_i, D) xN -> (sum T_i, D)` — row-concatenate micro-batch tensors
+/// back into the full-batch layout.
+fn concat_rows(parts: &[&Tensor]) -> Tensor {
+    let d = parts[0].shape[1];
+    let total: usize = parts.iter().map(|p| p.shape[0]).sum();
+    let mut out = Vec::with_capacity(total * d);
+    for p in parts {
+        out.extend_from_slice(p.as_f32());
+    }
+    Tensor::from_f32(out, &[total, d])
+}
+
+impl Trainer {
+    /// Forward + backward as a GPipe wavefront over `micro_batches`
+    /// chunks of the batch axis.  Bit-identical to
+    /// [`Self::loss_and_grads_inner`] — see the module docs for why —
+    /// but with micro-batch k on shard s+1 while k+1 occupies shard s,
+    /// and activation-stash ledger charges that track the wavefront
+    /// instead of peaking at the full batch.
+    fn loss_and_grads_pipelined(&mut self, tokens: &[i32],
+                                labels: &[i32])
+                                -> Result<(f32, AdapterGrads)> {
+        let m = self.micro_batches;
+        let mb = self.batch / m;
+        let t = tokens.len();
+        let s = t / self.batch;
+        let sb = bucket_for(s, SEQ_BUCKETS)
+            .ok_or(SymbiosisError::ContextExceeded {
+                len: s,
+                limit: *SEQ_BUCKETS.last()
+                    .expect("SEQ_BUCKETS is a non-empty static"),
+            })?;
+        let grads = AdapterGrads::zeros_like(
+            self.core.adapter.as_ref()
+                .expect("Trainer::new verified a trainable adapter"));
+        let scratch = AdapterGrads::zeros_like(
+            self.core.adapter.as_ref()
+                .expect("Trainer::new verified a trainable adapter"));
+        let n_layers = self.core.cfg.n_layers;
+        // Disjoint field borrows: the driver reads `core` (and holds
+        // `PendingLayer`s borrowing its `virt`) while ledger charges
+        // mutate `charge`.
+        let core = &self.core;
+        let charge = &mut self.charge;
+        let virt: &VirtLayerCtx = core.virt.as_ref();
+        let nh = core.cfg.n_heads;
+        let hd = core.cfg.d_head();
+        let driver = TrainDriver {
+            core,
+            virt,
+            urgency: self.urgency,
+            mb,
+            s,
+            sb,
+            tokens,
+            attn_fwd: format!("attn_prefill_bh{}_s{sb}_h{hd}",
+                              mb * nh),
+            attn_bwd: format!("attn_bwd_bh{}_s{sb}_h{hd}", mb * nh),
+        };
+        let mut chunks: Vec<TrainChunk> = (0..m)
+            .map(|k| TrainChunk {
+                idx: k,
+                b0: k * mb,
+                layer: 0,
+                saved: (0..n_layers).map(|_| None).collect(),
+                h_last: None,
+                stage: TrainStage::FwdStart,
+            })
+            .collect();
+
+        // ---- forward: fill the pipeline ----
+        loop {
+            let mut any_progress = false;
+            let mut all_done = true;
+            for ch in chunks.iter_mut() {
+                if !matches!(ch.stage, TrainStage::FwdDone(_)) {
+                    all_done = false;
+                    any_progress |= driver.advance_fwd(charge, ch)?;
+                }
+            }
+            if all_done {
+                break;
+            }
+            anyhow::ensure!(any_progress,
+                            "pipelined training forward stalled");
+        }
+
+        // ---- loss barrier: the xent reduction is not row-wise, so it
+        // runs once at full shape over the reassembled logits — the
+        // very call the sequential walk makes. ----
+        let v = core.cfg.vocab;
+        let tb = bucket_for(t, TOKEN_BUCKETS)
+            .ok_or(SymbiosisError::ContextExceeded {
+                len: t,
+                limit: *TOKEN_BUCKETS.last()
+                    .expect("TOKEN_BUCKETS is a non-empty static"),
+            })?;
+        let mut parts = Vec::with_capacity(m);
+        for ch in chunks.iter_mut() {
+            let TrainStage::FwdDone(logits) =
+                std::mem::replace(&mut ch.stage, TrainStage::Taken)
+            else {
+                unreachable!("forward loop left a chunk unfinished")
+            };
+            parts.push(logits);
+        }
+        let logits =
+            concat_rows(&parts.iter().collect::<Vec<_>>());
+        let mut lab = labels.to_vec();
+        lab.resize(tb, 0);
+        let mut w = vec![1.0f32; t];
+        w.resize(tb, 0.0);
+        let name = format!("xent_t{tb}_v{v}");
+        let lp = logits.pad_rows(tb);
+        let out = core.engine.execute(&name, &[
+            &lp,
+            &Tensor::from_i32(lab, &[tb]),
+            &Tensor::from_f32(w, &[tb]),
+        ])?;
+        let loss = out[0].as_f32()[0];
+        let dlogits = out[1].slice_rows(0, t);
+
+        // ---- backward: drain the pipeline ----
+        for ch in chunks.iter_mut() {
+            let rows0 = ch.b0 * s;
+            ch.stage = TrainStage::BwdStart(
+                dlogits.slice_rows(rows0, rows0 + mb * s));
+        }
+        let mut shared = BwdShared {
+            grads,
+            scratch,
+            stash: (0..n_layers)
+                .map(|_| (0..m).map(|_| None).collect())
+                .collect(),
+            done: vec![0; n_layers],
+            m,
+        };
+        loop {
+            let mut any_progress = false;
+            let mut all_done = true;
+            for ch in chunks.iter_mut() {
+                if !matches!(ch.stage, TrainStage::BwdDone) {
+                    all_done = false;
+                    any_progress |=
+                        driver.advance_bwd(charge, &mut shared, ch)?;
+                }
+            }
+            if all_done {
+                break;
+            }
+            anyhow::ensure!(any_progress,
+                            "pipelined training backward stalled");
+        }
+        Ok((loss, shared.grads))
     }
 }
 
@@ -2174,6 +3021,7 @@ pub struct TrainerBuilder<'d> {
     link: Option<LinkKind>,
     realize_delays: bool,
     lr: Option<f32>,
+    micro_batches: usize,
     request_timeout: Option<std::time::Duration>,
     retry: Option<RetryPolicy>,
     tenant: Option<String>,
@@ -2189,6 +3037,7 @@ impl<'d> TrainerBuilder<'d> {
             link: None,
             realize_delays: false,
             lr: None,
+            micro_batches: 1,
             request_timeout: None,
             retry: None,
             tenant: None,
@@ -2239,6 +3088,18 @@ impl<'d> TrainerBuilder<'d> {
         self
     }
 
+    /// Split each training step into `m` pipelined micro-batches along
+    /// the batch axis (default 1 = sequential walk).  `batch / m` must
+    /// be an attention batch size; the step stays bit-identical to the
+    /// sequential walk (see the module docs) while micro-batch k runs
+    /// on shard s+1 as k+1 occupies shard s — and batches larger than
+    /// the biggest attention artifact become runnable at all (e.g.
+    /// batch 8 as 8×1).
+    pub fn micro_batches(mut self, m: usize) -> Self {
+        self.micro_batches = m;
+        self
+    }
+
     /// Name the tenant this job belongs to for admission control (see
     /// [`SessionBuilder::tenant`] — trainers count against the same
     /// concurrent-session and in-flight quotas).
@@ -2266,8 +3127,9 @@ impl<'d> TrainerBuilder<'d> {
             self.dep.build_core(self.adapter, self.link,
                                 self.realize_delays, None,
                                 self.request_timeout, self.retry,
-                                tenant);
-        let mut trainer = Trainer::new(core, self.batch)?;
+                                tenant.clone());
+        let mut trainer = Trainer::with_micro_batches(
+            core, self.batch, self.micro_batches)?;
         trainer._tenant_ticket = ticket;
         if let Some(lr) = self.lr {
             trainer.optimizer.lr = lr;
@@ -2275,6 +3137,13 @@ impl<'d> TrainerBuilder<'d> {
         if let Some(u) = self.urgency {
             trainer.urgency = u;
         }
+        // Training memory becomes ledger-visible here: Adam state is
+        // charged up front (typed TrainerOom / QuotaExceeded if the
+        // trainer does not fit), activation stash charges follow each
+        // step's wavefront.
+        trainer.attach_train_ledger(self.dep.client_device.clone(),
+                                    tenant,
+                                    Some(self.dep.train_stats.clone()))?;
         Ok(trainer)
     }
 }

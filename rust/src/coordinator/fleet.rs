@@ -146,6 +146,16 @@ pub struct FleetStats {
     pub kv_fault_ins: u64,
     /// KV blocks still host-resident at shutdown.
     pub kv_swapped_blocks: u64,
+    /// Peak training micro-batches simultaneously in flight across the
+    /// deployment's trainers (stamped by `Deployment::shutdown`; zero on
+    /// bare merges and inference-only runs).
+    pub train_microbatches_in_flight_peak: u64,
+    /// Peak bytes of saved activations stashed across all trainers'
+    /// in-flight micro-batches.
+    pub train_activation_stash_peak_bytes: u64,
+    /// Micro-batch gradient accumulations performed by pipelined
+    /// trainers over the deployment's lifetime.
+    pub train_grad_accum_steps: u64,
 }
 
 impl FleetStats {
@@ -165,6 +175,9 @@ impl FleetStats {
             kv_swap_outs: 0,
             kv_fault_ins: 0,
             kv_swapped_blocks: 0,
+            train_microbatches_in_flight_peak: 0,
+            train_activation_stash_peak_bytes: 0,
+            train_grad_accum_steps: 0,
         }
     }
 
@@ -219,6 +232,15 @@ impl std::fmt::Display for FleetStats {
                 self.kv_swap_outs, self.kv_fault_ins,
                 self.kv_swapped_blocks)?;
         }
+        if self.train_grad_accum_steps > 0 {
+            writeln!(
+                f,
+                "  training: {} grad accum step(s), peak {} \
+                 micro-batch(es) in flight, peak stash {} B",
+                self.train_grad_accum_steps,
+                self.train_microbatches_in_flight_peak,
+                self.train_activation_stash_peak_bytes)?;
+        }
         for (s, st) in self.per_shard.iter().enumerate() {
             let trips = self.breaker_transitions.get(s).copied()
                 .unwrap_or(0);
@@ -230,6 +252,83 @@ impl std::fmt::Display for FleetStats {
                 st.requests_served, st.requests_shed, trips)?;
         }
         Ok(())
+    }
+}
+
+/// Shared training-side counters: every pipelined
+/// [`Trainer`](crate::coordinator::client::Trainer) spawned from a
+/// deployment updates these as micro-batches enter and leave the
+/// wavefront, and [`Deployment::shutdown`](
+/// crate::coordinator::Deployment::shutdown) stamps them into
+/// [`FleetStats`].  Peaks are maintained with `fetch_max` so concurrent
+/// trainers race safely.
+#[derive(Debug, Default)]
+pub struct TrainingStats {
+    microbatches_in_flight: AtomicU64,
+    microbatches_in_flight_peak: AtomicU64,
+    activation_stash_bytes: AtomicU64,
+    activation_stash_peak_bytes: AtomicU64,
+    grad_accum_steps: AtomicU64,
+}
+
+impl TrainingStats {
+    /// A micro-batch entered the wavefront (forward dispatched).
+    pub fn microbatch_started(&self) {
+        let now = self
+            .microbatches_in_flight
+            .fetch_add(1, Ordering::AcqRel) + 1;
+        self.microbatches_in_flight_peak
+            .fetch_max(now, Ordering::AcqRel);
+    }
+
+    /// A micro-batch's backward fully drained.
+    pub fn microbatch_finished(&self) {
+        // Saturating: a trainer dropped mid-step must not wrap the
+        // in-flight gauge for its co-tenants.
+        let _ = self.microbatches_in_flight.fetch_update(
+            Ordering::AcqRel, Ordering::Acquire,
+            |n| Some(n.saturating_sub(1)));
+    }
+
+    /// `bytes` of saved activations were stashed for a pending backward.
+    pub fn stash_grew(&self, bytes: u64) {
+        let now = self
+            .activation_stash_bytes
+            .fetch_add(bytes, Ordering::AcqRel) + bytes;
+        self.activation_stash_peak_bytes
+            .fetch_max(now, Ordering::AcqRel);
+    }
+
+    /// Backward consumed `bytes` of stashed activations.
+    pub fn stash_shrunk(&self, bytes: u64) {
+        let _ = self.activation_stash_bytes.fetch_update(
+            Ordering::AcqRel, Ordering::Acquire,
+            |n| Some(n.saturating_sub(bytes)));
+    }
+
+    /// One micro-batch's gradients were accumulated client-side.
+    pub fn grad_accum_step(&self) {
+        self.grad_accum_steps.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn microbatches_in_flight(&self) -> u64 {
+        self.microbatches_in_flight.load(Ordering::Acquire)
+    }
+
+    pub fn microbatches_in_flight_peak(&self) -> u64 {
+        self.microbatches_in_flight_peak.load(Ordering::Acquire)
+    }
+
+    pub fn activation_stash_bytes(&self) -> u64 {
+        self.activation_stash_bytes.load(Ordering::Acquire)
+    }
+
+    pub fn activation_stash_peak_bytes(&self) -> u64 {
+        self.activation_stash_peak_bytes.load(Ordering::Acquire)
+    }
+
+    pub fn grad_accum_steps(&self) -> u64 {
+        self.grad_accum_steps.load(Ordering::Acquire)
     }
 }
 
@@ -425,7 +524,7 @@ impl ExecutorFleet {
                  -> Result<ExecutorFleet> {
         let devices = (0..placement.shards().max(1))
             .map(|s| Device::new(&format!("exec-shard{s}"),
-                                 placement.executor_device()))
+                                 placement.executor_device_for(s)))
             .collect();
         Self::start_with_devices(engine, base, policy, devices)
     }
@@ -437,8 +536,17 @@ impl ExecutorFleet {
                               policy: BatchPolicy,
                               mut devices: Vec<Device>)
                               -> Result<ExecutorFleet> {
+        // Capacity-weighted split: each shard takes transformer blocks
+        // in proportion to its device's FLOPs, so heterogeneous fleets
+        // (`Placement::ShardedHetero`) don't pace every wavefront at
+        // the slowest shard.  Equal weights reproduce the contiguous
+        // even split exactly, so homogeneous fleets are unchanged.
+        let weights: Vec<f64> = devices
+            .iter()
+            .map(|d| d.kind.flops(base.cfg.precision))
+            .collect();
         let assign =
-            LayerAssignment::contiguous(base.cfg.n_layers, devices.len());
+            LayerAssignment::capacity_weighted(base.cfg.n_layers, &weights);
         anyhow::ensure!(
             assign.shards() == devices.len(),
             "{} devices for {} assignable shards (each shard needs at \
@@ -836,6 +944,20 @@ mod tests {
     }
 
     #[test]
+    fn hetero_flops_weights_split_tiny_three_one() {
+        // The exact weights start_with_devices derives for a
+        // fast + slow fleet over SYM_TINY (4 blocks): 3.5:1 flops →
+        // the fast shard takes 3 blocks, the slow shard 1.
+        let fast = DeviceKind::GpuFast40.flops(SYM_TINY.precision);
+        let slow = DeviceKind::GpuSlow40.flops(SYM_TINY.precision);
+        let assign = LayerAssignment::capacity_weighted(
+            SYM_TINY.n_layers, &[fast, slow]);
+        assert_eq!(assign.shards(), 2);
+        assert_eq!(assign.block_range(0), 0..3);
+        assert_eq!(assign.block_range(1), 3..4);
+    }
+
+    #[test]
     fn fleet_barrier_counts_and_saturates() {
         let b = FleetBarrier::default();
         assert_eq!(b.registered(), 0);
@@ -880,6 +1002,43 @@ mod tests {
         assert!((f.mean_batch_clients() - 2.0).abs() < 1e-9);
         assert!((f.padding_overhead() - (1.0 - 128.0 / 160.0)).abs()
                 < 1e-9);
+    }
+
+    #[test]
+    fn training_stats_track_peaks_and_print() {
+        let t = TrainingStats::default();
+        t.microbatch_started();
+        t.microbatch_started();
+        t.stash_grew(100);
+        t.stash_grew(60);
+        t.microbatch_finished();
+        t.stash_shrunk(100);
+        t.grad_accum_step();
+        t.grad_accum_step();
+        assert_eq!(t.microbatches_in_flight(), 1);
+        assert_eq!(t.microbatches_in_flight_peak(), 2);
+        assert_eq!(t.activation_stash_bytes(), 60);
+        assert_eq!(t.activation_stash_peak_bytes(), 160);
+        assert_eq!(t.grad_accum_steps(), 2);
+        // gauges saturate instead of wrapping
+        t.microbatch_finished();
+        t.microbatch_finished();
+        t.stash_shrunk(1000);
+        assert_eq!(t.microbatches_in_flight(), 0);
+        assert_eq!(t.activation_stash_bytes(), 0);
+        // the Display line appears exactly when training ran
+        let mut fs = FleetStats::merge(vec![ExecutorStats::default()]);
+        assert!(!format!("{fs}").contains("training:"));
+        fs.train_grad_accum_steps = t.grad_accum_steps();
+        fs.train_microbatches_in_flight_peak =
+            t.microbatches_in_flight_peak();
+        fs.train_activation_stash_peak_bytes =
+            t.activation_stash_peak_bytes();
+        let text = format!("{fs}");
+        assert!(text.contains("training: 2 grad accum step(s)"),
+                "{text}");
+        assert!(text.contains("peak 2 micro-batch(es)"), "{text}");
+        assert!(text.contains("peak stash 160 B"), "{text}");
     }
 
     #[test]

@@ -128,7 +128,8 @@ pub use client::{ClientCore, GenerationConfig, InferenceSession,
                  Sampling, SessionBuilder, Trainer, TrainerBuilder,
                  TrainOutcome, UrgencyPolicy};
 pub use faults::{FaultAction, FaultPlan, FaultRule};
-pub use fleet::{ExecutorFleet, FleetBarrier, FleetStats, ShardLoad};
+pub use fleet::{ExecutorFleet, FleetBarrier, FleetStats, ShardLoad,
+                TrainingStats};
 pub use kv_cache::{BlockPool, KvCache, KvPlacement, KvSwapStats,
                    PrefixMeta};
 pub use placement::Placement;
@@ -165,6 +166,11 @@ pub struct Deployment {
     /// (one charge for N sessions' common prompt) and swap victim
     /// selection fleet-wide decisions.
     pub kv_pool: Arc<BlockPool>,
+    /// Shared training counters: pipelined trainers report micro-batch
+    /// in-flight / activation-stash / grad-accumulation activity here,
+    /// and [`Deployment::shutdown`] stamps the totals into the final
+    /// [`FleetStats`] next to shard occupancy.
+    pub train_stats: Arc<TrainingStats>,
     next_client_id: std::sync::atomic::AtomicUsize,
     /// Active fault-injection plan; applied to every client core built
     /// *after* [`Deployment::inject_faults`].  Interior mutability so
@@ -215,6 +221,7 @@ impl Deployment {
             client_device,
             host_device,
             kv_pool: BlockPool::new(),
+            train_stats: Arc::new(TrainingStats::default()),
             next_client_id: std::sync::atomic::AtomicUsize::new(0),
             fault_plan: Mutex::new(None),
         })
@@ -353,6 +360,12 @@ impl Deployment {
         stats.kv_swap_outs = swap.swap_outs;
         stats.kv_fault_ins = swap.fault_ins;
         stats.kv_swapped_blocks = swap.swapped_blocks;
+        stats.train_microbatches_in_flight_peak =
+            self.train_stats.microbatches_in_flight_peak();
+        stats.train_activation_stash_peak_bytes =
+            self.train_stats.activation_stash_peak_bytes();
+        stats.train_grad_accum_steps =
+            self.train_stats.grad_accum_steps();
         stats
     }
 }

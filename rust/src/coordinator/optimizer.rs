@@ -6,6 +6,10 @@
 //! `adam_n*` artifact (zero-padded tail: padded grads are 0, so padded
 //! params never move); a native fallback exists for odd sizes and tests.
 
+// Optimizer state sits on the training hot path: failures surface as
+// typed errors, never panics.
+#![deny(clippy::unwrap_used)]
+
 use anyhow::{Context, Result};
 
 use crate::config::{bucket_for, ADAM_BUCKETS};

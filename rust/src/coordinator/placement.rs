@@ -25,6 +25,13 @@ pub enum Placement {
     ShardedLocal { shards: usize },
     /// Base sharded across `n` GPUs, clients on a disjoint set.
     ShardedRemote { shards: usize },
+    /// Base sharded across a heterogeneous co-located fleet: `fast`
+    /// GpuFast40 shards followed by `slow` GpuSlow40 shards (Fig. 18's
+    /// mixed power caps, sharded).  The fleet assigns transformer
+    /// blocks capacity-weighted, so fast shards take ~3.5x the blocks
+    /// of slow ones instead of an even split that would pace every
+    /// wavefront at the slowest device.
+    ShardedHetero { fast: usize, slow: usize },
     /// Executor on the fast GPU, clients on the slow GPU (Fig. 18).
     HeteroGpu,
     /// Executor on GPU, clients (attention + KV) on the host CPU
@@ -36,9 +43,9 @@ impl Placement {
     /// Link crossed by client<->executor activations.
     pub fn link(&self) -> LinkKind {
         match self {
-            Placement::Local | Placement::ShardedLocal { .. } => {
-                LinkKind::SharedLocal
-            }
+            Placement::Local
+            | Placement::ShardedLocal { .. }
+            | Placement::ShardedHetero { .. } => LinkKind::SharedLocal,
             Placement::Remote
             | Placement::ShardedRemote { .. }
             | Placement::HeteroGpu => LinkKind::NvLink,
@@ -49,8 +56,27 @@ impl Placement {
     /// Device kind hosting the executor.
     pub fn executor_device(&self) -> DeviceKind {
         match self {
-            Placement::HeteroGpu => DeviceKind::GpuFast40,
+            Placement::HeteroGpu | Placement::ShardedHetero { .. } => {
+                DeviceKind::GpuFast40
+            }
             _ => DeviceKind::GpuA100_80,
+        }
+    }
+
+    /// Device kind hosting executor shard `shard`.  Homogeneous
+    /// placements return `executor_device()` for every shard; the
+    /// heterogeneous sharded fleet puts the first `fast` shards on
+    /// GpuFast40 and the rest on GpuSlow40.
+    pub fn executor_device_for(&self, shard: usize) -> DeviceKind {
+        match self {
+            Placement::ShardedHetero { fast, .. } => {
+                if shard < *fast {
+                    DeviceKind::GpuFast40
+                } else {
+                    DeviceKind::GpuSlow40
+                }
+            }
+            _ => self.executor_device(),
         }
     }
 
@@ -76,6 +102,7 @@ impl Placement {
         match self {
             Placement::ShardedLocal { shards }
             | Placement::ShardedRemote { shards } => *shards,
+            Placement::ShardedHetero { fast, slow } => fast + slow,
             _ => 1,
         }
     }
@@ -90,7 +117,8 @@ impl Placement {
                        -> Vec<LinkKind> {
         let shards = shards.max(1);
         match self {
-            Placement::ShardedLocal { .. } => (0..shards)
+            Placement::ShardedLocal { .. }
+            | Placement::ShardedHetero { .. } => (0..shards)
                 .map(|s| {
                     if s == client_id % shards {
                         LinkKind::SharedLocal
@@ -307,6 +335,26 @@ mod tests {
         // unsharded placements keep their one link kind
         assert_eq!(Placement::CpuClient.shard_links(0, 1),
                    vec![LinkKind::Pcie]);
+    }
+
+    #[test]
+    fn sharded_hetero_splits_devices_by_shard() {
+        let p = Placement::ShardedHetero { fast: 1, slow: 1 };
+        assert_eq!(p.shards(), 2);
+        assert_eq!(p.link(), LinkKind::SharedLocal);
+        assert_eq!(p.executor_device(), DeviceKind::GpuFast40);
+        assert_eq!(p.executor_device_for(0), DeviceKind::GpuFast40);
+        assert_eq!(p.executor_device_for(1), DeviceKind::GpuSlow40);
+        // clients stay on the big GPU like other sharded placements
+        assert_eq!(p.client_device(), DeviceKind::GpuA100_80);
+        // co-located round-robin link routing like ShardedLocal
+        let links = p.shard_links(1, 2);
+        assert_eq!(links[1], LinkKind::SharedLocal);
+        assert_eq!(links[0], LinkKind::NvLink);
+        // homogeneous placements answer the same device for each shard
+        let h = Placement::ShardedLocal { shards: 4 };
+        assert!((0..4).all(|s| h.executor_device_for(s)
+                          == h.executor_device()));
     }
 
     #[test]

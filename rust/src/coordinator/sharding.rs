@@ -118,6 +118,56 @@ impl LayerAssignment {
         LayerAssignment { n_layers, starts }
     }
 
+    /// Split `n_layers` blocks contiguously over `weights.len()` shards
+    /// in proportion to each shard's capability weight (e.g.
+    /// `DeviceKind::flops`), so heterogeneous fleets give faster
+    /// devices proportionally more transformer blocks (paper Fig. 18's
+    /// fast/slow GPU split).  Largest-remainder apportionment over the
+    /// blocks left after every shard is floored at one; ties break
+    /// toward lower shard indices, which makes equal weights reproduce
+    /// [`LayerAssignment::contiguous`] exactly — homogeneous fleets are
+    /// unchanged.  Non-positive or non-finite weight sums fall back to
+    /// the contiguous split.
+    pub fn capacity_weighted(n_layers: usize, weights: &[f64]) -> Self {
+        if n_layers == 0 {
+            return Self::contiguous(0, 1);
+        }
+        let shards = weights.len().max(1).min(n_layers);
+        let w: Vec<f64> = weights
+            .iter()
+            .take(shards)
+            .map(|x| if x.is_finite() && *x > 0.0 { *x } else { 0.0 })
+            .collect();
+        let total: f64 = w.iter().sum();
+        if total <= 0.0 || !total.is_finite() {
+            return Self::contiguous(n_layers, shards);
+        }
+        // Every shard owns at least one block; apportion the rest.
+        let spare = n_layers - shards;
+        let quotas: Vec<f64> = w
+            .iter()
+            .map(|x| x / total * spare as f64)
+            .collect();
+        let mut counts: Vec<usize> =
+            quotas.iter().map(|q| 1 + q.floor() as usize).collect();
+        let assigned: usize = counts.iter().sum();
+        let mut order: Vec<usize> = (0..shards).collect();
+        order.sort_by(|&a, &b| {
+            let (fa, fb) = (quotas[a].fract(), quotas[b].fract());
+            fb.total_cmp(&fa).then(a.cmp(&b))
+        });
+        for &s in order.iter().take(n_layers - assigned) {
+            counts[s] += 1;
+        }
+        let mut starts = Vec::with_capacity(shards);
+        let mut at = 0;
+        for c in counts {
+            starts.push(at);
+            at += c;
+        }
+        LayerAssignment { n_layers, starts }
+    }
+
     pub fn shards(&self) -> usize {
         self.starts.len()
     }
@@ -163,6 +213,13 @@ impl ShardPlan {
     /// `coordinator::fleet` deploys).
     pub fn layer_assignment(&self) -> LayerAssignment {
         LayerAssignment::contiguous(self.cfg.n_layers, self.shards)
+    }
+
+    /// The capacity-weighted partition for a heterogeneous fleet: one
+    /// weight per shard (e.g. each device's `DeviceKind::flops`).
+    pub fn layer_assignment_weighted(&self, weights: &[f64])
+                                     -> LayerAssignment {
+        LayerAssignment::capacity_weighted(self.cfg.n_layers, weights)
     }
 }
 
@@ -254,6 +311,53 @@ mod tests {
             assert_eq!(a.shard_of(LayerId::Embed), 0);
             assert_eq!(a.shard_of(LayerId::LmHead), a.shards() - 1);
         }
+    }
+
+    #[test]
+    fn capacity_weighted_matches_contiguous_on_equal_weights() {
+        for (n_layers, shards) in [(4usize, 1usize), (4, 2), (4, 3),
+                                   (4, 4), (7, 3), (46, 8)] {
+            let a =
+                LayerAssignment::capacity_weighted(n_layers,
+                                                   &vec![1.0; shards]);
+            assert_eq!(a, LayerAssignment::contiguous(n_layers, shards),
+                       "equal weights must not disturb homogeneous \
+                        fleets ({n_layers} layers / {shards} shards)");
+        }
+    }
+
+    #[test]
+    fn capacity_weighted_favors_fast_shards_and_stays_total() {
+        // Fig 18's fast/slow split: 3.5x flops should take ~3.5x blocks.
+        let a = LayerAssignment::capacity_weighted(4, &[3.5, 1.0]);
+        assert_eq!(a.block_range(0), 0..3);
+        assert_eq!(a.block_range(1), 3..4);
+        // Larger fleet: contiguity + totality + min-1-block floor hold
+        // for arbitrary weights, and block counts are monotone in weight.
+        let weights = [8.0, 1.0, 4.0, 0.5];
+        let a = LayerAssignment::capacity_weighted(46, &weights);
+        assert_eq!(a.shards(), 4);
+        let mut covered = 0;
+        let mut counts = Vec::new();
+        for s in 0..a.shards() {
+            let r = a.block_range(s);
+            assert_eq!(r.start, covered, "gap before shard {s}");
+            assert!(!r.is_empty(), "empty shard {s}");
+            counts.push(r.len());
+            covered = r.end;
+        }
+        assert_eq!(covered, 46);
+        assert!(counts[0] > counts[2], "8x weight beat by 4x: {counts:?}");
+        assert!(counts[2] > counts[1], "4x weight beat by 1x: {counts:?}");
+        assert!(counts[1] >= counts[3], "1x weight beat by 0.5x: \
+                                         {counts:?}");
+        // Degenerate weights fall back to the contiguous split.
+        assert_eq!(LayerAssignment::capacity_weighted(4, &[0.0, 0.0]),
+                   LayerAssignment::contiguous(4, 2));
+        // More shards than layers clamps like contiguous does.
+        assert_eq!(LayerAssignment::capacity_weighted(2, &[1.0; 5])
+                       .shards(),
+                   2);
     }
 
     #[test]

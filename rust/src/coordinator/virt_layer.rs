@@ -938,8 +938,18 @@ impl VirtLayerCtx {
     /// Invoke the memory-optimized backward: returns `dX = dY . W^T`.
     pub fn backward(&self, layer: LayerId, dy: Tensor, urgency: Urgency)
                     -> Result<Tensor> {
-        self.dispatch(layer, OpKind::Backward, dy, None, urgency)?
-            .collect()
+        self.dispatch_backward(layer, dy, urgency)?.collect()
+    }
+
+    /// Non-blocking backward dispatch — the split-phase leg the
+    /// pipelined trainer drains micro-batches through.  No privacy
+    /// branch: the privacy protocol covers forward activations only
+    /// (trainers never configure a [`PrivacyCtx`]), and backward
+    /// payloads are gradients of the client's own loss.
+    pub fn dispatch_backward(&self, layer: LayerId, dy: Tensor,
+                             urgency: Urgency)
+                             -> Result<PendingLayer<'_>> {
+        self.dispatch(layer, OpKind::Backward, dy, None, urgency)
     }
 
     /// Embedding lookup: token ids + positions (both (T,) i32).

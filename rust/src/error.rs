@@ -27,6 +27,7 @@
 //! | `DecodeBeforePrefill` | reject | API misuse |
 //! | `PrefixBatchMismatch` | reject | adapter built for another batch |
 //! | `NotTrainable` | reject | adapter has no trainable layout |
+//! | `InvalidMicroBatch` | reject | micro-batch count incompatible with the training batch |
 //! | `InvalidGenerationConfig` | reject | malformed request |
 //! | `MalformedRoutingTable` | reject | assignment/route count mismatch |
 //! | `DeadlineExceeded` | retry | shard hung or overloaded; frozen-base ops are pure, safe to re-send |
@@ -39,6 +40,7 @@
 //! | `KvCacheOom` | retry (after eviction) | co-tenant pressure; frees up when a tenant leaves |
 //! | `KvSwapOom` | retry (after host frees) | host ledger full — oversubscription exhausted both memory tiers |
 //! | `KvFaultInOom` | retry (after device frees) | swapped blocks cannot return to the device; a co-tenant must finish or evict first |
+//! | `TrainerOom` | retry (after a trainer exits) | optimizer/activation state does not fit the client device alongside co-tenant state |
 //! | `ShardOom` | 500 | fleet cannot hold the model; operator must re-plan |
 //! | `Runtime` | 500 | engine/artifact/channel fault below the API |
 //!
@@ -78,6 +80,14 @@ pub enum SymbiosisError {
     /// The trainer was given an adapter whose gradients are not wired
     /// into the flattened optimizer layout (IA3/Prefix), or none at all.
     NotTrainable { adapter: &'static str },
+    /// The requested micro-batch count cannot tile the training batch:
+    /// either it does not divide the batch evenly, or the per-micro-batch
+    /// size has no compiled attention artifact.
+    InvalidMicroBatch {
+        batch: usize,
+        micro_batches: usize,
+        supported: &'static [usize],
+    },
     /// A malformed generation request (e.g. `max_tokens == 0`).
     InvalidGenerationConfig(String),
     /// A shard executor failed while serving a layer batch (engine /
@@ -164,6 +174,20 @@ pub enum SymbiosisError {
     /// co-tenant frees device memory.  `used_bytes`/`capacity_bytes`
     /// describe the *device* ledger.
     KvFaultInOom { need_bytes: u64, used_bytes: u64, capacity_bytes: u64 },
+    /// A trainer's client-side state (Adam optimizer moments under the
+    /// `opt:` tag, or a saved-activation stash under `act:`) does not
+    /// fit the client device's memory ledger — the executable form of
+    /// the paper's Fig 9 capacity edge: admitting one more simultaneous
+    /// fine-tune fails with this instead of an analytic estimate
+    /// predicting it would.  `what` names the charge that failed;
+    /// `used_bytes` is what the device already holds for *other*
+    /// allocations (co-tenant trainers and KV caches included).
+    TrainerOom {
+        what: &'static str,
+        need_bytes: u64,
+        used_bytes: u64,
+        capacity_bytes: u64,
+    },
     /// Anything below the API surface: engine execution, executor
     /// channel loss, artifact I/O.
     Runtime(anyhow::Error),
@@ -206,6 +230,17 @@ impl fmt::Display for SymbiosisError {
                 write!(f, "trainer requires a trainable adapter \
                            (got {adapter}; LoRA gradients are the only \
                            ones wired into the flat optimizer layout)")
+            }
+            SymbiosisError::InvalidMicroBatch {
+                batch,
+                micro_batches,
+                supported,
+            } => {
+                write!(f, "cannot split a batch of {batch} into \
+                           {micro_batches} micro-batches: the count must \
+                           divide the batch and the per-micro-batch size \
+                           must have a compiled attention artifact \
+                           (exported: {supported:?})")
             }
             SymbiosisError::InvalidGenerationConfig(msg) => {
                 write!(f, "invalid generation config: {msg}")
@@ -307,6 +342,18 @@ impl fmt::Display for SymbiosisError {
                            B of {capacity_bytes} B and no background \
                            blocks are left to swap out — retry after a \
                            co-tenant frees device memory")
+            }
+            SymbiosisError::TrainerOom {
+                what,
+                need_bytes,
+                used_bytes,
+                capacity_bytes,
+            } => {
+                write!(f, "trainer {what} of {need_bytes} B does not fit \
+                           the client device: co-tenants already hold \
+                           {used_bytes} B of {capacity_bytes} B — lower \
+                           the micro-batch count, shrink the adapter, or \
+                           wait for a trainer to exit")
             }
             SymbiosisError::Runtime(e) => write!(f, "{e:#}"),
         }
@@ -508,6 +555,42 @@ mod tests {
         .into();
         let back: SymbiosisError = typed.into();
         assert!(matches!(back, SymbiosisError::WorkShed { .. }));
+    }
+
+    #[test]
+    fn training_errors_name_charge_and_tiling() {
+        let e = SymbiosisError::TrainerOom {
+            what: "optimizer state",
+            need_bytes: 8192,
+            used_bytes: 900,
+            capacity_bytes: 1024,
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("optimizer state"));
+        assert!(msg.contains("8192"));
+        assert!(msg.contains("900"));
+        assert!(msg.contains("1024"));
+        let e = SymbiosisError::InvalidMicroBatch {
+            batch: 4,
+            micro_batches: 3,
+            supported: &[1, 2, 4],
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("batch of 4"));
+        assert!(msg.contains("3 micro-batches"));
+        let typed: anyhow::Error = SymbiosisError::TrainerOom {
+            what: "saved activations",
+            need_bytes: 1,
+            used_bytes: 2,
+            capacity_bytes: 3,
+        }
+        .into();
+        let back: SymbiosisError = typed.into();
+        assert!(matches!(back,
+                         SymbiosisError::TrainerOom {
+                             what: "saved activations",
+                             ..
+                         }));
     }
 
     #[test]

@@ -235,6 +235,79 @@ fn chaos_matrix_recovers_token_identical() {
     }
 }
 
+/// Three *pipelined* LoRA training steps (2 micro-batches over batch 2)
+/// with the chaos client profile — the GPipe wavefront under faults.
+fn train_pipelined(dep: &Deployment) -> Vec<u32> {
+    let lora = Adapter::lora_from_artifacts(&SYM_TINY, &artifact_dir(),
+                                            8, LoraTargets::QKVO, 2.0)
+        .unwrap();
+    let mut tr = dep
+        .trainer()
+        .adapter(lora)
+        .batch(2)
+        .micro_batches(2)
+        .request_timeout(CHAOS_TIMEOUT)
+        .retry(chaos_retry())
+        .lr(5e-3)
+        .build()
+        .unwrap();
+    let tokens: Vec<i32> =
+        (0..24).map(|i| (i * 7 + 3) as i32 % 256).collect();
+    let labels: Vec<i32> =
+        (0..24).map(|i| (i * 5 + 2) as i32 % 256).collect();
+    (0..3)
+        .map(|_| {
+            tr.train_step(&tokens, &labels).unwrap().loss.to_bits()
+        })
+        .collect()
+}
+
+/// ISSUE 10 satellite: kill a shard mid-*backward* while the pipelined
+/// trainer's wavefront is draining — the per-micro-batch retry rides
+/// the respawn and the recovered loss trajectory stays bit-identical
+/// to the fault-free pipelined run (which is itself bit-identical to
+/// the sequential walk, pinned by `tests/training_pipeline.rs`).
+#[test]
+fn pipelined_training_survives_shard_kill_mid_backward() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let shards = 2usize;
+    let target = shards - 1;
+    let golden = {
+        let dep = deploy(shards);
+        let out = train_pipelined(&dep);
+        dep.shutdown();
+        out
+    };
+    // Both micro-batches complete their forward walk before backward
+    // starts (the loss barrier), so the target shard has answered
+    // 2 x requests_per_walk forward calls when the first step's
+    // backward begins: +2 lands the kill inside the backward drain.
+    let at = 2 * requests_per_walk(shards, target) + 2;
+    for &seed in &chaos_seeds() {
+        let plan = FaultPlan::new(seed).rule(
+            FaultRule::on(target, FaultAction::KillShard)
+                .from_step(at)
+                .times(1),
+        );
+        let g = golden.clone();
+        with_deadline(
+            &format!("pipelined mid-backward kill seed={seed}"),
+            Duration::from_secs(120),
+            move || {
+                let dep = deploy(shards);
+                dep.inject_faults(plan);
+                assert_eq!(train_pipelined(&dep), g,
+                           "seed={seed}: pipelined loss trajectory \
+                            diverged after mid-backward recovery");
+                dep.shutdown();
+            },
+        );
+    }
+}
+
 /// Probabilistic error storm: seeded, deterministic, and fully
 /// recoverable within the retry budget (each shard fires at most 6
 /// faulted answers; the budget allows 4 retries per call, and errors

@@ -1,0 +1,394 @@
+//! Pipelined multi-adapter fine-tuning: the GPipe wavefront must change
+//! *when* micro-batches run, never *what* the step computes — and
+//! training memory must be a first-class ledger citizen.
+//!
+//! The acceptance bar (ISSUE 10): micro-batched gradient accumulation is
+//! bit-identical to the full-batch sequential walk (loss trajectory AND
+//! adapter parameters after K steps) across shard counts and
+//! micro-batch counts; inference-only adapters stay typed-NotTrainable;
+//! the capacity edge fires typed QuotaExceeded/TrainerOom with both
+//! books (tenant, device ledger) rolled back cleanly and co-tenants
+//! unaffected; `client_state_bytes` reports the live ledger balance;
+//! and the fleet's training counters track the wavefront.
+//!
+//! Tests skip when artifacts are absent (same convention as
+//! `integration.rs`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use symbiosis::config::SYM_TINY;
+use symbiosis::coordinator::adapter::LoraTargets;
+use symbiosis::coordinator::admission::TenantQuota;
+use symbiosis::coordinator::{Adapter, BatchPolicy, Deployment,
+                             Placement, SymbiosisError, Trainer};
+use symbiosis::runtime::Engine;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("manifest.txt").exists()
+}
+
+/// One engine (compile cache) shared by every deployment in this file.
+fn engine() -> Arc<Engine> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| Arc::new(Engine::new(&artifact_dir()).unwrap()))
+        .clone()
+}
+
+fn deploy(shards: usize) -> Deployment {
+    let placement = if shards == 1 {
+        Placement::Local
+    } else {
+        Placement::ShardedLocal { shards }
+    };
+    Deployment::start_with_engine(engine(), &SYM_TINY, &artifact_dir(),
+                                  BatchPolicy::NoLockstep, placement)
+        .unwrap()
+}
+
+fn lora8() -> Adapter {
+    Adapter::lora_from_artifacts(&SYM_TINY, &artifact_dir(), 8,
+                                 LoraTargets::QKVO, 2.0)
+        .unwrap()
+}
+
+fn data(batch: usize) -> (Vec<i32>, Vec<i32>) {
+    let t = batch * 16;
+    ((0..t).map(|i| ((i * 7 + 3) % 256) as i32).collect(),
+     (0..t).map(|i| ((i * 5 + 2) % 256) as i32).collect())
+}
+
+/// K train steps; returns (loss bits per step, adapter param bits).
+fn run_steps(tr: &mut Trainer, batch: usize, steps: usize)
+             -> (Vec<u32>, Vec<u32>) {
+    let (tokens, labels) = data(batch);
+    let losses: Vec<u32> = (0..steps)
+        .map(|_| tr.train_step(&tokens, &labels).unwrap().loss.to_bits())
+        .collect();
+    let params: Vec<u32> = tr.core.adapter.as_ref().unwrap()
+        .flatten()
+        .iter()
+        .map(|p| p.to_bits())
+        .collect();
+    (losses, params)
+}
+
+/// The tentpole equivalence: micro-batched accumulation over the
+/// wavefront is bit-identical to the full-batch sequential walk —
+/// loss trajectory AND adapter parameters after K steps — at every
+/// shards x micro-batches point.
+#[test]
+fn pipelined_training_is_bit_identical_to_sequential() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let run = |shards: usize, micro: usize| {
+        let dep = deploy(shards);
+        let mut tr = dep.trainer()
+            .adapter(lora8())
+            .batch(4)
+            .micro_batches(micro)
+            .lr(5e-3)
+            .build()
+            .unwrap();
+        let out = run_steps(&mut tr, 4, 3);
+        drop(tr);
+        dep.shutdown();
+        out
+    };
+    let golden = run(1, 1);
+    assert!(golden.0.windows(2).any(|w| w[1] != w[0]),
+            "degenerate loss trajectory");
+    for shards in [1usize, 2, 4] {
+        for micro in [1usize, 2, 4] {
+            if shards == 1 && micro == 1 {
+                continue;
+            }
+            let got = run(shards, micro);
+            assert_eq!(got.0, golden.0,
+                       "loss bits diverged at shards={shards} \
+                        micro={micro}");
+            assert_eq!(got.1, golden.1,
+                       "adapter params diverged at shards={shards} \
+                        micro={micro}");
+        }
+    }
+}
+
+/// Micro-batching unlocks batches the sequential walk cannot run at
+/// all (8 is not an attention batch size) — and the trajectory stays
+/// bit-identical across shard counts.
+#[test]
+fn micro_batching_unlocks_batch_eight() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Sequential batch 8 is a typed UnsupportedBatch…
+    let dep = deploy(1);
+    match dep.trainer().adapter(lora8()).batch(8).build() {
+        Err(SymbiosisError::UnsupportedBatch { batch, .. }) => {
+            assert_eq!(batch, 8)
+        }
+        other => panic!("expected UnsupportedBatch, got {other:?}"),
+    }
+    dep.shutdown();
+    // …but 8x1 micro-batches run, identically on every fleet size.
+    let run = |shards: usize| {
+        let dep = deploy(shards);
+        let mut tr = dep.trainer()
+            .adapter(lora8())
+            .batch(8)
+            .micro_batches(8)
+            .lr(5e-3)
+            .build()
+            .unwrap();
+        let out = run_steps(&mut tr, 8, 2);
+        drop(tr);
+        dep.shutdown();
+        out
+    };
+    let golden = run(1);
+    for shards in [2usize, 4] {
+        assert_eq!(run(shards), golden,
+                   "batch-8 training diverged at shards={shards}");
+    }
+}
+
+/// Invalid micro-batch splits and inference-only adapters fail typed
+/// at build, micro-batched or not.
+#[test]
+fn invalid_splits_and_adapters_fail_typed() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(1);
+    // batch not divisible by micro_batches
+    match dep.trainer().adapter(lora8()).batch(4).micro_batches(3)
+        .build()
+    {
+        Err(SymbiosisError::InvalidMicroBatch {
+            batch, micro_batches, ..
+        }) => {
+            assert_eq!((batch, micro_batches), (4, 3));
+        }
+        other => panic!("expected InvalidMicroBatch, got {other:?}"),
+    }
+    // per-micro-batch size not an attention batch size (16/2 = 8)
+    match dep.trainer().adapter(lora8()).batch(16).micro_batches(2)
+        .build()
+    {
+        Err(SymbiosisError::InvalidMicroBatch { batch, .. }) => {
+            assert_eq!(batch, 16);
+        }
+        other => panic!("expected InvalidMicroBatch, got {other:?}"),
+    }
+    // IA3 and Prefix stay inference-only under the pipelined path too
+    match dep.trainer().adapter(Adapter::ia3(&SYM_TINY)).batch(2)
+        .micro_batches(2).build()
+    {
+        Err(SymbiosisError::NotTrainable { .. }) => {}
+        other => panic!("expected NotTrainable, got {other:?}"),
+    }
+    match dep.trainer().adapter(Adapter::prefix(&SYM_TINY, 1, 4, 11))
+        .batch(2).micro_batches(2).build()
+    {
+        Err(SymbiosisError::NotTrainable { .. }) => {}
+        other => panic!("expected NotTrainable, got {other:?}"),
+    }
+    dep.shutdown();
+}
+
+/// The capacity edge, tenant book first: trainers admit until the
+/// tenant's training-bytes quota fires QuotaExceeded — with the failed
+/// build leaving both books exactly where they were, and the admitted
+/// co-tenant still able to train (mirrors the KV OOM test shape).
+#[test]
+fn tenant_quota_edge_rolls_back_both_books() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(2);
+    let probe = dep.trainer().adapter(lora8()).batch(1).build().unwrap();
+    let opt_bytes = probe.optimizer.state_bytes();
+    drop(probe);
+    dep.executor.admission().set_quota(
+        "edge",
+        TenantQuota::unlimited().max_train_bytes(opt_bytes * 3 / 2));
+    let mut first = dep.trainer().adapter(lora8()).batch(1)
+        .tenant("edge").build().unwrap();
+    let tenant = dep.executor.admission().tenant("edge");
+    assert_eq!(tenant.train_bytes(), opt_bytes);
+    let used_before = {
+        let d = dep.client_device.lock().unwrap();
+        d.ledger.used()
+    };
+    // The second trainer busts the tenant quota: typed QuotaExceeded,
+    // tenant book unchanged, device ledger unchanged.
+    match dep.trainer().adapter(lora8()).batch(1).tenant("edge").build()
+    {
+        Err(SymbiosisError::QuotaExceeded { .. }) => {}
+        other => panic!("expected QuotaExceeded, got {other:?}"),
+    }
+    assert_eq!(tenant.train_bytes(), opt_bytes,
+               "failed admit leaked tenant training bytes");
+    {
+        let d = dep.client_device.lock().unwrap();
+        assert_eq!(d.ledger.used(), used_before,
+                   "failed admit leaked device ledger bytes");
+    }
+    // The admitted co-tenant is unaffected: it keeps training.
+    let (tokens, labels) = data(1);
+    first.train_step(&tokens, &labels).unwrap();
+    // Trainer exit returns its balance on both books.
+    drop(first);
+    assert_eq!(tenant.train_bytes(), 0);
+    {
+        let d = dep.client_device.lock().unwrap();
+        assert_eq!(d.ledger.used(), used_before - opt_bytes);
+    }
+    dep.shutdown();
+}
+
+/// The device-ledger edge: when the client device cannot hold another
+/// trainer's Adam state, the build fails with typed TrainerOom naming
+/// the charge — and an activation-stash OOM mid-step rolls the act
+/// book back to zero so the trainer can retry after the quota loosens.
+#[test]
+fn trainer_oom_fires_at_device_edge_and_step_rolls_back() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(2);
+    let probe = dep.trainer().adapter(lora8()).batch(1).build().unwrap();
+    let opt_bytes = probe.optimizer.state_bytes();
+    drop(probe);
+    // Fill the client device so the next Adam state cannot fit.
+    {
+        let mut d = dep.client_device.lock().unwrap();
+        let free = d.ledger.capacity() - d.ledger.used();
+        d.ledger.set("test:filler", free - opt_bytes / 2).unwrap();
+    }
+    match dep.trainer().adapter(lora8()).batch(1).build() {
+        Err(SymbiosisError::TrainerOom { what, need_bytes, .. }) => {
+            assert_eq!(what, "optimizer state");
+            assert_eq!(need_bytes, opt_bytes);
+        }
+        other => panic!("expected TrainerOom, got {other:?}"),
+    }
+    {
+        let mut d = dep.client_device.lock().unwrap();
+        d.ledger.free("test:filler");
+    }
+    // Mid-step act OOM: quota admits the Adam state but not the
+    // activation stash.  The step fails typed and the act book rolls
+    // back to zero — loosening the quota makes the SAME trainer step.
+    dep.executor.admission().set_quota(
+        "burst",
+        TenantQuota::unlimited().max_train_bytes(opt_bytes + 64));
+    let mut tr = dep.trainer().adapter(lora8()).batch(2)
+        .micro_batches(2).tenant("burst").build().unwrap();
+    let tenant = dep.executor.admission().tenant("burst");
+    let (tokens, labels) = data(2);
+    match tr.train_step(&tokens, &labels) {
+        Err(SymbiosisError::QuotaExceeded { .. }) => {}
+        other => panic!("expected QuotaExceeded mid-step, \
+                         got {other:?}"),
+    }
+    assert_eq!(tenant.train_bytes(), opt_bytes,
+               "failed step leaked activation-stash bytes");
+    assert_eq!(tr.client_state_bytes(16),
+               tr.core.adapter.as_ref().unwrap().n_params() as u64 * 4
+                   + opt_bytes,
+               "act tag must be zero after the rollback");
+    dep.executor.admission()
+        .set_quota("burst", TenantQuota::unlimited());
+    tr.train_step(&tokens, &labels).unwrap();
+    drop(tr);
+    dep.shutdown();
+}
+
+/// Satellite: `client_state_bytes` reports the live ledger balance
+/// once the trainer is ledger-attached — report == books, by
+/// construction.
+#[test]
+fn client_state_bytes_reports_the_ledger_balance() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(1);
+    let used0 = {
+        let d = dep.client_device.lock().unwrap();
+        d.ledger.used()
+    };
+    let mut tr = dep.trainer().adapter(lora8()).batch(2)
+        .micro_batches(2).lr(5e-3).build().unwrap();
+    let adapter_bytes =
+        tr.core.adapter.as_ref().unwrap().n_params() as u64 * 4;
+    // Between steps the act tag is drained: balance = adapter + Adam.
+    let expect = adapter_bytes + tr.optimizer.state_bytes();
+    assert_eq!(tr.client_state_bytes(16), expect);
+    {
+        let d = dep.client_device.lock().unwrap();
+        assert_eq!(d.ledger.used() - used0,
+                   tr.optimizer.state_bytes(),
+                   "ledger must carry exactly the Adam state");
+    }
+    let (tokens, labels) = data(2);
+    tr.train_step(&tokens, &labels).unwrap();
+    // Stash charges drained back to zero when backward consumed them.
+    assert_eq!(tr.client_state_bytes(16), expect);
+    // The stash DID get charged while the step ran: peak > resting.
+    {
+        let d = dep.client_device.lock().unwrap();
+        assert!(d.ledger.peak() > used0 + tr.optimizer.state_bytes(),
+                "activation stash never hit the ledger");
+    }
+    drop(tr);
+    dep.shutdown();
+}
+
+/// Satellite: the fleet's training counters track the wavefront —
+/// grad-accum steps, peak micro-batches in flight, peak stash bytes —
+/// and surface in the FleetStats display.
+#[test]
+fn fleet_stats_track_the_training_wavefront() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dep = deploy(2);
+    let mut tr = dep.trainer()
+        .adapter(lora8())
+        .batch(4)
+        .micro_batches(4)
+        .lr(5e-3)
+        .build()
+        .unwrap();
+    let (tokens, labels) = data(4);
+    tr.train_step(&tokens, &labels).unwrap();
+    tr.train_step(&tokens, &labels).unwrap();
+    assert_eq!(dep.train_stats.microbatches_in_flight(), 0,
+               "wavefront drained");
+    drop(tr);
+    let stats = dep.shutdown();
+    assert_eq!(stats.train_grad_accum_steps, 8,
+               "2 steps x 4 micro-batches");
+    assert_eq!(stats.train_microbatches_in_flight_peak, 4,
+               "all micro-batches fill the pipeline together");
+    assert!(stats.train_activation_stash_peak_bytes > 0);
+    let shown = format!("{stats}");
+    assert!(shown.contains("training: 8 grad accum step(s)"),
+            "display missing training line:\n{shown}");
+}
